@@ -1,0 +1,51 @@
+//! Quickstart: load the AOT artifacts, initialize a model, tokenize a
+//! synthetic sentence, and run one quantized forward pass — the whole
+//! three-layer stack (Rust coordinator → JAX-lowered HLO → Pallas-derived
+//! quantization) in ~40 lines.
+//!
+//! Run: make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use mkq::coordinator::Trainer;
+use mkq::data::{Suite, TaskKind};
+use mkq::runtime::{Engine, HostTensor};
+use xla::Literal;
+
+fn main() -> Result<()> {
+    // 1. Load + compile artifacts (HLO text -> PJRT CPU executables).
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    println!("platform: {}", eng.platform());
+    let tr = Trainer::new(&eng)?;
+    let d = tr.dims;
+    println!("model: {} layers, d_model {}, vocab {}", d.n_layers, d.d_model, d.vocab);
+
+    // 2. Fresh parameters from the `init` artifact.
+    let (params, scales) = tr.init(42)?;
+    println!("initialized {} param tensors + {} scales", params.len(), scales.len());
+
+    // 3. Tokenize a synthetic sentence with the WordPiece substrate.
+    let suite = Suite::new(42, d.vocab, d.seq);
+    let task = suite.task(TaskKind::Sst2, 1);
+    let words: Vec<&str> = vec![
+        suite.lexicon.pos_words[0].as_str(),
+        suite.lexicon.neutral[0].as_str(),
+        suite.lexicon.pos_words[1].as_str(),
+    ];
+    let (ids, mask) = suite.tokenizer.encode(&words, None, d.seq);
+    println!("tokens: {words:?} -> {:?}...", &ids[..6]);
+    let _ = task;
+
+    // 4. One quantized forward (all layers int8) through serve_fwd_b1.
+    let bits = HostTensor::f32(&[d.n_layers], vec![8.0; d.n_layers]).to_literal()?;
+    let ids_l = HostTensor::i32(&[1, d.seq], ids).to_literal()?;
+    let mask_l = HostTensor::f32(&[1, d.seq], mask).to_literal()?;
+    let mut inputs: Vec<&Literal> = params.iter().chain(scales.iter()).collect();
+    inputs.push(&bits);
+    inputs.push(&ids_l);
+    inputs.push(&mask_l);
+    let out = eng.execute_raw("serve_fwd_b1", &inputs)?;
+    let logits = HostTensor::from_literal(&out[0])?;
+    println!("logits: {:?}", logits.as_f32()?);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Serving example: deploy a calibrated quantized model behind the
+//! dynamic-batching server and replay a Poisson request trace, reporting
+//! queue/execute/total latency percentiles and effective throughput —
+//! the paper's deployment story (§5.4) as a runnable scenario.
+//!
+//! Run: cargo run --release --example serve -- [--rate 200] [--requests 400]
+//!          [--window-us 500] [--bits 8,8,4,4]
+
+use anyhow::Result;
+use mkq::coordinator::{parse_bits, ServeModel, Server, ServerConfig, Trainer};
+use mkq::data::{Suite, TaskKind};
+use mkq::runtime::{Engine, HostTensor};
+use mkq::util::cli::Args;
+use mkq::util::rng::Rng;
+use xla::Literal;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    let tr = Trainer::new(&eng)?;
+    let d = tr.dims;
+
+    let bits = match args.get("bits") {
+        Some(s) => parse_bits(s, d.n_layers)?,
+        None => vec![8, 8, 4, 4],
+    };
+    let rate = args.f64("rate", 200.0);
+    let n_req = args.usize("requests", 400);
+    let window_us = args.usize("window-us", 500);
+
+    // Prepare a deployed model: quick teacher + calibration (QAT quality is
+    // exercised by train_qat; serving latency is the point here).
+    println!("preparing model (bits {bits:?})...");
+    let suite = Suite::new(42, d.vocab, d.seq);
+    let task = suite.task(TaskKind::Qnli, 1);
+    let (teacher, _) = tr.finetune_teacher(&task, 60, 1e-3, 7)?;
+    let (act, wmax) = tr.calibrate(&teacher, &task.train, 4, 7)?;
+    let scales = tr.make_scales(&act, &wmax, &bits)?;
+
+    let mut ps: Vec<Literal> = Vec::new();
+    for p in &teacher {
+        ps.push(HostTensor::from_literal(p)?.to_literal()?);
+    }
+    ps.extend(scales);
+    let bits_f: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+    let model = ServeModel::new(ps, &bits_f, &format!("bits={bits:?}"))?;
+
+    let mut server = Server::new(
+        &eng,
+        model,
+        ServerConfig {
+            buckets: vec![1, 8, 16],
+            batch_window: std::time::Duration::from_micros(window_us as u64),
+        },
+    )?;
+
+    // Warm the executables so compile time doesn't pollute the trace.
+    for b in [1usize, 8, 16] {
+        eng.compile(&format!("serve_fwd_b{b}"))?;
+    }
+
+    println!("replaying Poisson trace: {n_req} requests @ {rate} rps, window {window_us}us");
+    let mut rng = Rng::new(99);
+    let trace_start = std::time::Instant::now();
+    let mut sent = 0usize;
+    let mut next_arrival = std::time::Instant::now();
+    let mut responses = 0usize;
+    while responses < n_req {
+        let now = std::time::Instant::now();
+        if sent < n_req && now >= next_arrival {
+            let row = rng.below(task.dev.len());
+            server.submit(task.dev.ids[row].clone(), task.dev.masks[row].clone())?;
+            sent += 1;
+            next_arrival = now + std::time::Duration::from_secs_f64(rng.exp(rate));
+        }
+        let out = if sent >= n_req { server.drain()? } else { server.pump()? };
+        responses += out.len();
+    }
+    let wall = trace_start.elapsed().as_secs_f64();
+
+    println!("\n{}", server.summary());
+    println!("\nthroughput: {:.1} req/s over {:.2}s wall", n_req as f64 / wall, wall);
+    Ok(())
+}

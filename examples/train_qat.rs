@@ -1,0 +1,93 @@
+//! End-to-end training driver (the repo's E2E validation run — see
+//! EXPERIMENTS.md): finetune an fp32 teacher on a synthetic task, calibrate
+//! quantization scales, run MKQ-BERT QAT with the last two layers at int4,
+//! and log the full loss curve + dev accuracy trajectory.
+//!
+//! Run: cargo run --release --example train_qat -- [--task sst2]
+//!          [--steps 300] [--teacher-steps 200] [--log run_logs/qat.tsv]
+
+use anyhow::Result;
+use mkq::coordinator::{bits_last_n_int4, QatConfig, Trainer};
+use mkq::data::{Suite, TaskKind};
+use mkq::runtime::Engine;
+use mkq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    let mut tr = Trainer::new(&eng)?;
+    tr.verbose = true;
+    let d = tr.dims;
+
+    let kind = TaskKind::parse(&args.str("task", "sst2")).expect("unknown task");
+    let steps = args.usize("steps", 300);
+    let teacher_steps = args.usize("teacher-steps", 200);
+
+    let suite = Suite::new(42, d.vocab, d.seq);
+    let task = suite.task(kind, 1);
+    println!(
+        "task {}: {} train / {} dev, mean valid tokens {:.1}",
+        kind.name(),
+        task.train.len(),
+        task.dev.len(),
+        task.train.mean_valid_tokens()
+    );
+
+    println!("\n== phase 1: fp32 teacher finetune ({teacher_steps} steps) ==");
+    let t0 = std::time::Instant::now();
+    // Breakthrough-style convergence is bimodal in seed (DESIGN.md): retry
+    // like the paper's best-over-sweep protocol.
+    let (teacher, teacher_acc) =
+        tr.finetune_teacher_best(&task, teacher_steps, args.f64("teacher-lr", 1e-3), 11, 0.62, 4)?;
+    let teacher_curve = mkq::coordinator::trainer::TrainCurve { points: vec![] };
+    println!("teacher dev acc {:.4} ({:.1}s)", teacher_acc, t0.elapsed().as_secs_f64());
+
+    println!("\n== phase 2: calibration (8 batches) ==");
+    let (act, wmax) = tr.calibrate(&teacher, &task.train, 8, 11)?;
+    println!("act stats (L x 4 sites): {:?}", &act[..4.min(act.len())]);
+
+    println!("\n== phase 3: QAT, bits 8,8,4,4 MKQ ({steps} steps) ==");
+    let bits = bits_last_n_int4(d.n_layers, 2);
+    let scales = tr.make_scales(&act, &wmax, &bits)?;
+    let cfg = QatConfig { bits, steps, eval_every: 50, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let res = tr.qat(&teacher, scales, &task, &cfg)?;
+    let qat_secs = t0.elapsed().as_secs_f64();
+
+    println!("\n== results ==");
+    println!("teacher fp32       : {teacher_acc:.4}");
+    println!("QAT best / final   : {:.4} / {:.4}", res.best_dev_acc, res.final_dev_acc);
+    println!("QAT wall time      : {:.1}s ({:.0} ms/step)", qat_secs, qat_secs * 1e3 / steps as f64);
+    println!("loss curve (every 25 steps):");
+    for p in res.curve.points.iter().step_by(25) {
+        println!(
+            "  step {:>4}: total {:.4}  ce {:.4}  kd_out {:.4}  kd_att {:.4}  kd_val {:.4}  acc {:.3}",
+            p.0, p.1, p.2, p.3, p.4, p.5, p.6
+        );
+    }
+
+    // TSV log for plotting / EXPERIMENTS.md.
+    let log_path = args.str("log", "run_logs/train_qat.tsv");
+    if let Some(parent) = std::path::Path::new(&log_path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut tsv = String::from("phase\tstep\ttotal\tce\tkd_out\tkd_att\tkd_val\ttrain_acc\n");
+    for p in &teacher_curve.points {
+        tsv.push_str(&format!("teacher\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n", p.0, p.1, p.2, p.3, p.4, p.5, p.6));
+    }
+    for p in &res.curve.points {
+        tsv.push_str(&format!("qat\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n", p.0, p.1, p.2, p.3, p.4, p.5, p.6));
+    }
+    for (step, acc) in &res.evals {
+        tsv.push_str(&format!("eval\t{step}\t{acc}\t\t\t\t\t\n"));
+    }
+    std::fs::write(&log_path, tsv)?;
+    println!("\nlogged to {log_path}");
+
+    // engine telemetry: where the time went
+    println!("\nengine telemetry (compile ms | execs | exec ms):");
+    for (name, c, n, e) in eng.telemetry() {
+        println!("  {name:<16} {c:>8.0} | {n:>4} | {e:>9.0}");
+    }
+    Ok(())
+}

@@ -1,0 +1,271 @@
+"""AOT artifact emitter: lower every L2 step function to HLO text.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never touches Python again.
+
+Interchange is HLO **text**, not ``.serialize()``: jax>=0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (``artifacts/manifest.txt``) is a plain line-oriented format
+(the vendored crate set has no serde/json):
+
+    config <key> <int>
+    artifact <name> <file>
+    in <name> <dtype> <d0>x<d1>...      # rank-0 writes "scalar"
+    out <name> <dtype> <dims>
+    end
+
+Input/output order in the manifest IS the execution order contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bench_layer, model, steps
+from .config import PRESETS, ModelConfig
+from .kernels import qmatmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dims(shape):
+    return "x".join(str(d) for d in shape) if len(shape) else "scalar"
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.lines: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def config(self, key: str, val: int):
+        self.lines.append(f"config {key} {val}")
+
+    def emit(self, name: str, fn, ins, outs):
+        """ins/outs: [(name, ShapeDtypeStruct)]. Lowers fn(*in_specs)."""
+        specs = [s for _, s in ins]
+        # keep_unused: the manifest promises the full input list even when a
+        # graph ignores some tensors (e.g. `calibrate` never touches the
+        # classifier head) — without this, jit prunes them and PJRT rejects
+        # the execute-time buffer count.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.lines.append(f"artifact {name} {fname}")
+        for n, s in ins:
+            self.lines.append(f"in {n} {s.dtype} {_dims(s.shape)}")
+        for n, s in outs:
+            self.lines.append(f"out {n} {s.dtype} {_dims(s.shape)}")
+        self.lines.append("end")
+        print(f"  emitted {name}: {len(text)/1e6:.2f} MB, {len(ins)} in / {len(outs)} out")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def _named(prefix, specs, dtype=jnp.float32):
+    return [(f"{prefix}{n}", _spec(s, dtype)) for n, s in specs]
+
+
+def emit_training_artifacts(em: Emitter, cfg: ModelConfig):
+    p_specs = model.param_specs(cfg)
+    s_specs = model.scale_specs(cfg)
+    K, B, T, L = cfg.k_steps, cfg.batch, cfg.seq, cfg.n_layers
+    EB = cfg.eval_batch
+
+    for k, v in (("vocab", cfg.vocab), ("seq", T), ("n_layers", L),
+                 ("d_model", cfg.d_model), ("n_heads", cfg.n_heads),
+                 ("d_ff", cfg.d_ff), ("n_classes", cfg.n_classes),
+                 ("batch", B), ("eval_batch", EB), ("k_steps", K),
+                 ("n_params", len(p_specs)), ("n_scales", len(s_specs))):
+        em.config(k, v)
+
+    params_in = _named("p.", p_specs)
+    scales_in = _named("s.", s_specs)
+
+    # --- init -------------------------------------------------------------
+    em.emit(
+        "init", steps.make_init(cfg),
+        ins=[("seed", _spec((1,), jnp.int32))],
+        outs=params_in + scales_in,
+    )
+
+    # --- fp32 teacher finetuning (K-step scan) -----------------------------
+    fp32_ins = (
+        params_in
+        + _named("m.", p_specs) + _named("v.", p_specs)
+        + [("step", _spec((1,)))]
+        + [("ids", _spec((K, B, T), jnp.int32)), ("mask", _spec((K, B, T))),
+           ("labels", _spec((K, B), jnp.int32)), ("lr", _spec((K, 1)))]
+    )
+    fp32_outs = (params_in + _named("m.", p_specs) + _named("v.", p_specs)
+                 + [("step", _spec((1,))), ("stats", _spec((K, 2)))])
+    em.emit("train_fp32", steps.make_train_fp32_k(cfg), fp32_ins, fp32_outs)
+
+    # --- QAT train step (K-step scan) --------------------------------------
+    qat_state = (
+        params_in + scales_in
+        + _named("mp.", p_specs) + _named("vp.", p_specs)
+        + _named("ms.", s_specs) + _named("vs.", s_specs)
+        + [("step", _spec((1,)))]
+    )
+    qat_ins = (
+        qat_state
+        + _named("t.", p_specs)
+        + [("ids", _spec((K, B, T), jnp.int32)), ("mask", _spec((K, B, T))),
+           ("labels", _spec((K, B), jnp.int32)),
+           ("lr_w", _spec((K, 1))), ("lr_sa", _spec((K, 1))), ("lr_sw", _spec((K, 1))),
+           ("alpha", _spec((1,))), ("beta", _spec((1,))),
+           ("mse_flag", _spec((1,))), ("lsq_flag", _spec((1,))),
+           ("bits", _spec((L,)))]
+    )
+    qat_outs = qat_state + [("stats", _spec((K, 6)))]
+    em.emit("train_step", steps.make_train_step_k(cfg), qat_ins, qat_outs)
+
+    # --- eval (quantized student) ------------------------------------------
+    em.emit(
+        "eval_step", steps.make_eval_step(cfg),
+        ins=params_in + scales_in + [
+            ("bits", _spec((L,))),
+            ("ids", _spec((EB, T), jnp.int32)), ("mask", _spec((EB, T))),
+            ("labels", _spec((EB,), jnp.int32))],
+        outs=[("correct", _spec((1,))), ("loss", _spec((1,))),
+              ("logits", _spec((EB, cfg.n_classes)))],
+    )
+
+    # --- eval (fp32 teacher / baseline row) ---------------------------------
+    em.emit(
+        "teacher_eval", steps.make_teacher_eval(cfg),
+        ins=params_in + [
+            ("ids", _spec((EB, T), jnp.int32)), ("mask", _spec((EB, T))),
+            ("labels", _spec((EB,), jnp.int32))],
+        outs=[("correct", _spec((1,))), ("loss", _spec((1,))),
+              ("logits", _spec((EB, cfg.n_classes)))],
+    )
+
+    # --- calibration ---------------------------------------------------------
+    em.emit(
+        "calibrate", steps.make_calibrate(cfg),
+        ins=params_in + [("ids", _spec((B, T), jnp.int32)), ("mask", _spec((B, T)))],
+        outs=[("act_q", _spec((L, 4))), ("act_max", _spec((L, 4))),
+              ("w_max", _spec((L, 6)))],
+    )
+
+    # --- serving forward ------------------------------------------------------
+    for sb in (1, 8, B):
+        em.emit(
+            f"serve_fwd_b{sb}", steps.make_serve_fwd(cfg),
+            ins=params_in + scales_in + [
+                ("bits", _spec((L,))),
+                ("ids", _spec((sb, T), jnp.int32)), ("mask", _spec((sb, T)))],
+            outs=[("logits", _spec((sb, cfg.n_classes)))],
+        )
+
+
+# Table-2 shape buckets: (batch, tokens-per-seq) chosen so batch*T matches
+# the paper's "valid tokens" column (440/537/681 @ bs16; 1691/2011/2298 @ bs64).
+TABLE2_BUCKETS = [(16, 28), (16, 34), (16, 43), (64, 27), (64, 32), (64, 36)]
+
+
+def emit_table2_artifacts(em: Emitter, d: int = 768, d_ff: int = 3072, n_heads: int = 12):
+    em.config("t2_d_model", d)
+    em.config("t2_d_ff", d_ff)
+    em.config("t2_n_heads", n_heads)
+    w_specs = bench_layer.layer_weight_specs(d, d_ff)
+
+    for (bs, t) in TABLE2_BUCKETS:
+        h_in = [("h", _spec((bs, t, d))), ("mask", _spec((bs, t)))]
+        out = [("h_out", _spec((bs, t, d)))]
+
+        # fp32
+        ins = h_in + _named("w.", w_specs)
+        em.emit(f"layer_f32_b{bs}_t{t}", bench_layer.make_layer_fp32(n_heads), ins, out)
+
+        # int8 / int4 share the scale tail.
+        scale_tail = ([(f"sa_{n}", _spec((1,))) for n in ("qkv", "attn", "ffn1", "ffn2")]
+                      + [(f"sw_{n}", _spec((1, s[1]))) for n, s in
+                         [("q", (d, d)), ("k", (d, d)), ("v", (d, d)), ("o", (d, d)),
+                          ("1", (d, d_ff)), ("2", (d_ff, d))]])
+
+        int8_w = []
+        for n, s in w_specs:
+            dt = jnp.int8 if n.startswith("w") and len(s) == 2 else jnp.float32
+            int8_w.append((f"w.{n}", _spec(s, dt)))
+        em.emit(f"layer_int8_b{bs}_t{t}",
+                bench_layer.make_layer_int(n_heads, 8.0, False, d, d_ff),
+                h_in + int8_w + scale_tail, out)
+
+        int4_w = []
+        for n, s in w_specs:
+            if n.startswith("w") and len(s) == 2:
+                int4_w.append((f"w.{n}", _spec((s[0] // 2, s[1]), jnp.int32)))
+            else:
+                int4_w.append((f"w.{n}", _spec(s, jnp.float32)))
+        em.emit(f"layer_int4_b{bs}_t{t}",
+                bench_layer.make_layer_int(n_heads, 4.0, True, d, d_ff),
+                h_in + int4_w + scale_tail, out)
+
+
+def emit_kernel_artifacts(em: Emitter):
+    """Standalone Pallas qmatmul artifacts (Rust-side numeric cross-check)."""
+    m, k, n = 64, 128, 128
+    em.emit(
+        "qmatmul_pallas_int8",
+        lambda x, wq, sx, sw: (qmatmul.qmatmul(x, wq, sx, sw, bits=8.0),),
+        ins=[("x", _spec((m, k))), ("wq", _spec((k, n), jnp.int8)),
+             ("sx", _spec((m, 1))), ("sw", _spec((1, n)))],
+        outs=[("out", _spec((m, n)))],
+    )
+    em.emit(
+        "qmatmul_pallas_int4",
+        lambda x, wp, sx, sw: (qmatmul.qmatmul4(x, wp, sx, sw),),
+        ins=[("x", _spec((m, k))), ("wp", _spec((k // 2, n), jnp.int32)),
+             ("sx", _spec((m, 1))), ("sw", _spec((1, n)))],
+        outs=[("out", _spec((m, n)))],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    ap.add_argument("--skip-table2", action="store_true")
+    args = ap.parse_args()
+
+    jax.config.update("jax_platform_name", "cpu")
+    cfg = PRESETS[args.preset]
+    em = Emitter(args.out)
+    print(f"emitting artifacts (preset={args.preset}) to {args.out}")
+    emit_training_artifacts(em, cfg)
+    if not args.skip_table2:
+        emit_table2_artifacts(em)
+    emit_kernel_artifacts(em)
+    em.finish()
+    print("manifest written")
+
+
+if __name__ == "__main__":
+    main()

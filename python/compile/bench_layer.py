@@ -1,0 +1,140 @@
+"""Table-2 artifacts: one BERT-base transformer layer at f32 / int8 / int4.
+
+The paper benchmarks *deployed* kernels (real integer MACs), not QAT
+fake-quant — so these graphs do the arithmetic the way the CUDA kernels
+did:
+
+  f32  : plain dense layer.
+  int8 : activations quantized on the fly to int8, weights arrive as int8
+         device buffers, MAC in int8→int32 (``preferred_element_type``),
+         dequantize, fp32 bias/softmax/GELU/LayerNorm (§5: those stay fp32).
+  int4 : weights arrive *nibble-packed* (two codes per byte along K,
+         half the bytes of int8 — the 5.3x-bits-reduction storage claim),
+         are unpacked in-graph (the register-unpack of the CUDA kernel),
+         then take the same int8 MAC path. On TPU this is exactly the
+         "int4 rides the int8 MXU path with halved HBM traffic" adaptation
+         (DESIGN.md §Hardware-Adaptation).
+
+Per-output-channel weight scales (1, n); per-tensor activation scales (1,).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# (weight name, is it the FFN-in (d, d_ff) / FFN-out (d_ff, d) matrix)
+W_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def layer_weight_specs(d: int, d_ff: int):
+    """[(name, shape)] for one layer's dense weights + biases + LN params."""
+    shapes = {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w1": (d, d_ff), "w2": (d_ff, d),
+    }
+    specs = []
+    for n in W_NAMES:
+        specs.append((n, shapes[n]))
+        specs.append((f"b{n[1:]}", (shapes[n][1],)))
+    specs += [("ln1_g", (d,)), ("ln1_b", (d,)), ("ln2_g", (d,)), ("ln2_b", (d,))]
+    return specs
+
+
+def _ln(x, g, b, eps=1e-12):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(q, k, v, mask, n_heads):
+    B, T, d = q.shape
+    dk = d // n_heads
+
+    def split(x):
+        return x.reshape(B, T, n_heads, dk).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    bias = (1.0 - mask)[:, None, None, :] * (-1e9)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dk)) + bias
+    attn = jax.nn.softmax(scores, axis=-1)
+    return (attn @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+
+
+def _int_mm(x, s_x, wq, s_w, bits: float):
+    """Real integer matmul: quantize x per-tensor, int8 MAC, dequantize.
+
+    x: (..., k) f32;  wq: (k, n) int8;  s_x: (1,);  s_w: (1, n).
+
+    Storage note: the paper's k-bit grid tops out at l_max = 2^{k-1}, which
+    for k=8 (+128) does NOT fit two's-complement int8 — the deployed integer
+    path therefore clamps to 127 (standard symmetric int8), while QAT
+    fake-quant keeps the paper's exact grid. int4 is unaffected (+8 fits the
+    offset-nibble encoding)."""
+    lmin, lmax = -(2 ** (int(bits) - 1)) + 1, 2 ** (int(bits) - 1)
+    if int(bits) == 8:
+        lmax = 127
+    xq = jnp.clip(jnp.round(x / s_x), lmin, lmax)
+    # §Perf iteration 2 (EXPERIMENTS.md): XLA-CPU 0.5.1 lowers s8xs8->s32
+    # dot_general to a scalar loop (measured 6-9x SLOWER than f32 GEMM), so
+    # the integer codes ride the f32 GEMM fast path instead. Codes are
+    # small integers, exactly representable in f32; on TPU/GPU this line is
+    # where the int8 MXU/tensor-core path goes (DESIGN.md
+    # §Hardware-Adaptation).
+    acc = jax.lax.dot_general(
+        xq, wq.astype(jnp.float32),
+        dimension_numbers=(((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return acc * s_x * s_w
+
+
+def _unpack_k(wp, k: int):
+    """(k//2, n) packed bytes → (k, n) int8 codes (in-graph unpack)."""
+    p = wp.astype(jnp.int32)
+    lo = (p & 0xF) - ref.INT4_OFFSET
+    hi = ((p >> 4) & 0xF) - ref.INT4_OFFSET
+    return jnp.stack([lo, hi], axis=1).reshape(k, p.shape[1]).astype(jnp.int8)
+
+
+def make_layer_fp32(n_heads: int):
+    def layer(h, mask, wq, bq, wk, bk, wv, bv, wo, bo, w1, b1, w2, b2, ln1g, ln1b, ln2g, ln2b):
+        q = h @ wq + bq
+        k = h @ wk + bk
+        v = h @ wv + bv
+        oa = _attention(q, k, v, mask, n_heads)
+        h = _ln(h + (oa @ wo + bo), ln1g, ln1b)
+        f = jax.nn.gelu(h @ w1 + b1, approximate=False)
+        h = _ln(h + (f @ w2 + b2), ln2g, ln2b)
+        return (h,)
+
+    return layer
+
+
+def make_layer_int(n_heads: int, bits: float, packed: bool, d: int, d_ff: int):
+    """int8 (packed=False) or int4 (packed=True) layer. Weight arguments are
+    int8 codes or packed bytes; each dense site gets (act_scale, w_scale)."""
+
+    def layer(h, mask,
+              wq, bq, wk, bk, wv, bv, wo, bo, w1, b1, w2, b2,
+              ln1g, ln1b, ln2g, ln2b,
+              sa_qkv, sa_attn, sa_ffn1, sa_ffn2,
+              sw_q, sw_k, sw_v, sw_o, sw_1, sw_2):
+        if packed:
+            wq_, wk_, wv_, wo_ = (_unpack_k(w, d) for w in (wq, wk, wv, wo))
+            w1_ = _unpack_k(w1, d)
+            w2_ = _unpack_k(w2, d_ff)
+        else:
+            wq_, wk_, wv_, wo_, w1_, w2_ = wq, wk, wv, wo, w1, w2
+        q = _int_mm(h, sa_qkv, wq_, sw_q, bits) + bq
+        k = _int_mm(h, sa_qkv, wk_, sw_k, bits) + bk
+        v = _int_mm(h, sa_qkv, wv_, sw_v, bits) + bv
+        oa = _attention(q, k, v, mask, n_heads)
+        h = _ln(h + (_int_mm(oa, sa_attn, wo_, sw_o, bits) + bo), ln1g, ln1b)
+        f = jax.nn.gelu(_int_mm(h, sa_ffn1, w1_, sw_1, bits) + b1, approximate=False)
+        h = _ln(h + (_int_mm(f, sa_ffn2, w2_, sw_2, bits) + b2), ln2g, ln2b)
+        return (h,)
+
+    return layer

@@ -1,0 +1,55 @@
+"""Model / training configuration shared by the L2 graph and the AOT manifest.
+
+The Rust coordinator never imports this — it reads the emitted
+``artifacts/manifest.txt`` which records every dimension below. Changing a
+value here and re-running ``make artifacts`` is the only config channel
+between the layers.
+
+Presets:
+  * ``default`` — scaled-down TinyBERT-shaped encoder used for the QAT
+    experiments (Tables 1 & 3). Dims are reduced so a full Table-1 sweep
+    runs on CPU in minutes; the quantization pipeline is dimension-
+    agnostic (DESIGN.md §Substitutions).
+  * ``tinybert`` — the paper's TinyBERT4 dims (L=4, d=312, d_i=1200,
+    A_h=12).
+  * ``bert_base_layer`` — BERT-base layer dims used by the Table-2
+    per-layer latency benchmarks (d=768, d_i=3072, A_h=12).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    seq: int = 24
+    n_layers: int = 4
+    d_model: int = 96
+    n_heads: int = 4
+    d_ff: int = 384
+    n_classes: int = 2
+    batch: int = 16          # training batch size
+    eval_batch: int = 64     # eval batch size
+    k_steps: int = 10        # lax.scan steps per train_step execution
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # Quantized matmul sites per transformer layer (DESIGN.md):
+    # activations: qkv-in, attn-out-in, ffn1-in, ffn2-in.
+    N_ACT_SITES = 4
+    ACT_SITE_NAMES = ("qkv_in", "attn_out_in", "ffn1_in", "ffn2_in")
+    # weights: Wq, Wk, Wv, Wo, W1, W2.
+    N_W_SITES = 6
+    W_SITE_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+PRESETS = {
+    "default": ModelConfig(),
+    "tinybert": ModelConfig(vocab=512, seq=32, n_layers=4, d_model=312, n_heads=12, d_ff=1200),
+    "bert_base_layer": ModelConfig(vocab=512, seq=43, n_layers=1, d_model=768, n_heads=12, d_ff=3072),
+}

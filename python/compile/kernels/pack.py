@@ -1,0 +1,72 @@
+"""Pallas int4 pack/unpack kernels.
+
+The paper's 5.3x bits-reduction claim rests on int4 *storage*: two weight
+codes per byte. These kernels do the (un)packing as tiled Pallas calls so
+the same BlockSpec schedule used for the matmul covers the repack path
+(weights are packed once offline, unpacked on the fly in qmatmul4's
+kernel; this standalone pair exists for the weight-conversion pipeline
+and as the unit-test surface for the bit manipulation).
+
+Offset encoding: nibble = code + 7 in [0, 15] — the paper's k-bit grid is
+[-2^{k-1}+1, 2^{k-1}] = [-7, 8] for k=4, which does NOT fit a two's-
+complement nibble ([-8, 7]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 256
+
+
+def _pack_kernel(q_ref, p_ref):
+    q = q_ref[...].astype(jnp.int32) + ref.INT4_OFFSET
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    p_ref[...] = lo | (hi << 4)
+
+
+@jax.jit
+def pack_int4(q):
+    """(r, c) int32 codes in [-7, 8], c even → (r, c//2) packed bytes."""
+    r, c = q.shape
+    br = min(BLOCK, r)
+    assert r % br == 0 and c % 2 == 0
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c // 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c // 2), jnp.int32),
+        interpret=True,
+    )(q)
+
+
+def _unpack_kernel(p_ref, q_ref):
+    p = p_ref[...]
+    lo = (p & 0xF) - ref.INT4_OFFSET
+    hi = ((p >> 4) & 0xF) - ref.INT4_OFFSET
+    q_ref[...] = jnp.stack([lo, hi], axis=-1).reshape(q_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim",))
+def unpack_int4(p, out_dim: int):
+    """(r, c//2) packed bytes → (r, c) int32 codes."""
+    r, cp = p.shape
+    assert out_dim == cp * 2
+    br = min(BLOCK, r)
+    assert r % br == 0
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, cp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, out_dim), jnp.int32),
+        interpret=True,
+    )(p)

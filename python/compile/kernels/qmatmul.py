@@ -1,0 +1,160 @@
+"""Pallas quantized-matmul kernel — the paper's contribution-3 hot path.
+
+The paper implements int4 GEMM as CUDA kernels on T4 (threadblock tiles
+staged through shared memory, WMMA MACs). Re-expressed for the TPU/Pallas
+model (see DESIGN.md §Hardware-Adaptation):
+
+  * threadblock tile      → ``BlockSpec`` tile staged into VMEM,
+  * WMMA fragment         → f32/int32 accumulator block held in VMEM
+                            across the K grid dimension,
+  * shared-memory A/B     → (bm, bk) activation and (bk, bn) weight blocks,
+  * int4 storage          → weights arrive as *offset-packed* bytes
+                            (two nibbles per byte, see pack.py) and are
+                            unpacked in-kernel — in registers, exactly as
+                            the CUDA kernel does — halving HBM→VMEM weight
+                            traffic.
+
+Kernels MUST run ``interpret=True`` here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is pytest vs
+``ref.qmatmul``; TPU performance is estimated analytically (DESIGN.md
+§Perf) from VMEM footprint and MXU utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes. Chosen so at paper dims (k=n=768..3072) the VMEM
+# working set  bm*bk*4 + bk*bn (int8) + bm*bn*4  stays well under 16 MiB
+# while keeping the MXU-shaped (128x128) inner dot.
+BM, BK, BN = 64, 128, 128
+
+
+def _qmm_kernel(x_ref, wq_ref, sx_ref, sw_ref, o_ref, *, nk: int, bits: float):
+    """One (i, j, k) grid step: quantize the activation block, integer-MAC
+    against the weight block, accumulate; dequantize on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    sx = sx_ref[...]                      # (bm, 1) per-row activation scales
+    xq = ref.quantize_int(x, sx, bits)    # integer codes, f32 carrier
+    w = wq_ref[...].astype(jnp.float32)   # integer codes
+    # Integer MAC (exact in f32: |codes| <= 2^7, bk <= 2^11 => acc < 2^22).
+    o_ref[...] += jnp.dot(xq, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _dequant():
+        o_ref[...] = o_ref[...] * sx * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bk", "bn"))
+def qmatmul(x, wq, sx, sw, *, bits: float = 8.0, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Quantized matmul  out = (round(clamp(x/sx)) @ wq) * sx * sw.
+
+    x:  (m, k) f32 activations.
+    wq: (k, n) int8 weight codes (already quantized offline).
+    sx: (m, 1) f32 per-row activation scales.
+    sw: (1, n) f32 per-output-channel weight scales.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, (k, k2)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, wq.shape, (bm, bk, bn))
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wq, sx, sw)
+
+
+def _qmm4_kernel(x_ref, wp_ref, sx_ref, sw_ref, o_ref, *, nk: int):
+    """int4 variant: the weight block arrives *packed* (bk/2 rows of bytes,
+    two K-rows per byte) and is unpacked in-kernel — register-level
+    unpacking, the direct analogue of the paper's CUDA int4 path. Weight
+    HBM→VMEM traffic is halved vs int8."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    sx = sx_ref[...]
+    xq = ref.quantize_int(x, sx, 4.0)
+
+    p = wp_ref[...].astype(jnp.int32)           # (bk//2, bn) packed bytes
+    lo = (p & 0xF) - ref.INT4_OFFSET            # K rows 0,2,4,...
+    hi = ((p >> 4) & 0xF) - ref.INT4_OFFSET     # K rows 1,3,5,...
+    w = jnp.stack([lo, hi], axis=1).reshape(p.shape[0] * 2, p.shape[1])
+    o_ref[...] += jnp.dot(xq, w.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _dequant():
+        o_ref[...] = o_ref[...] * sx * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def qmatmul4(x, wp, sx, sw, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """int4 quantized matmul over nibble-packed weights.
+
+    wp: (k//2, n) int32 byte values — ``ref.pack_int4`` of the (k, n) codes
+    along axis 0 (i.e. pack pairs of K rows: byte r holds K rows 2r, 2r+1).
+    """
+    m, k = x.shape
+    kp, n = wp.shape
+    assert kp * 2 == k, (kp, k)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmm4_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wp, sx, sw)
+
+
+def pack_weights_k(wq):
+    """Pack (k, n) int codes along K into (k//2, n) bytes for qmatmul4."""
+    k, n = wq.shape
+    assert k % 2 == 0
+    qo = (wq.astype(jnp.int32) + ref.INT4_OFFSET)
+    lo = qo[0::2, :]
+    hi = qo[1::2, :]
+    return lo | (hi << 4)
+
+
+def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN, int4: bool = False) -> int:
+    """Analytic VMEM working set of one grid step (DESIGN.md §Perf)."""
+    x_tile = bm * bk * 4           # f32 activations
+    w_tile = bk * bn * (1 if not int4 else 1) // (2 if int4 else 1)
+    acc = bm * bn * 4
+    scales = (bm + bn) * 4
+    return x_tile + w_tile + acc + scales

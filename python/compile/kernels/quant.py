@@ -1,0 +1,67 @@
+"""Learned-step-size quantizers with the paper's custom scale gradients.
+
+``fake_quant(x, s, bits, mse_flag)`` implements Eq. (1) forward and a
+``jax.custom_vjp`` backward with BOTH scale-gradient rules, selected by the
+*traced* ``mse_flag`` input (1.0 = MKQ-BERT's MSE-based gradient, 0.0 = the
+STE/LSQ gradient used by KDLSQ). Keeping the selector traced means a single
+AOT artifact serves both the MKQ runs and the KDLSQ baseline rows of
+Tables 1 and 3 — the Rust coordinator just feeds a different scalar.
+
+Gradients:
+  w.r.t. x  — straight-through inside the clip range (both modes).
+  w.r.t. s  — MSE mode (paper §4.1.2):
+                 Gradient(s) = 2 (Q[x]-x) * round(clamp(x/s)), summed.
+              The upstream cotangent is *ignored*: the scale descends the
+              quantization MSE directly (this is the paper's definition
+              "∂f/∂s := Gradient(s)").
+            — STE mode (§4.1.1 / LSQ):
+                 per-element (round(x/s) - x/s) in range, clip bound
+                 outside, times the upstream cotangent, summed.
+  w.r.t. bits / mse_flag — zero (selector inputs, never trained).
+
+``bits`` is also traced (f32 code: 4.0 / 8.0 / 32.0), so one artifact
+serves every per-layer bit configuration of Table 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+@jax.custom_vjp
+def fake_quant(x, s, bits, mse_flag):
+    return ref.fake_quant(x, s, bits)
+
+
+def _fq_fwd(x, s, bits, mse_flag):
+    return ref.fake_quant(x, s, bits), (x, s, bits, mse_flag)
+
+
+def _fq_bwd(res, g):
+    x, s, bits, mse_flag = res
+    gx = ref.ste_x_grad(x, s, bits, upstream=g)
+    g_mse = ref.mse_scale_grad(x, s, bits)
+    g_ste = ref.ste_scale_grad(x, s, bits, upstream=g)
+    gs = mse_flag * g_mse + (1.0 - mse_flag) * g_ste
+    # At bits>=32 the caller selects the identity branch; the MSE gradient
+    # (which ignores the upstream cotangent by design) must not leak into
+    # the scale there.
+    gs = gs * jnp.asarray(bits < 31.5, dtype=gs.dtype)
+    return gx, gs, jnp.zeros_like(bits), jnp.zeros_like(mse_flag)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def maybe_fake_quant(x, s, bits, mse_flag):
+    """fake_quant that degrades to identity for bits >= 32 (fp32 path).
+
+    Used by the model so the same traced graph can run any row of Table 1;
+    the fp32 branch still costs the quant arithmetic but never executes on
+    the serving path (serving uses the integer kernels in qmatmul.py).
+    """
+    q = fake_quant(x, s, bits, mse_flag)
+    return jnp.where(bits >= 31.5, x, q)

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Everything in this file is the *ground truth* the Pallas kernels and the
+custom-VJP quantizers are tested against (pytest + hypothesis). It follows
+the paper's notation:
+
+  Q[x] = s * round(clamp(x / s, l_min, l_max))          (Eq. 1)
+
+with, for k-bit quantization,
+
+  l_min = -2^{k-1} + 1,   l_max = 2^{k-1}.
+
+Note the *asymmetric* bound (l_max = 2^{k-1}, not 2^{k-1} - 1) — for k=4
+the integer grid is [-7, 8], which is why the int4 packing uses an offset
+(nibble = q + 7 in [0, 15]) rather than two's-complement nibbles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qbounds(bits):
+    """(l_min, l_max) for k-bit quantization per the paper's convention."""
+    lmax = jnp.exp2(bits - 1.0)
+    return -lmax + 1.0, lmax
+
+
+def quantize_int(x, s, bits):
+    """Integer codes round(clamp(x/s, l_min, l_max)) as float values."""
+    lmin, lmax = qbounds(bits)
+    return jnp.round(jnp.clip(x / s, lmin, lmax))
+
+
+def fake_quant(x, s, bits):
+    """Eq. (1): quantize-dequantize (the QAT forward)."""
+    return s * quantize_int(x, s, bits)
+
+
+def quant_error(x, s, bits):
+    """||Q[x] - x||^2 — the objective the MSE-based scale gradient descends."""
+    d = fake_quant(x, s, bits) - x
+    return jnp.sum(d * d)
+
+
+def _reduce_to_shape(g, shape):
+    """Sum-reduce a gradient onto a broadcastable scale shape (per-tensor
+    scalar or per-row (r, 1) scales)."""
+    g = jnp.asarray(g)
+    shape = tuple(shape)
+    if g.shape == shape:
+        return g
+    while g.ndim > len(shape):
+        g = jnp.sum(g, axis=0)
+    axes = tuple(i for i, (gd, sd) in enumerate(zip(g.shape, shape)) if sd == 1 and gd != 1)
+    if axes:
+        g = jnp.sum(g, axis=axes, keepdims=True)
+    return g.reshape(shape)
+
+
+def mse_scale_grad(x, s, bits):
+    """Paper §4.1.2: Gradient(s) := d||Q[x]-x||^2/ds = 2 (Q[x]-x) * round(x/s),
+    summed over the tensor (reduced onto s's shape for per-row scales).
+
+    This gradient deliberately ignores the upstream task-loss cotangent —
+    the scale is driven to minimize quantization MSE, which is the paper's
+    core algorithmic contribution.
+    """
+    v = quantize_int(x, s, bits)
+    g = 2.0 * (s * v - x) * v
+    return _reduce_to_shape(g, jnp.shape(s))
+
+
+def ste_scale_grad(x, s, bits, upstream=None):
+    """§4.1.1 / LSQ (Esser et al. 2019; the KDLSQ baseline): per-element
+
+        d Q[x]/ds = round(x/s) - x/s     for in-range x,
+                  = l_min or l_max       for clipped x,
+
+    multiplied by the upstream cotangent and summed onto s's shape."""
+    lmin, lmax = qbounds(bits)
+    r = x / s
+    in_range = (r >= lmin) & (r <= lmax)
+    per_elem = jnp.where(in_range, jnp.round(r) - r, jnp.clip(r, lmin, lmax))
+    if upstream is None:
+        upstream = jnp.ones_like(x)
+    return _reduce_to_shape(upstream * per_elem, jnp.shape(s))
+
+
+def ste_x_grad(x, s, bits, upstream=None):
+    """Straight-through gradient for x: pass-through inside the clip range."""
+    lmin, lmax = qbounds(bits)
+    r = x / s
+    mask = ((r >= lmin) & (r <= lmax)).astype(x.dtype)
+    if upstream is None:
+        upstream = jnp.ones_like(x)
+    return upstream * mask
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul (the inference-path oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def qmatmul(x, wq, sx, sw, bits):
+    """Quantized matmul oracle:
+
+      xq  = round(clamp(x / sx))       per-row activation quantization
+      acc = xq @ wq                    integer MAC (exact in f32 here)
+      out = acc * sx * sw              dequantize
+
+    x: (m, k) f32; wq: (k, n) integer codes; sx: (m, 1) or scalar;
+    sw: (1, n) or scalar (per-output-channel weight scales).
+    """
+    xq = quantize_int(x, sx, bits)
+    acc = jnp.matmul(xq, wq.astype(jnp.float32))
+    sw = jnp.reshape(sw, (1, -1)) if jnp.ndim(sw) > 0 else sw
+    return acc * sx * sw
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two offset-nibbles per byte)
+# ---------------------------------------------------------------------------
+
+INT4_OFFSET = 7  # maps q in [-7, 8] to nibble in [0, 15]
+
+
+def pack_int4(q):
+    """Pack integer codes q (int32 values in [-7, 8], last dim even) into
+    byte values: low nibble = q[..., 0::2], high nibble = q[..., 1::2]."""
+    qo = (q + INT4_OFFSET).astype(jnp.int32)
+    lo = qo[..., 0::2]
+    hi = qo[..., 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_int4(p, out_dim):
+    """Inverse of pack_int4; p holds byte values in [0, 255]."""
+    lo = (p & 0xF) - INT4_OFFSET
+    hi = ((p >> 4) & 0xF) - INT4_OFFSET
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], out_dim)

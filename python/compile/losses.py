@@ -1,0 +1,84 @@
+"""Distillation + task losses (paper §3.3, §4.2, Eq. 6/8/9/10).
+
+  L_final = L_train + alpha * L_output + beta * (L_attention + L_value)
+
+* L_train     — softmax cross-entropy on the student logits.
+* L_output    — MSE between student and teacher logits (Eq. 6).
+* L_attention — MiniLM-style KL between the *last-layer* attention
+                distributions, summed over heads (Eq. 8). Last-layer-only
+                distillation is what lets a deeper teacher train a
+                shallower student without a layer map (§4.2).
+* L_value     — KL between the value-relation distributions
+                softmax(v vᵀ / sqrt(d_k)) of student and teacher (Eq. 9).
+
+``alpha`` / ``beta`` arrive as traced scalars: alpha=beta=0 reproduces the
+"w/o KD" ablations of Table 3 and the plain-QAT baselines from the same
+AOT artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy_count(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def output_kd(student_logits, teacher_logits):
+    """Eq. 6 with MSE as L: mean squared logit difference."""
+    return jnp.mean(jnp.square(student_logits - teacher_logits))
+
+
+def _masked_kl(logp_s, logp_t, qmask):
+    """KL(S || T) for (B, H, Tq, Tk) log-distributions over the last axis,
+    summed over heads (Eq. 8's sum_a), averaged over valid query rows."""
+    kl = jnp.sum(jnp.exp(logp_s) * (logp_s - logp_t), axis=-1)  # (B,H,Tq)
+    kl = jnp.sum(kl, axis=1)                                    # sum over heads
+    denom = jnp.maximum(jnp.sum(qmask), 1.0)
+    return jnp.sum(kl * qmask[:, None] if kl.ndim == 2 else kl * qmask) / denom
+
+
+def attention_kd(attn_logp_s, attn_logp_t, mask):
+    """Eq. 8: sum_a KL(A_a^S || A_a^T) over the last layer, mask-aware."""
+    kl = jnp.sum(jnp.exp(attn_logp_s) * (attn_logp_s - attn_logp_t), axis=-1)  # (B,H,T)
+    kl = jnp.sum(kl, axis=1)  # (B,T) summed over heads
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(kl * mask) / denom
+
+
+def value_relation_logp(v, mask, d_head):
+    """log softmax(v vᵀ / sqrt(d_k)) with padded keys masked out.
+
+    v: (B, H, T, dk); mask: (B, T)."""
+    vr = (v @ v.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(d_head))
+    vr = vr + (1.0 - mask)[:, None, None, :] * (-1e9)
+    return jax.nn.log_softmax(vr, axis=-1)
+
+
+def value_kd(v_s, v_t, mask, d_head):
+    """Eq. 9: sum_a KL over the value-relation distributions."""
+    logp_s = value_relation_logp(v_s, mask, d_head)
+    logp_t = value_relation_logp(v_t, mask, d_head)
+    return attention_kd(logp_s, logp_t, mask)
+
+
+def combined_loss(student_logits, student_aux, teacher_logits, teacher_aux,
+                  labels, mask, d_head, alpha, beta):
+    """Eq. 10. Returns (total, parts dict)."""
+    l_train = cross_entropy(student_logits, labels)
+    l_out = output_kd(student_logits, jax.lax.stop_gradient(teacher_logits))
+    l_att = attention_kd(student_aux["attn_logp"],
+                         jax.lax.stop_gradient(teacher_aux["attn_logp"]), mask)
+    l_val = value_kd(student_aux["v"],
+                     jax.lax.stop_gradient(teacher_aux["v"]), mask, d_head)
+    total = l_train + alpha * l_out + beta * (l_att + l_val)
+    parts = {"train": l_train, "output": l_out, "attention": l_att, "value": l_val}
+    return total, parts

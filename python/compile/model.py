@@ -1,0 +1,240 @@
+"""L2: quantization-aware TinyBERT-shaped encoder in JAX.
+
+All parameters and quantization scales travel across the Rust boundary as
+*flat, ordered lists* of arrays; ``param_specs`` / ``scale_specs`` define
+the canonical order, which ``aot.py`` records in the artifact manifest.
+
+The student forward is traced with *runtime* per-layer bit codes
+(f32 vector, values 4/8/32), so a single AOT artifact serves every
+bit-allocation row of Tables 1 and 3. The teacher forward is the same
+network with quantization statically disabled (``quantize=False``).
+
+Per the paper (§5): LayerNorm, softmax and GELU run in fp32; the
+embedding layer is never quantized; the 6 fc matmuls per transformer
+layer have their input activations and weights fake-quantized during QAT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.quant import fake_quant
+from .kernels import ref
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Parameter / scale specs (the flat ordering contract with Rust)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """[(name, shape)] in canonical order."""
+    specs = [
+        ("emb_word", (cfg.vocab, cfg.d_model)),
+        ("emb_pos", (cfg.seq, cfg.d_model)),
+        ("emb_ln_g", (cfg.d_model,)),
+        ("emb_ln_b", (cfg.d_model,)),
+    ]
+    for l in range(cfg.n_layers):
+        d, f = cfg.d_model, cfg.d_ff
+        specs += [
+            (f"l{l}_wq", (d, d)), (f"l{l}_bq", (d,)),
+            (f"l{l}_wk", (d, d)), (f"l{l}_bk", (d,)),
+            (f"l{l}_wv", (d, d)), (f"l{l}_bv", (d,)),
+            (f"l{l}_wo", (d, d)), (f"l{l}_bo", (d,)),
+            (f"l{l}_ln1_g", (d,)), (f"l{l}_ln1_b", (d,)),
+            (f"l{l}_w1", (d, f)), (f"l{l}_b1", (f,)),
+            (f"l{l}_w2", (f, d)), (f"l{l}_b2", (d,)),
+            (f"l{l}_ln2_g", (d,)), (f"l{l}_ln2_b", (d,)),
+        ]
+    specs += [
+        ("pool_w", (cfg.d_model, cfg.d_model)),
+        ("pool_b", (cfg.d_model,)),
+        ("cls_w", (cfg.d_model, cfg.n_classes)),
+        ("cls_b", (cfg.n_classes,)),
+    ]
+    return specs
+
+
+def scale_specs(cfg: ModelConfig):
+    """Quantization scales, all shape (1,): 4 activation sites + 6 weight
+    sites per layer, in layer-major order."""
+    specs = []
+    for l in range(cfg.n_layers):
+        for a in ModelConfig.ACT_SITE_NAMES:
+            specs.append((f"l{l}_s_act_{a}", (1,)))
+        for w in ModelConfig.W_SITE_NAMES:
+            specs.append((f"l{l}_s_w_{w}", (1,)))
+    return specs
+
+
+def flat_to_dict(specs, flat):
+    assert len(specs) == len(flat), (len(specs), len(flat))
+    return {name: x for (name, _), x in zip(specs, flat)}
+
+
+def dict_to_flat(specs, d):
+    return [d[name] for name, _ in specs]
+
+
+def init_params(cfg: ModelConfig, key):
+    """Standard BERT-style init: N(0, 0.02) matrices, zero biases, unit LN."""
+    out = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "_bq", "_bk", "_bv", "_bo", "_b1", "_b2")) or name in ("pool_b", "cls_b"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif len(shape) == 1:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            out[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return out
+
+
+def init_scales(cfg: ModelConfig):
+    """Placeholder scales (overwritten by calibration before QAT)."""
+    return {name: jnp.full(shape, 0.1, jnp.float32) for name, shape in scale_specs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-12):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _mfq(x, s, bits, mse_flag):
+    """Fake-quant degrading to identity at bits>=32; the scale receives no
+    gradient in the fp32 branch (the select masks the MSE grad too via the
+    bits gate inside the custom VJP wrapper below)."""
+    q = fake_quant(x, s, bits, mse_flag)
+    gate = (bits < 31.5).astype(x.dtype)
+    return gate * q + (1.0 - gate) * x
+
+
+def forward(cfg: ModelConfig, params, scales, ids, mask, bits, mse_flag, *, quantize=True):
+    """Encoder forward.
+
+    ids:  (B, T) int32 token ids; mask: (B, T) f32 {0,1} valid-token mask.
+    bits: (L,) f32 per-layer bit codes (ignored when quantize=False).
+    Returns (logits, aux) where aux carries the last layer's attention
+    distribution and value vectors for the MiniLM distillation losses.
+    """
+    B, T = ids.shape
+    d, H, dk = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    h = params["emb_word"][ids] + params["emb_pos"][None, :T, :]
+    h = layer_norm(h, params["emb_ln_g"], params["emb_ln_b"])
+
+    # (B, 1, 1, T) additive attention mask.
+    attn_bias = (1.0 - mask)[:, None, None, :] * NEG_INF
+
+    def q_act(x, l, site, b):
+        if not quantize:
+            return x
+        return _mfq(x, scales[f"l{l}_s_act_{site}"], b, mse_flag)
+
+    def q_w(l, site, b):
+        w = params[f"l{l}_{site}"]
+        if not quantize:
+            return w
+        return _mfq(w, scales[f"l{l}_s_w_{site}"], b, mse_flag)
+
+    aux = {}
+    for l in range(cfg.n_layers):
+        b = bits[l] if quantize else jnp.float32(32.0)
+        hq = q_act(h, l, "qkv_in", b)
+        q = hq @ q_w(l, "wq", b) + params[f"l{l}_bq"]
+        k = hq @ q_w(l, "wk", b) + params[f"l{l}_bk"]
+        v = hq @ q_w(l, "wv", b) + params[f"l{l}_bv"]
+
+        def split(x):
+            return x.reshape(B, T, H, dk).transpose(0, 2, 1, 3)  # (B,H,T,dk)
+
+        q, k, v = split(q), split(k), split(v)
+        scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dk)) + attn_bias
+        attn_logp = jax.nn.log_softmax(scores, axis=-1)
+        attn = jnp.exp(attn_logp)
+        oa = (attn @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+
+        oaq = q_act(oa, l, "attn_out_in", b)
+        attn_out = oaq @ q_w(l, "wo", b) + params[f"l{l}_bo"]
+        h = layer_norm(h + attn_out, params[f"l{l}_ln1_g"], params[f"l{l}_ln1_b"])
+
+        x1 = q_act(h, l, "ffn1_in", b)
+        f = jax.nn.gelu(x1 @ q_w(l, "w1", b) + params[f"l{l}_b1"], approximate=False)
+        fq = q_act(f, l, "ffn2_in", b)
+        f2 = fq @ q_w(l, "w2", b) + params[f"l{l}_b2"]
+        h = layer_norm(h + f2, params[f"l{l}_ln2_g"], params[f"l{l}_ln2_b"])
+
+        if l == cfg.n_layers - 1:
+            aux["attn_logp"] = attn_logp      # (B,H,T,T)
+            aux["v"] = v                      # (B,H,T,dk)
+
+    pooled = jnp.tanh(h[:, 0, :] @ params["pool_w"] + params["pool_b"])
+    logits = pooled @ params["cls_w"] + params["cls_b"]
+    return logits, aux
+
+
+def forward_collect_act_stats(cfg: ModelConfig, params, ids, mask):
+    """Unquantized forward that records |activation| statistics at every
+    activation quantization site — the calibration pass (§3.1).
+
+    Returns (act_q, act_max): two (L, 4) arrays with the 99.99th percentile
+    and the max of |x| at each site (paper: "top 0.01% largest value").
+    Weight abs-max is computed by the same artifact from params directly.
+    """
+    B, T = ids.shape
+    d, H, dk = cfg.d_model, cfg.n_heads, cfg.d_head
+    h = params["emb_word"][ids] + params["emb_pos"][None, :T, :]
+    h = layer_norm(h, params["emb_ln_g"], params["emb_ln_b"])
+    attn_bias = (1.0 - mask)[:, None, None, :] * NEG_INF
+
+    qs, ms = [], []
+
+    def record(x):
+        a = jnp.abs(x).reshape(-1)
+        qs.append(jnp.quantile(a, 0.9999))
+        ms.append(jnp.max(a))
+
+    for l in range(cfg.n_layers):
+        record(h)
+        q = h @ params[f"l{l}_wq"] + params[f"l{l}_bq"]
+        k = h @ params[f"l{l}_wk"] + params[f"l{l}_bk"]
+        v = h @ params[f"l{l}_wv"] + params[f"l{l}_bv"]
+
+        def split(x):
+            return x.reshape(B, T, H, dk).transpose(0, 2, 1, 3)
+
+        q, k, v = split(q), split(k), split(v)
+        scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dk)) + attn_bias
+        attn = jax.nn.softmax(scores, axis=-1)
+        oa = (attn @ v).transpose(0, 2, 1, 3).reshape(B, T, d)
+        record(oa)
+        attn_out = oa @ params[f"l{l}_wo"] + params[f"l{l}_bo"]
+        h = layer_norm(h + attn_out, params[f"l{l}_ln1_g"], params[f"l{l}_ln1_b"])
+        record(h)
+        f = jax.nn.gelu(h @ params[f"l{l}_w1"] + params[f"l{l}_b1"], approximate=False)
+        record(f)
+        f2 = f @ params[f"l{l}_w2"] + params[f"l{l}_b2"]
+        h = layer_norm(h + f2, params[f"l{l}_ln2_g"], params[f"l{l}_ln2_b"])
+
+    act_q = jnp.stack(qs).reshape(cfg.n_layers, ModelConfig.N_ACT_SITES)
+    act_max = jnp.stack(ms).reshape(cfg.n_layers, ModelConfig.N_ACT_SITES)
+    return act_q, act_max
+
+
+def weight_abs_max(cfg: ModelConfig, params):
+    """(L, 6) abs-max of each quantized weight matrix (weight-scale init)."""
+    rows = []
+    for l in range(cfg.n_layers):
+        rows.append(jnp.stack([jnp.max(jnp.abs(params[f"l{l}_{w}"])) for w in ModelConfig.W_SITE_NAMES]))
+    return jnp.stack(rows)

@@ -1,0 +1,28 @@
+"""Adam optimizer over arbitrary pytrees (paper §5.2 uses Adam with
+separate learning rates for weights, activation scales and weight scales;
+the per-step lr values arrive from the Rust scheduler)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over a pytree. ``step`` is the 1-based update index
+    (f32 scalar); ``lr`` a traced scalar. Returns (params, m, v)."""
+    bc1 = 1.0 - jnp.power(B1, step)
+    bc2 = 1.0 - jnp.power(B2, step)
+    new_m = jax.tree.map(lambda mi, g: B1 * mi + (1.0 - B1) * g, m, grads)
+    new_v = jax.tree.map(lambda vi, g: B2 * vi + (1.0 - B2) * jnp.square(g), v, grads)
+    new_p = jax.tree.map(
+        lambda p, mi, vi: p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + EPS),
+        params, new_m, new_v,
+    )
+    return new_p, new_m, new_v
+
+
+def zeros_like_tree(t):
+    return jax.tree.map(jnp.zeros_like, t)

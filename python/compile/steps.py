@@ -1,0 +1,223 @@
+"""Training / eval / calibration step functions — the AOT artifact bodies.
+
+Every public function here takes and returns *flat lists* of arrays (the
+manifest contract with Rust); internally state lives in name-keyed dicts.
+
+``train_step_k`` runs ``cfg.k_steps`` QAT updates in a single execution
+via ``lax.scan`` so the training state never leaves the device between
+micro-steps — the host round-trip (the only PJRT-level cost the Rust
+coordinator pays) is amortized K-fold. This is a §Perf design point, not
+an afterthought: the xla crate returns outputs as one tuple buffer that
+must be decomposed on the host, so K-step scan is the lever that keeps
+L3 off the critical path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, model, optim
+from .config import ModelConfig
+
+
+def _partition_scale_keys(cfg: ModelConfig):
+    act = [n for n, _ in model.scale_specs(cfg) if "_s_act_" in n]
+    wgt = [n for n, _ in model.scale_specs(cfg) if "_s_w_" in n]
+    return act, wgt
+
+
+# ---------------------------------------------------------------------------
+# QAT train step (K scanned updates)
+# ---------------------------------------------------------------------------
+
+def make_train_step_k(cfg: ModelConfig):
+    p_specs, s_specs = model.param_specs(cfg), model.scale_specs(cfg)
+    n_p, n_s = len(p_specs), len(s_specs)
+    act_keys, wgt_keys = _partition_scale_keys(cfg)
+
+    def loss_fn(params, scales, t_params, ids, mask, labels, bits, mse_flag, alpha, beta):
+        s_logits, s_aux = model.forward(cfg, params, scales, ids, mask, bits, mse_flag, quantize=True)
+        t_logits, t_aux = model.forward(cfg, t_params, None, ids, mask, bits, mse_flag, quantize=False)
+        total, parts = losses.combined_loss(
+            s_logits, s_aux, t_logits, t_aux, labels, mask, cfg.d_head, alpha, beta)
+        acc = losses.accuracy_count(s_logits, labels)
+        return total, (parts, acc)
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+
+    def train_step_k(*flat):
+        i = 0
+        def take(n):
+            nonlocal i
+            out = flat[i:i + n]
+            i += n
+            return list(out)
+
+        params = model.flat_to_dict(p_specs, take(n_p))
+        scales = model.flat_to_dict(s_specs, take(n_s))
+        m_p = model.flat_to_dict(p_specs, take(n_p))
+        v_p = model.flat_to_dict(p_specs, take(n_p))
+        m_s = model.flat_to_dict(s_specs, take(n_s))
+        v_s = model.flat_to_dict(s_specs, take(n_s))
+        (step,) = take(1)
+        t_params = model.flat_to_dict(p_specs, take(n_p))
+        ids, mask, labels, lr_w, lr_sa, lr_sw = take(6)      # (K,B,T)/(K,B)/(K,1)
+        alpha, beta, mse_flag, lsq_flag, bits = take(5)
+        assert i == len(flat), (i, len(flat))
+
+        a, b_, mf, lf = alpha[0], beta[0], mse_flag[0], lsq_flag[0]
+
+        def body(carry, xs):
+            params, scales, m_p, v_p, m_s, v_s, step = carry
+            ids_t, mask_t, labels_t, lrw_t, lrsa_t, lrsw_t = xs
+            (total, (parts, acc)), (g_p, g_s) = grad_fn(
+                params, scales, t_params, ids_t, mask_t, labels_t, bits, mf, a, b_)
+            # w/o-LSQ ablation: freeze scales by zeroing their gradients.
+            g_s = jax.tree.map(lambda g: g * lf, g_s)
+            step = step + 1.0
+            params, m_p, v_p = optim.adam_update(params, g_p, m_p, v_p, step[0], lrw_t[0])
+            # Separate lr for activation vs weight scales (§5.2).
+            ga = {k: g_s[k] for k in act_keys}
+            gw = {k: g_s[k] for k in wgt_keys}
+            sa, ma, va = optim.adam_update(
+                {k: scales[k] for k in act_keys}, ga,
+                {k: m_s[k] for k in act_keys}, {k: v_s[k] for k in act_keys},
+                step[0], lrsa_t[0])
+            sw, mw, vw = optim.adam_update(
+                {k: scales[k] for k in wgt_keys}, gw,
+                {k: m_s[k] for k in wgt_keys}, {k: v_s[k] for k in wgt_keys},
+                step[0], lrsw_t[0])
+            scales = {**sa, **sw}
+            # Scales must stay positive; clamp to a tiny floor.
+            scales = jax.tree.map(lambda s: jnp.maximum(s, 1e-6), scales)
+            m_s = {**ma, **mw}
+            v_s = {**va, **vw}
+            stats = jnp.stack([total, parts["train"], parts["output"],
+                               parts["attention"], parts["value"], acc])
+            return (params, scales, m_p, v_p, m_s, v_s, step), stats
+
+        carry = (params, scales, m_p, v_p, m_s, v_s, step)
+        carry, stats = jax.lax.scan(body, carry, (ids, mask, labels, lr_w, lr_sa, lr_sw))
+        params, scales, m_p, v_p, m_s, v_s, step = carry
+
+        out = (model.dict_to_flat(p_specs, params) + model.dict_to_flat(s_specs, scales)
+               + model.dict_to_flat(p_specs, m_p) + model.dict_to_flat(p_specs, v_p)
+               + model.dict_to_flat(s_specs, m_s) + model.dict_to_flat(s_specs, v_s)
+               + [step, stats])
+        return tuple(out)
+
+    return train_step_k
+
+
+# ---------------------------------------------------------------------------
+# fp32 teacher finetuning step (K scanned updates, CE only)
+# ---------------------------------------------------------------------------
+
+def make_train_fp32_k(cfg: ModelConfig):
+    p_specs = model.param_specs(cfg)
+    n_p = len(p_specs)
+    bits0 = jnp.zeros((cfg.n_layers,), jnp.float32)
+
+    def loss_fn(params, ids, mask, labels):
+        logits, _ = model.forward(cfg, params, None, ids, mask, bits0, 0.0, quantize=False)
+        return losses.cross_entropy(logits, labels), losses.accuracy_count(logits, labels)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_fp32_k(*flat):
+        params = model.flat_to_dict(p_specs, list(flat[:n_p]))
+        m = model.flat_to_dict(p_specs, list(flat[n_p:2 * n_p]))
+        v = model.flat_to_dict(p_specs, list(flat[2 * n_p:3 * n_p]))
+        step = flat[3 * n_p]
+        ids, mask, labels, lr = flat[3 * n_p + 1:3 * n_p + 5]
+
+        def body(carry, xs):
+            params, m, v, step = carry
+            ids_t, mask_t, labels_t, lr_t = xs
+            (loss, acc), g = grad_fn(params, ids_t, mask_t, labels_t)
+            step = step + 1.0
+            params, m, v = optim.adam_update(params, g, m, v, step[0], lr_t[0])
+            return (params, m, v, step), jnp.stack([loss, acc])
+
+        carry, stats = jax.lax.scan(body, (params, m, v, step), (ids, mask, labels, lr))
+        params, m, v, step = carry
+        out = (model.dict_to_flat(p_specs, params) + model.dict_to_flat(p_specs, m)
+               + model.dict_to_flat(p_specs, v) + [step, stats])
+        return tuple(out)
+
+    return train_fp32_k
+
+
+# ---------------------------------------------------------------------------
+# Eval / calibration / serving / init
+# ---------------------------------------------------------------------------
+
+def make_eval_step(cfg: ModelConfig):
+    p_specs, s_specs = model.param_specs(cfg), model.scale_specs(cfg)
+    n_p, n_s = len(p_specs), len(s_specs)
+
+    def eval_step(*flat):
+        params = model.flat_to_dict(p_specs, list(flat[:n_p]))
+        scales = model.flat_to_dict(s_specs, list(flat[n_p:n_p + n_s]))
+        bits, ids, mask, labels = flat[n_p + n_s:]
+        logits, _ = model.forward(cfg, params, scales, ids, mask, bits, jnp.float32(1.0), quantize=True)
+        correct = losses.accuracy_count(logits, labels)
+        loss = losses.cross_entropy(logits, labels)
+        return correct.reshape(1), loss.reshape(1), logits
+
+    return eval_step
+
+
+def make_teacher_eval(cfg: ModelConfig):
+    p_specs = model.param_specs(cfg)
+    n_p = len(p_specs)
+    bits0 = jnp.zeros((cfg.n_layers,), jnp.float32)
+
+    def teacher_eval(*flat):
+        params = model.flat_to_dict(p_specs, list(flat[:n_p]))
+        ids, mask, labels = flat[n_p:]
+        logits, _ = model.forward(cfg, params, None, ids, mask, bits0, 0.0, quantize=False)
+        return losses.accuracy_count(logits, labels).reshape(1), losses.cross_entropy(logits, labels).reshape(1), logits
+
+    return teacher_eval
+
+
+def make_calibrate(cfg: ModelConfig):
+    p_specs = model.param_specs(cfg)
+    n_p = len(p_specs)
+
+    def calibrate(*flat):
+        params = model.flat_to_dict(p_specs, list(flat[:n_p]))
+        ids, mask = flat[n_p:]
+        act_q, act_max = model.forward_collect_act_stats(cfg, params, ids, mask)
+        w_max = model.weight_abs_max(cfg, params)
+        return act_q, act_max, w_max
+
+    return calibrate
+
+
+def make_serve_fwd(cfg: ModelConfig):
+    p_specs, s_specs = model.param_specs(cfg), model.scale_specs(cfg)
+    n_p, n_s = len(p_specs), len(s_specs)
+
+    def serve_fwd(*flat):
+        params = model.flat_to_dict(p_specs, list(flat[:n_p]))
+        scales = model.flat_to_dict(s_specs, list(flat[n_p:n_p + n_s]))
+        bits, ids, mask = flat[n_p + n_s:]
+        logits, _ = model.forward(cfg, params, scales, ids, mask, bits, jnp.float32(1.0), quantize=True)
+        return (logits,)
+
+    return serve_fwd
+
+
+def make_init(cfg: ModelConfig):
+    p_specs, s_specs = model.param_specs(cfg), model.scale_specs(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0])
+        params = model.init_params(cfg, key)
+        scales = model.init_scales(cfg)
+        return tuple(model.dict_to_flat(p_specs, params) + model.dict_to_flat(s_specs, scales))
+
+    return init

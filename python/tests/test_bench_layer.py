@@ -1,0 +1,124 @@
+"""Table-2 layer graphs: integer paths vs fp32 reference, int4 vs int8 packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bench_layer
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+D, DFF, H = 64, 128, 4
+BS, T = 2, 8
+
+
+def _weights(seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in bench_layer.layer_weight_specs(D, DFF):
+        if name.startswith("w") and len(shape) == 2:
+            out[name] = rng.normal(scale=0.08, size=shape).astype(np.float32)
+        elif name.endswith("_g"):
+            out[name] = np.ones(shape, np.float32)
+        else:
+            out[name] = np.zeros(shape, np.float32)
+    return out
+
+
+def _quantize_weights(w, bits):
+    """Per-output-channel symmetric quantization, exactly what Rust does."""
+    lmax = 2 ** (bits - 1)
+    lmax_store = 127 if bits == 8 else lmax   # int8 storage can't hold +128
+    codes, scales = {}, {}
+    for name, val in w.items():
+        if name.startswith("w") and val.ndim == 2:
+            s = np.abs(val).max(axis=0, keepdims=True) / lmax   # (1, n)
+            q = np.clip(np.round(val / s), -lmax + 1, lmax_store)
+            codes[name] = q.astype(np.int8)
+            scales[name] = s.astype(np.float32)
+    return codes, scales
+
+
+def _inputs(seed=1):
+    rng = np.random.default_rng(seed)
+    h = rng.normal(scale=1.0, size=(BS, T, D)).astype(np.float32)
+    mask = np.ones((BS, T), np.float32)
+    return jnp.asarray(h), jnp.asarray(mask)
+
+
+def _flat_w(w):
+    return [jnp.asarray(w[n]) for n, _ in bench_layer.layer_weight_specs(D, DFF)]
+
+
+def test_fp32_layer_shapes():
+    h, mask = _inputs()
+    layer = bench_layer.make_layer_fp32(H)
+    (out,) = layer(h, mask, *_flat_w(_weights()))
+    assert out.shape == (BS, T, D)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def _run_int(bits, packed):
+    w = _weights()
+    h, mask = _inputs()
+    codes, wscales = _quantize_weights(w, bits)
+    act_scale = 4.0 / (2 ** (bits - 1))
+    flat = []
+    for n, shape in bench_layer.layer_weight_specs(D, DFF):
+        if n in codes:
+            if packed:
+                q = jnp.asarray(codes[n], jnp.int32)
+                flat.append(ref.pack_int4(q.T).T if False else _pack_k(codes[n]))
+            else:
+                flat.append(jnp.asarray(codes[n]))
+        else:
+            flat.append(jnp.asarray(w[n]))
+    sa = [jnp.asarray([act_scale], jnp.float32)] * 4
+    sw = [jnp.asarray(wscales[n]) for n in ("wq", "wk", "wv", "wo", "w1", "w2")]
+    layer = bench_layer.make_layer_int(H, float(bits), packed, D, DFF)
+    (out,) = layer(h, mask, *flat, *sa, *sw)
+    # fp32 oracle
+    (want,) = bench_layer.make_layer_fp32(H)(h, mask, *_flat_w(w))
+    return np.asarray(out), np.asarray(want)
+
+
+def _pack_k(codes):
+    """Pack (k, n) int8 codes along K into (k//2, n) bytes (offset nibbles)."""
+    q = jnp.asarray(codes, jnp.int32) + ref.INT4_OFFSET
+    return q[0::2, :] | (q[1::2, :] << 4)
+
+
+def test_int8_layer_close_to_fp32():
+    out, want = _run_int(8, packed=False)
+    err = np.abs(out - want).mean() / (np.abs(want).mean() + 1e-9)
+    assert err < 0.15, err
+
+
+def test_int4_layer_close_but_worse_than_int8():
+    out8, want = _run_int(8, packed=False)
+    out4, _ = _run_int(4, packed=True)
+    e8 = np.abs(out8 - want).mean()
+    e4 = np.abs(out4 - want).mean()
+    assert np.all(np.isfinite(out4))
+    assert e4 > e8, (e4, e8)           # fewer bits -> strictly coarser
+    assert e4 < 20 * e8 + 1.0          # ...but still in the same ballpark
+
+
+def test_int4_unpack_matches_codes():
+    codes = np.random.default_rng(2).integers(-7, 9, size=(D, DFF)).astype(np.int8)
+    packed = _pack_k(codes)
+    un = bench_layer._unpack_k(packed, D)
+    np.testing.assert_array_equal(np.asarray(un), codes)
+
+
+def test_int_mm_matches_ref_qmatmul():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    wq = rng.integers(-127, 128, size=(16, 12)).astype(np.int8)
+    sx = jnp.asarray([0.05], jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.01, 0.1, (1, 12)).astype(np.float32))
+    out = bench_layer._int_mm(x, sx, jnp.asarray(wq), sw, 8.0)
+    want = ref.qmatmul(x, jnp.asarray(wq, jnp.float32), sx, sw, 8.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)

@@ -1,0 +1,144 @@
+"""Distillation-loss and optimizer unit tests (Eq. 6/8/9/10 semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import losses, optim
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_logp(rng, shape):
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    return jax.nn.log_softmax(x, axis=-1)
+
+
+class TestKL:
+    def test_zero_for_identical(self):
+        rng = np.random.default_rng(0)
+        lp = _rand_logp(rng, (2, 3, 5, 5))
+        mask = jnp.ones((2, 5))
+        assert float(losses.attention_kd(lp, lp, mask)) < 1e-7
+
+    def test_positive_for_different(self):
+        rng = np.random.default_rng(1)
+        a = _rand_logp(rng, (2, 3, 5, 5))
+        b = _rand_logp(rng, (2, 3, 5, 5))
+        mask = jnp.ones((2, 5))
+        assert float(losses.attention_kd(a, b, mask)) > 0.0
+
+    def test_masked_rows_ignored(self):
+        rng = np.random.default_rng(2)
+        a = _rand_logp(rng, (1, 2, 4, 4))
+        b = _rand_logp(rng, (1, 2, 4, 4))
+        mask_full = jnp.ones((1, 4))
+        mask_half = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+        # Changing the student's masked-row values must not change the loss.
+        a2 = a.at[:, :, 2:, :].set(_rand_logp(rng, (1, 2, 2, 4)))
+        v1 = float(losses.attention_kd(a, b, mask_half))
+        v2 = float(losses.attention_kd(a2, b, mask_half))
+        np.testing.assert_allclose(v1, v2, rtol=1e-5)
+        assert v1 != pytest.approx(float(losses.attention_kd(a, b, mask_full)), rel=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), heads=st.integers(1, 4), t=st.integers(2, 8))
+    def test_kl_nonnegative_property(self, seed, heads, t):
+        rng = np.random.default_rng(seed)
+        a = _rand_logp(rng, (1, heads, t, t))
+        b = _rand_logp(rng, (1, heads, t, t))
+        mask = jnp.ones((1, t))
+        assert float(losses.attention_kd(a, b, mask)) >= -1e-6
+
+
+class TestValueKD:
+    def test_zero_for_identical_values(self):
+        rng = np.random.default_rng(3)
+        v = jnp.asarray(rng.normal(size=(2, 2, 6, 8)).astype(np.float32))
+        mask = jnp.ones((2, 6))
+        assert float(losses.value_kd(v, v, mask, 8)) < 1e-7
+
+    def test_scale_invariance_breaks(self):
+        # value relations are NOT invariant to per-token scaling -> loss > 0
+        rng = np.random.default_rng(4)
+        v = jnp.asarray(rng.normal(size=(1, 1, 6, 8)).astype(np.float32))
+        v2 = v * jnp.linspace(0.5, 2.0, 6)[None, None, :, None]
+        mask = jnp.ones((1, 6))
+        assert float(losses.value_kd(v, v2, mask, 8)) > 1e-5
+
+
+class TestCombined:
+    def test_alpha_beta_scaling(self):
+        rng = np.random.default_rng(5)
+        sl = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+        tl = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+        aux_s = {
+            "attn_logp": _rand_logp(rng, (4, 2, 5, 5)),
+            "v": jnp.asarray(rng.normal(size=(4, 2, 5, 3)).astype(np.float32)),
+        }
+        aux_t = {
+            "attn_logp": _rand_logp(rng, (4, 2, 5, 5)),
+            "v": jnp.asarray(rng.normal(size=(4, 2, 5, 3)).astype(np.float32)),
+        }
+        labels = jnp.asarray([0, 1, 0, 1], jnp.int32)
+        mask = jnp.ones((4, 5))
+        t0, p0 = losses.combined_loss(sl, aux_s, tl, aux_t, labels, mask, 3,
+                                      jnp.float32(0.0), jnp.float32(0.0))
+        np.testing.assert_allclose(float(t0), float(p0["train"]), rtol=1e-6)
+        t1, p1 = losses.combined_loss(sl, aux_s, tl, aux_t, labels, mask, 3,
+                                      jnp.float32(10.0), jnp.float32(0.5))
+        expect = float(p1["train"]) + 10.0 * float(p1["output"]) + 0.5 * (
+            float(p1["attention"]) + float(p1["value"]))
+        np.testing.assert_allclose(float(t1), expect, rtol=1e-5)
+
+    def test_teacher_gets_no_gradient(self):
+        rng = np.random.default_rng(6)
+        sl = jnp.asarray(rng.normal(size=(2, 2)).astype(np.float32))
+        labels = jnp.asarray([0, 1], jnp.int32)
+        mask = jnp.ones((2, 3))
+        aux = lambda: {
+            "attn_logp": _rand_logp(rng, (2, 1, 3, 3)),
+            "v": jnp.asarray(rng.normal(size=(2, 1, 3, 4)).astype(np.float32)),
+        }
+
+        def f(tl):
+            total, _ = losses.combined_loss(sl, aux(), tl, aux(), labels, mask, 4,
+                                            jnp.float32(10.0), jnp.float32(1.0))
+            return total
+
+        g = jax.grad(f)(jnp.asarray(rng.normal(size=(2, 2)).astype(np.float32)))
+        np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-7)
+
+
+class TestAdam:
+    def test_descends_quadratic(self):
+        p = {"x": jnp.asarray([5.0]), "y": jnp.asarray([-3.0])}
+        m = optim.zeros_like_tree(p)
+        v = optim.zeros_like_tree(p)
+        loss = lambda p: jnp.sum(p["x"] ** 2) + jnp.sum(p["y"] ** 2)
+        l0 = float(loss(p))
+        for step in range(1, 200):
+            g = jax.grad(loss)(p)
+            p, m, v = optim.adam_update(p, g, m, v, jnp.float32(step), jnp.float32(0.1))
+        assert float(loss(p)) < 1e-2 * l0
+
+    def test_bias_correction_first_step(self):
+        # After one step from zero state, update magnitude ~ lr regardless of g scale.
+        for scale in [1e-3, 1.0, 1e3]:
+            p = {"x": jnp.asarray([0.0])}
+            g = {"x": jnp.asarray([scale])}
+            m = optim.zeros_like_tree(p)
+            v = optim.zeros_like_tree(p)
+            p2, _, _ = optim.adam_update(p, g, m, v, jnp.float32(1.0), jnp.float32(0.01))
+            np.testing.assert_allclose(float(p2["x"][0]), -0.01, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_zero_grad_is_fixpoint(self, seed):
+        rng = np.random.default_rng(seed)
+        p = {"w": jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))}
+        z = optim.zeros_like_tree(p)
+        p2, m2, v2 = optim.adam_update(p, z, z, z, jnp.float32(1.0), jnp.float32(0.1))
+        np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(p["w"]), atol=1e-7)

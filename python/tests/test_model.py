@@ -1,0 +1,261 @@
+"""L2 model tests: shapes, quantization wiring, distillation losses, QAT dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses, model, optim, steps
+from compile.config import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(vocab=64, seq=8, n_layers=2, d_model=32, n_heads=2, d_ff=64,
+                  batch=4, eval_batch=4, k_steps=3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(CFG, key)
+    scales = model.init_scales(CFG)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, CFG.vocab, (4, CFG.seq)), jnp.int32)
+    mask = jnp.ones((4, CFG.seq), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 2, (4,)), jnp.int32)
+    return params, scales, ids, mask, labels
+
+
+def test_param_scale_counts():
+    assert len(model.param_specs(CFG)) == 4 + 16 * CFG.n_layers + 4
+    assert len(model.scale_specs(CFG)) == 10 * CFG.n_layers
+
+
+def test_forward_shapes(setup):
+    params, scales, ids, mask, _ = setup
+    bits = jnp.full((CFG.n_layers,), 8.0)
+    logits, aux = model.forward(CFG, params, scales, ids, mask, bits, jnp.float32(1.0))
+    assert logits.shape == (4, CFG.n_classes)
+    assert aux["attn_logp"].shape == (4, CFG.n_heads, CFG.seq, CFG.seq)
+    assert aux["v"].shape == (4, CFG.n_heads, CFG.seq, CFG.d_head)
+
+
+def test_teacher_equals_student_at_32_bits(setup):
+    """With bits=32 the quantized forward must equal the fp32 forward."""
+    params, scales, ids, mask, _ = setup
+    bits = jnp.full((CFG.n_layers,), 32.0)
+    lq, _ = model.forward(CFG, params, scales, ids, mask, bits, jnp.float32(1.0), quantize=True)
+    lt, _ = model.forward(CFG, params, None, ids, mask, bits, jnp.float32(0.0), quantize=False)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lt), rtol=1e-5, atol=1e-5)
+
+
+def test_quantization_perturbs_but_preserves(setup):
+    """4-bit quantization changes the logits but not catastrophically
+    (calibrated scales keep Q[x] ≈ x)."""
+    params, scales, ids, mask, _ = setup
+    lt, _ = model.forward(CFG, params, None, ids, mask,
+                          jnp.full((CFG.n_layers,), 32.0), jnp.float32(0.0), quantize=False)
+    # crude calibration: scale = max|W| / 8 for weights, 6/128 for acts
+    cal = dict(scales)
+    for l in range(CFG.n_layers):
+        for w in ModelConfig.W_SITE_NAMES:
+            cal[f"l{l}_s_w_{w}"] = (jnp.max(jnp.abs(params[f"l{l}_{w}"])) / 8.0).reshape(1)
+        for a in ModelConfig.ACT_SITE_NAMES:
+            cal[f"l{l}_s_act_{a}"] = jnp.asarray([6.0 / 128.0])
+    l8, _ = model.forward(CFG, params, cal, ids, mask,
+                          jnp.full((CFG.n_layers,), 8.0), jnp.float32(1.0))
+    l4, _ = model.forward(CFG, params, cal, ids, mask,
+                          jnp.full((CFG.n_layers,), 4.0), jnp.float32(1.0))
+    d8 = float(jnp.mean(jnp.abs(l8 - lt)))
+    d4 = float(jnp.mean(jnp.abs(l4 - lt)))
+    assert d8 > 0.0 and d4 > 0.0
+    assert d8 < d4  # int8 must be a strictly better approximation
+    assert d4 < 10.0 * (float(jnp.mean(jnp.abs(lt))) + 1.0)
+
+
+def test_mixed_bits_per_layer(setup):
+    """Per-layer bit codes actually take effect: quantizing only layer 1
+    differs from quantizing only layer 0."""
+    params, scales, ids, mask, _ = setup
+    b_a = jnp.asarray([4.0, 32.0])
+    b_b = jnp.asarray([32.0, 4.0])
+    la, _ = model.forward(CFG, params, scales, ids, mask, b_a, jnp.float32(1.0))
+    lb, _ = model.forward(CFG, params, scales, ids, mask, b_b, jnp.float32(1.0))
+    assert not np.allclose(np.asarray(la), np.asarray(lb))
+
+
+def test_mask_blocks_padding(setup):
+    """Changing tokens at masked positions must not change the logits."""
+    params, scales, ids, mask, _ = setup
+    mask2 = mask.at[:, -3:].set(0.0)
+    ids_a = ids
+    ids_b = ids.at[:, -3:].set(7)
+    bits = jnp.full((CFG.n_layers,), 8.0)
+    la, _ = model.forward(CFG, params, scales, ids_a, mask2, bits, jnp.float32(1.0))
+    lb, _ = model.forward(CFG, params, scales, ids_b, mask2, bits, jnp.float32(1.0))
+    # CLS attends only to unmasked positions; padded token embeddings still
+    # enter residuals at their own positions but not position 0's pooling.
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-4, atol=1e-4)
+
+
+def test_losses_zero_for_identical_models(setup):
+    params, scales, ids, mask, labels = setup
+    bits = jnp.full((CFG.n_layers,), 32.0)
+    ls, axs = model.forward(CFG, params, scales, ids, mask, bits, jnp.float32(1.0))
+    lt, axt = model.forward(CFG, params, None, ids, mask, bits, jnp.float32(0.0), quantize=False)
+    total, parts = losses.combined_loss(ls, axs, lt, axt, labels, mask, CFG.d_head,
+                                        jnp.float32(10.0), jnp.float32(1.0))
+    assert float(parts["output"]) < 1e-8
+    assert float(parts["attention"]) < 1e-6
+    assert float(parts["value"]) < 1e-6
+    np.testing.assert_allclose(float(total), float(parts["train"]), rtol=1e-4)
+
+
+def test_kl_nonnegative_and_asymmetric(setup):
+    params, scales, ids, mask, labels = setup
+    key = jax.random.PRNGKey(1)
+    params2 = model.init_params(CFG, key)
+    bits = jnp.full((CFG.n_layers,), 32.0)
+    _, axs = model.forward(CFG, params, scales, ids, mask, bits, jnp.float32(1.0))
+    _, axt = model.forward(CFG, params2, None, ids, mask, bits, jnp.float32(0.0), quantize=False)
+    att = losses.attention_kd(axs["attn_logp"], axt["attn_logp"], mask)
+    val = losses.value_kd(axs["v"], axt["v"], mask, CFG.d_head)
+    assert float(att) > 0.0 and float(val) > 0.0
+
+
+def test_calibration_stats(setup):
+    params, _, ids, mask, _ = setup
+    aq, am = model.forward_collect_act_stats(CFG, params, ids, mask)
+    assert aq.shape == (CFG.n_layers, 4) and am.shape == (CFG.n_layers, 4)
+    assert np.all(np.asarray(aq) <= np.asarray(am) + 1e-6)
+    assert np.all(np.asarray(aq) > 0)
+    wm = model.weight_abs_max(CFG, params)
+    assert wm.shape == (CFG.n_layers, 6)
+    assert np.all(np.asarray(wm) > 0)
+
+
+class TestTrainStep:
+    def _flat_state(self):
+        p_specs, s_specs = model.param_specs(CFG), model.scale_specs(CFG)
+        params = model.init_params(CFG, jax.random.PRNGKey(0))
+        scales = model.init_scales(CFG)
+        P = model.dict_to_flat(p_specs, params)
+        S = model.dict_to_flat(s_specs, scales)
+        Z = [jnp.zeros_like(x) for x in P]
+        ZS = [jnp.zeros_like(x) for x in S]
+        return P, S, Z, ZS
+
+    def _batch(self, seed=0):
+        K, B, T = CFG.k_steps, CFG.batch, CFG.seq
+        rng = np.random.default_rng(seed)
+        ids = jnp.asarray(rng.integers(0, CFG.vocab, (K, B, T)), jnp.int32)
+        mask = jnp.ones((K, B, T), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 2, (K, B)), jnp.int32)
+        return ids, mask, labels
+
+    def _run(self, lsq=1.0, mse=1.0, alpha=10.0, beta=1.0):
+        P, S, Z, ZS = self._flat_state()
+        ids, mask, labels = self._batch()
+        K, L = CFG.k_steps, CFG.n_layers
+        one = jnp.ones((1,), jnp.float32)
+        lr = jnp.full((K, 1), 1e-3)
+        flat = (P + S + Z + Z + ZS + ZS + [jnp.zeros((1,))] + P
+                + [ids, mask, labels, lr, lr, lr]
+                + [one * alpha, one * beta, one * mse, one * lsq, jnp.full((L,), 4.0)])
+        fn = jax.jit(steps.make_train_step_k(CFG))
+        return fn(*flat), len(P), len(S)
+
+    def test_runs_and_updates(self):
+        out, n_p, n_s = self._run()
+        stats = out[-1]
+        assert stats.shape == (CFG.k_steps, 6)
+        assert np.all(np.isfinite(np.asarray(stats)))
+        step = out[-2]
+        assert float(step[0]) == CFG.k_steps
+
+    def test_lsq_flag_freezes_scales(self):
+        out_frozen, n_p, n_s = self._run(lsq=0.0)
+        scales_after = out_frozen[n_p:n_p + n_s]
+        for s in scales_after:
+            np.testing.assert_allclose(np.asarray(s), 0.1, rtol=1e-6)
+
+    def test_lsq_updates_scales(self):
+        out, n_p, n_s = self._run(lsq=1.0)
+        scales_after = np.concatenate([np.asarray(s) for s in out[n_p:n_p + n_s]])
+        assert np.any(np.abs(scales_after - 0.1) > 1e-6)
+        assert np.all(scales_after > 0)
+
+    def test_mse_vs_ste_differ(self):
+        out_mse, n_p, n_s = self._run(mse=1.0)
+        out_ste, _, _ = self._run(mse=0.0)
+        s_mse = np.concatenate([np.asarray(s) for s in out_mse[n_p:n_p + n_s]])
+        s_ste = np.concatenate([np.asarray(s) for s in out_ste[n_p:n_p + n_s]])
+        assert not np.allclose(s_mse, s_ste)
+
+    def test_loss_decreases_over_epoch(self):
+        """A few K-step executions on a *learnable* rule must reduce CE."""
+        P, S, Z, ZS = self._flat_state()
+        K, B, T, L = CFG.k_steps, CFG.batch, CFG.seq, CFG.n_layers
+        rng = np.random.default_rng(7)
+        fn = jax.jit(steps.make_train_step_k(CFG))
+        one = jnp.ones((1,), jnp.float32)
+        lr = jnp.full((K, 1), 5e-3)
+        state = P + S + Z + Z + ZS + ZS + [jnp.zeros((1,))]
+        n_state = len(state)
+        first, last = None, None
+        for it in range(8):
+            ids = rng.integers(0, CFG.vocab, (K, B, T))
+            labels = (ids[:, :, 0] > CFG.vocab // 2).astype(np.int32)  # learnable rule
+            flat = (state + P[:len(model.param_specs(CFG))]
+                    + [jnp.asarray(ids, jnp.int32), jnp.ones((K, B, T), jnp.float32),
+                       jnp.asarray(labels, jnp.int32), lr, lr * 0.1, lr * 0.01]
+                    + [one * 0.0, one * 0.0, one, one, jnp.full((L,), 8.0)])
+            out = fn(*flat)
+            state = list(out[:n_state])
+            ce = float(np.mean(np.asarray(out[-1])[:, 1]))
+            if it == 0:
+                first = ce
+            last = ce
+        assert last < first, (first, last)
+
+
+def test_fp32_train_step_learns():
+    p_specs = model.param_specs(CFG)
+    params = model.init_params(CFG, jax.random.PRNGKey(0))
+    P = model.dict_to_flat(p_specs, params)
+    Z = [jnp.zeros_like(x) for x in P]
+    K, B, T = CFG.k_steps, CFG.batch, CFG.seq
+    fn = jax.jit(steps.make_train_fp32_k(CFG))
+    rng = np.random.default_rng(3)
+    state = P + Z + Z + [jnp.zeros((1,))]
+    n_state = len(state)
+    first = last = None
+    for it in range(8):
+        ids = rng.integers(0, CFG.vocab, (K, B, T))
+        labels = (ids[:, :, 0] > CFG.vocab // 2).astype(np.int32)
+        flat = state + [jnp.asarray(ids, jnp.int32), jnp.ones((K, B, T), jnp.float32),
+                        jnp.asarray(labels, jnp.int32), jnp.full((K, 1), 5e-3)]
+        out = fn(*flat)
+        state = list(out[:n_state])
+        ce = float(np.mean(np.asarray(out[-1])[:, 0]))
+        if it == 0:
+            first = ce
+        last = ce
+    assert last < first
+
+
+def test_eval_and_serve_steps(setup):
+    params, scales, ids, mask, labels = setup
+    p_specs, s_specs = model.param_specs(CFG), model.scale_specs(CFG)
+    P = model.dict_to_flat(p_specs, params)
+    S = model.dict_to_flat(s_specs, scales)
+    bits = jnp.full((CFG.n_layers,), 8.0)
+    ev = jax.jit(steps.make_eval_step(CFG))
+    correct, loss, logits = ev(*(P + S + [bits, ids, mask, labels]))
+    assert 0 <= float(correct[0]) <= 4
+    te = jax.jit(steps.make_teacher_eval(CFG))
+    c2, l2, lg2 = te(*(P + [ids, mask, labels]))
+    assert 0 <= float(c2[0]) <= 4
+    sv = jax.jit(steps.make_serve_fwd(CFG))
+    (lgs,) = sv(*(P + S + [bits, ids, mask]))
+    assert lgs.shape == (4, CFG.n_classes)

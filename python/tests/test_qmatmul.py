@@ -1,0 +1,115 @@
+"""Pallas quantized-matmul kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack, qmatmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(m, k, n, seed, bits):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    lmin, lmax = -(2 ** (bits - 1)) + 1, 2 ** (bits - 1)
+    wq = rng.integers(lmin, lmax + 1, size=(k, n)).astype(np.int8)
+    sx = rng.uniform(0.05, 0.3, size=(m, 1)).astype(np.float32)
+    sw = rng.uniform(0.01, 0.1, size=(1, n)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(wq), jnp.asarray(sx), jnp.asarray(sw)
+
+
+def test_qmatmul_int8_matches_ref():
+    x, wq, sx, sw = _mk(64, 128, 128, 0, 8)
+    out = qmatmul.qmatmul(x, wq, sx, sw, bits=8.0)
+    want = ref.qmatmul(x, wq, sx, sw, 8.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_multiblock_grid():
+    # Exercises K-accumulation across grid steps and multiple (i, j) tiles.
+    x, wq, sx, sw = _mk(128, 256, 256, 1, 8)
+    out = qmatmul.qmatmul(x, wq, sx, sw, bits=8.0, bm=64, bk=128, bn=128)
+    want = ref.qmatmul(x, wq, sx, sw, 8.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul4_packed_matches_ref():
+    x, wq, sx, sw = _mk(64, 128, 128, 2, 4)
+    wp = qmatmul.pack_weights_k(jnp.asarray(wq, jnp.int32))
+    out = qmatmul.qmatmul4(x, wp, sx, sw)
+    want = ref.qmatmul(x, wq, sx, sw, 4.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_pack_weights_k_roundtrip():
+    rng = np.random.default_rng(3)
+    wq = jnp.asarray(rng.integers(-7, 9, size=(256, 64)), jnp.int32)
+    wp = qmatmul.pack_weights_k(wq)
+    assert wp.shape == (128, 64)
+    lo = (wp & 0xF) - ref.INT4_OFFSET
+    hi = ((wp >> 4) & 0xF) - ref.INT4_OFFSET
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(wq[0::2]))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(wq[1::2]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    ni=st.integers(1, 2),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_shape_sweep(mi, ki, ni, bits, seed):
+    """Hypothesis sweep over grid multiples and bit-widths vs the oracle."""
+    bm, bk, bn = 32, 64, 64
+    m, k, n = mi * bm, ki * bk, ni * bn
+    x, wq, sx, sw = _mk(m, k, n, seed, bits)
+    if bits == 4:
+        wp = qmatmul.pack_weights_k(jnp.asarray(wq, jnp.int32))
+        out = qmatmul.qmatmul4(x, wp, sx, sw, bm=bm, bk=bk, bn=bn)
+    else:
+        out = qmatmul.qmatmul(x, wq, sx, sw, bits=float(bits), bm=bm, bk=bk, bn=bn)
+    want = ref.qmatmul(x, wq, sx, sw, float(bits))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_vmem_budget():
+    """DESIGN.md §Perf: default tiles fit comfortably in a 16 MiB VMEM."""
+    assert qmatmul.vmem_bytes() < 16 * 2**20
+    assert qmatmul.vmem_bytes(int4=True) < qmatmul.vmem_bytes()
+
+
+class TestPackKernels:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.integers(-7, 9, size=(256, 128)), jnp.int32)
+        p = pack.pack_int4(q)
+        assert p.shape == (256, 64)
+        back = pack.unpack_int4(p, 128)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.integers(-7, 9, size=(256, 64)), jnp.int32)
+        np.testing.assert_array_equal(np.asarray(pack.pack_int4(q)), np.asarray(ref.pack_int4(q)))
+        p = ref.pack_int4(q)
+        np.testing.assert_array_equal(
+            np.asarray(pack.unpack_int4(p, 64)), np.asarray(ref.unpack_int4(p, 64))
+        )
+
+    def test_byte_range(self):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.integers(-7, 9, size=(256, 32)), jnp.int32)
+        p = np.asarray(pack.pack_int4(q))
+        assert p.min() >= 0 and p.max() <= 255
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.sampled_from([256, 512]), cols=st.sampled_from([2, 8, 64]), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_sweep(self, rows, cols, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-7, 9, size=(rows, cols)), jnp.int32)
+        np.testing.assert_array_equal(np.asarray(pack.unpack_int4(pack.pack_int4(q), cols)), np.asarray(q))

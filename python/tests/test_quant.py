@@ -1,0 +1,147 @@
+"""Quantizer unit + property tests, including the paper's §4.1 worked example."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_qbounds_paper_convention():
+    # k-bit grid is [-2^{k-1}+1, 2^{k-1}] — asymmetric (8 included for k=4).
+    lmin, lmax = ref.qbounds(4.0)
+    assert float(lmin) == -7.0 and float(lmax) == 8.0
+    lmin, lmax = ref.qbounds(8.0)
+    assert float(lmin) == -127.0 and float(lmax) == 128.0
+
+
+def test_fake_quant_basic():
+    x = jnp.array([0.2, 0.9])
+    out = ref.fake_quant(x, jnp.array(1.0), 4.0)
+    np.testing.assert_allclose(np.asarray(out), [0.0, 1.0])
+
+
+def test_fake_quant_clamps():
+    x = jnp.array([100.0, -100.0])
+    out = ref.fake_quant(x, jnp.array(1.0), 4.0)
+    np.testing.assert_allclose(np.asarray(out), [8.0, -7.0])
+
+
+def test_paper_worked_example_mse_vs_ste():
+    """§4.1: x=(0.2, 0.9), s=1, 4-bit. STE gradient is -0.1 (wrong sign:
+    would *increase* s); MSE gradient is +0.2 (decreases s, shrinking the
+    quantization error) — the paper's motivating example."""
+    x = jnp.array([0.2, 0.9])
+    s = jnp.array(1.0)
+    g_ste = ref.ste_scale_grad(x, s, 4.0)
+    g_mse = ref.mse_scale_grad(x, s, 4.0)
+    np.testing.assert_allclose(float(g_ste), -0.1, atol=1e-6)
+    np.testing.assert_allclose(float(g_mse), 0.2, atol=1e-6)
+    assert float(g_ste) < 0.0 < float(g_mse)
+
+
+def test_mse_grad_descends_quant_error():
+    """One gradient step on s along -mse_scale_grad must not increase
+    ||Q[x]-x||^2 (for a small enough step) — the property §4.1.2 claims."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        s = jnp.array(float(rng.uniform(0.05, 0.5)))
+        g = ref.mse_scale_grad(x, s, 4.0)
+        e0 = float(ref.quant_error(x, s, 4.0))
+        e1 = float(ref.quant_error(x, s - 1e-4 * jnp.sign(g), 4.0))
+        assert e1 <= e0 + 1e-5
+
+
+def test_custom_vjp_selects_gradient_by_flag():
+    x = jnp.array([0.2, 0.9])
+    s = jnp.array(1.0)
+
+    def loss(s_, flag):
+        return jnp.sum(quant.fake_quant(x, s_, 4.0, flag))
+
+    g_mse = jax.grad(loss)(s, jnp.array(1.0))
+    g_ste = jax.grad(loss)(s, jnp.array(0.0))
+    np.testing.assert_allclose(float(g_mse), float(ref.mse_scale_grad(x, s, 4.0)), rtol=1e-6)
+    np.testing.assert_allclose(float(g_ste), float(ref.ste_scale_grad(x, s, 4.0)), rtol=1e-6)
+
+
+def test_x_gradient_is_masked_ste():
+    x = jnp.array([0.5, 100.0, -100.0])  # 2nd/3rd are clipped at s=1
+    s = jnp.array(1.0)
+
+    def loss(x_):
+        return jnp.sum(quant.fake_quant(x_, s, 4.0, jnp.array(1.0)))
+
+    gx = jax.grad(loss)(x)
+    np.testing.assert_allclose(np.asarray(gx), [1.0, 0.0, 0.0])
+
+
+def test_maybe_fake_quant_fp32_identity():
+    x = jnp.array([0.123, -4.56, 7.89])
+    out = quant.maybe_fake_quant(x, jnp.array(0.1), jnp.array(32.0), jnp.array(1.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_per_row_scales():
+    x = jnp.array([[0.2, 0.9], [2.0, 9.0]])
+    s = jnp.array([[0.1], [1.0]])
+    out = ref.fake_quant(x, s, 4.0)
+    np.testing.assert_allclose(np.asarray(out), [[0.2, 0.8], [2.0, 8.0]], atol=1e-6)
+    g = ref.mse_scale_grad(x, s, 4.0)
+    assert g.shape == (2, 1)
+    # row 1: codes (2, 8); err = (0, -1); grad = 2*(0*2 + (-1)*8) = -16
+    np.testing.assert_allclose(float(g[1, 0]), 2.0 * ((2.0 - 2.0) * 2 + (8.0 - 9.0) * 8), atol=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    s=st.floats(0.01, 2.0),
+    bits=st.sampled_from([4.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_properties(n, s, bits, seed):
+    """Invariants of Eq. (1): output on the s-grid, within clamp range,
+    error bounded by s/2 for in-range inputs, idempotence."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=2.0, size=(n,)).astype(np.float32))
+    sj = jnp.array(np.float32(s))
+    q = ref.fake_quant(x, sj, bits)
+    codes = np.asarray(q) / s
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+    lmin, lmax = -(2 ** (int(bits) - 1)) + 1, 2 ** (int(bits) - 1)
+    assert codes.min() >= lmin - 1e-3 and codes.max() <= lmax + 1e-3
+    in_range = (np.asarray(x) / s >= lmin) & (np.asarray(x) / s <= lmax)
+    err = np.abs(np.asarray(q) - np.asarray(x))
+    assert np.all(err[in_range] <= s / 2 + 1e-4)
+    q2 = ref.fake_quant(q, sj, bits)
+    np.testing.assert_allclose(np.asarray(q2), np.asarray(q), atol=s * 1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 64),
+    s=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mse_grad_matches_finite_difference(n, s, seed):
+    """Away from rounding-boundary discontinuities the MSE scale gradient
+    equals the finite difference of ||Q[x]-x||^2."""
+    rng = np.random.default_rng(seed)
+    # Build x strictly inside rounding intervals: x = (code + delta) * s with
+    # |delta| <= 0.3, so the round() result is locally constant around s.
+    codes = rng.integers(-30, 31, size=(n,))
+    delta = rng.uniform(-0.3, 0.3, size=(n,))
+    x = ((codes + delta) * s).astype(np.float32)
+    xj, sj = jnp.asarray(x), jnp.array(np.float64(s), dtype=jnp.float32)
+    g = float(ref.mse_scale_grad(xj, sj, 8.0))
+    eps = 1e-4 * s
+    e_plus = float(ref.quant_error(xj, sj + eps, 8.0))
+    e_minus = float(ref.quant_error(xj, sj - eps, 8.0))
+    fd = (e_plus - e_minus) / (2 * eps)
+    np.testing.assert_allclose(g, fd, rtol=0.05, atol=0.2)

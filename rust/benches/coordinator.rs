@@ -1,0 +1,79 @@
+//! `cargo bench` target: coordinator-side hot paths that must stay off the
+//! critical path (DESIGN.md §Perf): tokenization, batch stacking, literal
+//! conversion, int4 packing, the quant mirror, and — when artifacts are
+//! present — the serving step (batcher + executor).
+
+use mkq::data::{stack_k, BatchIter, Suite, TaskKind};
+use mkq::quant;
+use mkq::runtime::HostTensor;
+use mkq::util::benchkit::Bench;
+use mkq::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new(3, 50);
+
+    println!("== data / tokenizer substrate ==");
+    let suite = Suite::new(42, 512, 24);
+    bench.report("tokenize 100 sst2 examples", || {
+        let lex = &suite.lexicon;
+        let mut rng = Rng::new(1);
+        let ex = mkq::data::generate(TaskKind::Sst2, lex, &mut rng, 100);
+        let ds = mkq::data::Dataset::tokenize(&ex, &suite.tokenizer, 24);
+        assert_eq!(ds.len(), 100);
+    });
+
+    let task = suite.task(TaskKind::Qnli, 1);
+    let mut it = BatchIter::new(task.train.len(), 16, Rng::new(2));
+    bench.report("stack_k (K=10, B=16, T=24)", || {
+        let (ids, _, _) = stack_k(&task.train, &mut it, 10, 16);
+        assert_eq!(ids.elem_count(), 10 * 16 * 24);
+    });
+
+    println!("\n== literal conversion (state round-trip cost) ==");
+    let big = HostTensor::f32(&[512, 96], vec![0.5; 512 * 96]);
+    bench.report("HostTensor->Literal 512x96 f32", || {
+        let _ = big.to_literal().unwrap();
+    });
+    let lit = big.to_literal().unwrap();
+    bench.report("Literal->HostTensor 512x96 f32", || {
+        let _ = HostTensor::from_literal(&lit).unwrap();
+    });
+
+    println!("\n== quant mirror ==");
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..768 * 768).map(|_| rng.normal() as f32 * 0.02).collect();
+    bench.report("quantize 768x768 per-channel int4", || {
+        let _ = quant::quantize_weight_per_channel(&w, 768, 768, 4);
+    });
+    let (codes, _) = quant::quantize_weight_per_channel(&w, 768, 768, 4);
+    bench.report("pack_int4_k 768x768", || {
+        let _ = quant::pack_int4_k(&codes, 768, 768);
+    });
+
+    // Serving step (only when artifacts are available).
+    if let Ok(eng) = mkq::runtime::Engine::load(&mkq::artifacts_dir()) {
+        use mkq::coordinator::{ServeModel, Server, ServerConfig, Trainer};
+        println!("\n== serving step (batch=16 serve_fwd) ==");
+        let tr = Trainer::new(&eng).unwrap();
+        let (params, scales) = tr.init(1).unwrap();
+        let mut ps = params;
+        ps.extend(scales);
+        let model = ServeModel::new(ps, &[8.0, 8.0, 4.0, 4.0], "bench").unwrap();
+        let mut server = Server::new(&eng, model, ServerConfig::default()).unwrap();
+        eng.compile("serve_fwd_b16").unwrap();
+        let ids = vec![1i32; 24];
+        let mask = vec![1.0f32; 24];
+        let b = Bench::new(2, 20);
+        b.report("submit 16 + pump (exec incl.)", || {
+            for _ in 0..16 {
+                server.submit(ids.clone(), mask.clone()).unwrap();
+            }
+            let out = server.pump().unwrap();
+            assert_eq!(out.len(), 16);
+        });
+        let s = server.summary();
+        println!("  batcher overhead: queue p50 {:.1}us vs exec p50 {:.1}us", s.queue.p50_us, s.exec.p50_us);
+    } else {
+        println!("\n(serving bench skipped — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,75 @@
+//! `cargo bench` target: per-layer latency across precisions (the Table-2
+//! micro-bench at reduced iteration count) plus the standalone Pallas
+//! qmatmul artifacts. criterion is not vendored; this uses the in-repo
+//! harness (util::benchkit) with warmup + mean/p50/σ reporting.
+
+use mkq::bench_support as bs;
+use mkq::quant;
+use mkq::runtime::{Engine, HostTensor};
+use mkq::util::benchkit::Bench;
+use mkq::util::rng::Rng;
+
+fn main() {
+    let eng = match Engine::load(&mkq::artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping layer benches (artifacts missing): {e}");
+            return;
+        }
+    };
+    let bench = Bench::new(2, 10);
+
+    println!("== per-layer latency (BERT-base dims) ==");
+    let weights = bs::make_weights(1);
+    for (bsz, t) in [(16usize, 28usize), (64, 27)] {
+        let (h, mask) = bs::make_hidden(bsz, t, 2);
+        let f32_l: Vec<xla::Literal> =
+            bs::f32_inputs(&weights, &h, &mask).iter().map(|x| x.to_literal().unwrap()).collect();
+        let int8_l: Vec<xla::Literal> = bs::int_inputs(&weights, &h, &mask, 8)
+            .unwrap()
+            .iter()
+            .map(|x| x.to_literal().unwrap())
+            .collect();
+        let int4_l: Vec<xla::Literal> = bs::int_inputs(&weights, &h, &mask, 4)
+            .unwrap()
+            .iter()
+            .map(|x| x.to_literal().unwrap())
+            .collect();
+        for (prec, lits) in [("f32", &f32_l), ("int8", &int8_l), ("int4", &int4_l)] {
+            let name = format!("layer_{prec}_b{bsz}_t{t}");
+            eng.compile(&name).unwrap();
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            bench.report(&name, || {
+                eng.execute_raw(&name, &refs).unwrap();
+            });
+        }
+    }
+
+    println!("\n== Pallas qmatmul artifacts (64x128x128) ==");
+    let (m, k, n) = (64usize, 128usize, 128usize);
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let codes8: Vec<i8> = (0..k * n).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+    let codes4: Vec<i8> = (0..k * n).map(|_| (rng.range(0, 16) as i32 - 7) as i8).collect();
+    let sx: Vec<f32> = (0..m).map(|_| 0.05).collect();
+    let sw: Vec<f32> = (0..n).map(|_| 0.02).collect();
+    let in8 = [
+        HostTensor::f32(&[m, k], x.clone()).to_literal().unwrap(),
+        HostTensor::i8(&[k, n], codes8).to_literal().unwrap(),
+        HostTensor::f32(&[m, 1], sx.clone()).to_literal().unwrap(),
+        HostTensor::f32(&[1, n], sw.clone()).to_literal().unwrap(),
+    ];
+    let in4 = [
+        HostTensor::f32(&[m, k], x).to_literal().unwrap(),
+        HostTensor::i32(&[k / 2, n], quant::pack_int4_k(&codes4, k, n)).to_literal().unwrap(),
+        HostTensor::f32(&[m, 1], sx).to_literal().unwrap(),
+        HostTensor::f32(&[1, n], sw).to_literal().unwrap(),
+    ];
+    for (name, lits) in [("qmatmul_pallas_int8", &in8[..]), ("qmatmul_pallas_int4", &in4[..])] {
+        eng.compile(name).unwrap();
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        bench.report(name, || {
+            eng.execute_raw(name, &refs).unwrap();
+        });
+    }
+}

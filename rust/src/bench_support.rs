@@ -1,0 +1,104 @@
+//! Shared helpers for the Table-2 / §5.4 benchmark binaries: build the
+//! weight/input tensor sets for the `layer_{f32,int8,int4}_b*_t*`
+//! artifacts at BERT-base dims.
+
+use anyhow::Result;
+
+use crate::quant;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+pub const D: usize = 768;
+pub const DFF: usize = 3072;
+
+/// The Table-2 shape buckets emitted by aot.py: (batch, tokens-per-seq).
+/// batch*tokens reproduces the paper's "valid tokens" column.
+pub const BUCKETS: [(usize, usize); 6] = [(16, 28), (16, 34), (16, 43), (64, 27), (64, 32), (64, 36)];
+
+pub struct LayerWeights {
+    /// (name, dims, data) for the 16 fp32 tensors in artifact order.
+    pub f32_tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+pub fn make_weights(seed: u64) -> LayerWeights {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(&str, Vec<usize>)> = vec![
+        ("wq", vec![D, D]), ("bq", vec![D]),
+        ("wk", vec![D, D]), ("bk", vec![D]),
+        ("wv", vec![D, D]), ("bv", vec![D]),
+        ("wo", vec![D, D]), ("bo", vec![D]),
+        ("w1", vec![D, DFF]), ("b1", vec![DFF]),
+        ("w2", vec![DFF, D]), ("b2", vec![D]),
+        ("ln1_g", vec![D]), ("ln1_b", vec![D]),
+        ("ln2_g", vec![D]), ("ln2_b", vec![D]),
+    ];
+    let f32_tensors = specs
+        .into_iter()
+        .map(|(name, dims)| {
+            let n: usize = dims.iter().product();
+            let data: Vec<f32> = if name.starts_with('w') && dims.len() == 2 {
+                (0..n).map(|_| rng.normal() as f32 * 0.02).collect()
+            } else if name.ends_with("_g") {
+                vec![1.0; n]
+            } else {
+                vec![0.0; n]
+            };
+            (name.to_string(), dims, data)
+        })
+        .collect();
+    LayerWeights { f32_tensors }
+}
+
+pub fn make_hidden(bs: usize, t: usize, seed: u64) -> (HostTensor, HostTensor) {
+    let mut rng = Rng::new(seed);
+    let h: Vec<f32> = (0..bs * t * D).map(|_| rng.normal() as f32).collect();
+    (HostTensor::f32(&[bs, t, D], h), HostTensor::f32(&[bs, t], vec![1.0; bs * t]))
+}
+
+/// Inputs for layer_f32_*: [h, mask, 16 weight tensors].
+pub fn f32_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor) -> Vec<HostTensor> {
+    let mut v = vec![h.clone(), mask.clone()];
+    for (_, dims, data) in &w.f32_tensors {
+        v.push(HostTensor::f32(dims, data.clone()));
+    }
+    v
+}
+
+/// Inputs for layer_int{8,4}_*: [h, mask, 16 weight tensors (int codes for
+/// the 6 matrices), 4 act scales, 6 weight-scale rows].
+pub fn int_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor, bits: u32) -> Result<Vec<HostTensor>> {
+    let mut v = vec![h.clone(), mask.clone()];
+    let mut w_scales = Vec::new();
+    for (name, dims, data) in &w.f32_tensors {
+        if name.starts_with('w') && dims.len() == 2 {
+            let (codes, scales) = quant::quantize_weight_per_channel(data, dims[0], dims[1], bits);
+            if bits == 4 {
+                let packed = quant::pack_int4_k(&codes, dims[0], dims[1]);
+                v.push(HostTensor::i32(&[dims[0] / 2, dims[1]], packed));
+            } else {
+                v.push(HostTensor::i8(dims, codes));
+            }
+            w_scales.push(HostTensor::f32(&[1, dims[1]], scales));
+        } else {
+            v.push(HostTensor::f32(dims, data.clone()));
+        }
+    }
+    let lmax = quant::qbounds(bits).1;
+    for _ in 0..4 {
+        v.push(HostTensor::f32(&[1], vec![6.0 / lmax]));
+    }
+    v.extend(w_scales);
+    Ok(v)
+}
+
+/// Weight bytes moved per layer execution (the memory-traffic side of the
+/// paper's speedup story): fp32 = 4 B/elem, int8 = 1, int4 = 0.5.
+pub fn weight_bytes(bits: u32) -> f64 {
+    let elems = (4 * D * D + 2 * D * DFF) as f64;
+    match bits {
+        32 => elems * 4.0,
+        8 => elems,
+        4 => elems * 0.5,
+        b => elems * b as f64 / 8.0,
+    }
+}

@@ -1,0 +1,111 @@
+//! Table 1 reproduction: synthetic-GLUE dev accuracy across quantization
+//! configurations, MKQ-BERT vs the KDLSQ baseline.
+//!
+//! Rows (as in the paper):
+//!   TinyBERT4 (original)        — fp32 teacher
+//!   TinyBERT4_4        (+KDLSQ) — last layer int4, rest int8
+//!   TinyBERT4_{3,4}    (+KDLSQ) — last 2 layers int4
+//!   TinyBERT4_{2,3,4}  (+KDLSQ) — last 3 layers int4
+//!   TinyBERT4_{1,2,3,4}(+KDLSQ) — all layers int4 (embedding always fp32)
+//!
+//! Usage:
+//!   cargo run --release --bin table1 -- [--tasks rte,mrpc] [--steps 300]
+//!       [--teacher-steps 200] [--out results/table1.txt] [--quick]
+
+use anyhow::Result;
+use mkq::coordinator::{bits_last_n_int4, QatConfig, Trainer};
+use mkq::data::{Suite, TaskKind, ALL_TASKS};
+use mkq::runtime::Engine;
+use mkq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    let mut tr = Trainer::new(&eng)?;
+    tr.verbose = args.bool("verbose");
+    let d = tr.dims;
+
+    let quick = args.bool("quick");
+    let steps = args.usize("steps", if quick { 60 } else { 300 });
+    let teacher_steps = args.usize("teacher-steps", if quick { 80 } else { 200 });
+    let eval_every = args.usize("eval-every", if quick { 30 } else { 100 });
+
+    let tasks: Vec<TaskKind> = match args.list("tasks") {
+        Some(names) => names
+            .iter()
+            .map(|n| TaskKind::parse(n).unwrap_or_else(|| panic!("unknown task {n}")))
+            .collect(),
+        None => ALL_TASKS.to_vec(),
+    };
+
+    let suite = Suite::new(42, d.vocab, d.seq);
+    // row label -> (n_int4, method)
+    let rows: Vec<(String, usize, bool)> = (1..=d.n_layers)
+        .flat_map(|n| {
+            let subscript: Vec<String> =
+                ((d.n_layers - n + 1)..=d.n_layers).map(|i| i.to_string()).collect();
+            let sub = subscript.join(",");
+            vec![
+                (format!("TinyBERT4_{{{sub}}}"), n, true),
+                (format!("TinyBERT4_{{{sub}}}(KDLSQ)"), n, false),
+            ]
+        })
+        .collect();
+
+    let mut table: Vec<(String, Vec<f64>)> =
+        vec![("TinyBERT4 (original)".to_string(), vec![])];
+    for (label, _, _) in &rows {
+        table.push((label.clone(), vec![]));
+    }
+
+    for kind in &tasks {
+        println!("=== task {} ===", kind.name());
+        let task = suite.task(*kind, 1);
+        let (teacher, teacher_acc) = tr.finetune_teacher_best(
+            &task, teacher_steps, args.f64("teacher-lr", 1e-3), 11, 0.62, 4)?;
+        println!("  teacher fp32: {teacher_acc:.4}");
+        table[0].1.push(teacher_acc);
+
+        let (act, wmax) = tr.calibrate(&teacher, &task.train, 8, 11)?;
+
+        for (i, (label, n_int4, mse)) in rows.iter().enumerate() {
+            let bits = bits_last_n_int4(d.n_layers, *n_int4);
+            let scales = tr.make_scales(&act, &wmax, &bits)?;
+            let cfg = QatConfig {
+                bits,
+                mse_grad: *mse,
+                steps,
+                eval_every,
+                ..Default::default()
+            };
+            let res = tr.qat(&teacher, scales, &task, &cfg)?;
+            println!("  {label:<28} best {:.4}", res.best_dev_acc);
+            table[i + 1].1.push(res.best_dev_acc);
+        }
+    }
+
+    // Print the table in the paper's format.
+    let mut out = String::new();
+    out.push_str(&format!("{:<30}", "Model"));
+    for k in &tasks {
+        out.push_str(&format!("{:>8}", k.name().to_uppercase()));
+    }
+    out.push('\n');
+    for (label, accs) in &table {
+        out.push_str(&format!("{label:<30}"));
+        for a in accs {
+            out.push_str(&format!("{:>8.1}", a * 100.0));
+        }
+        out.push('\n');
+    }
+    println!("\nTable 1 (synthetic-GLUE dev accuracy, %)\n{out}");
+
+    if let Some(path) = args.get("out") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &out)?;
+        println!("written to {path}");
+    }
+    Ok(())
+}

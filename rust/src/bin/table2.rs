@@ -1,0 +1,88 @@
+//! Table 2 reproduction: end-to-end inference time of ONE BERT-base
+//! transformer layer at f32 / int8 / int4, across the paper's batch-size ×
+//! valid-token buckets, averaged over N rounds (paper: 100 on a T4 GPU;
+//! here: XLA-CPU via PJRT — see DESIGN.md §Substitutions; the claim under
+//! test is the ORDERING f32 ≫ int8 > int4 and the rough ratios, not the
+//! absolute microseconds).
+//!
+//! Usage: cargo run --release --bin table2 -- [--iters 20] [--warmup 3]
+//!            [--out results/table2.txt]
+
+use anyhow::Result;
+use mkq::bench_support as bs;
+use mkq::runtime::Engine;
+use mkq::util::benchkit::Bench;
+use mkq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    let iters = args.usize("iters", 20);
+    let warmup = args.usize("warmup", 3);
+    let bench = Bench::new(warmup, iters);
+
+    let weights = bs::make_weights(1);
+    let mut rows = Vec::new();
+
+    println!("Table 2: per-layer inference time (BERT-base dims, XLA-CPU)");
+    println!(
+        "{:>4} {:>12} {:>14} {:>12} {:>12} {:>9} {:>9}",
+        "BS", "valid toks", "float32 (us)", "int8 (us)", "int4 (us)", "f32/int8", "int8/int4"
+    );
+
+    for (bsz, t) in bs::BUCKETS {
+        let (h, mask) = bs::make_hidden(bsz, t, 2);
+        let f32_in = bs::f32_inputs(&weights, &h, &mask);
+        let int8_in = bs::int_inputs(&weights, &h, &mask, 8)?;
+        let int4_in = bs::int_inputs(&weights, &h, &mask, 4)?;
+
+        // Convert to literals once — weights live on the "device" across
+        // rounds, as in real serving (§Perf).
+        let to_lits = |v: &[mkq::runtime::HostTensor]| -> Result<Vec<xla::Literal>> {
+            v.iter().map(|t| t.to_literal()).collect()
+        };
+        let f32_l = to_lits(&f32_in)?;
+        let int8_l = to_lits(&int8_in)?;
+        let int4_l = to_lits(&int4_in)?;
+
+        let mut run = |name: String, lits: &[xla::Literal]| -> Result<f64> {
+            eng.compile(&name)?; // exclude compile from timing
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            let r = bench.run(|| {
+                eng.execute_raw(&name, &refs).expect("exec");
+            });
+            Ok(r.mean_us)
+        };
+
+        let f = run(format!("layer_f32_b{bsz}_t{t}"), &f32_l)?;
+        let i8_ = run(format!("layer_int8_b{bsz}_t{t}"), &int8_l)?;
+        let i4 = run(format!("layer_int4_b{bsz}_t{t}"), &int4_l)?;
+        println!(
+            "{:>4} {:>12} {:>14.1} {:>12.1} {:>12.1} {:>9.2} {:>9.2}",
+            bsz,
+            bsz * t,
+            f,
+            i8_,
+            i4,
+            f / i8_,
+            i8_ / i4
+        );
+        rows.push((bsz, bsz * t, f, i8_, i4));
+    }
+
+    println!("\nmemory traffic per layer (weights): f32 {:.1} MB | int8 {:.1} MB | int4 {:.1} MB",
+        bs::weight_bytes(32) / 1e6, bs::weight_bytes(8) / 1e6, bs::weight_bytes(4) / 1e6);
+
+    if let Some(path) = args.get("out") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("BS valid_tokens f32_us int8_us int4_us\n");
+        for (b, v, f, i8_, i4) in &rows {
+            out.push_str(&format!("{b} {v} {f:.1} {i8_:.1} {i4:.1}\n"));
+        }
+        std::fs::write(path, out)?;
+        println!("written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Table 3 reproduction: ablation studies on TinyBERT4_{3,4} (last two
+//! layers int4, rest int8):
+//!
+//!   full MKQ-BERT        — MSE grad + MINI KD + output KD + LSQ
+//!   w/o MINI KD          — β = 0 (no attention/value distillation)
+//!   w/o output KD        — α = 0 (no logit distillation)
+//!   w/o LSQ              — scales frozen after calibration
+//!
+//! Usage: cargo run --release --bin table3 -- [--tasks ...] [--steps 300]
+//!            [--out results/table3.txt] [--quick]
+
+use anyhow::Result;
+use mkq::coordinator::{bits_last_n_int4, QatConfig, Trainer};
+use mkq::data::{Suite, TaskKind, ALL_TASKS};
+use mkq::runtime::Engine;
+use mkq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let eng = Engine::load(&mkq::artifacts_dir())?;
+    let mut tr = Trainer::new(&eng)?;
+    tr.verbose = args.bool("verbose");
+    let d = tr.dims;
+
+    let quick = args.bool("quick");
+    let steps = args.usize("steps", if quick { 60 } else { 300 });
+    let teacher_steps = args.usize("teacher-steps", if quick { 80 } else { 200 });
+    let eval_every = args.usize("eval-every", if quick { 30 } else { 100 });
+
+    let tasks: Vec<TaskKind> = match args.list("tasks") {
+        Some(names) => names
+            .iter()
+            .map(|n| TaskKind::parse(n).unwrap_or_else(|| panic!("unknown task {n}")))
+            .collect(),
+        None => ALL_TASKS.to_vec(),
+    };
+
+    let base = QatConfig { bits: bits_last_n_int4(d.n_layers, 2), steps, eval_every, ..Default::default() };
+    let variants: Vec<(&str, QatConfig)> = vec![
+        ("TinyBERT4_{3,4}", base.clone()),
+        ("  w/o MINI KD", QatConfig { beta: 0.0, ..base.clone() }),
+        ("  w/o output KD", QatConfig { alpha: 0.0, ..base.clone() }),
+        ("  w/o LSQ", QatConfig { lsq: false, ..base.clone() }),
+    ];
+
+    let suite = Suite::new(42, d.vocab, d.seq);
+    let mut table: Vec<(String, Vec<f64>)> =
+        variants.iter().map(|(l, _)| (l.to_string(), vec![])).collect();
+
+    for kind in &tasks {
+        println!("=== task {} ===", kind.name());
+        let task = suite.task(*kind, 1);
+        let (teacher, teacher_acc) = tr.finetune_teacher_best(
+            &task, teacher_steps, args.f64("teacher-lr", 1e-3), 11, 0.62, 4)?;
+        println!("  teacher fp32: {teacher_acc:.4}");
+        let (act, wmax) = tr.calibrate(&teacher, &task.train, 8, 11)?;
+
+        for (i, (label, cfg)) in variants.iter().enumerate() {
+            let scales = tr.make_scales(&act, &wmax, &cfg.bits)?;
+            let res = tr.qat(&teacher, scales, &task, cfg)?;
+            println!("  {label:<22} best {:.4}", res.best_dev_acc);
+            table[i].1.push(res.best_dev_acc);
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{:<26}", "Model"));
+    for k in &tasks {
+        out.push_str(&format!("{:>8}", k.name().to_uppercase()));
+    }
+    out.push('\n');
+    for (label, accs) in &table {
+        out.push_str(&format!("{label:<26}"));
+        for a in accs {
+            out.push_str(&format!("{:>8.1}", a * 100.0));
+        }
+        out.push('\n');
+    }
+    println!("\nTable 3 (ablations, synthetic-GLUE dev accuracy %)\n{out}");
+
+    if let Some(path) = args.get("out") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &out)?;
+        println!("written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator — the paper's system contribution in Rust.
+//!
+//! * [`trainer`]  — calibration → QAT → eval orchestration (Tables 1 & 3).
+//! * [`server`]   — request router + valid-token dynamic batcher +
+//!                  executor over quantized artifacts (Table 2, §5.4).
+//! * [`scheduler`]— the paper's warmup/decay lr schedule (§5.2).
+
+pub mod scheduler;
+pub mod server;
+pub mod trainer;
+
+pub use scheduler::LrSchedule;
+pub use server::{Request, Response, ServeModel, Server, ServerConfig, ServerSummary};
+pub use trainer::{bits_last_n_int4, parse_bits, ModelDims, QatConfig, QatResult, Trainer};

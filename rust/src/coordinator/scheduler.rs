@@ -1,0 +1,69 @@
+//! Learning-rate scheduler (paper §5.2): "all learning rates follow the
+//! same scheduler that grows linearly for 10% of the training steps and
+//! decays to 0 till the end".
+
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub total_steps: usize,
+    pub warmup_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn new(peak: f64, total_steps: usize) -> Self {
+        LrSchedule { peak, total_steps, warmup_frac: 0.1 }
+    }
+
+    /// lr at (0-based) step index.
+    pub fn at(&self, step: usize) -> f64 {
+        if self.total_steps == 0 {
+            return 0.0;
+        }
+        let warmup = (self.total_steps as f64 * self.warmup_frac).max(1.0);
+        let s = step as f64;
+        if s < warmup {
+            self.peak * (s + 1.0) / warmup
+        } else {
+            let rest = (self.total_steps as f64 - warmup).max(1.0);
+            self.peak * (1.0 - (s - warmup) / rest).max(0.0)
+        }
+    }
+
+    /// The [K, 1] per-step lr tensor data for steps [start, start+k).
+    pub fn slice(&self, start: usize, k: usize) -> Vec<f32> {
+        (start..start + k).map(|s| self.at(s) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warms_up_then_decays() {
+        let s = LrSchedule::new(1.0, 100);
+        assert!(s.at(0) < s.at(5));
+        assert!(s.at(5) < s.at(9));
+        let peak_region = s.at(10);
+        assert!((peak_region - 1.0).abs() < 0.12);
+        assert!(s.at(50) < peak_region);
+        assert!(s.at(99) < 0.03);
+    }
+
+    #[test]
+    fn never_negative() {
+        let s = LrSchedule::new(0.005, 37);
+        for i in 0..200 {
+            assert!(s.at(i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn slice_matches_at() {
+        let s = LrSchedule::new(0.1, 50);
+        let sl = s.slice(10, 5);
+        for (i, v) in sl.iter().enumerate() {
+            assert!((*v as f64 - s.at(10 + i)).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! QAT training orchestration — the coordinator side of Tables 1 & 3.
+//!
+//! Pipeline per (task, quantization config), mirroring the paper §4/§5.2:
+//!
+//!   1. `init`           — fresh fp32 parameters (AOT `init` artifact).
+//!   2. teacher finetune — fp32 CE training on the task (`train_fp32`).
+//!   3. calibration      — run `calibrate` over training batches; set
+//!                         initial scales from the |activation| quantile
+//!                         and weight abs-max (§3.1).
+//!   4. QAT              — `train_step` K-step chunks with the per-layer
+//!                         bit vector, the MSE/STE gradient flag, the
+//!                         distillation weights α/β and the LSQ flag —
+//!                         every Table-1/Table-3 row is a flag setting.
+//!   5. eval             — periodic dev evaluation; report best accuracy
+//!                         (paper reports best over the sweep).
+//!
+//! Training state lives as XLA `Literal`s between steps (no host copies
+//! on the chunk loop — §Perf).
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::{stack_k, BatchIter, Dataset, TaskData};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+
+use super::scheduler::LrSchedule;
+
+/// Model dimensions read from the artifact manifest (the only config
+/// channel from the Python compile path).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub k_steps: usize,
+    pub n_params: usize,
+    pub n_scales: usize,
+}
+
+impl ModelDims {
+    pub fn from_manifest(eng: &Engine) -> Result<Self> {
+        let m = &eng.manifest;
+        Ok(ModelDims {
+            vocab: m.cfg("vocab")?,
+            seq: m.cfg("seq")?,
+            n_layers: m.cfg("n_layers")?,
+            d_model: m.cfg("d_model")?,
+            n_heads: m.cfg("n_heads")?,
+            d_ff: m.cfg("d_ff")?,
+            n_classes: m.cfg("n_classes")?,
+            batch: m.cfg("batch")?,
+            eval_batch: m.cfg("eval_batch")?,
+            k_steps: m.cfg("k_steps")?,
+            n_params: m.cfg("n_params")?,
+            n_scales: m.cfg("n_scales")?,
+        })
+    }
+
+    /// Length of the QAT state section (train_step inputs/outputs prefix):
+    /// params + scales + m_p + v_p + m_s + v_s + step.
+    pub fn qat_state_len(&self) -> usize {
+        3 * self.n_params + 3 * self.n_scales + 1
+    }
+
+    /// fp32 state section: params + m + v + step.
+    pub fn fp32_state_len(&self) -> usize {
+        3 * self.n_params + 1
+    }
+}
+
+/// Per-run QAT configuration — one Table-1/Table-3 cell.
+#[derive(Debug, Clone)]
+pub struct QatConfig {
+    /// Per-layer bit codes, e.g. [8, 8, 4, 4] for TinyBERT4_{3,4}.
+    pub bits: Vec<u32>,
+    /// true = MKQ-BERT MSE-based scale gradient; false = STE/LSQ (KDLSQ).
+    pub mse_grad: bool,
+    /// Eq. 10 loss weights (paper sets α=10, β=1).
+    pub alpha: f32,
+    pub beta: f32,
+    /// false freezes scales (the "w/o LSQ" ablation).
+    pub lsq: bool,
+    pub steps: usize,
+    pub lr_w: f64,
+    pub lr_scale_act: f64,
+    pub lr_scale_w: f64,
+    /// Evaluate the dev set every N steps (and at the end).
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for QatConfig {
+    fn default() -> Self {
+        QatConfig {
+            bits: vec![8, 8, 8, 8],
+            mse_grad: true,
+            alpha: 10.0,
+            beta: 1.0,
+            lsq: true,
+            steps: 300,
+            lr_w: 5e-5,
+            lr_scale_act: 0.01,
+            lr_scale_w: 0.001,
+            eval_every: 100,
+            seed: 17,
+        }
+    }
+}
+
+/// Parse "8,8,4,4" (must match n_layers).
+pub fn parse_bits(s: &str, n_layers: usize) -> Result<Vec<u32>> {
+    let bits: Vec<u32> = s
+        .split(',')
+        .map(|p| p.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("bad bits spec {s:?}"))?;
+    if bits.len() != n_layers {
+        bail!("bits spec {s:?} has {} entries, model has {n_layers} layers", bits.len());
+    }
+    for &b in &bits {
+        if !matches!(b, 4 | 8 | 32) {
+            bail!("unsupported bit width {b} (use 4, 8 or 32)");
+        }
+    }
+    Ok(bits)
+}
+
+/// The paper's layer-selection rule: "higher levels are more robust to
+/// quantization therefore we start from the last layer" — n_int4 last
+/// layers at 4 bits, the rest at 8.
+pub fn bits_last_n_int4(n_layers: usize, n_int4: usize) -> Vec<u32> {
+    (0..n_layers).map(|l| if l >= n_layers - n_int4 { 4 } else { 8 }).collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainCurve {
+    /// (step, total, ce, kd_out, kd_att, kd_val, train_acc)
+    pub points: Vec<(usize, f32, f32, f32, f32, f32, f32)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QatResult {
+    pub best_dev_acc: f64,
+    pub final_dev_acc: f64,
+    pub evals: Vec<(usize, f64)>,
+    pub curve: TrainCurve,
+}
+
+pub struct Trainer<'e> {
+    pub eng: &'e Engine,
+    pub dims: ModelDims,
+    pub verbose: bool,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(eng: &'e Engine) -> Result<Self> {
+        Ok(Trainer { eng, dims: ModelDims::from_manifest(eng)?, verbose: false })
+    }
+
+    // -- phase 1: init ------------------------------------------------------
+
+    /// Fresh fp32 params + placeholder scales (manifest order).
+    pub fn init(&self, seed: i32) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let seed_t = HostTensor::i32(&[1], vec![seed]);
+        let out = self.eng.execute_raw("init", &[&seed_t.to_literal()?])?;
+        let mut params = out;
+        let scales = params.split_off(self.dims.n_params);
+        Ok((params, scales))
+    }
+
+    // -- phase 2: teacher finetune -------------------------------------------
+
+    /// fp32 CE finetuning; returns final params and the loss curve.
+    pub fn finetune_teacher(
+        &self,
+        task: &TaskData,
+        steps: usize,
+        peak_lr: f64,
+        seed: u64,
+    ) -> Result<(Vec<Literal>, TrainCurve)> {
+        let d = &self.dims;
+        let (params, _) = self.init(seed as i32)?;
+        let zeros: Vec<Literal> = params
+            .iter()
+            .map(|p| {
+                let t = HostTensor::from_literal(p)?;
+                HostTensor::f32(&t.dims, vec![0.0; t.elem_count()]).to_literal()
+            })
+            .collect::<Result<_>>()?;
+        let zeros2: Vec<Literal> = zeros.iter().map(clone_literal).collect::<Result<_>>()?;
+        let mut state: Vec<Literal> = params;
+        state.extend(zeros);
+        state.extend(zeros2);
+        state.push(HostTensor::scalar_f32(0.0).to_literal()?);
+
+        let sched = LrSchedule::new(peak_lr, steps);
+        let mut it = BatchIter::new(task.train.len(), d.batch, Rng::new(seed));
+        let mut curve = TrainCurve { points: vec![] };
+        let n_state = d.fp32_state_len();
+        let mut done = 0usize;
+        while done < steps {
+            let k = d.k_steps;
+            let (ids, mask, labels) = stack_k(&task.train, &mut it, k, d.batch);
+            let lr = HostTensor::f32(&[k, 1], sched.slice(done, k));
+            let batch_lits = [ids.to_literal()?, mask.to_literal()?, labels.to_literal()?, lr.to_literal()?];
+            let mut inputs: Vec<&Literal> = state.iter().collect();
+            inputs.extend(batch_lits.iter());
+            let out = self.eng.execute_raw("train_fp32", &inputs)?;
+            let stats = HostTensor::from_literal(&out[n_state])?;
+            state = out;
+            state.truncate(n_state);
+            let sv = stats.as_f32()?;
+            for i in 0..k {
+                curve.points.push((
+                    done + i,
+                    sv[i * 2],
+                    sv[i * 2],
+                    0.0,
+                    0.0,
+                    0.0,
+                    sv[i * 2 + 1] / d.batch as f32,
+                ));
+            }
+            done += k;
+            if self.verbose && done % 100 < k {
+                println!("  [teacher] step {done}: ce={:.4}", sv[(k - 1) * 2]);
+            }
+        }
+        state.truncate(d.n_params);
+        Ok((state, curve))
+    }
+
+    /// Teacher finetune with restart-on-failure: small-transformer training
+    /// on compositional tasks converges breakthrough-style (bimodal in
+    /// seed), so — like the paper's "best result over all hyper
+    /// parameters" (§5.2) — retry with fresh seeds until the dev accuracy
+    /// clears `threshold` (or attempts run out; the best run is returned).
+    pub fn finetune_teacher_best(
+        &self,
+        task: &TaskData,
+        steps: usize,
+        peak_lr: f64,
+        seed: u64,
+        threshold: f64,
+        max_attempts: usize,
+    ) -> Result<(Vec<Literal>, f64)> {
+        let mut best: Option<(Vec<Literal>, f64)> = None;
+        for attempt in 0..max_attempts.max(1) {
+            let (params, _) = self.finetune_teacher(task, steps, peak_lr, seed + 1000 * attempt as u64)?;
+            let acc = self.eval_teacher(&params, &task.dev)?;
+            if self.verbose {
+                println!("  [teacher] attempt {attempt}: dev acc {acc:.4}");
+            }
+            if best.as_ref().map(|(_, b)| acc > *b).unwrap_or(true) {
+                best = Some((params, acc));
+            }
+            if acc >= threshold {
+                break;
+            }
+        }
+        Ok(best.unwrap())
+    }
+
+    // -- phase 3: calibration --------------------------------------------------
+
+    /// Run the `calibrate` artifact over `n_batches` training batches and
+    /// aggregate: activation stat = max over batches of the per-batch
+    /// 99.99% |activation| quantile (§3.1's "top 0.01%"), weight stat =
+    /// abs-max.
+    pub fn calibrate(
+        &self,
+        params: &[Literal],
+        train: &Dataset,
+        n_batches: usize,
+        seed: u64,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = &self.dims;
+        let mut it = BatchIter::new(train.len(), d.batch, Rng::new(seed ^ 0xCA11B));
+        let mut act_stat = vec![0f32; d.n_layers * 4];
+        let mut w_max = vec![0f32; d.n_layers * 6];
+        for _ in 0..n_batches {
+            let rows = it.next_rows();
+            let (ids, mask, _, _) = train.gather(&rows, d.batch);
+            let mut inputs: Vec<&Literal> = params.iter().collect();
+            let ids_l = ids.to_literal()?;
+            let mask_l = mask.to_literal()?;
+            inputs.push(&ids_l);
+            inputs.push(&mask_l);
+            let out = self.eng.execute_raw("calibrate", &inputs)?;
+            let aq = HostTensor::from_literal(&out[0])?;
+            let wm = HostTensor::from_literal(&out[2])?;
+            for (dst, src) in act_stat.iter_mut().zip(aq.as_f32()?.iter()) {
+                *dst = dst.max(*src);
+            }
+            for (dst, src) in w_max.iter_mut().zip(wm.as_f32()?.iter()) {
+                *dst = dst.max(*src);
+            }
+        }
+        Ok((act_stat, w_max))
+    }
+
+    /// Initial scales in manifest order (per layer: 4 act, then 6 weight),
+    /// each divided by that layer's l_max (paper Eq. 1 bounds).
+    pub fn make_scales(&self, act_stat: &[f32], w_max: &[f32], bits: &[u32]) -> Result<Vec<Literal>> {
+        let d = &self.dims;
+        assert_eq!(bits.len(), d.n_layers);
+        let mut out = Vec::with_capacity(d.n_scales);
+        for l in 0..d.n_layers {
+            let lmax = crate::quant::qbounds(bits[l]).1;
+            for a in 0..4 {
+                let s = (act_stat[l * 4 + a] / lmax).max(1e-6);
+                out.push(HostTensor::f32(&[1], vec![s]).to_literal()?);
+            }
+            for w in 0..6 {
+                let s = (w_max[l * 6 + w] / lmax).max(1e-6);
+                out.push(HostTensor::f32(&[1], vec![s]).to_literal()?);
+            }
+        }
+        Ok(out)
+    }
+
+    // -- phase 4+5: QAT + eval ---------------------------------------------------
+
+    pub fn qat(
+        &self,
+        teacher: &[Literal],
+        init_scales: Vec<Literal>,
+        task: &TaskData,
+        cfg: &QatConfig,
+    ) -> Result<QatResult> {
+        let d = &self.dims;
+        assert_eq!(cfg.bits.len(), d.n_layers);
+
+        // state = student params (start at teacher ckpt) + scales + zeros.
+        let mut state: Vec<Literal> = teacher.iter().map(clone_literal).collect::<Result<_>>()?;
+        state.extend(init_scales);
+        // zeros for m_p, v_p (param-shaped) and m_s, v_s (scale-shaped)
+        let zeros_p: Vec<Literal> = (0..d.n_params)
+            .map(|i| {
+                let t = HostTensor::from_literal(&state[i])?;
+                HostTensor::f32(&t.dims, vec![0.0; t.elem_count()]).to_literal()
+            })
+            .collect::<Result<_>>()?;
+        let zeros_p2: Vec<Literal> = zeros_p.iter().map(clone_literal).collect::<Result<_>>()?;
+        let zeros_s: Vec<Literal> =
+            (0..d.n_scales).map(|_| HostTensor::f32(&[1], vec![0.0]).to_literal()).collect::<Result<_>>()?;
+        let zeros_s2: Vec<Literal> = zeros_s.iter().map(clone_literal).collect::<Result<_>>()?;
+        state.extend(zeros_p);
+        state.extend(zeros_p2);
+        state.extend(zeros_s);
+        state.extend(zeros_s2);
+        state.push(HostTensor::scalar_f32(0.0).to_literal()?);
+        let n_state = d.qat_state_len();
+        assert_eq!(state.len(), n_state);
+
+        // static inputs
+        let flags = [
+            HostTensor::scalar_f32(cfg.alpha).to_literal()?,
+            HostTensor::scalar_f32(cfg.beta).to_literal()?,
+            HostTensor::scalar_f32(if cfg.mse_grad { 1.0 } else { 0.0 }).to_literal()?,
+            HostTensor::scalar_f32(if cfg.lsq { 1.0 } else { 0.0 }).to_literal()?,
+            HostTensor::f32(&[d.n_layers], cfg.bits.iter().map(|&b| b as f32).collect()).to_literal()?,
+        ];
+        let bits_f: Vec<f32> = cfg.bits.iter().map(|&b| b as f32).collect();
+
+        let sched_w = LrSchedule::new(cfg.lr_w, cfg.steps);
+        let sched_sa = LrSchedule::new(cfg.lr_scale_act, cfg.steps);
+        let sched_sw = LrSchedule::new(cfg.lr_scale_w, cfg.steps);
+        let mut it = BatchIter::new(task.train.len(), d.batch, Rng::new(cfg.seed));
+
+        let mut curve = TrainCurve { points: vec![] };
+        let mut evals: Vec<(usize, f64)> = vec![];
+        let mut best = 0f64;
+        let mut done = 0usize;
+        while done < cfg.steps {
+            let k = d.k_steps;
+            let (ids, mask, labels) = stack_k(&task.train, &mut it, k, d.batch);
+            let chunk = [
+                ids.to_literal()?,
+                mask.to_literal()?,
+                labels.to_literal()?,
+                HostTensor::f32(&[k, 1], sched_w.slice(done, k)).to_literal()?,
+                HostTensor::f32(&[k, 1], sched_sa.slice(done, k)).to_literal()?,
+                HostTensor::f32(&[k, 1], sched_sw.slice(done, k)).to_literal()?,
+            ];
+            let mut inputs: Vec<&Literal> = state.iter().collect();
+            inputs.extend(teacher.iter());
+            inputs.extend(chunk.iter());
+            inputs.extend(flags.iter());
+            let out = self.eng.execute_raw("train_step", &inputs)?;
+            let stats = HostTensor::from_literal(&out[n_state])?;
+            state = out;
+            state.truncate(n_state);
+            let sv = stats.as_f32()?;
+            for i in 0..k {
+                curve.points.push((
+                    done + i,
+                    sv[i * 6],
+                    sv[i * 6 + 1],
+                    sv[i * 6 + 2],
+                    sv[i * 6 + 3],
+                    sv[i * 6 + 4],
+                    sv[i * 6 + 5] / d.batch as f32,
+                ));
+            }
+            done += k;
+
+            if done % cfg.eval_every < k || done >= cfg.steps {
+                let acc = self.eval_student(&state[..d.n_params + d.n_scales], &bits_f, &task.dev)?;
+                evals.push((done, acc));
+                best = best.max(acc);
+                if self.verbose {
+                    println!(
+                        "  [qat] step {done}: total={:.4} ce={:.4} dev_acc={:.4}",
+                        sv[(k - 1) * 6],
+                        sv[(k - 1) * 6 + 1],
+                        acc
+                    );
+                }
+            }
+        }
+        let final_acc = evals.last().map(|&(_, a)| a).unwrap_or(0.0);
+        Ok(QatResult { best_dev_acc: best, final_dev_acc: final_acc, evals, curve })
+    }
+
+    /// Dev-set accuracy of the quantized student (argmax over logits,
+    /// counted on the Rust side so padded tail rows are excluded).
+    pub fn eval_student(&self, params_scales: &[Literal], bits_f: &[f32], dev: &Dataset) -> Result<f64> {
+        let d = &self.dims;
+        let bits_l = HostTensor::f32(&[d.n_layers], bits_f.to_vec()).to_literal()?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut row = 0usize;
+        while row < dev.len() {
+            let rows: Vec<usize> = (row..(row + d.eval_batch).min(dev.len())).collect();
+            let (ids, mask, labels, _) = dev.gather(&rows, d.eval_batch);
+            let lits = [ids.to_literal()?, mask.to_literal()?, labels.to_literal()?];
+            let mut inputs: Vec<&Literal> = params_scales.iter().collect();
+            inputs.push(&bits_l);
+            inputs.push(&lits[0]);
+            inputs.push(&lits[1]);
+            inputs.push(&lits[2]);
+            let out = self.eng.execute_raw("eval_step", &inputs)?;
+            let logits = HostTensor::from_literal(&out[2])?;
+            let (c, t) = count_correct(logits.as_f32()?, labels.as_i32()?, rows.len(), d.n_classes);
+            correct += c;
+            total += t;
+            row += d.eval_batch;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Dev-set accuracy of the fp32 model (Table 1's "original" row).
+    pub fn eval_teacher(&self, params: &[Literal], dev: &Dataset) -> Result<f64> {
+        let d = &self.dims;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut row = 0usize;
+        while row < dev.len() {
+            let rows: Vec<usize> = (row..(row + d.eval_batch).min(dev.len())).collect();
+            let (ids, mask, labels, _) = dev.gather(&rows, d.eval_batch);
+            let lits = [ids.to_literal()?, mask.to_literal()?, labels.to_literal()?];
+            let mut inputs: Vec<&Literal> = params.iter().collect();
+            inputs.push(&lits[0]);
+            inputs.push(&lits[1]);
+            inputs.push(&lits[2]);
+            let out = self.eng.execute_raw("teacher_eval", &inputs)?;
+            let logits = HostTensor::from_literal(&out[2])?;
+            let (c, t) = count_correct(logits.as_f32()?, labels.as_i32()?, rows.len(), d.n_classes);
+            correct += c;
+            total += t;
+            row += d.eval_batch;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+fn count_correct(logits: &[f32], labels: &[i32], n_valid: usize, n_classes: usize) -> (usize, usize) {
+    let mut correct = 0;
+    for i in 0..n_valid {
+        let row = &logits[i * n_classes..(i + 1) * n_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        if pred == labels[i] {
+            correct += 1;
+        }
+    }
+    (correct, n_valid)
+}
+
+/// Literal has no Clone; round-trip through host bytes.
+fn clone_literal(l: &Literal) -> Result<Literal> {
+    HostTensor::from_literal(l)?.to_literal()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bits_validates() {
+        assert_eq!(parse_bits("8,8,4,4", 4).unwrap(), vec![8, 8, 4, 4]);
+        assert!(parse_bits("8,8", 4).is_err());
+        assert!(parse_bits("8,8,3,4", 4).is_err());
+        assert!(parse_bits("x", 1).is_err());
+    }
+
+    #[test]
+    fn last_n_int4_rule() {
+        assert_eq!(bits_last_n_int4(4, 0), vec![8, 8, 8, 8]);
+        assert_eq!(bits_last_n_int4(4, 1), vec![8, 8, 8, 4]);
+        assert_eq!(bits_last_n_int4(4, 2), vec![8, 8, 4, 4]);
+        assert_eq!(bits_last_n_int4(4, 4), vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn count_correct_excludes_padding() {
+        // 3 valid rows of 2 classes; 4th row would be padding.
+        let logits = vec![0.1, 0.9, 0.8, 0.2, 0.3, 0.7, 9.0, -9.0];
+        let labels = vec![1, 0, 0, 1];
+        let (c, t) = count_correct(&logits, &labels, 3, 2);
+        assert_eq!(t, 3);
+        assert_eq!(c, 2); // rows 0,1 right; row 2 predicts 1 vs label 0
+    }
+}

@@ -1,0 +1,189 @@
+//! Tokenized datasets and batch iteration.
+//!
+//! `Dataset` holds pre-tokenized (ids, mask, label) rows; `BatchIter`
+//! yields fixed-size batches with epoch reshuffling, and `stack_k` builds
+//! the [K, B, T] stacked tensors the K-step scan artifacts consume.
+
+use crate::runtime::HostTensor;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+use super::tasks::Example;
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub seq_len: usize,
+    pub ids: Vec<Vec<i32>>,    // (N, T)
+    pub masks: Vec<Vec<f32>>,  // (N, T)
+    pub labels: Vec<i32>,      // (N,)
+}
+
+impl Dataset {
+    pub fn tokenize(examples: &[Example], tok: &Tokenizer, seq_len: usize) -> Self {
+        let mut ids = Vec::with_capacity(examples.len());
+        let mut masks = Vec::with_capacity(examples.len());
+        let mut labels = Vec::with_capacity(examples.len());
+        for e in examples {
+            let a: Vec<&str> = e.text_a.iter().map(|s| s.as_str()).collect();
+            let b: Option<Vec<&str>> = e.text_b.as_ref().map(|v| v.iter().map(|s| s.as_str()).collect());
+            let (i, m) = tok.encode(&a, b.as_deref(), seq_len);
+            ids.push(i);
+            masks.push(m);
+            labels.push(e.label);
+        }
+        Dataset { seq_len, ids, masks, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Mean valid tokens per example (the Table-2 x-axis statistic).
+    pub fn mean_valid_tokens(&self) -> f64 {
+        let total: f64 = self.masks.iter().map(|m| m.iter().sum::<f32>() as f64).sum();
+        total / self.len().max(1) as f64
+    }
+
+    /// Gather rows into (ids, mask, labels) host tensors of shape
+    /// (B, T) / (B, T) / (B,), padding by repeating row 0 if `rows` is
+    /// shorter than `batch` (the pad count is returned for eval accounting).
+    pub fn gather(&self, rows: &[usize], batch: usize) -> (HostTensor, HostTensor, HostTensor, usize) {
+        let t = self.seq_len;
+        let mut ids = Vec::with_capacity(batch * t);
+        let mut mask = Vec::with_capacity(batch * t);
+        let mut labels = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let r = rows.get(i).copied().unwrap_or(rows[0]);
+            ids.extend_from_slice(&self.ids[r]);
+            mask.extend_from_slice(&self.masks[r]);
+            labels.push(self.labels[r]);
+        }
+        let padded = batch.saturating_sub(rows.len());
+        (
+            HostTensor::i32(&[batch, t], ids),
+            HostTensor::f32(&[batch, t], mask),
+            HostTensor::i32(&[batch], labels),
+            padded,
+        )
+    }
+}
+
+/// Epoch-reshuffling batch iterator over row indices.
+pub struct BatchIter {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: Rng) -> Self {
+        let mut it = BatchIter { order: (0..n).collect(), cursor: 0, batch, rng };
+        it.reshuffle();
+        it
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch of row indices (wraps epochs, reshuffling at each).
+    pub fn next_rows(&mut self) -> Vec<usize> {
+        if self.cursor + self.batch > self.order.len() {
+            self.reshuffle();
+        }
+        let rows = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        rows
+    }
+}
+
+/// Stack K batches into the [K, B, T] tensors the scan artifacts take.
+pub fn stack_k(ds: &Dataset, it: &mut BatchIter, k: usize, batch: usize) -> (HostTensor, HostTensor, HostTensor) {
+    let t = ds.seq_len;
+    let mut ids = Vec::with_capacity(k * batch * t);
+    let mut mask = Vec::with_capacity(k * batch * t);
+    let mut labels = Vec::with_capacity(k * batch);
+    for _ in 0..k {
+        let rows = it.next_rows();
+        let (i, m, l, _) = ds.gather(&rows, batch);
+        ids.extend_from_slice(i.as_i32().unwrap());
+        mask.extend_from_slice(m.as_f32().unwrap());
+        labels.extend_from_slice(l.as_i32().unwrap());
+    }
+    (
+        HostTensor::i32(&[k, batch, t], ids),
+        HostTensor::f32(&[k, batch, t], mask),
+        HostTensor::i32(&[k, batch], labels),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::lexicon::Lexicon;
+    use crate::data::tasks::{generate, TaskKind};
+    use crate::tokenizer::Tokenizer;
+
+    fn mk() -> (Dataset, Tokenizer) {
+        let lex = Lexicon::new(3);
+        let tok = Tokenizer::build(&lex.all_words(), 512);
+        let ex = generate(TaskKind::Sst2, &lex, &mut Rng::new(1), 40);
+        (Dataset::tokenize(&ex, &tok, 24), tok)
+    }
+
+    #[test]
+    fn tokenized_shapes() {
+        let (ds, _) = mk();
+        assert_eq!(ds.len(), 40);
+        for (i, m) in ds.ids.iter().zip(ds.masks.iter()) {
+            assert_eq!(i.len(), 24);
+            assert_eq!(m.len(), 24);
+            // mask is a prefix of ones
+            let ones = m.iter().filter(|&&x| x == 1.0).count();
+            assert!(m[..ones].iter().all(|&x| x == 1.0));
+            assert!(m[ones..].iter().all(|&x| x == 0.0));
+        }
+        assert!(ds.mean_valid_tokens() > 4.0);
+    }
+
+    #[test]
+    fn gather_and_pad() {
+        let (ds, _) = mk();
+        let (ids, mask, labels, padded) = ds.gather(&[0, 1, 2], 5);
+        assert_eq!(ids.dims, vec![5, 24]);
+        assert_eq!(mask.dims, vec![5, 24]);
+        assert_eq!(labels.dims, vec![5]);
+        assert_eq!(padded, 2);
+        // padding repeats row 0
+        let idv = ids.as_i32().unwrap();
+        assert_eq!(&idv[3 * 24..4 * 24], &idv[0..24]);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, Rng::new(5));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for r in it.next_rows() {
+                seen.insert(r);
+            }
+        }
+        assert_eq!(seen.len(), 9); // 3 batches of 3 distinct rows each epoch
+    }
+
+    #[test]
+    fn stack_k_shapes() {
+        let (ds, _) = mk();
+        let mut it = BatchIter::new(ds.len(), 8, Rng::new(2));
+        let (ids, mask, labels) = stack_k(&ds, &mut it, 4, 8);
+        assert_eq!(ids.dims, vec![4, 8, 24]);
+        assert_eq!(mask.dims, vec![4, 8, 24]);
+        assert_eq!(labels.dims, vec![4, 8]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Procedural lexicon for the synthetic-GLUE suite.
+//!
+//! Words are consonant-vowel syllable strings, partitioned into parts of
+//! speech, with a deterministic synonym pairing inside nouns/verbs (the
+//! paraphrase/entailment generators rewrite through it). Everything is
+//! seeded, so the corpus — and therefore the tokenizer vocabulary and the
+//! train/dev splits — is identical across processes (teacher finetune,
+//! QAT runs, and the serving demo all agree).
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+const CONS: &[char] = &['b', 'd', 'f', 'g', 'k', 'l', 'm', 'n', 'p', 'r', 's', 't', 'v', 'z'];
+const VOWELS: &[char] = &['a', 'e', 'i', 'o', 'u'];
+
+#[derive(Debug, Clone)]
+pub struct Lexicon {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>,
+    pub adjectives: Vec<String>,
+    pub pos_words: Vec<String>,
+    pub neg_words: Vec<String>,
+    pub neutral: Vec<String>,
+    pub determiners: Vec<String>,
+    pub wh_words: Vec<String>,
+    /// sentiment-flipping tokens ("not"-words) — SST-2's compositional knob
+    pub negators: Vec<String>,
+    /// noun/verb -> synonym (bidirectional pairing)
+    pub synonyms: HashMap<String, String>,
+}
+
+fn syllable(rng: &mut Rng) -> String {
+    let mut s = String::new();
+    s.push(*rng.choose(CONS));
+    s.push(*rng.choose(VOWELS));
+    s
+}
+
+fn word(rng: &mut Rng, syllables: usize) -> String {
+    (0..syllables).map(|_| syllable(rng)).collect()
+}
+
+fn unique_words(rng: &mut Rng, count: usize, syllables: usize, taken: &mut Vec<String>) -> Vec<String> {
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let w = word(rng, syllables);
+        if !taken.contains(&w) {
+            taken.push(w.clone());
+            out.push(w);
+        }
+    }
+    out
+}
+
+impl Lexicon {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5EED_1E1C);
+        let mut taken: Vec<String> = Vec::new();
+        let nouns = unique_words(&mut rng, 60, 2, &mut taken);
+        let verbs = unique_words(&mut rng, 40, 2, &mut taken);
+        let adjectives = unique_words(&mut rng, 24, 2, &mut taken);
+        let pos_words = unique_words(&mut rng, 20, 3, &mut taken);
+        let neg_words = unique_words(&mut rng, 20, 3, &mut taken);
+        let neutral = unique_words(&mut rng, 30, 2, &mut taken);
+        let determiners = unique_words(&mut rng, 4, 1, &mut taken);
+        let wh_words = unique_words(&mut rng, 4, 1, &mut taken);
+        let negators = unique_words(&mut rng, 2, 1, &mut taken);
+
+        // Pair consecutive nouns / verbs as synonyms: (0,1), (2,3), ...
+        let mut synonyms = HashMap::new();
+        for chunk in nouns.chunks(2).chain(verbs.chunks(2)) {
+            if let [a, b] = chunk {
+                synonyms.insert(a.clone(), b.clone());
+                synonyms.insert(b.clone(), a.clone());
+            }
+        }
+        Lexicon { nouns, verbs, adjectives, pos_words, neg_words, neutral, determiners, wh_words, negators, synonyms }
+    }
+
+    /// Every word (for tokenizer vocabulary building).
+    pub fn all_words(&self) -> Vec<&str> {
+        self.nouns
+            .iter()
+            .chain(&self.verbs)
+            .chain(&self.adjectives)
+            .chain(&self.pos_words)
+            .chain(&self.neg_words)
+            .chain(&self.neutral)
+            .chain(&self.determiners)
+            .chain(&self.wh_words)
+            .chain(&self.negators)
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    pub fn synonym<'a>(&'a self, w: &'a str) -> &'a str {
+        self.synonyms.get(w).map(|s| s.as_str()).unwrap_or(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Lexicon::new(7);
+        let b = Lexicon::new(7);
+        assert_eq!(a.nouns, b.nouns);
+        assert_eq!(a.pos_words, b.pos_words);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = Lexicon::new(7);
+        let b = Lexicon::new(8);
+        assert_ne!(a.nouns, b.nouns);
+    }
+
+    #[test]
+    fn no_cross_pos_collisions() {
+        let lex = Lexicon::new(1);
+        let all = lex.all_words();
+        let mut set = std::collections::HashSet::new();
+        for w in &all {
+            assert!(set.insert(*w), "duplicate word {w}");
+        }
+        assert_eq!(all.len(), 60 + 40 + 24 + 20 + 20 + 30 + 4 + 4 + 2);
+    }
+
+    #[test]
+    fn synonyms_are_involutive() {
+        let lex = Lexicon::new(2);
+        for n in &lex.nouns {
+            let s = lex.synonym(n);
+            assert_eq!(lex.synonym(s), n.as_str());
+        }
+        // and stay within the same part of speech
+        for v in &lex.verbs {
+            assert!(lex.verbs.contains(&lex.synonym(v).to_string()));
+        }
+    }
+}

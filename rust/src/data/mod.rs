@@ -1,0 +1,87 @@
+//! Synthetic-GLUE data substrate: lexicon, task generators, tokenized
+//! datasets, batching. See DESIGN.md §Substitutions for why synthetic
+//! analogues preserve the paper's Table-1/Table-3 orderings.
+
+pub mod batch;
+pub mod lexicon;
+pub mod tasks;
+
+pub use batch::{stack_k, BatchIter, Dataset};
+pub use lexicon::Lexicon;
+pub use tasks::{generate, Example, TaskKind, ALL_TASKS};
+
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// A fully materialized task: tokenizer-shared train/dev splits.
+pub struct TaskData {
+    pub kind: TaskKind,
+    pub train: Dataset,
+    pub dev: Dataset,
+}
+
+/// Build the entire suite deterministically: one lexicon + tokenizer for
+/// all tasks (as with real GLUE, where one pretrained vocab serves every
+/// downstream task).
+pub struct Suite {
+    pub lexicon: Lexicon,
+    pub tokenizer: Tokenizer,
+    pub seq_len: usize,
+}
+
+impl Suite {
+    pub fn new(seed: u64, vocab_size: usize, seq_len: usize) -> Self {
+        let lexicon = Lexicon::new(seed);
+        let tokenizer = Tokenizer::build(&lexicon.all_words(), vocab_size);
+        Suite { lexicon, tokenizer, seq_len }
+    }
+
+    pub fn task(&self, kind: TaskKind, seed: u64) -> TaskData {
+        let (n_train, n_dev) = kind.sizes();
+        let mut rng = Rng::new(seed ^ (kind.name().bytes().map(|b| b as u64).sum::<u64>() << 7));
+        let train_ex = generate(kind, &self.lexicon, &mut rng, n_train);
+        let dev_ex = generate(kind, &self.lexicon, &mut rng, n_dev);
+        TaskData {
+            kind,
+            train: Dataset::tokenize(&train_ex, &self.tokenizer, self.seq_len),
+            dev: Dataset::tokenize(&dev_ex, &self.tokenizer, self.seq_len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_builds_all_tasks() {
+        let suite = Suite::new(42, 512, 24);
+        assert!(suite.tokenizer.vocab_size() <= 512);
+        for kind in ALL_TASKS {
+            let td = suite.task(kind, 1);
+            assert_eq!(td.train.len(), kind.sizes().0);
+            assert_eq!(td.dev.len(), kind.sizes().1);
+            // ids stay inside the model vocabulary
+            for row in td.train.ids.iter().take(50) {
+                assert!(row.iter().all(|&i| (i as usize) < 512));
+            }
+        }
+    }
+
+    #[test]
+    fn splits_are_stable() {
+        let suite = Suite::new(42, 512, 24);
+        let a = suite.task(TaskKind::Rte, 1);
+        let b = suite.task(TaskKind::Rte, 1);
+        assert_eq!(a.dev.ids, b.dev.ids);
+        assert_eq!(a.dev.labels, b.dev.labels);
+    }
+
+    #[test]
+    fn train_dev_disjoint_rngs() {
+        let suite = Suite::new(42, 512, 24);
+        let t = suite.task(TaskKind::Sst2, 1);
+        // train prefix and dev prefix should differ (different stream pos)
+        assert_ne!(t.train.ids[..5], t.dev.ids[..5]);
+    }
+}

@@ -1,0 +1,32 @@
+//! MKQ-BERT reproduction — L3 Rust coordinator library.
+//!
+//! Layers (DESIGN.md):
+//!   * [`runtime`] — PJRT engine over AOT HLO-text artifacts.
+//!   * [`quant`] — serving-path quantization math (codes, scales, int4
+//!     packing), mirroring `python/compile/kernels/ref.py`.
+//!   * [`tokenizer`] / [`data`] — text substrate: WordPiece tokenizer and
+//!     the synthetic-GLUE task suite.
+//!   * [`coordinator`] — the paper's system contribution at L3: QAT
+//!     trainer (calibration → QAT → eval; Tables 1 & 3) and the serving
+//!     stack (router, valid-token dynamic batcher, executor; Table 2).
+//!   * [`util`] — substrates the vendored crate set lacks (PRNG, CLI,
+//!     config, thread pool, property testing, stats, bench harness).
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod quant;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory, overridable via MKQ_ARTIFACTS.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MKQ_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,146 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU client (once, lazily, cached), and executes with host tensors.
+//!
+//! This is the only module that touches the `xla` crate on the hot path.
+//! Python is never involved at runtime — artifacts were lowered by
+//! `make artifacts`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    compiled: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative (compile_ms, exec_count, exec_ms) telemetry per artifact.
+    telemetry: RefCell<HashMap<String, (f64, u64, f64)>>,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            compiled: RefCell::new(HashMap::new()),
+            telemetry: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn compile(&self, name: &str) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .with_context(|| format!("non-utf8 artifact path {:?}", spec.file))?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {name}"))?);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.telemetry.borrow_mut().entry(name.to_string()).or_insert((0.0, 0, 0.0)).0 += ms;
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; returns the decomposed output
+    /// tuple as host tensors (artifacts are lowered with return_tuple=True,
+    /// so the raw result is a single tuple buffer).
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = inputs.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        self.execute_literals(name, &lits)
+    }
+
+    /// Execute with prebuilt literals (lets callers cache static inputs —
+    /// weights, flags — across calls; a §Perf hot-path lever).
+    pub fn execute_literals(&self, name: &str, lits: &[Literal]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let parts = self.execute_raw(name, &refs)?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Lowest-level execute: borrowed literals in, decomposed tuple of
+    /// literals out. The training loop keeps its state as `Literal`s and
+    /// round-trips through this path without any HostTensor copies
+    /// (§Perf: state stays in XLA literal form between steps).
+    pub fn execute_raw(&self, name: &str, lits: &[&Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if lits.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "{name}: got {} inputs, manifest expects {}",
+                lits.len(),
+                spec.inputs.len()
+            );
+        }
+        let exe = self.compile(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<&Literal>(lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut tel = self.telemetry.borrow_mut();
+            let e = tel.entry(name.to_string()).or_insert((0.0, 0, 0.0));
+            e.1 += 1;
+            e.2 += ms;
+        }
+        if parts.len() != spec.outputs.len() {
+            anyhow::bail!(
+                "{name}: runtime produced {} outputs, manifest expects {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Validate inputs against the manifest then execute (debug path; the
+    /// hot loop skips validation).
+    pub fn execute_checked(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?;
+        for (t, s) in inputs.iter().zip(spec.inputs.iter()) {
+            t.check_spec(s).with_context(|| format!("artifact {name}"))?;
+        }
+        self.execute(name, inputs)
+    }
+
+    /// Telemetry snapshot: (artifact, compile_ms, exec_count, exec_ms).
+    pub fn telemetry(&self) -> Vec<(String, f64, u64, f64)> {
+        let mut rows: Vec<_> = self
+            .telemetry
+            .borrow()
+            .iter()
+            .map(|(k, &(c, n, e))| (k.clone(), c, n, e))
+            .collect();
+        rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        rows
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}

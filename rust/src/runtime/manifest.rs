@@ -1,0 +1,206 @@
+//! Artifact manifest parser.
+//!
+//! `artifacts/manifest.txt` is the contract between the Python compile
+//! path and the Rust runtime: global `config` keys (model dims) plus, per
+//! artifact, the ordered input/output tensor specs. See
+//! `python/compile/aot.py` for the emitter.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "int8" => DType::I8,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    input_index: HashMap<String, usize>,
+}
+
+impl ArtifactSpec {
+    pub fn input_idx(&self, name: &str) -> Result<usize> {
+        self.input_index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {} has no input named {name}", self.name))
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub config: HashMap<String, i64>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+            match tag {
+                "config" => {
+                    let k = parts.next().ok_or_else(|| anyhow!(ctx()))?;
+                    let v: i64 = parts.next().ok_or_else(|| anyhow!(ctx()))?.parse()?;
+                    m.config.insert(k.to_string(), v);
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("artifact without `end` before line {}", lineno + 1);
+                    }
+                    let name = parts.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let file = parts.next().ok_or_else(|| anyhow!(ctx()))?;
+                    cur = Some(ArtifactSpec {
+                        name,
+                        file: dir.join(file),
+                        inputs: vec![],
+                        outputs: vec![],
+                        input_index: HashMap::new(),
+                    });
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("{}: spec outside artifact", ctx()))?;
+                    let name = parts.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let dtype = DType::parse(parts.next().ok_or_else(|| anyhow!(ctx()))?)?;
+                    let dims_s = parts.next().ok_or_else(|| anyhow!(ctx()))?;
+                    let dims = if dims_s == "scalar" {
+                        vec![]
+                    } else {
+                        dims_s.split('x').map(|d| d.parse::<usize>()).collect::<Result<_, _>>()?
+                    };
+                    let spec = TensorSpec { name, dtype, dims };
+                    if tag == "in" {
+                        a.input_index.insert(spec.name.clone(), a.inputs.len());
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => {
+                    let a = cur.take().ok_or_else(|| anyhow!("{}: stray end", ctx()))?;
+                    m.artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("unknown manifest tag {other:?} at line {}", lineno + 1),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended mid-artifact");
+        }
+        Ok(m)
+    }
+
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow!("manifest missing config key {key}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name} (have: {:?})", {
+                let mut names: Vec<_> = self.artifacts.keys().collect();
+                names.sort();
+                names
+            }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+config vocab 512
+config n_layers 4
+artifact demo demo.hlo.txt
+in x float32 4x8
+in ids int32 4
+in s float32 scalar
+out y float32 4x2
+end
+artifact second second.hlo.txt
+in w int8 8x8
+out z float32 1
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.cfg("vocab").unwrap(), 512);
+        let a = m.artifact("demo").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].dims, vec![4, 8]);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[2].dims, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].dims, vec![4, 2]);
+        assert_eq!(a.input_idx("ids").unwrap(), 1);
+        assert!(a.input_idx("nope").is_err());
+        let b = m.artifact("second").unwrap();
+        assert_eq!(b.inputs[0].dtype, DType::I8);
+        assert_eq!(b.file, Path::new("/tmp/a/second.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("in x float32 4", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a f\nartifact b g\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a f\nin x bad 4\nend\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a f\n", Path::new("/")).is_err());
+    }
+}

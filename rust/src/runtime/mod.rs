@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, host tensors.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Text is the interchange format because
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tensor::{HostData, HostTensor};

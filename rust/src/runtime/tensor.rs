@@ -1,0 +1,167 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! `HostTensor` is the lingua franca between the coordinator (which builds
+//! batches, schedules, flags) and the PJRT runtime. Conversions go through
+//! `Literal::create_from_shape_and_untyped_data`, which handles every
+//! dtype uniformly (including i8 weight codes).
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{DType, TensorSpec};
+
+#[derive(Debug, Clone)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims: dims.to_vec(), data: HostData::F32(data) }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims: dims.to_vec(), data: HostData::I32(data) }
+    }
+
+    pub fn i8(dims: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims: dims.to_vec(), data: HostData::I8(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::f32(&[1], vec![v])
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        let n = spec.elem_count();
+        match spec.dtype {
+            DType::F32 => Self::f32(&spec.dims, vec![0.0; n]),
+            DType::I32 => Self::i32(&spec.dims, vec![0; n]),
+            DType::I8 => Self::i8(&spec.dims, vec![0; n]),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            HostData::F32(_) => DType::F32,
+            HostData::I32(_) => DType::I32,
+            HostData::I8(_) => DType::I8,
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            HostData::I8(v) => Ok(v),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
+    /// Validate against a manifest spec (shape + dtype).
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dims != spec.dims {
+            bail!("{}: dims {:?} != manifest {:?}", spec.name, self.dims, spec.dims);
+        }
+        if self.dtype() != spec.dtype {
+            bail!("{}: dtype {:?} != manifest {:?}", spec.name, self.dtype(), spec.dtype);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, bytes): (ElementType, &[u8]) = match &self.data {
+            HostData::F32(v) => (ElementType::F32, bytemuck_f32(v)),
+            HostData::I32(v) => (ElementType::S32, bytemuck_i32(v)),
+            HostData::I8(v) => (ElementType::S8, bytemuck_i8(v)),
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(ty, &self.dims, bytes)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            ElementType::F32 => HostData::F32(lit.to_vec::<f32>()?),
+            ElementType::S32 => HostData::I32(lit.to_vec::<i32>()?),
+            ElementType::S8 => HostData::I8(lit.to_vec::<i8>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(HostTensor { dims, data })
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytemuck_i8(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.dims, vec![2, 3]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_i8() {
+        let t = HostTensor::i32(&[4], vec![-1, 0, 7, 2_000_000_000]);
+        let b = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(b.as_i32().unwrap(), t.as_i32().unwrap());
+
+        let t8 = HostTensor::i8(&[2, 2], vec![-7, 8, 127, -128]);
+        let b8 = HostTensor::from_literal(&t8.to_literal().unwrap()).unwrap();
+        assert_eq!(b8.as_i8().unwrap(), t8.as_i8().unwrap());
+    }
+
+    #[test]
+    fn spec_checking() {
+        use super::super::manifest::TensorSpec;
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, dims: vec![2, 2] };
+        assert!(HostTensor::f32(&[2, 2], vec![0.0; 4]).check_spec(&spec).is_ok());
+        assert!(HostTensor::f32(&[4], vec![0.0; 4]).check_spec(&spec).is_err());
+        assert!(HostTensor::i32(&[2, 2], vec![0; 4]).check_spec(&spec).is_err());
+        let z = HostTensor::zeros(&spec);
+        assert_eq!(z.elem_count(), 4);
+    }
+}

@@ -1,0 +1,215 @@
+//! WordPiece-style tokenizer substrate.
+//!
+//! The paper's pipeline starts from text; our synthetic-GLUE generators
+//! emit word strings, and this module turns them into model token ids:
+//! vocabulary building (frequency-ranked words + character fallback
+//! pieces) and greedy longest-match-first subword splitting with `##`
+//! continuation pieces — the BERT tokenization algorithm, scaled to the
+//! synthetic lexicon.
+//!
+//! Special ids are fixed by convention shared with the data generators:
+//! 0=[PAD], 1=[CLS], 2=[SEP], 3=[UNK].
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const UNK: i32 = 3;
+pub const N_SPECIAL: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    ids_to_tok: Vec<String>,
+    max_piece_len: usize,
+}
+
+impl Tokenizer {
+    /// Build a vocabulary of at most `vocab_size` entries from a corpus of
+    /// words: all single characters (as both word-initial and `##`
+    /// continuation pieces) are always included so tokenization never
+    /// fails, then whole words by descending frequency.
+    pub fn build(corpus_words: &[&str], vocab_size: usize) -> Self {
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        let mut chars: Vec<char> = Vec::new();
+        for w in corpus_words {
+            *freq.entry(*w).or_insert(0) += 1;
+            for c in w.chars() {
+                if !chars.contains(&c) {
+                    chars.push(c);
+                }
+            }
+        }
+        chars.sort_unstable();
+
+        let mut ids_to_tok: Vec<String> =
+            vec!["[PAD]".into(), "[CLS]".into(), "[SEP]".into(), "[UNK]".into()];
+        // character fallback pieces
+        for &c in &chars {
+            ids_to_tok.push(c.to_string());
+            ids_to_tok.push(format!("##{c}"));
+        }
+        // frequency-ranked whole words
+        let mut by_freq: Vec<(&str, u64)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        for (w, _) in by_freq {
+            if ids_to_tok.len() >= vocab_size {
+                break;
+            }
+            if w.chars().count() > 1 {
+                ids_to_tok.push(w.to_string());
+            }
+        }
+        assert!(
+            ids_to_tok.len() <= vocab_size,
+            "character set alone exceeds vocab_size ({} > {vocab_size})",
+            ids_to_tok.len()
+        );
+
+        let vocab: HashMap<String, i32> =
+            ids_to_tok.iter().enumerate().map(|(i, t)| (t.clone(), i as i32)).collect();
+        let max_piece_len = ids_to_tok.iter().map(|t| t.len()).max().unwrap_or(1);
+        Tokenizer { vocab, ids_to_tok, max_piece_len }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.ids_to_tok.len()
+    }
+
+    pub fn id(&self, tok: &str) -> Option<i32> {
+        self.vocab.get(tok).copied()
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.ids_to_tok.get(id as usize).map(|s| s.as_str()).unwrap_or("[UNK]")
+    }
+
+    /// WordPiece a single word: greedy longest-match-first; continuation
+    /// pieces carry the `##` prefix. Falls back to [UNK] only if some
+    /// character is outside the vocabulary alphabet.
+    pub fn wordpiece(&self, word: &str) -> Vec<i32> {
+        if let Some(&id) = self.vocab.get(word) {
+            return vec![id];
+        }
+        let chars: Vec<char> = word.chars().collect();
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < chars.len() {
+            let mut end = chars.len().min(start + self.max_piece_len);
+            let mut found = None;
+            while end > start {
+                let piece: String = chars[start..end].iter().collect();
+                let key = if start == 0 { piece } else { format!("##{piece}") };
+                if let Some(&id) = self.vocab.get(&key) {
+                    found = Some((id, end));
+                    break;
+                }
+                end -= 1;
+            }
+            match found {
+                Some((id, e)) => {
+                    out.push(id);
+                    start = e;
+                }
+                None => return vec![UNK],
+            }
+        }
+        out
+    }
+
+    /// Encode a (possibly pair) example: [CLS] a [SEP] (b [SEP])?, truncated
+    /// to `max_len`, padded with [PAD]. Returns (ids, mask).
+    pub fn encode(&self, text_a: &[&str], text_b: Option<&[&str]>, max_len: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = vec![CLS];
+        for w in text_a {
+            ids.extend(self.wordpiece(w));
+        }
+        ids.push(SEP);
+        if let Some(b) = text_b {
+            for w in b {
+                ids.extend(self.wordpiece(w));
+            }
+            ids.push(SEP);
+        }
+        ids.truncate(max_len);
+        let mut mask = vec![1.0; ids.len()];
+        while ids.len() < max_len {
+            ids.push(PAD);
+            mask.push(0.0);
+        }
+        (ids, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let corpus = ["river", "bank", "riverbank", "run", "running", "bank"];
+        Tokenizer::build(&corpus, 128)
+    }
+
+    #[test]
+    fn whole_words_have_ids() {
+        let t = toy();
+        assert_eq!(t.wordpiece("bank").len(), 1);
+        assert_eq!(t.wordpiece("river").len(), 1);
+    }
+
+    #[test]
+    fn subword_fallback_covers_unseen() {
+        let t = toy();
+        let pieces = t.wordpiece("runbank"); // unseen word -> run + ##b ##a ##n ##k
+        assert!(pieces.len() >= 2);
+        assert_ne!(pieces[0], UNK);
+        // Longest-match-first: the first piece should be the whole known word.
+        assert_eq!(t.token(pieces[0]), "run");
+        assert_eq!(t.token(*pieces.last().unwrap()), "##k");
+    }
+
+    #[test]
+    fn unknown_alphabet_is_unk() {
+        let t = toy();
+        assert_eq!(t.wordpiece("日本"), vec![UNK]);
+    }
+
+    #[test]
+    fn encode_single_and_pair() {
+        let t = toy();
+        let (ids, mask) = t.encode(&["river", "bank"], None, 8);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(mask.len(), 8);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 4); // CLS r b SEP
+        let (ids2, _) = t.encode(&["river"], Some(&["bank"]), 8);
+        let seps = ids2.iter().filter(|&&i| i == SEP).count();
+        assert_eq!(seps, 2);
+    }
+
+    #[test]
+    fn encode_truncates() {
+        let t = toy();
+        let words = vec!["river"; 20];
+        let (ids, mask) = t.encode(&words, None, 8);
+        assert_eq!(ids.len(), 8);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn deterministic_vocab_order() {
+        let corpus = ["b", "a", "ab", "ab", "ba"];
+        let t1 = Tokenizer::build(&corpus, 64);
+        let t2 = Tokenizer::build(&corpus, 64);
+        assert_eq!(t1.ids_to_tok, t2.ids_to_tok);
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let words: Vec<String> = (0..500).map(|i| format!("w{i}")).collect();
+        let refs: Vec<&str> = words.iter().map(|s| s.as_str()).collect();
+        let t = Tokenizer::build(&refs, 128);
+        assert!(t.vocab_size() <= 128);
+    }
+}

@@ -1,0 +1,95 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set —
+//! documented substitution, DESIGN.md).
+//!
+//! Warmup + timed iterations with mean/p50/stddev reporting, matching the
+//! paper's methodology for Table 2 ("inference time averaged over 100
+//! rounds").
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub stddev_us: f64,
+    pub min_us: f64,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.1} us  p50 {:>10.1} us  sd {:>8.1} us  (n={})",
+            self.mean_us, self.p50_us, self.stddev_us, self.iters
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 100 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        BenchResult {
+            iters: self.iters,
+            mean_us: stats::mean(&samples),
+            p50_us: stats::percentile(&samples, 50.0),
+            stddev_us: stats::stddev(&samples),
+            min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// Run and print a labeled row (the bench binaries' standard output).
+    pub fn report<F: FnMut()>(&self, label: &str, f: F) -> BenchResult {
+        let r = self.run(f);
+        println!("{label:<40} {r}");
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(1, 10);
+        let r = b.run(|| std::thread::sleep(std::time::Duration::from_micros(200)));
+        assert!(r.mean_us >= 150.0, "mean={}", r.mean_us);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn ordering_detectable() {
+        let b = Bench::new(1, 8);
+        let fast = b.run(|| {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let slow = b.run(|| std::thread::sleep(std::time::Duration::from_micros(300)));
+        assert!(slow.mean_us > fast.mean_us);
+    }
+}

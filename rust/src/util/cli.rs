@@ -1,0 +1,119 @@
+//! Minimal CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Every binary in this workspace parses through here so help
+//! text and error behaviour stay uniform.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    order: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.insert(rest.to_string(), v);
+                } else {
+                    out.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn insert(&mut self, k: String, v: String) {
+        if !self.flags.contains_key(&k) {
+            self.order.push(k.clone());
+        }
+        self.flags.insert(k, v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list, e.g. `--tasks rte,mrpc`.
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // Positionals come before flags: a bare `--flag` followed by a
+        // non-flag token consumes it as a value (documented behaviour).
+        let a = parse("run --steps 300 --lr=0.005 --verbose");
+        assert_eq!(a.usize("steps", 0), 300);
+        assert!((a.f64("lr", 0.0) - 0.005).abs() < 1e-12);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("steps", 7), 7);
+        assert_eq!(a.str("out", "x"), "x");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--dry-run");
+        assert!(a.bool("dry-run"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--tasks rte,mrpc, cola");
+        assert_eq!(a.list("tasks").unwrap(), vec!["rte", "mrpc"]);
+        let b = parse("--tasks=rte,mrpc,cola");
+        assert_eq!(b.list("tasks").unwrap(), vec!["rte", "mrpc", "cola"]);
+    }
+}

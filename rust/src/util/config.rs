@@ -1,0 +1,113 @@
+//! Key-value configuration files (serde/toml are not vendored).
+//!
+//! Format: `key = value` lines, `[section]` headers flatten to
+//! `section.key`, `#` comments. Used by the launcher (`mkq-bert --config
+//! serve.conf`) and the experiment runners.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+steps = 300
+lr = 0.005
+
+[server]
+port = 8080
+batch_window_us = 500  # inline comment
+buckets = 16x28,16x34
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize("steps", 0), 300);
+        assert!((c.f64("lr", 0.0) - 0.005).abs() < 1e-12);
+        assert_eq!(c.usize("server.port", 0), 8080);
+        assert_eq!(c.usize("server.batch_window_us", 0), 500);
+        assert_eq!(c.str("server.buckets", ""), "16x28,16x34");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("what is this").is_err());
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.usize("missing", 9), 9);
+        c.set("a", "2");
+        assert_eq!(c.usize("a", 0), 2);
+    }
+}

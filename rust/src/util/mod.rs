@@ -1,0 +1,12 @@
+//! Substrate utilities the vendored crate set lacks (DESIGN.md lists these
+//! as deliberate build-everything substitutions): PRNG, CLI parsing,
+//! config files, a thread pool, a property-testing harness, summary
+//! statistics, and a micro-benchmark harness.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

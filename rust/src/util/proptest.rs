@@ -1,0 +1,99 @@
+//! Property-testing harness (`proptest` is not in the vendored crate set —
+//! this is the documented substitution, see DESIGN.md).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! re-runs with progressively simpler generators ("shrink by regeneration"
+//! — we shrink the *size hint*, not the value, which is enough to get
+//! small counterexamples from size-parameterized generators) and panics
+//! with the seed so the case is reproducible.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` random cases. `prop` returns
+/// `Err(msg)` to fail. On failure, retries with smaller `size` values to
+/// report the smallest failing size.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = root.next_u64();
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: find the smallest size that still fails for this seed.
+            let mut smallest = (size, msg.clone());
+            for s in 1..size {
+                let mut rng = Rng::new(case_seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    smallest = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {case_seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("reverse-involutive", PropConfig::default(), |rng, size| {
+            let xs: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            ensure(xs == ys, "reverse twice != id")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn fails_bad_property() {
+        check("always-fails", PropConfig { cases: 4, ..Default::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Summary statistics for the benchmark harness and serving metrics.
+
+/// Percentile over a sample (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).floor() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Online latency recorder (microseconds) with summary reporting.
+#[derive(Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples_us.is_empty() {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            count: self.samples_us.len(),
+            mean_us: mean(&self.samples_us),
+            p50_us: percentile(&self.samples_us, 50.0),
+            p90_us: percentile(&self.samples_us, 90.0),
+            p99_us: percentile(&self.samples_us, 99.0),
+            min_us: self.samples_us.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_us: self.samples_us.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+#[derive(Default, Debug, Clone, Copy)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}us p50={:.1}us p90={:.1}us p99={:.1}us",
+            self.count, self.mean_us, self.p50_us, self.p90_us, self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=1000 {
+            r.record(i as f64);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 1000);
+        assert!((s.p50_us - 500.0).abs() <= 1.0);
+        assert!(s.p99_us >= 989.0);
+    }
+}
