@@ -1,11 +1,11 @@
-//! `cargo bench` target: coordinator-side hot paths that must stay off the
-//! critical path (DESIGN.md §Perf): tokenization, batch stacking, literal
-//! conversion, int4 packing, the quant mirror, and — when artifacts are
-//! present — the serving step (batcher + executor).
+//! `cargo bench --bench coordinator`: coordinator-side hot paths that
+//! must stay off the critical path (DESIGN.md §Perf): tokenization, batch
+//! stacking, int4 packing, the quant mirror, the native serving step
+//! (batcher + kernels), and — with `--features xla` — literal conversion
+//! and the artifact serving step.
 
 use mkq::data::{stack_k, BatchIter, Suite, TaskKind};
 use mkq::quant;
-use mkq::runtime::HostTensor;
 use mkq::util::benchkit::Bench;
 use mkq::util::rng::Rng;
 
@@ -29,15 +29,19 @@ fn main() {
         assert_eq!(ids.elem_count(), 10 * 16 * 24);
     });
 
-    println!("\n== literal conversion (state round-trip cost) ==");
-    let big = HostTensor::f32(&[512, 96], vec![0.5; 512 * 96]);
-    bench.report("HostTensor->Literal 512x96 f32", || {
-        let _ = big.to_literal().unwrap();
-    });
-    let lit = big.to_literal().unwrap();
-    bench.report("Literal->HostTensor 512x96 f32", || {
-        let _ = HostTensor::from_literal(&lit).unwrap();
-    });
+    #[cfg(feature = "xla")]
+    {
+        use mkq::runtime::HostTensor;
+        println!("\n== literal conversion (state round-trip cost) ==");
+        let big = HostTensor::f32(&[512, 96], vec![0.5; 512 * 96]);
+        bench.report("HostTensor->Literal 512x96 f32", || {
+            let _ = big.to_literal().unwrap();
+        });
+        let lit = big.to_literal().unwrap();
+        bench.report("Literal->HostTensor 512x96 f32", || {
+            let _ = HostTensor::from_literal(&lit).unwrap();
+        });
+    }
 
     println!("\n== quant mirror ==");
     let mut rng = Rng::new(3);
@@ -50,21 +54,18 @@ fn main() {
         let _ = quant::pack_int4_k(&codes, 768, 768);
     });
 
-    // Serving step (only when artifacts are available).
-    if let Ok(eng) = mkq::runtime::Engine::load(&mkq::artifacts_dir()) {
-        use mkq::coordinator::{ServeModel, Server, ServerConfig, Trainer};
-        println!("\n== serving step (batch=16 serve_fwd) ==");
-        let tr = Trainer::new(&eng).unwrap();
-        let (params, scales) = tr.init(1).unwrap();
-        let mut ps = params;
-        ps.extend(scales);
-        let model = ServeModel::new(ps, &[8.0, 8.0, 4.0, 4.0], "bench").unwrap();
-        let mut server = Server::new(&eng, model, ServerConfig::default()).unwrap();
-        eng.compile("serve_fwd_b16").unwrap();
-        let ids = vec![1i32; 24];
-        let mask = vec![1.0f32; 24];
+    // Native serving step: batcher + kernels, no artifacts needed.
+    {
+        use mkq::coordinator::{Server, ServerConfig};
+        use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+        println!("\n== native serving step (batch=16, TinyBERT dims, int4 body) ==");
+        let dims = NativeDims::tiny();
+        let backend = NativeBackend::with_model(NativeModel::random(dims, &[4; 4], 7));
+        let mut server = Server::new(&backend, ServerConfig::default()).unwrap();
+        let ids = vec![1i32; dims.seq];
+        let mask = vec![1.0f32; dims.seq];
         let b = Bench::new(2, 20);
-        b.report("submit 16 + pump (exec incl.)", || {
+        b.report("submit 16 + pump (native exec incl.)", || {
             for _ in 0..16 {
                 server.submit(ids.clone(), mask.clone()).unwrap();
             }
@@ -72,8 +73,48 @@ fn main() {
             assert_eq!(out.len(), 16);
         });
         let s = server.summary();
-        println!("  batcher overhead: queue p50 {:.1}us vs exec p50 {:.1}us", s.queue.p50_us, s.exec.p50_us);
-    } else {
-        println!("\n(serving bench skipped — run `make artifacts`)");
+        println!(
+            "  batcher overhead: queue p50 {:.1}us vs exec p50 {:.1}us",
+            s.queue.p50_us, s.exec.p50_us
+        );
+    }
+
+    // Artifact serving step (only with the xla feature + artifacts present).
+    #[cfg(feature = "xla")]
+    {
+        if let Ok(eng) = mkq::runtime::Engine::load(&mkq::artifacts_dir()) {
+        use mkq::coordinator::{ServeModel, Server, ServerConfig, Trainer};
+        use mkq::runtime::ArtifactBackend;
+        println!("\n== artifact serving step (batch=16 serve_fwd) ==");
+        let tr = Trainer::new(&eng).unwrap();
+        let (params, scales) = tr.init(1).unwrap();
+        let mut ps = params;
+        ps.extend(scales);
+        let model = ServeModel::new(ps, &[8.0, 8.0, 4.0, 4.0], "bench").unwrap();
+        let backend = ArtifactBackend::new(&eng).with_serve_model(model).unwrap();
+        let mut server = Server::new(&backend, ServerConfig::default()).unwrap();
+        eng.compile("serve_fwd_b16").unwrap();
+        let ids = vec![1i32; 24];
+        let mask = vec![1.0f32; 24];
+        let b = Bench::new(2, 20);
+        b.report("submit 16 + pump (artifact exec incl.)", || {
+            for _ in 0..16 {
+                server.submit(ids.clone(), mask.clone()).unwrap();
+            }
+            let out = server.pump().unwrap();
+            assert_eq!(out.len(), 16);
+        });
+        let s = server.summary();
+        println!(
+            "  batcher overhead: queue p50 {:.1}us vs exec p50 {:.1}us",
+            s.queue.p50_us, s.exec.p50_us
+        );
+        } else {
+            println!("\n(artifact serving bench skipped — run `make artifacts`)");
+        }
+    }
+    #[cfg(not(feature = "xla"))]
+    {
+        println!("(artifact serving bench skipped — build with --features xla)");
     }
 }

@@ -1,75 +1,246 @@
-//! `cargo bench` target: per-layer latency across precisions (the Table-2
-//! micro-bench at reduced iteration count) plus the standalone Pallas
-//! qmatmul artifacts. criterion is not vendored; this uses the in-repo
-//! harness (util::benchkit) with warmup + mean/p50/σ reporting.
+//! `cargo bench --bench layers`: the native-kernel microbenches (vs the
+//! scalar `qmatmul_ref` oracle), the prepack/quantizer costs, per-layer
+//! latency across precisions through the [`Backend`] trait — native
+//! always, AOT artifacts side by side when built with `--features xla` —
+//! and a `BENCH_kernels.json` dump (mean/p50/σ per kernel) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Flags (after `--`): `--iters N` (default 20), `--ref-iters N` (3),
+//! `--quick` (small shapes), `--out PATH` (default BENCH_kernels.json).
 
 use mkq::bench_support as bs;
+use mkq::kernels::{Dispatcher, PackedWeights};
 use mkq::quant;
-use mkq::runtime::{Engine, HostTensor};
-use mkq::util::benchkit::Bench;
+use mkq::runtime::{Backend, NativeBackend, Precision};
+use mkq::util::benchkit::{Bench, BenchResult};
+use mkq::util::cli::Args;
 use mkq::util::rng::Rng;
 
-fn main() {
-    let eng = match Engine::load(&mkq::artifacts_dir()) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("skipping layer benches (artifacts missing): {e}");
-            return;
-        }
-    };
-    let bench = Bench::new(2, 10);
+struct Records {
+    rows: Vec<(String, BenchResult)>,
+}
 
-    println!("== per-layer latency (BERT-base dims) ==");
-    let weights = bs::make_weights(1);
-    for (bsz, t) in [(16usize, 28usize), (64, 27)] {
-        let (h, mask) = bs::make_hidden(bsz, t, 2);
-        let f32_l: Vec<xla::Literal> =
-            bs::f32_inputs(&weights, &h, &mask).iter().map(|x| x.to_literal().unwrap()).collect();
-        let int8_l: Vec<xla::Literal> = bs::int_inputs(&weights, &h, &mask, 8)
-            .unwrap()
-            .iter()
-            .map(|x| x.to_literal().unwrap())
-            .collect();
-        let int4_l: Vec<xla::Literal> = bs::int_inputs(&weights, &h, &mask, 4)
-            .unwrap()
-            .iter()
-            .map(|x| x.to_literal().unwrap())
-            .collect();
-        for (prec, lits) in [("f32", &f32_l), ("int8", &int8_l), ("int4", &int4_l)] {
-            let name = format!("layer_{prec}_b{bsz}_t{t}");
-            eng.compile(&name).unwrap();
-            let refs: Vec<&xla::Literal> = lits.iter().collect();
-            bench.report(&name, || {
-                eng.execute_raw(&name, &refs).unwrap();
-            });
-        }
+impl Records {
+    fn push(&mut self, name: &str, r: BenchResult) {
+        self.rows.push((name.to_string(), r));
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let iters = args.usize("iters", 20);
+    let ref_iters = args.usize("ref-iters", 3);
+    let quick = args.bool("quick");
+    let out_path = args.str("out", "BENCH_kernels.json");
+    let bench = Bench::new(2, iters);
+    let ref_bench = Bench::new(1, ref_iters.max(1));
+    let mut rec = Records { rows: vec![] };
+
+    let disp = Dispatcher::new();
+    println!("{}", disp.describe());
+
+    // ---- native GEMM vs the scalar oracle (acceptance shape) ------------
+    let (m, k, n) = if quick { (256usize, 768usize, 768usize) } else { (2048usize, 768usize, 768usize) };
+    println!("\n== native qmatmul vs qmatmul_ref ({m}x{k}x{n}) ==");
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let sx: Vec<f32> = (0..m).map(|_| 0.05 + rng.f32() * 0.1).collect();
+    let mut speedups: Vec<(String, f64)> = vec![];
+    for bits in [8u32, 4] {
+        let codes = quant::random_codes(&mut rng, k * n, bits);
+        let sw: Vec<f32> = (0..n).map(|_| 0.01 + rng.f32() * 0.02).collect();
+        let pw = PackedWeights::from_codes(&codes, k, n, sw.clone(), bits);
+
+        // correctness gate before timing anything
+        let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+        let got = disp.qmatmul(&x, m, k, &pw, &sx);
+        assert_eq!(got, want, "native int{bits} != qmatmul_ref (bit-for-bit gate)");
+
+        let rn = bench.report(&format!("native int{bits} {m}x{k}x{n}"), || {
+            let _ = std::hint::black_box(disp.qmatmul(&x, m, k, &pw, &sx));
+        });
+        rec.push(&format!("native_int{bits}_m{m}_k{k}_n{n}"), rn);
+        let rr = ref_bench.report(&format!("qmatmul_ref int{bits} {m}x{k}x{n}"), || {
+            let _ = std::hint::black_box(quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits));
+        });
+        rec.push(&format!("qmatmul_ref_int{bits}_m{m}_k{k}_n{n}"), rr);
+        let sp = rr.mean_us / rn.mean_us;
+        println!("  -> int{bits} speedup vs scalar ref: {sp:.1}x (bit-for-bit equal)");
+        speedups.push((format!("int{bits}_vs_ref"), sp));
     }
 
+    // ---- quantizer traversal fix: row-major vs column-major -------------
+    println!("\n== weight quantizer (row-major fix vs col-major baseline) ==");
+    for (qk, qn) in [(768usize, 768usize), (768, 3072)] {
+        let w: Vec<f32> = {
+            let mut r = Rng::new(5);
+            (0..qk * qn).map(|_| r.normal() as f32 * 0.02).collect()
+        };
+        let rn = bench.report(&format!("quantize row-major {qk}x{qn} int4"), || {
+            let _ = std::hint::black_box(quant::quantize_weight_per_channel(&w, qk, qn, 4));
+        });
+        rec.push(&format!("quantize_rowmajor_{qk}x{qn}"), rn);
+        let ro = bench.report(&format!("quantize col-major {qk}x{qn} int4"), || {
+            let _ = std::hint::black_box(quant::quantize_weight_per_channel_colmajor(&w, qk, qn, 4));
+        });
+        rec.push(&format!("quantize_colmajor_{qk}x{qn}"), ro);
+        println!("  -> traversal speedup: {:.2}x", ro.mean_us / rn.mean_us);
+    }
+
+    // ---- packing costs (model-load path) ---------------------------------
+    println!("\n== prepack costs ==");
+    {
+        let mut r = Rng::new(6);
+        let w: Vec<f32> = (0..768 * 768).map(|_| r.normal() as f32 * 0.02).collect();
+        let (codes, _) = quant::quantize_weight_per_channel(&w, 768, 768, 4);
+        let rp = bench.report("pack_int4_k 768x768", || {
+            let _ = std::hint::black_box(quant::pack_int4_k(&codes, 768, 768));
+        });
+        rec.push("pack_int4_k_768x768", rp);
+        let rk = bench.report("PackedWeights::from_f32 768x768 int4", || {
+            let _ = std::hint::black_box(PackedWeights::from_f32(&w, 768, 768, 4));
+        });
+        rec.push("prepack_from_f32_768x768_int4", rk);
+    }
+
+    // ---- per-layer latency through the Backend trait ---------------------
+    let weights = bs::make_weights(1);
+    let mut native = NativeBackend::new();
+    let (l32, l8, l4) = bs::native_bench_layers(&weights);
+    native.set_bench_layers(l32, l8, l4);
+    let layer_buckets: &[(usize, usize)] =
+        if quick { &[(16, 28)] } else { &[(16, 28), (64, 27)] };
+    bench_layers(&native, &bench, layer_buckets, &mut rec);
+
+    #[cfg(feature = "xla")]
+    {
+        use mkq::runtime::{ArtifactBackend, Engine};
+        match Engine::load(&mkq::artifacts_dir()) {
+            Ok(eng) => {
+                match ArtifactBackend::new(&eng).with_bench_weights(&weights) {
+                    Ok(backend) => bench_layers(&backend, &bench, layer_buckets, &mut rec),
+                    Err(e) => eprintln!("(artifact layer benches skipped: {e})"),
+                }
+                bench_pallas_qmatmul(&eng, &bench, &mut rec);
+            }
+            Err(e) => eprintln!("(artifact layer benches skipped: {e})"),
+        }
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("\n(artifact layer benches skipped — build with --features xla + make artifacts)");
+
+    write_json(&out_path, m, k, n, disp.threads(), &rec, &speedups);
+    println!("\nwrote {out_path}");
+}
+
+fn bench_layers<B: Backend>(
+    backend: &B,
+    bench: &Bench,
+    buckets: &[(usize, usize)],
+    rec: &mut Records,
+) {
+    println!("\n== per-layer latency (BERT-base dims) — backend: {} ==", backend.name());
+    for &(bsz, t) in buckets {
+        let (h, mask) = bs::make_hidden(bsz, t, 2);
+        let hv = h.as_f32().unwrap();
+        let mv = mask.as_f32().unwrap();
+        for prec in Precision::ALL {
+            // warm/validate once outside timing (artifact path compiles here)
+            match backend.layer_forward(prec, bsz, t, hv, mv) {
+                Ok(out) => assert!(out.iter().all(|v| v.is_finite())),
+                Err(e) => {
+                    eprintln!("  (skipping {} b{bsz}_t{t}: {e})", prec.name());
+                    continue;
+                }
+            }
+            let label = format!("layer_{}_b{bsz}_t{t}", prec.name());
+            let r = bench.report(&format!("{} [{}]", label, backend.name()), || {
+                let _ =
+                    std::hint::black_box(backend.layer_forward(prec, bsz, t, hv, mv).expect("layer"));
+            });
+            rec.push(&format!("{}_{}", backend_tag(&backend.name()), label), r);
+        }
+    }
+}
+
+fn backend_tag(name: &str) -> String {
+    name.chars().take_while(|c| c.is_ascii_alphanumeric()).collect()
+}
+
+/// The standalone Pallas qmatmul artifacts — the kernel-level
+/// native-vs-Pallas comparison point (same shape as the integration
+/// cross-check).
+#[cfg(feature = "xla")]
+fn bench_pallas_qmatmul(eng: &mkq::runtime::Engine, bench: &Bench, rec: &mut Records) {
+    use mkq::runtime::HostTensor;
     println!("\n== Pallas qmatmul artifacts (64x128x128) ==");
     let (m, k, n) = (64usize, 128usize, 128usize);
     let mut rng = Rng::new(3);
     let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
-    let codes8: Vec<i8> = (0..k * n).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
-    let codes4: Vec<i8> = (0..k * n).map(|_| (rng.range(0, 16) as i32 - 7) as i8).collect();
-    let sx: Vec<f32> = (0..m).map(|_| 0.05).collect();
-    let sw: Vec<f32> = (0..n).map(|_| 0.02).collect();
+    let codes8 = quant::random_codes(&mut rng, k * n, 8);
+    let codes4 = quant::random_codes(&mut rng, k * n, 4);
+    let sx = vec![0.05f32; m];
+    let sw = vec![0.02f32; n];
+    let mk = |t: HostTensor| t.to_literal().unwrap();
     let in8 = [
-        HostTensor::f32(&[m, k], x.clone()).to_literal().unwrap(),
-        HostTensor::i8(&[k, n], codes8).to_literal().unwrap(),
-        HostTensor::f32(&[m, 1], sx.clone()).to_literal().unwrap(),
-        HostTensor::f32(&[1, n], sw.clone()).to_literal().unwrap(),
+        mk(HostTensor::f32(&[m, k], x.clone())),
+        mk(HostTensor::i8(&[k, n], codes8)),
+        mk(HostTensor::f32(&[m, 1], sx.clone())),
+        mk(HostTensor::f32(&[1, n], sw.clone())),
     ];
     let in4 = [
-        HostTensor::f32(&[m, k], x).to_literal().unwrap(),
-        HostTensor::i32(&[k / 2, n], quant::pack_int4_k(&codes4, k, n)).to_literal().unwrap(),
-        HostTensor::f32(&[m, 1], sx).to_literal().unwrap(),
-        HostTensor::f32(&[1, n], sw).to_literal().unwrap(),
+        mk(HostTensor::f32(&[m, k], x)),
+        mk(HostTensor::i32(&[k / 2, n], quant::pack_int4_k(&codes4, k, n))),
+        mk(HostTensor::f32(&[m, 1], sx)),
+        mk(HostTensor::f32(&[1, n], sw)),
     ];
     for (name, lits) in [("qmatmul_pallas_int8", &in8[..]), ("qmatmul_pallas_int4", &in4[..])] {
-        eng.compile(name).unwrap();
+        if eng.compile(name).is_err() {
+            eprintln!("  (skipping {name}: artifact missing)");
+            continue;
+        }
         let refs: Vec<&xla::Literal> = lits.iter().collect();
-        bench.report(name, || {
+        let r = bench.report(name, || {
             eng.execute_raw(name, &refs).unwrap();
         });
+        rec.push(name, r);
+    }
+}
+
+fn write_json(
+    path: &str,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    rec: &Records,
+    speedups: &[(String, f64)],
+) {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"gemm_shape\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \"threads\": {threads},\n"
+    ));
+    s.push_str("  \"speedup\": {");
+    for (i, (name, v)) in speedups.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{name}\": {v:.2}"));
+    }
+    s.push_str("},\n  \"kernels\": [\n");
+    for (i, (name, r)) in rec.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \"stddev_us\": {:.3}, \"min_us\": {:.3}, \"iters\": {}}}{}\n",
+            r.mean_us,
+            r.p50_us,
+            r.stddev_us,
+            r.min_us,
+            r.iters,
+            if i + 1 == rec.rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("failed to write {path}: {e}");
     }
 }

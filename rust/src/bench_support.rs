@@ -1,15 +1,18 @@
 //! Shared helpers for the Table-2 / §5.4 benchmark binaries: build the
 //! weight/input tensor sets for the `layer_{f32,int8,int4}_b*_t*`
-//! artifacts at BERT-base dims.
+//! artifacts at BERT-base dims, and the equivalent prepacked
+//! [`NativeLayer`]s for the native backend — both from the same fp32
+//! weights, so the two paths are numerically comparable.
 
 use anyhow::Result;
 
 use crate::quant;
-use crate::runtime::HostTensor;
+use crate::runtime::{HostTensor, NativeLayer};
 use crate::util::rng::Rng;
 
 pub const D: usize = 768;
 pub const DFF: usize = 3072;
+pub const HEADS: usize = 12;
 
 /// The Table-2 shape buckets emitted by aot.py: (batch, tokens-per-seq).
 /// batch*tokens reproduces the paper's "valid tokens" column.
@@ -21,31 +24,8 @@ pub struct LayerWeights {
 }
 
 pub fn make_weights(seed: u64) -> LayerWeights {
-    let mut rng = Rng::new(seed);
-    let specs: Vec<(&str, Vec<usize>)> = vec![
-        ("wq", vec![D, D]), ("bq", vec![D]),
-        ("wk", vec![D, D]), ("bk", vec![D]),
-        ("wv", vec![D, D]), ("bv", vec![D]),
-        ("wo", vec![D, D]), ("bo", vec![D]),
-        ("w1", vec![D, DFF]), ("b1", vec![DFF]),
-        ("w2", vec![DFF, D]), ("b2", vec![D]),
-        ("ln1_g", vec![D]), ("ln1_b", vec![D]),
-        ("ln2_g", vec![D]), ("ln2_b", vec![D]),
-    ];
-    let f32_tensors = specs
-        .into_iter()
-        .map(|(name, dims)| {
-            let n: usize = dims.iter().product();
-            let data: Vec<f32> = if name.starts_with('w') && dims.len() == 2 {
-                (0..n).map(|_| rng.normal() as f32 * 0.02).collect()
-            } else if name.ends_with("_g") {
-                vec![1.0; n]
-            } else {
-                vec![0.0; n]
-            };
-            (name.to_string(), dims, data)
-        })
-        .collect();
+    let f32_tensors =
+        crate::runtime::native::random_layer_tensors(&mut Rng::new(seed), D, DFF, 0.02);
     LayerWeights { f32_tensors }
 }
 
@@ -55,19 +35,25 @@ pub fn make_hidden(bs: usize, t: usize, seed: u64) -> (HostTensor, HostTensor) {
     (HostTensor::f32(&[bs, t, D], h), HostTensor::f32(&[bs, t], vec![1.0; bs * t]))
 }
 
-/// Inputs for layer_f32_*: [h, mask, 16 weight tensors].
-pub fn f32_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor) -> Vec<HostTensor> {
-    let mut v = vec![h.clone(), mask.clone()];
-    for (_, dims, data) in &w.f32_tensors {
-        v.push(HostTensor::f32(dims, data.clone()));
-    }
-    v
+/// Per-tensor activation scale used by the int layer inputs (|act| ~ 6
+/// after LayerNorm; matches the artifact bench convention).
+pub fn bench_act_scale(bits: u32) -> f32 {
+    6.0 / quant::qbounds(bits).1
 }
 
-/// Inputs for layer_int{8,4}_*: [h, mask, 16 weight tensors (int codes for
-/// the 6 matrices), 4 act scales, 6 weight-scale rows].
-pub fn int_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor, bits: u32) -> Result<Vec<HostTensor>> {
-    let mut v = vec![h.clone(), mask.clone()];
+/// The 16 weight tensors for `layer_f32_*`, in artifact input order
+/// (everything after `h` and `mask`).
+pub fn f32_tail(w: &LayerWeights) -> Vec<HostTensor> {
+    w.f32_tensors
+        .iter()
+        .map(|(_, dims, data)| HostTensor::f32(dims, data.clone()))
+        .collect()
+}
+
+/// The weight/scale tail for `layer_int{8,4}_*`: 16 weight tensors (int
+/// codes for the 6 matrices), 4 act scales, 6 weight-scale rows.
+pub fn int_tail(w: &LayerWeights, bits: u32) -> Result<Vec<HostTensor>> {
+    let mut v = Vec::new();
     let mut w_scales = Vec::new();
     for (name, dims, data) in &w.f32_tensors {
         if name.starts_with('w') && dims.len() == 2 {
@@ -83,12 +69,36 @@ pub fn int_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor, bits: u32
             v.push(HostTensor::f32(dims, data.clone()));
         }
     }
-    let lmax = quant::qbounds(bits).1;
     for _ in 0..4 {
-        v.push(HostTensor::f32(&[1], vec![6.0 / lmax]));
+        v.push(HostTensor::f32(&[1], vec![bench_act_scale(bits)]));
     }
     v.extend(w_scales);
     Ok(v)
+}
+
+/// Inputs for layer_f32_*: [h, mask, 16 weight tensors].
+pub fn f32_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor) -> Vec<HostTensor> {
+    let mut v = vec![h.clone(), mask.clone()];
+    v.extend(f32_tail(w));
+    v
+}
+
+/// Inputs for layer_int{8,4}_*: [h, mask, tail].
+pub fn int_inputs(w: &LayerWeights, h: &HostTensor, mask: &HostTensor, bits: u32) -> Result<Vec<HostTensor>> {
+    let mut v = vec![h.clone(), mask.clone()];
+    v.extend(int_tail(w, bits)?);
+    Ok(v)
+}
+
+/// Build the native bench layers (f32, int8, int4) from the same fp32
+/// weights the artifact path consumes — install via
+/// `NativeBackend::set_bench_layers`.
+pub fn native_bench_layers(w: &LayerWeights) -> (NativeLayer, NativeLayer, NativeLayer) {
+    let mk = |bits: u32| {
+        let act = if bits == 32 { 0.0 } else { bench_act_scale(bits) };
+        NativeLayer::from_tensors(&w.f32_tensors, HEADS, bits, [act; 4])
+    };
+    (mk(32), mk(8), mk(4))
 }
 
 /// Weight bytes moved per layer execution (the memory-traffic side of the

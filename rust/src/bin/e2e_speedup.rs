@@ -4,8 +4,11 @@
 //! in the model"), plus the bits-reduction accounting behind the paper's
 //! 5.3x storage-compression headline.
 //!
-//! Each configuration chains single-layer artifact executions (the same
-//! executables the serving path uses); the remaining layers run int8.
+//! Runs through the [`Backend`] trait: the native kernel path always, and
+//! the AOT-artifact path side by side when built with `--features xla`
+//! and artifacts are present. Each configuration chains single-layer
+//! forwards (the same code path the serving stack uses); the remaining
+//! layers run int8.
 //!
 //! Usage: cargo run --release --bin e2e_speedup -- [--layers 12]
 //!            [--iters 10] [--bucket 16x28]
@@ -13,13 +16,69 @@
 use anyhow::Result;
 use mkq::bench_support as bs;
 use mkq::quant;
-use mkq::runtime::Engine;
+use mkq::runtime::{Backend, NativeBackend, Precision};
 use mkq::util::benchkit::Bench;
 use mkq::util::cli::Args;
 
+fn run_stack<B: Backend>(
+    backend: &B,
+    bench: &Bench,
+    n_layers: usize,
+    bsz: usize,
+    t: usize,
+    h0: &[f32],
+    mask: &[f32],
+) -> Result<()> {
+    println!("\n== backend: {} ==", backend.name());
+    println!("{:>10} {:>14} {:>12} {:>10}", "int4", "total (us)", "vs all-f32", "vs all-int8");
+
+    let chain = |n_int4: usize, all_f32: bool| -> Result<f64> {
+        let prec_for = |l: usize| {
+            if all_f32 {
+                Precision::F32
+            } else if l >= n_layers - n_int4 {
+                Precision::Int4
+            } else {
+                Precision::Int8
+            }
+        };
+        // verify once outside timing that the chain executes
+        let mut h = h0.to_vec();
+        for l in 0..n_layers {
+            h = backend.layer_forward(prec_for(l), bsz, t, &h, mask)?;
+        }
+        let r = bench.run(|| {
+            let mut h = h0.to_vec();
+            for l in 0..n_layers {
+                h = backend.layer_forward(prec_for(l), bsz, t, &h, mask).expect("layer exec");
+            }
+        });
+        Ok(r.mean_us)
+    };
+
+    let all_f32 = chain(0, true)?;
+    let mut all_int8 = 0.0;
+    let mut sweep = vec![0usize, n_layers / 4, n_layers / 2, 3 * n_layers / 4, n_layers];
+    sweep.dedup(); // already ascending; duplicates appear when layers % 4 != 0
+    for n_int4 in sweep {
+        let us = chain(n_int4, false)?;
+        if n_int4 == 0 {
+            all_int8 = us;
+        }
+        println!(
+            "{:>10} {:>14.1} {:>11.2}x {:>9.2}x",
+            n_int4,
+            us,
+            all_f32 / us,
+            all_int8 / us
+        );
+    }
+    println!("{:>10} {:>14.1} {:>11.2}x {:>10}", "(f32)", all_f32, 1.0, "-");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
-    let eng = Engine::load(&mkq::artifacts_dir())?;
     let n_layers = args.usize("layers", 12);
     let iters = args.usize("iters", 10);
     let bucket = args.str("bucket", "16x28");
@@ -29,62 +88,31 @@ fn main() -> Result<()> {
         .expect("--bucket BSxT");
     let bench = Bench::new(2, iters);
 
+    println!("§5.4: end-to-end encoder time vs #int4 layers ({n_layers} layers, bucket {bucket})");
     let weights = bs::make_weights(1);
     let (h, mask) = bs::make_hidden(bsz, t, 2);
-    let f32_l: Vec<xla::Literal> =
-        bs::f32_inputs(&weights, &h, &mask).iter().map(|t| t.to_literal().unwrap()).collect();
-    let int8_l: Vec<xla::Literal> =
-        bs::int_inputs(&weights, &h, &mask, 8)?.iter().map(|t| t.to_literal().unwrap()).collect();
-    let int4_l: Vec<xla::Literal> =
-        bs::int_inputs(&weights, &h, &mask, 4)?.iter().map(|t| t.to_literal().unwrap()).collect();
+    let h0 = h.as_f32()?;
+    let mask_v = mask.as_f32()?;
 
-    let names = [
-        format!("layer_f32_b{bsz}_t{t}"),
-        format!("layer_int8_b{bsz}_t{t}"),
-        format!("layer_int4_b{bsz}_t{t}"),
-    ];
-    for n in &names {
-        eng.compile(n)?;
-    }
-    fn refs(v: &[xla::Literal]) -> Vec<&xla::Literal> {
-        v.iter().collect()
-    }
-    let f32_r = refs(&f32_l);
-    let int8_r = refs(&int8_l);
-    let int4_r = refs(&int4_l);
+    let mut native = NativeBackend::new();
+    let (l32, l8, l4) = bs::native_bench_layers(&weights);
+    native.set_bench_layers(l32, l8, l4);
+    println!("{}", native.disp.describe());
+    run_stack(&native, &bench, n_layers, bsz, t, h0, mask_v)?;
 
-    println!("§5.4: end-to-end encoder time vs #int4 layers ({n_layers} layers, bucket {bucket})");
-    println!("{:>10} {:>14} {:>12} {:>10}", "int4", "total (us)", "vs all-f32", "vs all-int8");
-
-    // all-f32 reference
-    let all_f32 = bench
-        .run(|| {
-            for _ in 0..n_layers {
-                eng.execute_raw(&names[0], &f32_r).expect("exec");
+    #[cfg(feature = "xla")]
+    {
+        use mkq::runtime::{ArtifactBackend, Engine};
+        match Engine::load(&mkq::artifacts_dir()) {
+            Ok(eng) => {
+                let backend = ArtifactBackend::new(&eng).with_bench_weights(&weights)?;
+                run_stack(&backend, &bench, n_layers, bsz, t, h0, mask_v)?;
             }
-        })
-        .mean_us;
-    let mut all_int8 = 0.0;
-
-    for n_int4 in [0usize, n_layers / 4, n_layers / 2, 3 * n_layers / 4, n_layers] {
-        let r = bench.run(|| {
-            for l in 0..n_layers {
-                let (nm, inp) = if l >= n_layers - n_int4 { (&names[2], &int4_r) } else { (&names[1], &int8_r) };
-                eng.execute_raw(nm, inp).expect("exec");
-            }
-        });
-        if n_int4 == 0 {
-            all_int8 = r.mean_us;
+            Err(e) => eprintln!("(artifact backend skipped: {e})"),
         }
-        println!(
-            "{:>10} {:>14.1} {:>11.2}x {:>9.2}x",
-            n_int4,
-            r.mean_us,
-            all_f32 / r.mean_us,
-            all_int8 / r.mean_us
-        );
     }
-    println!("{:>10} {:>14.1} {:>11.2}x {:>10}", "(f32)", all_f32, 1.0, "-");
+    #[cfg(not(feature = "xla"))]
+    println!("\n(artifact backend skipped — build with --features xla + make artifacts)");
 
     // Bits-reduction accounting (paper: "5.3x of bits reduction").
     println!("\nbits-reduction vs fp32 (TinyBERT4 shapes, embedding kept fp32):");

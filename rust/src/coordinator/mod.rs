@@ -1,14 +1,22 @@
 //! L3 coordinator — the paper's system contribution in Rust.
 //!
-//! * [`trainer`]  — calibration → QAT → eval orchestration (Tables 1 & 3).
+//! * [`trainer`]  — calibration → QAT → eval orchestration (Tables 1 & 3);
+//!                  artifact-path only (feature `xla`).
 //! * [`server`]   — request router + valid-token dynamic batcher +
-//!                  executor over quantized artifacts (Table 2, §5.4).
+//!                  executor over any [`crate::runtime::Backend`]
+//!                  (Table 2, §5.4).
 //! * [`scheduler`]— the paper's warmup/decay lr schedule (§5.2).
 
 pub mod scheduler;
 pub mod server;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
+pub use crate::quant::{bits_last_n_int4, parse_bits};
 pub use scheduler::LrSchedule;
-pub use server::{Request, Response, ServeModel, Server, ServerConfig, ServerSummary};
-pub use trainer::{bits_last_n_int4, parse_bits, ModelDims, QatConfig, QatResult, Trainer};
+pub use server::{Request, Response, Server, ServerConfig, ServerSummary};
+
+#[cfg(feature = "xla")]
+pub use crate::runtime::ServeModel;
+#[cfg(feature = "xla")]
+pub use trainer::{ModelDims, QatConfig, QatResult, Trainer};

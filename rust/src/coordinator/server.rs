@@ -1,5 +1,5 @@
 //! Inference serving coordinator: request router + dynamic batcher +
-//! executor over the quantized `serve_fwd_*` artifacts.
+//! executor over any [`Backend`] (native kernels or AOT artifacts).
 //!
 //! The paper's contribution-3 story is *deployment*: int4 layers behind a
 //! batched inference service (Table 2 reports per-layer latency at
@@ -7,25 +7,28 @@
 //!
 //!   * requests arrive with variable valid-token counts;
 //!   * the dynamic batcher groups them into the largest available batch
-//!     bucket (compiled executables exist per batch size) within a
-//!     bounded batching window;
-//!   * the executor runs the AOT artifact and the router fans responses
-//!     back out, recording queue/execute/total latency.
+//!     bucket within a bounded batching window;
+//!   * the executor runs the backend forward and the router fans
+//!     responses back out, recording queue/execute/total latency.
 //!
-//! Single-threaded event loop by design: the PJRT CPU client already
-//! parallelizes one execution across cores, so concurrent executes only
-//! thrash; the loop instead overlaps batching with execution completion.
+//! Single-threaded event loop by design: both backends already
+//! parallelize one execution across cores (the native path via the kernel
+//! dispatcher's row-block fan-out), so concurrent executes only thrash;
+//! the loop instead overlaps batching with execution completion.
+//!
+//! §Perf: the batch staging buffers (`ids_stage` / `mask_stage`) persist
+//! across pumps — one allocation at server construction, zero on the hot
+//! path — and padded slots are zero-filled (an all-zero mask row is fully
+//! masked, so its logits are well-defined garbage that is never fanned
+//! out) instead of cloning a victim request's tokens.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::Backend;
 use crate::util::stats::{LatencyRecorder, LatencySummary};
-
-use super::trainer::ModelDims;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -44,26 +47,9 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Deployed model: parameters + scales + per-layer bit codes, kept as
-/// literals so the hot loop never re-converts them.
-pub struct ServeModel {
-    pub params_scales: Vec<Literal>,
-    pub bits: Literal,
-    pub label: String,
-}
-
-impl ServeModel {
-    pub fn new(params_scales: Vec<Literal>, bits_f: &[f32], label: &str) -> Result<Self> {
-        Ok(ServeModel {
-            params_scales,
-            bits: HostTensor::f32(&[bits_f.len()], bits_f.to_vec()).to_literal()?,
-            label: label.to_string(),
-        })
-    }
-}
-
 pub struct ServerConfig {
-    /// Available serve_fwd batch buckets (must match emitted artifacts).
+    /// Available batch buckets (for the artifact backend these must match
+    /// emitted `serve_fwd_b*` executables; the native backend accepts any).
     pub buckets: Vec<usize>,
     /// Max time a request may wait for batchmates.
     pub batch_window: Duration,
@@ -75,13 +61,15 @@ impl Default for ServerConfig {
     }
 }
 
-pub struct Server<'e> {
-    eng: &'e Engine,
-    dims: ModelDims,
-    model: ServeModel,
+pub struct Server<'b, B: Backend> {
+    backend: &'b B,
+    seq: usize,
+    n_classes: usize,
     cfg: ServerConfig,
     queue: VecDeque<Request>,
     next_id: u64,
+    ids_stage: Vec<i32>,
+    mask_stage: Vec<f32>,
     pub queue_lat: LatencyRecorder,
     pub exec_lat: LatencyRecorder,
     pub total_lat: LatencyRecorder,
@@ -90,22 +78,27 @@ pub struct Server<'e> {
     pub padded_slots: u64,
 }
 
-impl<'e> Server<'e> {
-    pub fn new(eng: &'e Engine, model: ServeModel, cfg: ServerConfig) -> Result<Self> {
-        let dims = ModelDims::from_manifest(eng)?;
+impl<'b, B: Backend> Server<'b, B> {
+    pub fn new(backend: &'b B, cfg: ServerConfig) -> Result<Self> {
+        let dims = backend.serve_dims()?;
         let mut buckets = cfg.buckets.clone();
         buckets.sort_unstable();
-        for &b in &buckets {
-            // fail fast if an artifact is missing
-            eng.spec(&format!("serve_fwd_b{b}"))?;
+        if buckets.is_empty() {
+            bail!("server needs at least one batch bucket");
         }
+        for &b in &buckets {
+            backend.check_bucket(b)?; // fail fast if a bucket can't execute
+        }
+        let largest = *buckets.last().unwrap();
         Ok(Server {
-            eng,
-            dims,
-            model,
+            backend,
+            seq: dims.seq,
+            n_classes: dims.n_classes,
             cfg: ServerConfig { buckets, ..cfg },
             queue: VecDeque::new(),
             next_id: 0,
+            ids_stage: Vec::with_capacity(largest * dims.seq),
+            mask_stage: Vec::with_capacity(largest * dims.seq),
             queue_lat: LatencyRecorder::new(),
             exec_lat: LatencyRecorder::new(),
             total_lat: LatencyRecorder::new(),
@@ -117,8 +110,8 @@ impl<'e> Server<'e> {
 
     /// Enqueue a tokenized request; returns its id.
     pub fn submit(&mut self, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
-        if ids.len() != self.dims.seq || mask.len() != self.dims.seq {
-            bail!("request must be padded to seq={} (got {})", self.dims.seq, ids.len());
+        if ids.len() != self.seq || mask.len() != self.seq {
+            bail!("request must be padded to seq={} (got {})", self.seq, ids.len());
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -166,29 +159,22 @@ impl<'e> Server<'e> {
         let reqs: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
         self.padded_slots += (bucket - take) as u64;
 
-        let t = self.dims.seq;
-        let mut ids = Vec::with_capacity(bucket * t);
-        let mut mask = Vec::with_capacity(bucket * t);
-        for i in 0..bucket {
-            let r = reqs.get(i).unwrap_or(&reqs[0]); // pad with first request
-            ids.extend_from_slice(&r.ids);
-            mask.extend_from_slice(&r.mask);
+        let t = self.seq;
+        self.ids_stage.clear();
+        self.ids_stage.resize(bucket * t, 0);
+        self.mask_stage.clear();
+        self.mask_stage.resize(bucket * t, 0.0);
+        for (i, r) in reqs.iter().enumerate() {
+            self.ids_stage[i * t..(i + 1) * t].copy_from_slice(&r.ids);
+            self.mask_stage[i * t..(i + 1) * t].copy_from_slice(&r.mask);
         }
-        let ids_l = HostTensor::i32(&[bucket, t], ids).to_literal()?;
-        let mask_l = HostTensor::f32(&[bucket, t], mask).to_literal()?;
 
         let exec_start = Instant::now();
-        let mut inputs: Vec<&Literal> = self.model.params_scales.iter().collect();
-        inputs.push(&self.model.bits);
-        inputs.push(&ids_l);
-        inputs.push(&mask_l);
-        let out = self.eng.execute_raw(&format!("serve_fwd_b{bucket}"), &inputs)?;
+        let logits = self.backend.serve_forward(bucket, &self.ids_stage, &self.mask_stage)?;
         let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
-        let logits = HostTensor::from_literal(&out[0])?;
-        let lv = logits.as_f32()?;
 
         self.batches += 1;
-        let nc = self.dims.n_classes;
+        let nc = self.n_classes;
         let mut responses = Vec::with_capacity(take);
         for (i, r) in reqs.into_iter().enumerate() {
             let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -199,7 +185,7 @@ impl<'e> Server<'e> {
             self.served += 1;
             responses.push(Response {
                 id: r.id,
-                logits: lv[i * nc..(i + 1) * nc].to_vec(),
+                logits: logits[i * nc..(i + 1) * nc].to_vec(),
                 queue_us,
                 exec_us,
                 batch_size: bucket,
@@ -223,7 +209,7 @@ impl<'e> Server<'e> {
 
     pub fn summary(&self) -> ServerSummary {
         ServerSummary {
-            model: self.model.label.clone(),
+            model: self.backend.name(),
             served: self.served,
             batches: self.batches,
             padded_slots: self.padded_slots,
@@ -265,60 +251,114 @@ impl std::fmt::Display for ServerSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{NativeBackend, NativeDims, NativeModel};
 
-    // pick_bucket policy is tested through a queue-only shim (no engine).
-    fn mk_queue(n: usize, waited: Duration) -> (VecDeque<Request>, ServerConfig) {
-        let mut q = VecDeque::new();
-        let t0 = Instant::now() - waited;
-        for id in 0..n {
-            q.push_back(Request { id: id as u64, ids: vec![], mask: vec![], enqueued: t0 });
-        }
-        (q, ServerConfig::default())
+    fn tiny_backend() -> NativeBackend {
+        let dims = NativeDims {
+            vocab: 64,
+            seq: 8,
+            n_layers: 1,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_classes: 2,
+        };
+        NativeBackend::with_model(NativeModel::random(dims, &[4], 1))
     }
 
-    fn pick(q: &VecDeque<Request>, cfg: &ServerConfig) -> Option<usize> {
-        let n = q.len();
-        if n == 0 {
-            return None;
+    fn mk_server(backend: &NativeBackend, buckets: Vec<usize>, window: Duration) -> Server<'_, NativeBackend> {
+        Server::new(backend, ServerConfig { buckets, batch_window: window }).unwrap()
+    }
+
+    fn submit_n(server: &mut Server<'_, NativeBackend>, n: usize) {
+        for i in 0..n {
+            let ids: Vec<i32> = (0..8).map(|j| ((i + j) % 64) as i32).collect();
+            server.submit(ids, vec![1.0; 8]).unwrap();
         }
-        let largest = *cfg.buckets.last().unwrap();
-        if n >= largest {
-            return Some(largest);
-        }
-        let waited = q.front().unwrap().enqueued.elapsed();
-        if waited < cfg.batch_window {
-            return None;
-        }
-        Some(cfg.buckets.iter().copied().filter(|&b| b <= n).max().unwrap_or(cfg.buckets[0]))
     }
 
     #[test]
     fn full_bucket_fires_immediately() {
-        let (q, cfg) = mk_queue(16, Duration::ZERO);
-        assert_eq!(pick(&q, &cfg), Some(16));
-        let (q, cfg) = mk_queue(40, Duration::ZERO);
-        assert_eq!(pick(&q, &cfg), Some(16));
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s, 8);
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(s.padded_slots, 0);
+        assert!(out.iter().all(|r| r.batch_size == 8));
+        assert!(out.iter().all(|r| r.logits.len() == 2 && r.logits.iter().all(|x| x.is_finite())));
     }
 
     #[test]
     fn short_queue_waits_for_window() {
-        let (q, cfg) = mk_queue(3, Duration::ZERO);
-        assert_eq!(pick(&q, &cfg), None);
-        let (q, cfg) = mk_queue(3, Duration::from_millis(10));
-        assert_eq!(pick(&q, &cfg), Some(1)); // largest bucket <= 3 is 1 (buckets 1,8,16)
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s, 3);
+        assert!(s.pump().unwrap().is_empty()); // window still open
+        assert_eq!(s.pending(), 3);
     }
 
     #[test]
-    fn window_expiry_picks_fitting_bucket() {
-        let (q, cfg) = mk_queue(9, Duration::from_millis(10));
-        assert_eq!(pick(&q, &cfg), Some(8));
-        let (q, cfg) = mk_queue(1, Duration::from_millis(10));
-        assert_eq!(pick(&q, &cfg), Some(1));
+    fn window_expiry_pads_to_fitting_bucket() {
+        let be = tiny_backend();
+        // smallest bucket is 4: three requests + zero-filled padding slot
+        let mut s = mk_server(&be, vec![4, 8], Duration::ZERO);
+        submit_n(&mut s, 3);
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(s.padded_slots, 1);
+        assert!(out.iter().all(|r| r.batch_size == 4));
+    }
+
+    #[test]
+    fn drain_empties_queue() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s, 6);
+        let out = s.drain().unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.served, 6);
+        // distinct request ids fan back out
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
     }
 
     #[test]
     fn empty_queue_never_fires() {
-        let (q, cfg) = mk_queue(0, Duration::from_secs(1));
-        assert_eq!(pick(&q, &cfg), None);
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::ZERO);
+        assert!(s.pump().unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_misshapen_requests() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        assert!(s.submit(vec![0; 5], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_ids() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        s.submit(vec![-1; 8], vec![1.0; 8]).unwrap();
+        assert!(s.pump().is_err(), "negative token ids must not serve silently");
+    }
+
+    #[test]
+    fn deterministic_given_same_batch() {
+        // padding must not perturb real rows: same request alone vs padded
+        let be = tiny_backend();
+        let mut s1 = mk_server(&be, vec![1], Duration::ZERO);
+        submit_n(&mut s1, 1);
+        let alone = s1.pump().unwrap().remove(0);
+        let mut s4 = mk_server(&be, vec![4], Duration::ZERO);
+        submit_n(&mut s4, 1);
+        let padded = s4.pump().unwrap().remove(0);
+        for (a, b) in alone.logits.iter().zip(padded.logits.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 }

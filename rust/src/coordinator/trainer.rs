@@ -17,7 +17,7 @@
 //! Training state lives as XLA `Literal`s between steps (no host copies
 //! on the chunk loop — §Perf).
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use xla::Literal;
 
 use crate::data::{stack_k, BatchIter, Dataset, TaskData};
@@ -112,31 +112,6 @@ impl Default for QatConfig {
             seed: 17,
         }
     }
-}
-
-/// Parse "8,8,4,4" (must match n_layers).
-pub fn parse_bits(s: &str, n_layers: usize) -> Result<Vec<u32>> {
-    let bits: Vec<u32> = s
-        .split(',')
-        .map(|p| p.trim().parse::<u32>())
-        .collect::<Result<_, _>>()
-        .with_context(|| format!("bad bits spec {s:?}"))?;
-    if bits.len() != n_layers {
-        bail!("bits spec {s:?} has {} entries, model has {n_layers} layers", bits.len());
-    }
-    for &b in &bits {
-        if !matches!(b, 4 | 8 | 32) {
-            bail!("unsupported bit width {b} (use 4, 8 or 32)");
-        }
-    }
-    Ok(bits)
-}
-
-/// The paper's layer-selection rule: "higher levels are more robust to
-/// quantization therefore we start from the last layer" — n_int4 last
-/// layers at 4 bits, the rest at 8.
-pub fn bits_last_n_int4(n_layers: usize, n_int4: usize) -> Vec<u32> {
-    (0..n_layers).map(|l| if l >= n_layers - n_int4 { 4 } else { 8 }).collect()
 }
 
 #[derive(Debug, Clone)]
@@ -507,22 +482,6 @@ fn clone_literal(l: &Literal) -> Result<Literal> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn parse_bits_validates() {
-        assert_eq!(parse_bits("8,8,4,4", 4).unwrap(), vec![8, 8, 4, 4]);
-        assert!(parse_bits("8,8", 4).is_err());
-        assert!(parse_bits("8,8,3,4", 4).is_err());
-        assert!(parse_bits("x", 1).is_err());
-    }
-
-    #[test]
-    fn last_n_int4_rule() {
-        assert_eq!(bits_last_n_int4(4, 0), vec![8, 8, 8, 8]);
-        assert_eq!(bits_last_n_int4(4, 1), vec![8, 8, 8, 4]);
-        assert_eq!(bits_last_n_int4(4, 2), vec![8, 8, 4, 4]);
-        assert_eq!(bits_last_n_int4(4, 4), vec![4, 4, 4, 4]);
-    }
 
     #[test]
     fn count_correct_excludes_padding() {

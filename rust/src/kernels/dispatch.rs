@@ -1,0 +1,213 @@
+//! Runtime kernel dispatch.
+//!
+//! One [`Dispatcher`] is built per backend at model-load time. For every
+//! GEMM call it selects a kernel variant from the problem shape and the
+//! machine (`available_parallelism`), so the same code path serves tiny
+//! eval batches and full serving buckets:
+//!
+//!   * `Reference`       — the scalar column-strided oracle loop
+//!                          (`qmatmul_ref` structure). A *correctness*
+//!                          baseline for numeric debugging: it re-unpacks
+//!                          the packed panels on every call, so don't time
+//!                          it (the benches time `qmatmul_ref` directly
+//!                          over row-major codes instead).
+//!   * `Blocked`         — single-thread cache-tiled/register-blocked
+//!                          microkernel; picked for small problems where
+//!                          fork/join overhead dominates.
+//!   * `BlockedParallel` — row-block fan-out over the shared
+//!                          [`ThreadPool`]; picked when `m*k*n` clears
+//!                          [`PARALLEL_MACS_THRESHOLD`].
+//!
+//! Env overrides (serving ops knobs): `MKQ_KERNEL=reference|blocked|parallel`
+//! forces a variant, `MKQ_THREADS=N` caps the pool.
+
+use crate::util::threadpool::ThreadPool;
+
+use super::gemm;
+use super::pack::{PackedF32, PackedWeights};
+
+/// Below this many multiply-accumulates the fork/join cost of the pool
+/// outweighs the parallel win (measured on the layers bench; revisit with
+/// the autotuning lever in ROADMAP).
+pub const PARALLEL_MACS_THRESHOLD: usize = 1 << 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    Reference,
+    Blocked,
+    BlockedParallel,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Reference => "reference",
+            KernelKind::Blocked => "blocked",
+            KernelKind::BlockedParallel => "blocked-parallel",
+        }
+    }
+}
+
+pub struct Dispatcher {
+    threads: usize,
+    pool: Option<ThreadPool>,
+    force: Option<KernelKind>,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher {
+    pub fn new() -> Self {
+        let threads = match std::env::var("MKQ_THREADS") {
+            Ok(s) => match s.parse::<usize>() {
+                Ok(t) if t >= 1 => Some(t),
+                _ => {
+                    eprintln!("warning: ignoring MKQ_THREADS={s:?} (want an integer >= 1)");
+                    None
+                }
+            },
+            Err(_) => None,
+        }
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+        let force = match std::env::var("MKQ_KERNEL").as_deref() {
+            Ok("reference") => Some(KernelKind::Reference),
+            Ok("blocked") => Some(KernelKind::Blocked),
+            Ok("parallel") | Ok("blocked-parallel") => Some(KernelKind::BlockedParallel),
+            Ok(other) => {
+                eprintln!(
+                    "warning: ignoring MKQ_KERNEL={other:?} \
+                     (want reference|blocked|parallel)"
+                );
+                None
+            }
+            Err(_) => None,
+        };
+        Self::with_threads_forced(threads, force)
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        Self::with_threads_forced(threads.max(1), None)
+    }
+
+    fn with_threads_forced(threads: usize, force: Option<KernelKind>) -> Self {
+        // The caller thread works too, so spawn threads-1 workers.
+        let pool = if threads > 1 { Some(ThreadPool::new(threads - 1)) } else { None };
+        Dispatcher { threads, pool, force }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "native kernel dispatch: threads={} force={} parallel-threshold={} MACs",
+            self.threads,
+            self.force.map(|k| k.name()).unwrap_or("auto"),
+            PARALLEL_MACS_THRESHOLD
+        )
+    }
+
+    /// Kernel selection for an `(m, k) x (k, n)` problem.
+    pub fn select(&self, m: usize, k: usize, n: usize) -> KernelKind {
+        if let Some(f) = self.force {
+            // A forced parallel pick degrades gracefully on 1 thread.
+            if f == KernelKind::BlockedParallel && self.pool.is_none() {
+                return KernelKind::Blocked;
+            }
+            return f;
+        }
+        if self.pool.is_some() && m * k * n >= PARALLEL_MACS_THRESHOLD && m >= 2 {
+            KernelKind::BlockedParallel
+        } else {
+            KernelKind::Blocked
+        }
+    }
+
+    /// Quantized matmul from fp32 activations: quantize rows, then run the
+    /// selected integer kernel. Bit-for-bit equal to
+    /// [`crate::quant::qmatmul_ref`].
+    pub fn qmatmul(&self, x: &[f32], m: usize, k: usize, pw: &PackedWeights, sx: &[f32]) -> Vec<f32> {
+        let qx = gemm::quantize_activations(x, m, k, sx, pw.bits);
+        let rs = gemm::act_row_sums(&qx, m, k);
+        self.qmatmul_prequant(&qx, &rs, m, k, pw, sx)
+    }
+
+    /// Quantized matmul over already-quantized activations — lets a layer
+    /// quantize one activation site once and feed several matmuls (the
+    /// q/k/v fan-out).
+    pub fn qmatmul_prequant(
+        &self,
+        qx: &[i16],
+        rowsums: &[i32],
+        m: usize,
+        k: usize,
+        pw: &PackedWeights,
+        sx: &[f32],
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; m * pw.n];
+        match self.select(m, k, pw.n) {
+            KernelKind::Reference => {
+                let codes = pw.unpack_codes();
+                gemm::gemm_reference(qx, m, k, &codes, pw.n, sx, &pw.scales, &mut out);
+            }
+            KernelKind::Blocked => gemm::gemm_serial(qx, rowsums, m, k, pw, sx, &mut out),
+            KernelKind::BlockedParallel => {
+                let pool = self.pool.as_ref().expect("parallel kernel without pool");
+                gemm::gemm_parallel(qx, rowsums, m, k, pw, sx, &mut out, pool, self.threads);
+            }
+        }
+        out
+    }
+
+    /// fp32 matmul over panel-packed weights (the unquantized baseline and
+    /// the never-quantized model heads).
+    pub fn matmul_f32(&self, x: &[f32], m: usize, k: usize, pf: &PackedF32) -> Vec<f32> {
+        let mut out = vec![0f32; m * pf.n];
+        match self.select(m, k, pf.n) {
+            KernelKind::BlockedParallel => {
+                let pool = self.pool.as_ref().expect("parallel kernel without pool");
+                gemm::sgemm_parallel(x, m, k, pf, &mut out, pool, self.threads);
+            }
+            _ => gemm::sgemm_serial(x, m, k, pf, &mut out),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selection_scales_with_problem_size() {
+        let d = Dispatcher::with_threads(4);
+        assert_eq!(d.select(4, 16, 16), KernelKind::Blocked);
+        assert_eq!(d.select(512, 768, 768), KernelKind::BlockedParallel);
+        let single = Dispatcher::with_threads(1);
+        assert_eq!(single.select(512, 768, 768), KernelKind::Blocked);
+    }
+
+    #[test]
+    fn qmatmul_matches_oracle_all_kernels() {
+        let mut rng = Rng::new(31);
+        let (m, k, n) = (9usize, 16usize, 12usize);
+        for bits in [4u32, 8] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let codes = quant::random_codes(&mut rng, k * n, bits);
+            let sx: Vec<f32> = (0..m).map(|_| 0.1 + rng.f32() * 0.1).collect();
+            let sw: Vec<f32> = (0..n).map(|_| 0.02 + rng.f32() * 0.02).collect();
+            let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+            let pw = super::super::pack::PackedWeights::from_codes(&codes, k, n, sw, bits);
+            for d in [Dispatcher::with_threads(1), Dispatcher::with_threads(3)] {
+                assert_eq!(d.qmatmul(&x, m, k, &pw, &sx), want, "bits={bits}");
+            }
+        }
+    }
+}

@@ -1,0 +1,475 @@
+//! Cache-tiled, register-blocked integer GEMM microkernels.
+//!
+//! Shapes follow the serving convention: activations `x` are `(m, k)`
+//! row-major fp32, weights are prepacked `(k, n)` panels
+//! ([`super::pack`]), output is `(m, n)` row-major fp32.
+//!
+//! Tiling: rows are processed in `MC`-row cache blocks (the quantized
+//! activation block stays L2-resident), columns in `NR`-wide panels (one
+//! panel is `k*NR` bytes for int8, `k*NR/2` for int4 — L1-resident and
+//! streamed sequentially), and the microkernel holds an `MR x NR` i32
+//! accumulator tile in registers across the whole K loop.
+//!
+//! int4 panels store offset nibbles (`code + INT4_OFFSET`); the
+//! microkernel multiplies raw nibbles and folds the offset out *once per
+//! output element* via the per-row activation sum:
+//! `sum_k x*(code+off) - off*sum_k x == sum_k x*code`. This is exact in
+//! i32, so the fused unpack costs one shift+mask per byte and no
+//! per-element subtraction.
+//!
+//! Numerical contract: all kernels here accumulate exactly in i32 and
+//! agree with each other bit-for-bit at every shape. They are also
+//! bit-for-bit equal to [`crate::quant::qmatmul_ref`] whenever
+//! `k * l_max_act * l_max_w < 2^24` — the oracle accumulates
+//! integer-valued products in f32, which is exact only below 2^24, so the
+//! bound is k <= 1024 for int8 (128*127 per product) and k <= 262144 for
+//! int4. BERT-base attention/FFN-up shapes (k = 768) and every test shape
+//! sit inside the bound; the FFN down-projection (k = 3072) at int8 is
+//! outside it, where the *oracle* rounds and the integer kernels are the
+//! exact ones. `rust/tests/kernels.rs` enforces oracle equality across
+//! random in-bound shapes and both bit widths.
+
+use crate::quant::{self, INT4_OFFSET};
+use crate::util::threadpool::ThreadPool;
+
+use super::pack::{PackedData, PackedF32, PackedWeights, MR, NR};
+
+/// Rows per cache block: `MC * k` quantized activations (i16) stay within
+/// L2 while every weight panel streams over them.
+pub const MC: usize = 128;
+
+/// Quantize activations exactly as `qmatmul_ref` does: per-row scale,
+/// round-to-nearest, clamp to the *paper grid* `[l_min, l_max]`
+/// (which includes +2^{b-1}, hence i16 storage).
+pub fn quantize_activations(x: &[f32], m: usize, k: usize, sx: &[f32], bits: u32) -> Vec<i16> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(sx.len(), m);
+    let (lmin, lmax) = quant::qbounds(bits);
+    let mut qx = vec![0i16; m * k];
+    for i in 0..m {
+        let s = sx[i];
+        let row = &x[i * k..(i + 1) * k];
+        let out = &mut qx[i * k..(i + 1) * k];
+        for j in 0..k {
+            out[j] = (row[j] / s).round().clamp(lmin, lmax) as i16;
+        }
+    }
+    qx
+}
+
+/// Per-row sums of quantized activations — the int4 offset-correction
+/// term (cheap: one pass over data already in cache right after
+/// quantization).
+pub fn act_row_sums(qx: &[i16], m: usize, k: usize) -> Vec<i32> {
+    assert_eq!(qx.len(), m * k);
+    (0..m)
+        .map(|i| qx[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum())
+        .collect()
+}
+
+#[inline(always)]
+fn store_row(out: &mut [f32], acc: &[i32; NR], corr: i32, sxi: f32, sw: &[f32], nc: usize) {
+    // matches qmatmul_ref's `acc * sx[i] * sw[c]` association exactly
+    for c in 0..nc {
+        out[c] = ((acc[c] - corr) as f32 * sxi) * sw[c];
+    }
+}
+
+/// Single-threaded tiled GEMM over `m` rows. `rowsums` is only read for
+/// int4 weights (pass `&[]`-compatible data for int8 is NOT allowed —
+/// callers always provide it; it is one add per row to build).
+pub fn gemm_serial(
+    qx: &[i16],
+    rowsums: &[i32],
+    m: usize,
+    k: usize,
+    pw: &PackedWeights,
+    sx: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(qx.len(), m * k);
+    assert_eq!(rowsums.len(), m);
+    assert_eq!(sx.len(), m);
+    assert_eq!(pw.k, k);
+    assert_eq!(out.len(), m * pw.n);
+    let mut ic = 0;
+    while ic < m {
+        let mc = MC.min(m - ic);
+        match &pw.data {
+            PackedData::I8(_) => block_i8(qx, ic, mc, k, pw, sx, out),
+            PackedData::I4(_) => block_i4(qx, rowsums, ic, mc, k, pw, sx, out),
+        }
+        ic += mc;
+    }
+}
+
+fn block_i8(qx: &[i16], ic: usize, mc: usize, k: usize, pw: &PackedWeights, sx: &[f32], out: &mut [f32]) {
+    let n = pw.n;
+    let iend = ic + mc;
+    for p in 0..pw.n_panels() {
+        let j0 = p * NR;
+        let nc = NR.min(n - j0);
+        let panel = pw.panel_i8(p);
+        let sw = &pw.scales[j0..j0 + nc];
+        let mut i = ic;
+        while i + MR <= iend {
+            let r0 = &qx[i * k..i * k + k];
+            let r1 = &qx[(i + 1) * k..(i + 1) * k + k];
+            let r2 = &qx[(i + 2) * k..(i + 2) * k + k];
+            let r3 = &qx[(i + 3) * k..(i + 3) * k + k];
+            let mut a0 = [0i32; NR];
+            let mut a1 = [0i32; NR];
+            let mut a2 = [0i32; NR];
+            let mut a3 = [0i32; NR];
+            for kk in 0..k {
+                let wr = &panel[kk * NR..kk * NR + NR];
+                let x0 = r0[kk] as i32;
+                let x1 = r1[kk] as i32;
+                let x2 = r2[kk] as i32;
+                let x3 = r3[kk] as i32;
+                for c in 0..NR {
+                    let w = wr[c] as i32;
+                    a0[c] += x0 * w;
+                    a1[c] += x1 * w;
+                    a2[c] += x2 * w;
+                    a3[c] += x3 * w;
+                }
+            }
+            store_row(&mut out[i * n + j0..i * n + j0 + nc], &a0, 0, sx[i], sw, nc);
+            store_row(&mut out[(i + 1) * n + j0..(i + 1) * n + j0 + nc], &a1, 0, sx[i + 1], sw, nc);
+            store_row(&mut out[(i + 2) * n + j0..(i + 2) * n + j0 + nc], &a2, 0, sx[i + 2], sw, nc);
+            store_row(&mut out[(i + 3) * n + j0..(i + 3) * n + j0 + nc], &a3, 0, sx[i + 3], sw, nc);
+            i += MR;
+        }
+        while i < iend {
+            let r = &qx[i * k..i * k + k];
+            let mut acc = [0i32; NR];
+            for kk in 0..k {
+                let wr = &panel[kk * NR..kk * NR + NR];
+                let x = r[kk] as i32;
+                for c in 0..NR {
+                    acc[c] += x * wr[c] as i32;
+                }
+            }
+            store_row(&mut out[i * n + j0..i * n + j0 + nc], &acc, 0, sx[i], sw, nc);
+            i += 1;
+        }
+    }
+}
+
+fn block_i4(
+    qx: &[i16],
+    rowsums: &[i32],
+    ic: usize,
+    mc: usize,
+    k: usize,
+    pw: &PackedWeights,
+    sx: &[f32],
+    out: &mut [f32],
+) {
+    let n = pw.n;
+    let k2 = k / 2;
+    let iend = ic + mc;
+    for p in 0..pw.n_panels() {
+        let j0 = p * NR;
+        let nc = NR.min(n - j0);
+        let panel = pw.panel_i4(p);
+        let sw = &pw.scales[j0..j0 + nc];
+        let mut i = ic;
+        while i + MR <= iend {
+            let r0 = &qx[i * k..i * k + k];
+            let r1 = &qx[(i + 1) * k..(i + 1) * k + k];
+            let r2 = &qx[(i + 2) * k..(i + 2) * k + k];
+            let r3 = &qx[(i + 3) * k..(i + 3) * k + k];
+            let mut a0 = [0i32; NR];
+            let mut a1 = [0i32; NR];
+            let mut a2 = [0i32; NR];
+            let mut a3 = [0i32; NR];
+            for kk2 in 0..k2 {
+                let wr = &panel[kk2 * NR..kk2 * NR + NR];
+                let x0e = r0[2 * kk2] as i32;
+                let x0o = r0[2 * kk2 + 1] as i32;
+                let x1e = r1[2 * kk2] as i32;
+                let x1o = r1[2 * kk2 + 1] as i32;
+                let x2e = r2[2 * kk2] as i32;
+                let x2o = r2[2 * kk2 + 1] as i32;
+                let x3e = r3[2 * kk2] as i32;
+                let x3o = r3[2 * kk2 + 1] as i32;
+                for c in 0..NR {
+                    let b = wr[c] as i32;
+                    let lo = b & 0xF;
+                    let hi = b >> 4;
+                    a0[c] += x0e * lo + x0o * hi;
+                    a1[c] += x1e * lo + x1o * hi;
+                    a2[c] += x2e * lo + x2o * hi;
+                    a3[c] += x3e * lo + x3o * hi;
+                }
+            }
+            let co = INT4_OFFSET;
+            store_row(&mut out[i * n + j0..i * n + j0 + nc], &a0, co * rowsums[i], sx[i], sw, nc);
+            store_row(&mut out[(i + 1) * n + j0..(i + 1) * n + j0 + nc], &a1, co * rowsums[i + 1], sx[i + 1], sw, nc);
+            store_row(&mut out[(i + 2) * n + j0..(i + 2) * n + j0 + nc], &a2, co * rowsums[i + 2], sx[i + 2], sw, nc);
+            store_row(&mut out[(i + 3) * n + j0..(i + 3) * n + j0 + nc], &a3, co * rowsums[i + 3], sx[i + 3], sw, nc);
+            i += MR;
+        }
+        while i < iend {
+            let r = &qx[i * k..i * k + k];
+            let mut acc = [0i32; NR];
+            for kk2 in 0..k2 {
+                let wr = &panel[kk2 * NR..kk2 * NR + NR];
+                let xe = r[2 * kk2] as i32;
+                let xo = r[2 * kk2 + 1] as i32;
+                for c in 0..NR {
+                    let b = wr[c] as i32;
+                    acc[c] += xe * (b & 0xF) + xo * (b >> 4);
+                }
+            }
+            store_row(
+                &mut out[i * n + j0..i * n + j0 + nc],
+                &acc,
+                INT4_OFFSET * rowsums[i],
+                sx[i],
+                sw,
+                nc,
+            );
+            i += 1;
+        }
+    }
+}
+
+/// Row-block parallel GEMM: contiguous row chunks (one per thread) run
+/// [`gemm_serial`] on disjoint output slices via the shared pool.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel(
+    qx: &[i16],
+    rowsums: &[i32],
+    m: usize,
+    k: usize,
+    pw: &PackedWeights,
+    sx: &[f32],
+    out: &mut [f32],
+    pool: &ThreadPool,
+    chunks: usize,
+) {
+    let n = pw.n;
+    assert_eq!(out.len(), m * n);
+    let chunks = chunks.max(1).min(m.max(1));
+    let per = (m + chunks - 1) / chunks;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks);
+    let mut rest = out;
+    let mut row0 = 0usize;
+    while row0 < m {
+        let rows = per.min(m - row0);
+        let tmp = rest;
+        let (chunk_out, tail) = tmp.split_at_mut(rows * n);
+        rest = tail;
+        let qx_c = &qx[row0 * k..(row0 + rows) * k];
+        let rs_c = &rowsums[row0..row0 + rows];
+        let sx_c = &sx[row0..row0 + rows];
+        jobs.push(Box::new(move || gemm_serial(qx_c, rs_c, rows, k, pw, sx_c, chunk_out)));
+        row0 += rows;
+    }
+    pool.scoped(jobs);
+}
+
+/// Reference kernel over *prequantized* activations: the scalar loop
+/// structure of [`crate::quant::qmatmul_ref`] (row-major codes,
+/// column-strided access, no tiling), but accumulating in i32 so it stays
+/// exact — and identical to the blocked kernels — even past the oracle's
+/// f32 bound. Used by the `reference` dispatch override and as the bench
+/// baseline.
+pub fn gemm_reference(
+    qx: &[i16],
+    m: usize,
+    k: usize,
+    codes: &[i8],
+    n: usize,
+    sx: &[f32],
+    sw: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(codes.len(), k * n);
+    for i in 0..m {
+        for c in 0..n {
+            let mut acc = 0i32;
+            for j in 0..k {
+                acc += qx[i * k + j] as i32 * codes[j * n + c] as i32;
+            }
+            out[i * n + c] = (acc as f32 * sx[i]) * sw[c];
+        }
+    }
+}
+
+/// Single-threaded fp32 GEMM over panel-packed weights (native baseline).
+pub fn sgemm_serial(x: &[f32], m: usize, k: usize, pf: &PackedF32, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(pf.k, k);
+    assert_eq!(out.len(), m * pf.n);
+    let n = pf.n;
+    let mut ic = 0;
+    while ic < m {
+        let mc = MC.min(m - ic);
+        let iend = ic + mc;
+        for p in 0..pf.n_panels() {
+            let j0 = p * NR;
+            let nc = NR.min(n - j0);
+            let panel = pf.panel(p);
+            let mut i = ic;
+            while i + MR <= iend {
+                let r0 = &x[i * k..i * k + k];
+                let r1 = &x[(i + 1) * k..(i + 1) * k + k];
+                let r2 = &x[(i + 2) * k..(i + 2) * k + k];
+                let r3 = &x[(i + 3) * k..(i + 3) * k + k];
+                let mut a0 = [0f32; NR];
+                let mut a1 = [0f32; NR];
+                let mut a2 = [0f32; NR];
+                let mut a3 = [0f32; NR];
+                for kk in 0..k {
+                    let wr = &panel[kk * NR..kk * NR + NR];
+                    let x0 = r0[kk];
+                    let x1 = r1[kk];
+                    let x2 = r2[kk];
+                    let x3 = r3[kk];
+                    for c in 0..NR {
+                        let w = wr[c];
+                        a0[c] += x0 * w;
+                        a1[c] += x1 * w;
+                        a2[c] += x2 * w;
+                        a3[c] += x3 * w;
+                    }
+                }
+                out[i * n + j0..i * n + j0 + nc].copy_from_slice(&a0[..nc]);
+                out[(i + 1) * n + j0..(i + 1) * n + j0 + nc].copy_from_slice(&a1[..nc]);
+                out[(i + 2) * n + j0..(i + 2) * n + j0 + nc].copy_from_slice(&a2[..nc]);
+                out[(i + 3) * n + j0..(i + 3) * n + j0 + nc].copy_from_slice(&a3[..nc]);
+                i += MR;
+            }
+            while i < iend {
+                let r = &x[i * k..i * k + k];
+                let mut acc = [0f32; NR];
+                for kk in 0..k {
+                    let wr = &panel[kk * NR..kk * NR + NR];
+                    let xv = r[kk];
+                    for c in 0..NR {
+                        acc[c] += xv * wr[c];
+                    }
+                }
+                out[i * n + j0..i * n + j0 + nc].copy_from_slice(&acc[..nc]);
+                i += 1;
+            }
+        }
+        ic += mc;
+    }
+}
+
+/// Row-block parallel fp32 GEMM.
+pub fn sgemm_parallel(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    pf: &PackedF32,
+    out: &mut [f32],
+    pool: &ThreadPool,
+    chunks: usize,
+) {
+    let n = pf.n;
+    assert_eq!(out.len(), m * n);
+    let chunks = chunks.max(1).min(m.max(1));
+    let per = (m + chunks - 1) / chunks;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks);
+    let mut rest = out;
+    let mut row0 = 0usize;
+    while row0 < m {
+        let rows = per.min(m - row0);
+        let tmp = rest;
+        let (chunk_out, tail) = tmp.split_at_mut(rows * n);
+        rest = tail;
+        let x_c = &x[row0 * k..(row0 + rows) * k];
+        jobs.push(Box::new(move || sgemm_serial(x_c, rows, k, pf, chunk_out)));
+        row0 += rows;
+    }
+    pool.scoped(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(m: usize, k: usize, n: usize, bits: u32, seed: u64) -> (Vec<f32>, Vec<i8>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let codes = quant::random_codes(&mut rng, k * n, bits);
+        let sx: Vec<f32> = (0..m).map(|_| 0.02 + rng.f32() * 0.2).collect();
+        let sw: Vec<f32> = (0..n).map(|_| 0.01 + rng.f32() * 0.05).collect();
+        (x, codes, sx, sw)
+    }
+
+    fn check_exact(m: usize, k: usize, n: usize, bits: u32, seed: u64) {
+        let (x, codes, sx, sw) = setup(m, k, n, bits, seed);
+        let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+        let pw = PackedWeights::from_codes(&codes, k, n, sw.clone(), bits);
+        let qx = quantize_activations(&x, m, k, &sx, bits);
+        let rs = act_row_sums(&qx, m, k);
+        let mut got = vec![0f32; m * n];
+        gemm_serial(&qx, &rs, m, k, &pw, &sx, &mut got);
+        assert_eq!(got, want, "serial m={m} k={k} n={n} bits={bits}");
+
+        let pool = ThreadPool::new(3);
+        let mut got_p = vec![0f32; m * n];
+        gemm_parallel(&qx, &rs, m, k, &pw, &sx, &mut got_p, &pool, 4);
+        assert_eq!(got_p, want, "parallel m={m} k={k} n={n} bits={bits}");
+
+        let mut got_r = vec![0f32; m * n];
+        gemm_reference(&qx, m, k, &codes, n, &sx, &sw, &mut got_r);
+        assert_eq!(got_r, want, "reference m={m} k={k} n={n} bits={bits}");
+    }
+
+    #[test]
+    fn matches_ref_int8_shapes() {
+        for &(m, k, n) in &[(1usize, 2usize, 1usize), (3, 4, 5), (4, 8, 8), (7, 6, 9), (16, 32, 24), (130, 16, 17)] {
+            check_exact(m, k, n, 8, 100 + m as u64);
+        }
+    }
+
+    #[test]
+    fn matches_ref_int4_shapes() {
+        for &(m, k, n) in &[(1usize, 2usize, 1usize), (3, 4, 5), (4, 8, 8), (7, 6, 9), (16, 32, 24), (130, 16, 17)] {
+            check_exact(m, k, n, 4, 200 + m as u64);
+        }
+    }
+
+    #[test]
+    fn activation_quantization_matches_grid() {
+        let (lmin, lmax) = quant::qbounds(8);
+        let x = vec![1000.0f32, -1000.0, 0.49, 0.51, -0.5];
+        let qx = quantize_activations(&x, 1, 5, &[1.0], 8);
+        assert_eq!(qx[0], lmax as i16); // +128: the paper grid exceeds i8
+        assert_eq!(qx[1], lmin as i16);
+        assert_eq!(qx[2], 0);
+        assert_eq!(qx[3], 1);
+        assert_eq!(qx[4], -1); // round half away from zero
+        assert_eq!(act_row_sums(&qx, 1, 5), vec![128 - 127 + 0 + 1 - 1]);
+    }
+
+    #[test]
+    fn sgemm_matches_naive() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (13usize, 10usize, 11usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let pf = PackedF32::from_rowmajor(&w, k, n);
+        let mut got = vec![0f32; m * n];
+        sgemm_serial(&x, m, k, &pf, &mut got);
+        let pool = ThreadPool::new(2);
+        let mut got_p = vec![0f32; m * n];
+        sgemm_parallel(&x, m, k, &pf, &mut got_p, &pool, 3);
+        for i in 0..m {
+            for c in 0..n {
+                let want: f32 = (0..k).map(|j| x[i * k + j] * w[j * n + c]).sum();
+                assert!((got[i * n + c] - want).abs() < 1e-3, "sgemm {i},{c}");
+                assert!((got_p[i * n + c] - want).abs() < 1e-3, "sgemm_par {i},{c}");
+            }
+        }
+    }
+}

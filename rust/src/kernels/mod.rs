@@ -1,0 +1,39 @@
+//! Native quantized GEMM backend — the deployed-kernel half of the
+//! paper's contribution, in pure Rust (no Python, no XLA on the hot
+//! path).
+//!
+//! # Prepacked weight layout
+//!
+//! Weights are quantized per output channel
+//! ([`crate::quant::quantize_weight_per_channel`]) and repacked **once at
+//! model-load time** into column-panel form ([`pack::PackedWeights`]):
+//! `ceil(n/NR)` panels, each `k x NR` K-major, so the inner loop streams
+//! weights sequentially. int4 panels hold two K-consecutive offset
+//! nibbles per byte (`code + INT4_OFFSET`), unpacked by shift+mask
+//! *inside* the microkernel; the `+INT4_OFFSET` bias is folded out once
+//! per output element through the quantized-activation row sum instead of
+//! per nibble. Per-channel scales ride with the panels.
+//!
+//! # Microkernels
+//!
+//! [`gemm`] holds the cache-tiled (MC rows), register-blocked (MR x NR
+//! i32 accumulator tile) kernels for int8 and int4, a panel-packed fp32
+//! baseline, and the scalar reference loop. Outputs are bit-for-bit equal
+//! to [`crate::quant::qmatmul_ref`] (see the contract note in `gemm`).
+//!
+//! # Runtime dispatch
+//!
+//! [`dispatch::Dispatcher`] picks a kernel variant per call — scalar
+//! reference, single-thread blocked, or row-block parallel over
+//! [`crate::util::threadpool::ThreadPool`] — from the problem shape and
+//! core count, with `MKQ_KERNEL` / `MKQ_THREADS` env overrides.
+//!
+//! Follow-on perf levers are tracked in ROADMAP.md (SIMD microkernels,
+//! per-token activation scales, bucket autotuning).
+
+pub mod dispatch;
+pub mod gemm;
+pub mod pack;
+
+pub use dispatch::{Dispatcher, KernelKind};
+pub use pack::{PackedF32, PackedWeights, MR, NR};

@@ -1,0 +1,278 @@
+//! Prepacked weight formats for the native GEMM microkernels.
+//!
+//! Layout (built once at model-load time, amortized over every forward):
+//! weights are stored as `ceil(n / NR)` *column panels*. Panel `p` covers
+//! output channels `[p*NR, p*NR + NR)`; within a panel the codes are laid
+//! out K-major — `panel[kk*NR + jj]` is the code for reduction index `kk`
+//! and channel `p*NR + jj` — so the microkernel streams the panel
+//! strictly sequentially while walking K. Channels past `n` in the last
+//! panel are padded with the zero code so the kernel never branches on
+//! column bounds inside the K loop.
+//!
+//! int4 packs two *K-consecutive* codes per byte as offset nibbles
+//! (`code + INT4_OFFSET` in `[0, 15]`, even `kk` in the low nibble) —
+//! the same nibble convention as [`crate::quant::pack_int4_k`], but in
+//! panel order. The `+INT4_OFFSET` bias is *not* removed per element:
+//! the microkernel accumulates raw nibbles and folds the bias out once
+//! per output via the quantized-activation row sum (see
+//! [`super::gemm`]). Padded channels hold nibble 7 (code 0) so the same
+//! correction zeroes them exactly.
+
+use crate::quant;
+
+/// Microkernel register-block width (output channels per panel).
+pub const NR: usize = 8;
+/// Microkernel register-block height (rows of the activation matrix).
+pub const MR: usize = 4;
+
+#[derive(Debug, Clone)]
+pub(crate) enum PackedData {
+    I8(Vec<i8>),
+    I4(Vec<u8>),
+}
+
+/// Per-output-channel quantized weights in panel layout, plus scales.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    pub bits: u32,
+    pub k: usize,
+    pub n: usize,
+    /// Per-output-channel scales, length `n`.
+    pub scales: Vec<f32>,
+    pub(crate) data: PackedData,
+}
+
+impl PackedWeights {
+    /// Pack row-major `(k, n)` integer codes (as produced by
+    /// [`crate::quant::quantize_weight_per_channel`]).
+    pub fn from_codes(codes: &[i8], k: usize, n: usize, scales: Vec<f32>, bits: u32) -> Self {
+        assert_eq!(codes.len(), k * n);
+        assert_eq!(scales.len(), n);
+        let n_panels = (n + NR - 1) / NR;
+        let data = match bits {
+            8 => {
+                let mut d = vec![0i8; n_panels * k * NR];
+                for p in 0..n_panels {
+                    let base = p * k * NR;
+                    for kk in 0..k {
+                        for jj in 0..NR {
+                            let col = p * NR + jj;
+                            if col < n {
+                                d[base + kk * NR + jj] = codes[kk * n + col];
+                            }
+                        }
+                    }
+                }
+                PackedData::I8(d)
+            }
+            4 => {
+                assert!(k % 2 == 0, "int4 packing needs even K");
+                let off = quant::INT4_OFFSET;
+                // padded channels: nibble 7 == code 0, cancelled exactly by
+                // the row-sum correction.
+                let pad = (off | (off << 4)) as u8;
+                let mut d = vec![pad; n_panels * (k / 2) * NR];
+                for p in 0..n_panels {
+                    let base = p * (k / 2) * NR;
+                    for kk2 in 0..k / 2 {
+                        for jj in 0..NR {
+                            let col = p * NR + jj;
+                            if col < n {
+                                let lo = codes[(2 * kk2) * n + col] as i32 + off;
+                                let hi = codes[(2 * kk2 + 1) * n + col] as i32 + off;
+                                debug_assert!(
+                                    (0..16).contains(&lo) && (0..16).contains(&hi),
+                                    "code out of int4 range"
+                                );
+                                d[base + kk2 * NR + jj] = (lo | (hi << 4)) as u8;
+                            }
+                        }
+                    }
+                }
+                PackedData::I4(d)
+            }
+            b => panic!("unsupported packed bit width {b} (use 4 or 8)"),
+        };
+        PackedWeights { bits, k, n, scales, data }
+    }
+
+    /// Quantize a row-major `(k, n)` fp32 matrix per-channel and pack it —
+    /// the model-load entry point.
+    pub fn from_f32(w: &[f32], k: usize, n: usize, bits: u32) -> Self {
+        let (codes, scales) = quant::quantize_weight_per_channel(w, k, n, bits);
+        Self::from_codes(&codes, k, n, scales, bits)
+    }
+
+    pub fn n_panels(&self) -> usize {
+        (self.n + NR - 1) / NR
+    }
+
+    /// int8 panel `p`: `k * NR` codes, K-major.
+    pub(crate) fn panel_i8(&self, p: usize) -> &[i8] {
+        match &self.data {
+            PackedData::I8(d) => &d[p * self.k * NR..(p + 1) * self.k * NR],
+            PackedData::I4(_) => panic!("int4 weights have no i8 panels"),
+        }
+    }
+
+    /// int4 panel `p`: `(k/2) * NR` offset-nibble bytes, K-major.
+    pub(crate) fn panel_i4(&self, p: usize) -> &[u8] {
+        match &self.data {
+            PackedData::I4(d) => &d[p * (self.k / 2) * NR..(p + 1) * (self.k / 2) * NR],
+            PackedData::I8(_) => panic!("int8 weights have no i4 panels"),
+        }
+    }
+
+    /// Reverse the packing back to row-major `(k, n)` codes (testing and
+    /// the reference-kernel fallback).
+    pub fn unpack_codes(&self) -> Vec<i8> {
+        let (k, n) = (self.k, self.n);
+        let mut out = vec![0i8; k * n];
+        match &self.data {
+            PackedData::I8(_) => {
+                for p in 0..self.n_panels() {
+                    let panel = self.panel_i8(p);
+                    for kk in 0..k {
+                        for jj in 0..NR {
+                            let col = p * NR + jj;
+                            if col < n {
+                                out[kk * n + col] = panel[kk * NR + jj];
+                            }
+                        }
+                    }
+                }
+            }
+            PackedData::I4(_) => {
+                let off = quant::INT4_OFFSET;
+                for p in 0..self.n_panels() {
+                    let panel = self.panel_i4(p);
+                    for kk2 in 0..k / 2 {
+                        for jj in 0..NR {
+                            let col = p * NR + jj;
+                            if col < n {
+                                let b = panel[kk2 * NR + jj] as i32;
+                                out[(2 * kk2) * n + col] = ((b & 0xF) - off) as i8;
+                                out[(2 * kk2 + 1) * n + col] = ((b >> 4) - off) as i8;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes of packed weight data actually streamed per full GEMM — the
+    /// memory-traffic half of the paper's int4 speedup story.
+    pub fn packed_bytes(&self) -> usize {
+        match &self.data {
+            PackedData::I8(d) => d.len(),
+            PackedData::I4(d) => d.len(),
+        }
+    }
+}
+
+/// fp32 weights in the same panel layout (the native f32 baseline the
+/// quantized kernels are compared against).
+#[derive(Debug, Clone)]
+pub struct PackedF32 {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedF32 {
+    pub fn from_rowmajor(w: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        let n_panels = (n + NR - 1) / NR;
+        let mut data = vec![0f32; n_panels * k * NR];
+        for p in 0..n_panels {
+            let base = p * k * NR;
+            for kk in 0..k {
+                for jj in 0..NR {
+                    let col = p * NR + jj;
+                    if col < n {
+                        data[base + kk * NR + jj] = w[kk * n + col];
+                    }
+                }
+            }
+        }
+        PackedF32 { k, n, data }
+    }
+
+    pub fn n_panels(&self) -> usize {
+        (self.n + NR - 1) / NR
+    }
+
+    pub(crate) fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_codes(k: usize, n: usize, bits: u32, seed: u64) -> Vec<i8> {
+        quant::random_codes(&mut Rng::new(seed), k * n, bits)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_i8() {
+        for &(k, n) in &[(2usize, 1usize), (4, 7), (6, 8), (8, 9), (16, 24), (10, 31)] {
+            let codes = random_codes(k, n, 8, 42 + n as u64);
+            let pw = PackedWeights::from_codes(&codes, k, n, vec![1.0; n], 8);
+            assert_eq!(pw.unpack_codes(), codes, "k={k} n={n}");
+            assert_eq!(pw.packed_bytes(), pw.n_panels() * k * NR);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_i4() {
+        for &(k, n) in &[(2usize, 1usize), (4, 7), (6, 8), (8, 9), (16, 24), (10, 31)] {
+            let codes = random_codes(k, n, 4, 7 + n as u64);
+            let pw = PackedWeights::from_codes(&codes, k, n, vec![1.0; n], 4);
+            assert_eq!(pw.unpack_codes(), codes, "k={k} n={n}");
+            assert_eq!(pw.packed_bytes(), pw.n_panels() * (k / 2) * NR);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even K")]
+    fn pack_i4_rejects_odd_k() {
+        let codes = vec![0i8; 3 * 4];
+        let _ = PackedWeights::from_codes(&codes, 3, 4, vec![1.0; 4], 4);
+    }
+
+    #[test]
+    fn from_f32_matches_quantizer() {
+        let mut rng = Rng::new(5);
+        let (k, n) = (12, 10);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.1).collect();
+        for bits in [4u32, 8] {
+            let (codes, scales) = quant::quantize_weight_per_channel(&w, k, n, bits);
+            let pw = PackedWeights::from_f32(&w, k, n, bits);
+            assert_eq!(pw.unpack_codes(), codes);
+            assert_eq!(pw.scales, scales);
+        }
+    }
+
+    #[test]
+    fn packed_f32_panels() {
+        let (k, n) = (3usize, 11usize);
+        let w: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let pf = PackedF32::from_rowmajor(&w, k, n);
+        assert_eq!(pf.n_panels(), 2);
+        for p in 0..pf.n_panels() {
+            let panel = pf.panel(p);
+            for kk in 0..k {
+                for jj in 0..NR {
+                    let col = p * NR + jj;
+                    let want = if col < n { w[kk * n + col] } else { 0.0 };
+                    assert_eq!(panel[kk * NR + jj], want);
+                }
+            }
+        }
+    }
+}

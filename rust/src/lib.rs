@@ -1,7 +1,11 @@
 //! MKQ-BERT reproduction — L3 Rust coordinator library.
 //!
 //! Layers (DESIGN.md):
-//!   * [`runtime`] — PJRT engine over AOT HLO-text artifacts.
+//!   * [`kernels`] — native quantized GEMM backend: prepacked int4/int8
+//!     weights, cache-tiled microkernels, runtime kernel dispatch.
+//!   * [`runtime`] — execution backends behind one trait: the native
+//!     model forward, and (feature `xla`) the PJRT engine over AOT
+//!     HLO-text artifacts.
 //!   * [`quant`] — serving-path quantization math (codes, scales, int4
 //!     packing), mirroring `python/compile/kernels/ref.py`.
 //!   * [`tokenizer`] / [`data`] — text substrate: WordPiece tokenizer and
@@ -15,6 +19,7 @@
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod quant;
 pub mod runtime;
 pub mod tokenizer;

@@ -1,22 +1,21 @@
 //! mkq-bert — launcher CLI for the MKQ-BERT reproduction.
 //!
-//! Subcommands:
-//!   train    — teacher finetune + calibration + QAT on one synthetic task
-//!   serve    — batching inference server on a Poisson request trace
-//!   info     — print manifest / model dims / artifact inventory
+//! Native subcommands (always available):
+//!   serve-native — batching inference server over the native int4/int8
+//!                  GEMM backend on a Poisson request trace
+//!   kernels      — print kernel-dispatch info and run a quick self-check
 //!
-//! Everything reads `artifacts/` (override with MKQ_ARTIFACTS or
-//! --artifacts); run `make artifacts` first. A config file can seed the
-//! flags: `mkq-bert train --config run.conf` (CLI flags win).
+//! Artifact subcommands (build with `--features xla`, run `make artifacts`):
+//!   train        — teacher finetune + calibration + QAT on one synthetic task
+//!   serve        — batching inference server over the AOT artifacts
+//!   info         — print manifest / model dims / artifact inventory
+//!
+//! A config file can seed the flags: `mkq-bert serve-native --config run.conf`
+//! (CLI flags win).
 
-use anyhow::{bail, Result};
-use mkq::coordinator::{bits_last_n_int4, parse_bits, QatConfig, ServeModel, Server, ServerConfig, Trainer};
-use mkq::data::{Suite, TaskKind};
-use mkq::runtime::{Engine, HostTensor};
+use anyhow::Result;
 use mkq::util::cli::Args;
 use mkq::util::config::Config;
-use mkq::util::rng::Rng;
-use xla::Literal;
 
 fn main() {
     if let Err(e) = run() {
@@ -27,171 +26,101 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mkq-bert <train|serve|info> [options]
-  common:  --artifacts DIR   --config FILE   --seed N   --verbose
-  train:   --task rte|mrpc|cola|sst2|qnli|qqp   --bits 8,8,4,4 | --n-int4 N
-           --steps N --teacher-steps N --alpha F --beta F
-           --method mkq|kdlsq   --no-lsq   --no-kd
-  serve:   --bits ...  --rate RPS --requests N --window-us N --train-steps N
-  info:    (no options)"
+        "usage: mkq-bert <serve-native|kernels|train|serve|info> [options]
+  common:       --config FILE   --seed N   --verbose
+  serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
+                --window-us N   --buckets 1,8,16
+  kernels:      (no options)
+  train|serve|info: artifact path — needs --features xla + make artifacts;
+                also --artifacts DIR, see README"
     );
     std::process::exit(2);
 }
 
 fn run() -> Result<()> {
     let args = Args::parse();
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
-    if cmd.is_empty() {
-        usage();
-    }
-
+    let cmd = args.positional.first().cloned().unwrap_or_default();
     let mut conf = Config::default();
     if let Some(path) = args.get("config") {
         conf = Config::load(path).map_err(anyhow::Error::msg)?;
     }
-    let artifacts = args.str("artifacts", &conf.str("artifacts", "artifacts"));
-    let eng = Engine::load(std::path::Path::new(&artifacts))?;
-
-    match cmd {
-        "info" => info(&eng),
-        "train" => train(&eng, &args, &conf),
-        "serve" => serve(&eng, &args, &conf),
-        _ => usage(),
+    match cmd.as_str() {
+        "" => usage(),
+        "kernels" => kernels_info(),
+        "serve-native" => serve_native(&args, &conf),
+        other => artifact::run(other, &args, &conf),
     }
 }
 
-fn info(eng: &Engine) -> Result<()> {
-    println!("mkq-bert {} — platform {}", mkq::version(), eng.platform());
-    let d = mkq::coordinator::ModelDims::from_manifest(eng)?;
-    println!(
-        "model: L={} d={} heads={} d_ff={} vocab={} seq={}",
-        d.n_layers, d.d_model, d.n_heads, d.d_ff, d.vocab, d.seq
-    );
-    println!("training: batch={} eval_batch={} k_steps={}", d.batch, d.eval_batch, d.k_steps);
-    let mut names: Vec<&String> = eng.manifest.artifacts.keys().collect();
-    names.sort();
-    println!("artifacts ({}):", names.len());
-    for n in names {
-        let a = &eng.manifest.artifacts[n];
-        println!("  {n:<24} {} in / {} out", a.inputs.len(), a.outputs.len());
+fn kernels_info() -> Result<()> {
+    use mkq::kernels::{Dispatcher, PackedWeights};
+    use mkq::quant;
+    use mkq::util::rng::Rng;
+
+    let disp = Dispatcher::new();
+    println!("mkq-bert {}", mkq::version());
+    println!("{}", disp.describe());
+
+    // quick self-check: native kernels vs the scalar oracle, both widths
+    let mut rng = Rng::new(1);
+    let (m, k, n) = (32usize, 64usize, 48usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let sx: Vec<f32> = (0..m).map(|_| 0.05 + rng.f32() * 0.1).collect();
+    for bits in [8u32, 4] {
+        let codes = quant::random_codes(&mut rng, k * n, bits);
+        let sw: Vec<f32> = (0..n).map(|_| 0.01 + rng.f32() * 0.02).collect();
+        let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+        let pw = PackedWeights::from_codes(&codes, k, n, sw, bits);
+        let got = disp.qmatmul(&x, m, k, &pw, &sx);
+        if got != want {
+            anyhow::bail!("int{bits} kernel self-check FAILED (native != qmatmul_ref)");
+        }
+        println!("int{bits} kernel self-check: bit-for-bit vs qmatmul_ref ok ({m}x{k}x{n})");
     }
     Ok(())
 }
 
-pub fn qat_config_from(args: &Args, conf: &Config, n_layers: usize) -> Result<QatConfig> {
-    let mut cfg = QatConfig::default();
-    cfg.steps = args.usize("steps", conf.usize("train.steps", 300));
-    cfg.alpha = args.f64("alpha", conf.f64("train.alpha", 10.0)) as f32;
-    cfg.beta = args.f64("beta", conf.f64("train.beta", 1.0)) as f32;
-    cfg.lr_w = args.f64("lr-w", conf.f64("train.lr_w", 5e-5));
-    cfg.lr_scale_act = args.f64("lr-sa", conf.f64("train.lr_scale_act", 0.01));
-    cfg.lr_scale_w = args.f64("lr-sw", conf.f64("train.lr_scale_w", 0.001));
-    cfg.eval_every = args.usize("eval-every", conf.usize("train.eval_every", 100));
-    cfg.seed = args.usize("seed", 17) as u64;
-    cfg.mse_grad = match args.str("method", &conf.str("train.method", "mkq")).as_str() {
-        "mkq" => true,
-        "kdlsq" => false,
-        m => bail!("unknown --method {m} (mkq|kdlsq)"),
-    };
-    if args.bool("no-lsq") {
-        cfg.lsq = false;
-    }
-    if args.bool("no-kd") {
-        cfg.alpha = 0.0;
-        cfg.beta = 0.0;
-    }
-    cfg.bits = if let Some(spec) = args.get("bits") {
-        parse_bits(spec, n_layers)?
+fn serve_native(args: &Args, conf: &Config) -> Result<()> {
+    use mkq::coordinator::{bits_last_n_int4, parse_bits, Server, ServerConfig};
+    use mkq::data::{Suite, TaskKind};
+    use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+    use mkq::util::rng::Rng;
+
+    let dims = NativeDims::tiny();
+    let bits = if let Some(spec) = args.get("bits") {
+        parse_bits(spec, dims.n_layers)?
     } else {
-        bits_last_n_int4(n_layers, args.usize("n-int4", 0))
+        bits_last_n_int4(dims.n_layers, args.usize("n-int4", conf.usize("serve.n_int4", 4)))
     };
-    Ok(cfg)
-}
-
-fn train(eng: &Engine, args: &Args, conf: &Config) -> Result<()> {
-    let mut tr = Trainer::new(eng)?;
-    tr.verbose = args.bool("verbose");
-    let d = tr.dims;
-    let task_name = args.str("task", &conf.str("train.task", "sst2"));
-    let kind = TaskKind::parse(&task_name).ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
-    let suite = Suite::new(42, d.vocab, d.seq);
-    let task = suite.task(kind, 1);
-    let cfg = qat_config_from(args, conf, d.n_layers)?;
-    let teacher_steps = args.usize("teacher-steps", conf.usize("train.teacher_steps", 200));
-
+    let seed = args.usize("seed", 17) as u64;
     println!(
-        "[1/4] finetuning fp32 teacher on {} ({} train / {} dev) ...",
-        kind.name(),
-        task.train.len(),
-        task.dev.len()
+        "native serving demo: L={} d={} heads={} seq={} bits={bits:?}",
+        dims.n_layers, dims.d_model, dims.n_heads, dims.seq
     );
-    let teacher_lr = args.f64("teacher-lr", conf.f64("train.teacher_lr", 1e-3));
-    let (teacher, _) = tr.finetune_teacher(&task, teacher_steps, teacher_lr, cfg.seed)?;
-    let teacher_acc = tr.eval_teacher(&teacher, &task.dev)?;
-    println!("      teacher dev acc: {teacher_acc:.4}");
+    let model = NativeModel::random(dims, &bits, seed);
+    let backend = NativeBackend::with_model(model);
+    println!("{}", backend.disp.describe());
 
-    println!("[2/4] calibrating scales (8 batches) ...");
-    let (act, wmax) = tr.calibrate(&teacher, &task.train, 8, cfg.seed)?;
-    let scales = tr.make_scales(&act, &wmax, &cfg.bits)?;
-
-    println!(
-        "[3/4] QAT {} steps, bits={:?}, method={} ...",
-        cfg.steps,
-        cfg.bits,
-        if cfg.mse_grad { "mkq" } else { "kdlsq" }
-    );
-    let res = tr.qat(&teacher, scales, &task, &cfg)?;
-
-    println!("[4/4] results:");
-    println!("      teacher (fp32)   : {teacher_acc:.4}");
-    println!("      quantized student: best {:.4}, final {:.4}", res.best_dev_acc, res.final_dev_acc);
-    for (step, acc) in &res.evals {
-        println!("        step {step:>5}: dev acc {acc:.4}");
-    }
-    Ok(())
-}
-
-fn serve(eng: &Engine, args: &Args, conf: &Config) -> Result<()> {
-    let mut tr = Trainer::new(eng)?;
-    tr.verbose = args.bool("verbose");
-    let d = tr.dims;
-    let suite = Suite::new(42, d.vocab, d.seq);
-    let task = suite.task(TaskKind::Sst2, 1);
-
-    let train_steps = args.usize("train-steps", conf.usize("serve.train_steps", 60));
-    let cfg = qat_config_from(args, conf, d.n_layers)?;
-    println!("preparing deployed model (teacher {train_steps} steps + calibration)...");
-    let (teacher, _) = tr.finetune_teacher(&task, train_steps, 1e-3, 7)?;
-    let (act, wmax) = tr.calibrate(&teacher, &task.train, 4, 7)?;
-    let scales = tr.make_scales(&act, &wmax, &cfg.bits)?;
-    let acc = {
-        let ps: Vec<&Literal> = teacher.iter().chain(scales.iter()).collect();
-        let owned: Vec<Literal> =
-            ps.iter().map(|l| HostTensor::from_literal(l).and_then(|t| t.to_literal())).collect::<Result<_>>()?;
-        let bits_f: Vec<f32> = cfg.bits.iter().map(|&b| b as f32).collect();
-        tr.eval_student(&owned, &bits_f, &task.dev)?
+    let buckets: Vec<usize> = match args.list("buckets") {
+        Some(v) => v
+            .iter()
+            .map(|s| s.parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| anyhow::anyhow!("--buckets expects a comma-separated list of integers"))?,
+        None => vec![1, 8, 16],
     };
-    println!("deployed (post-calibration, pre-QAT) dev acc: {acc:.4}");
-
-    let bits_f: Vec<f32> = cfg.bits.iter().map(|&b| b as f32).collect();
-    let mut ps: Vec<Literal> = Vec::new();
-    for p in &teacher {
-        ps.push(HostTensor::from_literal(p)?.to_literal()?);
-    }
-    ps.extend(scales);
-    let model = ServeModel::new(ps, &bits_f, "quantized")?;
-
     let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
     let mut server = Server::new(
-        eng,
-        model,
+        &backend,
         ServerConfig {
-            buckets: vec![1, 8, 16],
+            buckets,
             batch_window: std::time::Duration::from_micros(window_us as u64),
         },
     )?;
 
-    let rate = args.f64("rate", conf.f64("serve.rate", 200.0));
+    let suite = Suite::new(42, dims.vocab, dims.seq);
+    let task = suite.task(TaskKind::Sst2, 1);
+    let rate = args.f64("rate", conf.f64("serve.rate", 500.0));
     let n_req = args.usize("requests", conf.usize("serve.requests", 400));
     println!("replaying Poisson trace: {n_req} requests at {rate} rps, window {window_us}us");
     let mut rng = Rng::new(99);
@@ -212,4 +141,201 @@ fn serve(eng: &Engine, args: &Args, conf: &Config) -> Result<()> {
     }
     println!("{}", server.summary());
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+mod artifact {
+    use super::*;
+
+    pub fn run(cmd: &str, _args: &Args, _conf: &Config) -> Result<()> {
+        match cmd {
+            "train" | "serve" | "info" => anyhow::bail!(
+                "command `{cmd}` needs the artifact runtime — rebuild with `--features xla` \
+                 (native commands: serve-native, kernels)"
+            ),
+            _ => usage(),
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+mod artifact {
+    use super::*;
+    use anyhow::bail;
+    use mkq::coordinator::{bits_last_n_int4, parse_bits, QatConfig, ServeModel, Server, ServerConfig, Trainer};
+    use mkq::data::{Suite, TaskKind};
+    use mkq::runtime::{ArtifactBackend, Engine, HostTensor};
+    use mkq::util::rng::Rng;
+    use xla::Literal;
+
+    pub fn run(cmd: &str, args: &Args, conf: &Config) -> Result<()> {
+        let artifacts = args.str("artifacts", &conf.str("artifacts", "artifacts"));
+        let eng = Engine::load(std::path::Path::new(&artifacts))?;
+        match cmd {
+            "info" => info(&eng),
+            "train" => train(&eng, args, conf),
+            "serve" => serve(&eng, args, conf),
+            _ => usage(),
+        }
+    }
+
+    fn info(eng: &Engine) -> Result<()> {
+        println!("mkq-bert {} — platform {}", mkq::version(), eng.platform());
+        let d = mkq::coordinator::ModelDims::from_manifest(eng)?;
+        println!(
+            "model: L={} d={} heads={} d_ff={} vocab={} seq={}",
+            d.n_layers, d.d_model, d.n_heads, d.d_ff, d.vocab, d.seq
+        );
+        println!("training: batch={} eval_batch={} k_steps={}", d.batch, d.eval_batch, d.k_steps);
+        let mut names: Vec<&String> = eng.manifest.artifacts.keys().collect();
+        names.sort();
+        println!("artifacts ({}):", names.len());
+        for n in names {
+            let a = &eng.manifest.artifacts[n];
+            println!("  {n:<24} {} in / {} out", a.inputs.len(), a.outputs.len());
+        }
+        Ok(())
+    }
+
+    pub fn qat_config_from(args: &Args, conf: &Config, n_layers: usize) -> Result<QatConfig> {
+        let mut cfg = QatConfig::default();
+        cfg.steps = args.usize("steps", conf.usize("train.steps", 300));
+        cfg.alpha = args.f64("alpha", conf.f64("train.alpha", 10.0)) as f32;
+        cfg.beta = args.f64("beta", conf.f64("train.beta", 1.0)) as f32;
+        cfg.lr_w = args.f64("lr-w", conf.f64("train.lr_w", 5e-5));
+        cfg.lr_scale_act = args.f64("lr-sa", conf.f64("train.lr_scale_act", 0.01));
+        cfg.lr_scale_w = args.f64("lr-sw", conf.f64("train.lr_scale_w", 0.001));
+        cfg.eval_every = args.usize("eval-every", conf.usize("train.eval_every", 100));
+        cfg.seed = args.usize("seed", 17) as u64;
+        cfg.mse_grad = match args.str("method", &conf.str("train.method", "mkq")).as_str() {
+            "mkq" => true,
+            "kdlsq" => false,
+            m => bail!("unknown --method {m} (mkq|kdlsq)"),
+        };
+        if args.bool("no-lsq") {
+            cfg.lsq = false;
+        }
+        if args.bool("no-kd") {
+            cfg.alpha = 0.0;
+            cfg.beta = 0.0;
+        }
+        cfg.bits = if let Some(spec) = args.get("bits") {
+            parse_bits(spec, n_layers)?
+        } else {
+            bits_last_n_int4(n_layers, args.usize("n-int4", 0))
+        };
+        Ok(cfg)
+    }
+
+    fn train(eng: &Engine, args: &Args, conf: &Config) -> Result<()> {
+        let mut tr = Trainer::new(eng)?;
+        tr.verbose = args.bool("verbose");
+        let d = tr.dims;
+        let task_name = args.str("task", &conf.str("train.task", "sst2"));
+        let kind =
+            TaskKind::parse(&task_name).ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+        let suite = Suite::new(42, d.vocab, d.seq);
+        let task = suite.task(kind, 1);
+        let cfg = qat_config_from(args, conf, d.n_layers)?;
+        let teacher_steps = args.usize("teacher-steps", conf.usize("train.teacher_steps", 200));
+
+        println!(
+            "[1/4] finetuning fp32 teacher on {} ({} train / {} dev) ...",
+            kind.name(),
+            task.train.len(),
+            task.dev.len()
+        );
+        let teacher_lr = args.f64("teacher-lr", conf.f64("train.teacher_lr", 1e-3));
+        let (teacher, _) = tr.finetune_teacher(&task, teacher_steps, teacher_lr, cfg.seed)?;
+        let teacher_acc = tr.eval_teacher(&teacher, &task.dev)?;
+        println!("      teacher dev acc: {teacher_acc:.4}");
+
+        println!("[2/4] calibrating scales (8 batches) ...");
+        let (act, wmax) = tr.calibrate(&teacher, &task.train, 8, cfg.seed)?;
+        let scales = tr.make_scales(&act, &wmax, &cfg.bits)?;
+
+        println!(
+            "[3/4] QAT {} steps, bits={:?}, method={} ...",
+            cfg.steps,
+            cfg.bits,
+            if cfg.mse_grad { "mkq" } else { "kdlsq" }
+        );
+        let res = tr.qat(&teacher, scales, &task, &cfg)?;
+
+        println!("[4/4] results:");
+        println!("      teacher (fp32)   : {teacher_acc:.4}");
+        println!(
+            "      quantized student: best {:.4}, final {:.4}",
+            res.best_dev_acc, res.final_dev_acc
+        );
+        for (step, acc) in &res.evals {
+            println!("        step {step:>5}: dev acc {acc:.4}");
+        }
+        Ok(())
+    }
+
+    fn serve(eng: &Engine, args: &Args, conf: &Config) -> Result<()> {
+        let mut tr = Trainer::new(eng)?;
+        tr.verbose = args.bool("verbose");
+        let d = tr.dims;
+        let suite = Suite::new(42, d.vocab, d.seq);
+        let task = suite.task(TaskKind::Sst2, 1);
+
+        let train_steps = args.usize("train-steps", conf.usize("serve.train_steps", 60));
+        let cfg = qat_config_from(args, conf, d.n_layers)?;
+        println!("preparing deployed model (teacher {train_steps} steps + calibration)...");
+        let (teacher, _) = tr.finetune_teacher(&task, train_steps, 1e-3, 7)?;
+        let (act, wmax) = tr.calibrate(&teacher, &task.train, 4, 7)?;
+        let scales = tr.make_scales(&act, &wmax, &cfg.bits)?;
+        let acc = {
+            let ps: Vec<&Literal> = teacher.iter().chain(scales.iter()).collect();
+            let owned: Vec<Literal> = ps
+                .iter()
+                .map(|l| HostTensor::from_literal(l).and_then(|t| t.to_literal()))
+                .collect::<Result<_>>()?;
+            let bits_f: Vec<f32> = cfg.bits.iter().map(|&b| b as f32).collect();
+            tr.eval_student(&owned, &bits_f, &task.dev)?
+        };
+        println!("deployed (post-calibration, pre-QAT) dev acc: {acc:.4}");
+
+        let bits_f: Vec<f32> = cfg.bits.iter().map(|&b| b as f32).collect();
+        let mut ps: Vec<Literal> = Vec::new();
+        for p in &teacher {
+            ps.push(HostTensor::from_literal(p)?.to_literal()?);
+        }
+        ps.extend(scales);
+        let model = ServeModel::new(ps, &bits_f, "quantized")?;
+        let backend = ArtifactBackend::new(eng).with_serve_model(model)?;
+
+        let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
+        let mut server = Server::new(
+            &backend,
+            ServerConfig {
+                buckets: vec![1, 8, 16],
+                batch_window: std::time::Duration::from_micros(window_us as u64),
+            },
+        )?;
+
+        let rate = args.f64("rate", conf.f64("serve.rate", 200.0));
+        let n_req = args.usize("requests", conf.usize("serve.requests", 400));
+        println!("replaying Poisson trace: {n_req} requests at {rate} rps, window {window_us}us");
+        let mut rng = Rng::new(99);
+        let mut sent = 0usize;
+        let mut next_arrival = std::time::Instant::now();
+        while sent < n_req || server.pending() > 0 {
+            let now = std::time::Instant::now();
+            if sent < n_req && now >= next_arrival {
+                let row = rng.below(task.dev.len());
+                server.submit(task.dev.ids[row].clone(), task.dev.masks[row].clone())?;
+                sent += 1;
+                next_arrival = now + std::time::Duration::from_secs_f64(rng.exp(rate));
+            }
+            server.pump()?;
+            if sent >= n_req {
+                server.drain()?;
+            }
+        }
+        println!("{}", server.summary());
+        Ok(())
+    }
 }

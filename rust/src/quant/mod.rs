@@ -44,7 +44,43 @@ pub fn fake_quant(x: f32, s: f32, bits: u32) -> f32 {
 
 /// Symmetric per-output-channel weight quantization of a (k, n)
 /// row-major matrix. Returns (codes (k*n, i8), scales (n,)).
+///
+/// Both passes stream `w` row-major: the abs-max pass keeps the running
+/// per-column maxima (an `n`-sized vector, cache-resident) while walking
+/// rows sequentially, instead of striding down each column — on a 768x3072
+/// matrix the strided version touched a new cache line per element.
 pub fn quantize_weight_per_channel(w: &[f32], k: usize, n: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    let (_, lmax_grid) = qbounds(bits);
+    let mut maxabs = vec![0f32; n];
+    for row in 0..k {
+        let r = &w[row * n..(row + 1) * n];
+        for col in 0..n {
+            maxabs[col] = maxabs[col].max(r[col].abs());
+        }
+    }
+    let scales: Vec<f32> =
+        maxabs.iter().map(|&m| if m > 0.0 { m / lmax_grid } else { 1e-8 }).collect();
+    let mut codes = vec![0i8; k * n];
+    for row in 0..k {
+        let r = &w[row * n..(row + 1) * n];
+        let c = &mut codes[row * n..(row + 1) * n];
+        for col in 0..n {
+            c[col] = quantize_code(r[col], scales[col], bits) as i8;
+        }
+    }
+    (codes, scales)
+}
+
+/// The pre-optimization column-major traversal, kept as the before/after
+/// baseline for the kernels bench (`benches/layers.rs`); numerically
+/// identical to [`quantize_weight_per_channel`].
+pub fn quantize_weight_per_channel_colmajor(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> (Vec<i8>, Vec<f32>) {
     assert_eq!(w.len(), k * n);
     let (_, lmax_grid) = qbounds(bits);
     let mut scales = vec![0f32; n];
@@ -128,6 +164,41 @@ pub fn qmatmul_ref(
         }
     }
     out
+}
+
+/// Uniform random codes over the deployed k-bit storage grid
+/// ([-7, 8] for int4, [-127, 127] for int8). The kernel tests and
+/// benches all draw through here so the grid definition lives in one
+/// place.
+pub fn random_codes(rng: &mut crate::util::rng::Rng, len: usize, bits: u32) -> Vec<i8> {
+    let (span, off) = if bits == 4 { (16usize, 7i32) } else { (255, 127) };
+    (0..len).map(|_| (rng.range(0, span) as i32 - off) as i8).collect()
+}
+
+/// Parse "8,8,4,4" (must match n_layers).
+pub fn parse_bits(s: &str, n_layers: usize) -> anyhow::Result<Vec<u32>> {
+    use anyhow::{bail, Context};
+    let bits: Vec<u32> = s
+        .split(',')
+        .map(|p| p.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("bad bits spec {s:?}"))?;
+    if bits.len() != n_layers {
+        bail!("bits spec {s:?} has {} entries, model has {n_layers} layers", bits.len());
+    }
+    for &b in &bits {
+        if !matches!(b, 4 | 8 | 32) {
+            bail!("unsupported bit width {b} (use 4, 8 or 32)");
+        }
+    }
+    Ok(bits)
+}
+
+/// The paper's layer-selection rule: "higher levels are more robust to
+/// quantization therefore we start from the last layer" — n_int4 last
+/// layers at 4 bits, the rest at 8.
+pub fn bits_last_n_int4(n_layers: usize, n_int4: usize) -> Vec<u32> {
+    (0..n_layers).map(|l| if l >= n_layers - n_int4 { 4 } else { 8 }).collect()
 }
 
 /// Bits-reduction factor of a mixed-precision configuration relative to
@@ -222,6 +293,38 @@ mod tests {
         // 1x1 identity sanity: x=2.0, code=3, sx=1, sw=0.5 -> 2*3*0.5=3
         let out = qmatmul_ref(&[2.0], 1, 1, &[3], 1, &[1.0], &[0.5], 8);
         assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    fn rowmajor_quantizer_matches_colmajor_baseline() {
+        check("quantizer-traversal-equiv", PropConfig::default(), |rng, size| {
+            let k = 1 + size;
+            let n = 1 + size / 2;
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.1).collect();
+            for bits in [4u32, 8] {
+                let (c_new, s_new) = quantize_weight_per_channel(&w, k, n, bits);
+                let (c_old, s_old) = quantize_weight_per_channel_colmajor(&w, k, n, bits);
+                ensure(c_new == c_old, format!("codes diverge (bits={bits})"))?;
+                ensure(s_new == s_old, format!("scales diverge (bits={bits})"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse_bits_validates() {
+        assert_eq!(parse_bits("8,8,4,4", 4).unwrap(), vec![8, 8, 4, 4]);
+        assert!(parse_bits("8,8", 4).is_err());
+        assert!(parse_bits("8,8,3,4", 4).is_err());
+        assert!(parse_bits("x", 1).is_err());
+    }
+
+    #[test]
+    fn last_n_int4_rule() {
+        assert_eq!(bits_last_n_int4(4, 0), vec![8, 8, 8, 8]);
+        assert_eq!(bits_last_n_int4(4, 1), vec![8, 8, 8, 4]);
+        assert_eq!(bits_last_n_int4(4, 2), vec![8, 8, 4, 4]);
+        assert_eq!(bits_last_n_int4(4, 4), vec![4, 4, 4, 4]);
     }
 
     #[test]

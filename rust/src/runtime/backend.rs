@@ -1,0 +1,314 @@
+//! The execution-backend seam: one trait, two engines.
+//!
+//! [`Backend`] is what the serving coordinator and every benchmark binary
+//! program against. Two implementations exist:
+//!
+//!   * [`NativeBackend`] — the pure-Rust path: prepacked quantized
+//!     weights + the [`crate::kernels`] GEMM dispatcher. Always
+//!     available; this is what tier-1 CI exercises.
+//!   * [`ArtifactBackend`] (feature `xla`) — the AOT-artifact path:
+//!     HLO-text executables on the PJRT engine, exactly as before.
+//!
+//! Benches construct both (artifact only when artifacts are present) and
+//! report them side by side, which is how the native-vs-XLA speedup
+//! numbers in `BENCH_kernels.json` are produced.
+
+use anyhow::{bail, Result};
+
+use crate::kernels::Dispatcher;
+
+use super::native::{NativeLayer, NativeModel};
+
+/// Serving-facing model dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeDims {
+    pub seq: usize,
+    pub n_classes: usize,
+}
+
+/// Layer precisions benchmarked side by side (Table 2's rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+    Int4,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] = [Precision::F32, Precision::Int8, Precision::Int4];
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::F32 => 32,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+}
+
+pub trait Backend {
+    fn name(&self) -> String;
+
+    /// Serving dims; `Err` when no serving model is configured.
+    fn serve_dims(&self) -> Result<ServeDims>;
+
+    /// Fail fast if a batch bucket cannot be served (missing artifact /
+    /// no model).
+    fn check_bucket(&self, bucket: usize) -> Result<()>;
+
+    /// Forward a padded `(bucket, seq)` batch to `(bucket, n_classes)`
+    /// logits.
+    fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>>;
+
+    /// One BERT-base encoder layer at the given precision over `(bsz*t, d)`
+    /// hidden states (the Table-2 per-layer benchmark surface).
+    fn layer_forward(
+        &self,
+        prec: Precision,
+        bsz: usize,
+        t: usize,
+        h: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>>;
+}
+
+/// Pure-Rust backend over the native kernels.
+pub struct NativeBackend {
+    pub disp: Dispatcher,
+    bench_layers: Option<Box<[NativeLayer; 3]>>,
+    model: Option<NativeModel>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { disp: Dispatcher::new(), bench_layers: None, model: None }
+    }
+
+    pub fn with_model(model: NativeModel) -> Self {
+        let mut b = Self::new();
+        b.set_model(model);
+        b
+    }
+
+    pub fn set_model(&mut self, model: NativeModel) {
+        self.model = Some(model);
+    }
+
+    pub fn model(&self) -> Option<&NativeModel> {
+        self.model.as_ref()
+    }
+
+    /// Install the three bench layers (f32 / int8 / int4 over the same
+    /// fp32 weights) — see `bench_support::native_bench_layers`.
+    pub fn set_bench_layers(&mut self, f32_layer: NativeLayer, i8_layer: NativeLayer, i4_layer: NativeLayer) {
+        assert_eq!(f32_layer.bits, 32);
+        assert_eq!(i8_layer.bits, 8);
+        assert_eq!(i4_layer.bits, 4);
+        self.bench_layers = Some(Box::new([f32_layer, i8_layer, i4_layer]));
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native(threads={})", self.disp.threads())
+    }
+
+    fn serve_dims(&self) -> Result<ServeDims> {
+        match &self.model {
+            Some(m) => Ok(ServeDims { seq: m.dims.seq, n_classes: m.dims.n_classes }),
+            None => bail!("native backend has no serving model configured"),
+        }
+    }
+
+    fn check_bucket(&self, bucket: usize) -> Result<()> {
+        if self.model.is_none() {
+            bail!("native backend has no serving model configured");
+        }
+        if bucket == 0 {
+            bail!("bucket size 0");
+        }
+        Ok(())
+    }
+
+    fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+        match &self.model {
+            Some(m) => {
+                let vocab = m.dims.vocab;
+                if let Some(&bad) = ids.iter().find(|&&id| id < 0 || id as usize >= vocab) {
+                    bail!("token id {bad} out of range for vocab {vocab}");
+                }
+                Ok(m.forward(&self.disp, ids, mask, bucket))
+            }
+            None => bail!("native backend has no serving model configured"),
+        }
+    }
+
+    fn layer_forward(
+        &self,
+        prec: Precision,
+        bsz: usize,
+        t: usize,
+        h: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let layers = match &self.bench_layers {
+            Some(l) => l,
+            None => bail!("native backend has no bench layers installed"),
+        };
+        let layer = match prec {
+            Precision::F32 => &layers[0],
+            Precision::Int8 => &layers[1],
+            Precision::Int4 => &layers[2],
+        };
+        Ok(layer.forward(&self.disp, h, mask, bsz, t))
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use artifact::{ArtifactBackend, ServeModel};
+
+#[cfg(feature = "xla")]
+mod artifact {
+    use anyhow::{bail, Context, Result};
+    use xla::Literal;
+
+    use super::{Backend, Precision, ServeDims};
+    use crate::bench_support as bs;
+    use crate::runtime::{Engine, HostTensor};
+
+    /// Deployed model for the artifact path: parameters + scales +
+    /// per-layer bit codes, kept as literals so the hot loop never
+    /// re-converts them.
+    pub struct ServeModel {
+        pub params_scales: Vec<Literal>,
+        pub bits: Literal,
+        pub label: String,
+    }
+
+    impl ServeModel {
+        pub fn new(params_scales: Vec<Literal>, bits_f: &[f32], label: &str) -> Result<Self> {
+            Ok(ServeModel {
+                params_scales,
+                bits: HostTensor::f32(&[bits_f.len()], bits_f.to_vec()).to_literal()?,
+                label: label.to_string(),
+            })
+        }
+    }
+
+    /// AOT-artifact backend over the PJRT [`Engine`].
+    pub struct ArtifactBackend<'e> {
+        pub eng: &'e Engine,
+        serve: Option<(ServeModel, ServeDims)>,
+        /// Cached per-precision literal tails for the layer artifacts
+        /// (weights/scales; `h`/`mask` are converted per call).
+        layer_tails: Option<Box<[Vec<Literal>; 3]>>,
+    }
+
+    impl<'e> ArtifactBackend<'e> {
+        pub fn new(eng: &'e Engine) -> Self {
+            ArtifactBackend { eng, serve: None, layer_tails: None }
+        }
+
+        pub fn with_serve_model(mut self, model: ServeModel) -> Result<Self> {
+            let dims = ServeDims {
+                seq: self.eng.manifest.cfg("seq")?,
+                n_classes: self.eng.manifest.cfg("n_classes")?,
+            };
+            self.serve = Some((model, dims));
+            Ok(self)
+        }
+
+        /// Convert the bench-layer weight sets to literals once.
+        pub fn with_bench_weights(mut self, w: &bs::LayerWeights) -> Result<Self> {
+            let to_lits = |v: Vec<HostTensor>| -> Result<Vec<Literal>> {
+                v.iter().map(|t| t.to_literal()).collect()
+            };
+            let tails = Box::new([
+                to_lits(bs::f32_tail(w))?,
+                to_lits(bs::int_tail(w, 8)?)?,
+                to_lits(bs::int_tail(w, 4)?)?,
+            ]);
+            self.layer_tails = Some(tails);
+            Ok(self)
+        }
+
+    }
+
+    impl Backend for ArtifactBackend<'_> {
+        fn name(&self) -> String {
+            match &self.serve {
+                Some((m, _)) => format!("artifact({}, model={})", self.eng.platform(), m.label),
+                None => format!("artifact({})", self.eng.platform()),
+            }
+        }
+
+        fn serve_dims(&self) -> Result<ServeDims> {
+            match &self.serve {
+                Some((_, d)) => Ok(*d),
+                None => bail!("artifact backend has no serving model configured"),
+            }
+        }
+
+        fn check_bucket(&self, bucket: usize) -> Result<()> {
+            self.eng.spec(&format!("serve_fwd_b{bucket}")).map(|_| ())
+        }
+
+        fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+            let (model, dims) = match &self.serve {
+                Some(s) => s,
+                None => bail!("artifact backend has no serving model configured"),
+            };
+            let t = dims.seq;
+            let ids_l = HostTensor::i32(&[bucket, t], ids.to_vec()).to_literal()?;
+            let mask_l = HostTensor::f32(&[bucket, t], mask.to_vec()).to_literal()?;
+            let mut inputs: Vec<&Literal> = model.params_scales.iter().collect();
+            inputs.push(&model.bits);
+            inputs.push(&ids_l);
+            inputs.push(&mask_l);
+            let out = self.eng.execute_raw(&format!("serve_fwd_b{bucket}"), &inputs)?;
+            Ok(HostTensor::from_literal(&out[0])?.as_f32()?.to_vec())
+        }
+
+        fn layer_forward(
+            &self,
+            prec: Precision,
+            bsz: usize,
+            t: usize,
+            h: &[f32],
+            mask: &[f32],
+        ) -> Result<Vec<f32>> {
+            let tails = match &self.layer_tails {
+                Some(t) => t,
+                None => bail!("artifact backend has no bench weights installed"),
+            };
+            let tail = match prec {
+                Precision::F32 => &tails[0],
+                Precision::Int8 => &tails[1],
+                Precision::Int4 => &tails[2],
+            };
+            let name = format!("layer_{}_b{bsz}_t{t}", prec.name());
+            let h_l = HostTensor::f32(&[bsz, t, bs::D], h.to_vec())
+                .to_literal()
+                .context("layer hidden states")?;
+            let mask_l = HostTensor::f32(&[bsz, t], mask.to_vec()).to_literal()?;
+            let mut inputs: Vec<&Literal> = vec![&h_l, &mask_l];
+            inputs.extend(tail.iter());
+            let out = self.eng.execute_raw(&name, &inputs)?;
+            Ok(HostTensor::from_literal(&out[0])?.as_f32()?.to_vec())
+        }
+    }
+}

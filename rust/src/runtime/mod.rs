@@ -1,14 +1,28 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, host tensors.
+//! Runtime layer: execution backends, host tensors, artifact manifest.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): HLO *text* →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Text is the interchange format because
-//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+//! Two backends sit behind the [`Backend`] trait:
+//!
+//!   * [`native`] — pure-Rust quantized forward over [`crate::kernels`]
+//!     (no Python, no XLA; the default build).
+//!   * [`engine`] (feature `xla`) — PJRT client over AOT HLO-text
+//!     artifacts. Pattern (from /opt/xla-example/load_hlo): HLO *text* →
+//!     `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!     `client.compile` → `execute`. Text is the interchange format
+//!     because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//!     protos.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
+pub use backend::{Backend, NativeBackend, Precision, ServeDims};
+#[cfg(feature = "xla")]
+pub use backend::{ArtifactBackend, ServeModel};
+#[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use native::{NativeDims, NativeLayer, NativeModel};
 pub use tensor::{HostData, HostTensor};

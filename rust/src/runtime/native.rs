@@ -1,0 +1,529 @@
+//! Native (pure-Rust) model forward over the quantized GEMM kernels —
+//! the serving path that needs neither Python nor XLA.
+//!
+//! Mirrors `python/compile/model.py`: word+position embeddings with
+//! LayerNorm, `n_layers` transformer encoder layers with the paper's six
+//! quantized matmul sites per layer (activations per-tensor, weights
+//! per-output-channel), fp32 LayerNorm/softmax/GELU, tanh pooler over the
+//! first token, linear classifier. Embeddings and heads are never
+//! quantized (paper §5).
+//!
+//! Numerics are *deployed-kernel* semantics (integer codes, not QAT
+//! fake-quant), exactly the arithmetic `qmatmul_ref` specifies; agreement
+//! with the artifact path is statistical (same distributional contract
+//! the int4-vs-f32 layer test uses), agreement with `qmatmul_ref` is
+//! bit-for-bit.
+
+use crate::kernels::{gemm, Dispatcher, PackedF32, PackedWeights};
+use crate::quant;
+use crate::util::rng::Rng;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Model dimensions for the native path (the artifact path reads these
+/// from the manifest; natively they are explicit).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeDims {
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+}
+
+impl NativeDims {
+    /// The scaled-down TinyBERT preset (`python/compile/config.py`
+    /// `default`).
+    pub fn tiny() -> Self {
+        NativeDims { vocab: 512, seq: 24, n_layers: 4, d_model: 96, n_heads: 4, d_ff: 384, n_classes: 2 }
+    }
+}
+
+enum LinearW {
+    F32(PackedF32),
+    Quant(PackedWeights),
+}
+
+/// A (k, n) projection with bias: packed fp32 or prepacked quantized.
+pub struct Linear {
+    w: LinearW,
+    bias: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Linear {
+    pub fn f32(w: &[f32], k: usize, n: usize, bias: Vec<f32>) -> Self {
+        assert_eq!(bias.len(), n);
+        Linear { w: LinearW::F32(PackedF32::from_rowmajor(w, k, n)), bias, k, n }
+    }
+
+    pub fn quant(w: &[f32], k: usize, n: usize, bias: Vec<f32>, bits: u32) -> Self {
+        assert_eq!(bias.len(), n);
+        Linear { w: LinearW::Quant(PackedWeights::from_f32(w, k, n, bits)), bias, k, n }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match &self.w {
+            LinearW::F32(_) => 32,
+            LinearW::Quant(pw) => pw.bits,
+        }
+    }
+
+    /// Forward from fp32 activations, quantizing them here if needed.
+    pub fn forward(&self, disp: &Dispatcher, x: &[f32], m: usize, act_scale: f32) -> Vec<f32> {
+        let mut out = match &self.w {
+            LinearW::F32(pf) => disp.matmul_f32(x, m, self.k, pf),
+            LinearW::Quant(pw) => {
+                let sx = vec![act_scale; m];
+                disp.qmatmul(x, m, self.k, pw, &sx)
+            }
+        };
+        add_bias(&mut out, &self.bias, m, self.n);
+        out
+    }
+
+    /// Forward from pre-quantized activations (the shared q/k/v site).
+    fn forward_prequant(
+        &self,
+        disp: &Dispatcher,
+        qx: &[i16],
+        rowsums: &[i32],
+        m: usize,
+        sx: &[f32],
+    ) -> Vec<f32> {
+        let pw = match &self.w {
+            LinearW::Quant(pw) => pw,
+            LinearW::F32(_) => panic!("forward_prequant on an fp32 projection"),
+        };
+        let mut out = disp.qmatmul_prequant(qx, rowsums, m, self.k, pw, sx);
+        add_bias(&mut out, &self.bias, m, self.n);
+        out
+    }
+}
+
+fn add_bias(out: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        for c in 0..n {
+            row[c] += bias[c];
+        }
+    }
+}
+
+/// One transformer encoder layer at a fixed precision (32/8/4 bits for
+/// the six matmul sites).
+pub struct NativeLayer {
+    pub d: usize,
+    pub dff: usize,
+    pub heads: usize,
+    pub bits: u32,
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    w1: Linear,
+    w2: Linear,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// Per-tensor activation scales: qkv_in, attn_out_in, ffn1_in,
+    /// ffn2_in (ignored at 32 bits).
+    pub act_scales: [f32; 4],
+}
+
+fn lookup<'a>(
+    tensors: &'a [(String, Vec<usize>, Vec<f32>)],
+    name: &str,
+) -> (&'a [usize], &'a [f32]) {
+    for (n, dims, data) in tensors {
+        if n == name {
+            return (dims, data);
+        }
+    }
+    panic!("layer tensor {name} missing");
+}
+
+impl NativeLayer {
+    /// Build from the named tensor list `bench_support::make_weights`
+    /// produces (wq/bq/.../ln2_b); weight matrices are quantized and
+    /// prepacked here, once.
+    pub fn from_tensors(
+        tensors: &[(String, Vec<usize>, Vec<f32>)],
+        heads: usize,
+        bits: u32,
+        act_scales: [f32; 4],
+    ) -> Self {
+        let (wq_dims, _) = lookup(tensors, "wq");
+        let d = wq_dims[0];
+        let (w1_dims, _) = lookup(tensors, "w1");
+        let dff = w1_dims[1];
+        assert_eq!(d % heads, 0, "n_heads must divide d_model");
+        let lin = |wname: &str, bname: &str, k: usize, n: usize| -> Linear {
+            let (dims, w) = lookup(tensors, wname);
+            assert!(dims.len() == 2 && dims[0] == k && dims[1] == n, "{wname} dims {dims:?}");
+            let (_, b) = lookup(tensors, bname);
+            if bits == 32 {
+                Linear::f32(w, k, n, b.to_vec())
+            } else {
+                Linear::quant(w, k, n, b.to_vec(), bits)
+            }
+        };
+        NativeLayer {
+            d,
+            dff,
+            heads,
+            bits,
+            wq: lin("wq", "bq", d, d),
+            wk: lin("wk", "bk", d, d),
+            wv: lin("wv", "bv", d, d),
+            wo: lin("wo", "bo", d, d),
+            w1: lin("w1", "b1", d, dff),
+            w2: lin("w2", "b2", dff, d),
+            ln1_g: lookup(tensors, "ln1_g").1.to_vec(),
+            ln1_b: lookup(tensors, "ln1_b").1.to_vec(),
+            ln2_g: lookup(tensors, "ln2_g").1.to_vec(),
+            ln2_b: lookup(tensors, "ln2_b").1.to_vec(),
+            act_scales,
+        }
+    }
+
+    /// Encoder layer forward: `h` is `(bsz*t, d)` row-major, `mask` is
+    /// `(bsz*t)` of {0,1}. Returns the new hidden states.
+    pub fn forward(&self, disp: &Dispatcher, h: &[f32], mask: &[f32], bsz: usize, t: usize) -> Vec<f32> {
+        let d = self.d;
+        let m = bsz * t;
+        assert_eq!(h.len(), m * d);
+        assert_eq!(mask.len(), m);
+
+        // q/k/v share one activation-quantization site.
+        let (q, k, v) = if self.bits == 32 {
+            (
+                self.wq.forward(disp, h, m, 0.0),
+                self.wk.forward(disp, h, m, 0.0),
+                self.wv.forward(disp, h, m, 0.0),
+            )
+        } else {
+            let s = self.act_scales[0];
+            let sx = vec![s; m];
+            let qx = gemm::quantize_activations(h, m, d, &sx, self.bits);
+            let rs = gemm::act_row_sums(&qx, m, d);
+            (
+                self.wq.forward_prequant(disp, &qx, &rs, m, &sx),
+                self.wk.forward_prequant(disp, &qx, &rs, m, &sx),
+                self.wv.forward_prequant(disp, &qx, &rs, m, &sx),
+            )
+        };
+
+        let oa = attention(&q, &k, &v, bsz, t, d, self.heads, mask);
+        let attn_out = self.wo.forward(disp, &oa, m, self.act_scales[1]);
+        let mut h1: Vec<f32> = h.iter().zip(attn_out.iter()).map(|(a, b)| a + b).collect();
+        layer_norm(&mut h1, &self.ln1_g, &self.ln1_b, d);
+
+        let mut f = self.w1.forward(disp, &h1, m, self.act_scales[2]);
+        for x in f.iter_mut() {
+            *x = gelu(*x);
+        }
+        let f2 = self.w2.forward(disp, &f, m, self.act_scales[3]);
+        let mut h2: Vec<f32> = h1.iter().zip(f2.iter()).map(|(a, b)| a + b).collect();
+        layer_norm(&mut h2, &self.ln2_g, &self.ln2_b, d);
+        h2
+    }
+
+    /// Packed weight bytes streamed per token — the memory-traffic story.
+    pub fn weight_bytes(&self) -> usize {
+        let lin_bytes = |l: &Linear| match &l.w {
+            LinearW::F32(_) => l.k * l.n * 4,
+            LinearW::Quant(pw) => pw.packed_bytes(),
+        };
+        [&self.wq, &self.wk, &self.wv, &self.wo, &self.w1, &self.w2]
+            .iter()
+            .map(|l| lin_bytes(l))
+            .sum()
+    }
+}
+
+fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bsz: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    mask: &[f32],
+) -> Vec<f32> {
+    let dk = d / heads;
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut out = vec![0f32; bsz * t * d];
+    let mut scores = vec![0f32; t];
+    for b in 0..bsz {
+        for hd in 0..heads {
+            for i in 0..t {
+                let qrow = &q[(b * t + i) * d + hd * dk..][..dk];
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..t {
+                    let krow = &k[(b * t + j) * d + hd * dk..][..dk];
+                    let mut s = 0f32;
+                    for c in 0..dk {
+                        s += qrow[c] * krow[c];
+                    }
+                    let s = s * scale + (1.0 - mask[b * t + j]) * NEG_INF;
+                    scores[j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom;
+                let orow = &mut out[(b * t + i) * d + hd * dk..][..dk];
+                for j in 0..t {
+                    let w = scores[j] * inv;
+                    if w > 0.0 {
+                        let vrow = &v[(b * t + j) * d + hd * dk..][..dk];
+                        for c in 0..dk {
+                            orow[c] += w * vrow[c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm over the last dimension, in place (eps matches the
+/// Python model).
+pub fn layer_norm(h: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    let eps = 1e-12f32;
+    for row in h.chunks_mut(d) {
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (c, x) in row.iter_mut().enumerate() {
+            *x = (*x - mu) * inv * g[c] + b[c];
+        }
+    }
+}
+
+/// erf via Abramowitz–Stegun 7.1.26 (|err| < 1.5e-7 — well under the
+/// quantization noise floor).
+fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0f32 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = ((((1.061405429 * t - 1.453152027) * t + 1.421413741) * t - 0.284496736) * t
+        + 0.254829592)
+        * t;
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Exact-formulation GELU (the Python model uses `approximate=False`).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+/// The 16 named layer tensors (wq/bq/.../ln2_b) in artifact input order,
+/// randomly initialized (N(0, w_scale) matrices, unit LN gains, zero
+/// biases) — the single source of the naming/dims convention that
+/// [`NativeLayer::from_tensors`] consumes; `bench_support::make_weights`
+/// and the tests all build through here.
+pub fn random_layer_tensors(
+    rng: &mut Rng,
+    d: usize,
+    dff: usize,
+    w_scale: f32,
+) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+    let specs: [(&str, Vec<usize>); 16] = [
+        ("wq", vec![d, d]),
+        ("bq", vec![d]),
+        ("wk", vec![d, d]),
+        ("bk", vec![d]),
+        ("wv", vec![d, d]),
+        ("bv", vec![d]),
+        ("wo", vec![d, d]),
+        ("bo", vec![d]),
+        ("w1", vec![d, dff]),
+        ("b1", vec![dff]),
+        ("w2", vec![dff, d]),
+        ("b2", vec![d]),
+        ("ln1_g", vec![d]),
+        ("ln1_b", vec![d]),
+        ("ln2_g", vec![d]),
+        ("ln2_b", vec![d]),
+    ];
+    specs
+        .into_iter()
+        .map(|(name, dims)| {
+            let count: usize = dims.iter().product();
+            let data: Vec<f32> = if name.starts_with('w') && dims.len() == 2 {
+                (0..count).map(|_| rng.normal() as f32 * w_scale).collect()
+            } else if name.ends_with("_g") {
+                vec![1.0; count]
+            } else {
+                vec![0.0; count]
+            };
+            (name.to_string(), dims, data)
+        })
+        .collect()
+}
+
+fn randn(rng: &mut Rng, count: usize, scale: f32) -> Vec<f32> {
+    (0..count).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// The full deployed encoder.
+pub struct NativeModel {
+    pub dims: NativeDims,
+    pub bits: Vec<u32>,
+    emb_word: Vec<f32>,
+    emb_pos: Vec<f32>,
+    emb_ln_g: Vec<f32>,
+    emb_ln_b: Vec<f32>,
+    layers: Vec<NativeLayer>,
+    pool: Linear,
+    cls: Linear,
+}
+
+impl NativeModel {
+    /// Random-init deployed model (the serving demo / batching benches —
+    /// real weights would come from a QAT checkpoint through the same
+    /// constructor path as `NativeLayer::from_tensors`).
+    pub fn random(dims: NativeDims, bits: &[u32], seed: u64) -> Self {
+        assert_eq!(bits.len(), dims.n_layers);
+        let mut rng = Rng::new(seed);
+        let (d, dff) = (dims.d_model, dims.d_ff);
+        let emb_word = randn(&mut rng, dims.vocab * d, 0.02);
+        let emb_pos = randn(&mut rng, dims.seq * d, 0.02);
+        let layers = (0..dims.n_layers)
+            .map(|l| {
+                let b = bits[l];
+                let lmax = quant::qbounds(if b == 32 { 8 } else { b }).1;
+                let act = 6.0 / lmax;
+                let tensors = random_layer_tensors(&mut rng, d, dff, 0.02);
+                NativeLayer::from_tensors(&tensors, dims.n_heads, b, [act; 4])
+            })
+            .collect();
+        let pool_w = randn(&mut rng, d * d, 0.02);
+        let cls_w = randn(&mut rng, d * dims.n_classes, 0.02);
+        NativeModel {
+            dims,
+            bits: bits.to_vec(),
+            emb_word,
+            emb_pos,
+            emb_ln_g: vec![1.0; d],
+            emb_ln_b: vec![0.0; d],
+            layers,
+            pool: Linear::f32(&pool_w, d, d, vec![0.0; d]),
+            cls: Linear::f32(&cls_w, d, dims.n_classes, vec![0.0; dims.n_classes]),
+        }
+    }
+
+    /// Forward a padded `(bsz, seq)` batch to `(bsz, n_classes)` logits.
+    pub fn forward(&self, disp: &Dispatcher, ids: &[i32], mask: &[f32], bsz: usize) -> Vec<f32> {
+        let (d, t) = (self.dims.d_model, self.dims.seq);
+        assert_eq!(ids.len(), bsz * t);
+        assert_eq!(mask.len(), bsz * t);
+        let mut h = vec![0f32; bsz * t * d];
+        for (r, &id) in ids.iter().enumerate() {
+            let tok = (id as usize).min(self.dims.vocab - 1);
+            let j = r % t;
+            let row = &mut h[r * d..(r + 1) * d];
+            let w = &self.emb_word[tok * d..(tok + 1) * d];
+            let p = &self.emb_pos[j * d..(j + 1) * d];
+            for c in 0..d {
+                row[c] = w[c] + p[c];
+            }
+        }
+        layer_norm(&mut h, &self.emb_ln_g, &self.emb_ln_b, d);
+        for layer in &self.layers {
+            h = layer.forward(disp, &h, mask, bsz, t);
+        }
+        // tanh pooler over the first token of each sequence.
+        let mut first = vec![0f32; bsz * d];
+        for b in 0..bsz {
+            first[b * d..(b + 1) * d].copy_from_slice(&h[b * t * d..b * t * d + d]);
+        }
+        let mut pooled = self.pool.forward(disp, &first, bsz, 0.0);
+        for x in pooled.iter_mut() {
+            *x = x.tanh();
+        }
+        self.cls.forward(disp, &pooled, bsz, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_and_gelu_sanity() {
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(1.0) - 0.842_700_8).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.842_700_8).abs() < 1e-5);
+        assert!((gelu(0.0)).abs() < 1e-6);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        assert!((gelu(1.0) - 0.841_345).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut h = vec![1.0f32, 2.0, 3.0, 4.0, -5.0, 0.0, 5.0, 10.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layer_norm(&mut h, &g, &b, 4);
+        for row in h.chunks(4) {
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5, "mu={mu}");
+            assert!((var - 1.0).abs() < 1e-4, "var={var}");
+        }
+    }
+
+    #[test]
+    fn model_forward_shapes_and_finiteness() {
+        let dims = NativeDims { vocab: 64, seq: 8, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 };
+        let disp = Dispatcher::with_threads(2);
+        for bits in [vec![32u32, 32], vec![8, 8], vec![8, 4]] {
+            let model = NativeModel::random(dims, &bits, 3);
+            let bsz = 3;
+            let ids: Vec<i32> = (0..bsz * dims.seq).map(|i| (i % dims.vocab) as i32).collect();
+            let mut mask = vec![1.0f32; bsz * dims.seq];
+            // one fully padded row must not produce NaNs
+            for v in mask[2 * dims.seq..3 * dims.seq].iter_mut() {
+                *v = 0.0;
+            }
+            let logits = model.forward(&disp, &ids, &mask, bsz);
+            assert_eq!(logits.len(), bsz * dims.n_classes);
+            assert!(logits.iter().all(|x| x.is_finite()), "bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn quantized_layer_tracks_f32_layer() {
+        // Same weights at f32 vs int8: outputs should agree to quantization
+        // noise (the artifact-path analogue of layer_artifacts_int4_close_to_f32).
+        let mut rng = Rng::new(11);
+        let (d, dff, heads, bsz, t) = (32usize, 64usize, 4usize, 2usize, 6usize);
+        let tensors = random_layer_tensors(&mut rng, d, dff, 0.05);
+        let disp = Dispatcher::with_threads(1);
+        let act = 6.0 / quant::qbounds(8).1;
+        let l32 = NativeLayer::from_tensors(&tensors, heads, 32, [act; 4]);
+        let l8 = NativeLayer::from_tensors(&tensors, heads, 8, [act; 4]);
+        let h: Vec<f32> = (0..bsz * t * d).map(|_| rng.normal() as f32).collect();
+        let mask = vec![1.0f32; bsz * t];
+        let y32 = l32.forward(&disp, &h, &mask, bsz, t);
+        let y8 = l8.forward(&disp, &h, &mask, bsz, t);
+        let mean_abs: f32 = y32.iter().map(|x| x.abs()).sum::<f32>() / y32.len() as f32;
+        let err: f32 =
+            y32.iter().zip(y8.iter()).map(|(a, b)| (a - b).abs()).sum::<f32>() / y32.len() as f32;
+        assert!(y8.iter().all(|x| x.is_finite()));
+        assert!(err / mean_abs < 0.5, "rel err {}", err / mean_abs);
+    }
+}

@@ -1,11 +1,14 @@
-//! Host-side tensors and conversion to/from `xla::Literal`.
+//! Host-side tensors (and, under the `xla` feature, conversion to/from
+//! `xla::Literal`).
 //!
 //! `HostTensor` is the lingua franca between the coordinator (which builds
-//! batches, schedules, flags) and the PJRT runtime. Conversions go through
-//! `Literal::create_from_shape_and_untyped_data`, which handles every
-//! dtype uniformly (including i8 weight codes).
+//! batches, schedules, flags) and whichever backend executes. Literal
+//! conversions go through `Literal::create_from_shape_and_untyped_data`,
+//! which handles every dtype uniformly (including i8 weight codes); the
+//! native backend consumes the typed slices directly.
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::{ElementType, Literal};
 
 use super::manifest::{DType, TensorSpec};
@@ -96,6 +99,7 @@ impl HostTensor {
         Ok(())
     }
 
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<Literal> {
         let (ty, bytes): (ElementType, &[u8]) = match &self.data {
             HostData::F32(v) => (ElementType::F32, bytemuck_f32(v)),
@@ -105,6 +109,7 @@ impl HostTensor {
         Ok(Literal::create_from_shape_and_untyped_data(ty, &self.dims, bytes)?)
     }
 
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -118,14 +123,17 @@ impl HostTensor {
     }
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_i8(v: &[i8]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
 }
@@ -134,6 +142,7 @@ fn bytemuck_i8(v: &[i8]) -> &[u8] {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
@@ -143,6 +152,7 @@ mod tests {
         assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_i32_i8() {
         let t = HostTensor::i32(&[4], vec![-1, 0, 7, 2_000_000_000]);

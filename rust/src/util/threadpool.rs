@@ -15,6 +15,7 @@ pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
     in_flight: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -23,10 +24,12 @@ impl ThreadPool {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let in_flight = Arc::clone(&in_flight);
+                let panicked = Arc::clone(&panicked);
                 thread::Builder::new()
                     .name(format!("mkq-pool-{i}"))
                     .spawn(move || loop {
@@ -36,7 +39,16 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                // Contain unwinds so a panicking job can
+                                // neither kill the worker nor leave
+                                // in_flight stuck (which would hang
+                                // wait_idle forever); scoped() re-raises.
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if r.is_err() {
+                                    panicked.fetch_add(1, Ordering::SeqCst);
+                                }
                                 in_flight.fetch_sub(1, Ordering::SeqCst);
                             }
                             Err(_) => break,
@@ -45,7 +57,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { workers, tx: Some(tx), in_flight }
+        ThreadPool { workers, tx: Some(tx), in_flight, panicked }
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -57,6 +69,57 @@ impl ThreadPool {
     pub fn wait_idle(&self) {
         while self.in_flight.load(Ordering::SeqCst) != 0 {
             thread::yield_now();
+        }
+    }
+
+    /// Number of jobs that panicked since the last call (the counter
+    /// resets). [`execute`](Self::execute)-path jobs have their unwinds
+    /// contained in the worker, so callers that need to know must poll
+    /// this; [`scoped`](Self::scoped) checks it automatically.
+    pub fn take_panics(&self) -> usize {
+        self.panicked.swap(0, Ordering::SeqCst)
+    }
+
+    /// Run a batch of borrowing jobs to completion on the pool — the
+    /// scoped counterpart of [`execute`](Self::execute), used by the
+    /// kernels' row-block parallelism so GEMM chunks can borrow the
+    /// caller's activation/output slices instead of copying them.
+    ///
+    /// The last job runs inline on the caller thread (it would otherwise
+    /// just spin in `wait_idle`), the rest go to the workers. A panic in
+    /// any job is re-raised here, after every job has finished.
+    pub fn scoped<'env>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        /// Blocks until the pool drains, even if the inline job unwinds —
+        /// part of the safety argument below.
+        struct WaitGuard<'a>(&'a ThreadPool);
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                self.0.wait_idle();
+            }
+        }
+
+        // Discard panic counts left over from earlier execute()-path jobs
+        // so they are not blamed on this batch (those are surfaced to
+        // interested callers via take_panics()).
+        self.take_panics();
+        let last = jobs.pop();
+        let guard = WaitGuard(self);
+        for job in jobs {
+            // SAFETY: the transmute only erases the `'env` lifetime bound.
+            // No job outlives `'env`: this function does not return (or
+            // unwind) until every pooled job has completed — workers
+            // contain job unwinds via catch_unwind and always decrement
+            // in_flight, and `guard` runs wait_idle even when the inline
+            // job below panics.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            self.execute(job);
+        }
+        if let Some(job) = last {
+            job();
+        }
+        drop(guard);
+        if self.take_panics() > 0 {
+            panic!("a pooled job panicked (see worker thread output)");
         }
     }
 }
@@ -87,6 +150,49 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_stack_data() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..100).collect();
+        let mut out = vec![0u64; 100];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = &mut out[..];
+            for chunk_idx in 0..4 {
+                let tmp = rest;
+                let (chunk, tail) = tmp.split_at_mut(25);
+                rest = tail;
+                let src = &input[chunk_idx * 25..(chunk_idx + 1) * 25];
+                jobs.push(Box::new(move || {
+                    for (dst, &s) in chunk.iter_mut().zip(src) {
+                        *dst = s * 2;
+                    }
+                }));
+            }
+            pool.scoped(jobs);
+        }
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_repropagates_job_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| panic!("boom")), Box::new(|| {})];
+            pool.scoped(jobs);
+        }));
+        assert!(result.is_err(), "scoped must re-raise pooled panics");
+        // the worker survived the unwind and the pool still runs jobs
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! Integration tests over the real AOT artifacts (run `make artifacts`
-//! first). These exercise the full L3→L2→L1 stack: manifest parsing, HLO
+//! first; build with `--features xla` against a real PJRT binding).
+//! These exercise the full L3→L2→L1 stack: manifest parsing, HLO
 //! compilation on the PJRT CPU client, and numeric agreement between the
-//! Rust quant mirror and the Pallas kernels.
+//! Rust quant mirror and the Pallas kernels. The native backend's
+//! equivalents live in `tests/kernels.rs` and run on the default feature
+//! set.
+
+#![cfg(feature = "xla")]
 
 use mkq::coordinator::{bits_last_n_int4, QatConfig, Trainer};
 use mkq::data::{Suite, TaskKind};

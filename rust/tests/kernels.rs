@@ -1,0 +1,140 @@
+//! Native-backend integration tests: property tests cross-checking the
+//! blocked int4/int8 GEMM against the scalar `qmatmul_ref` oracle
+//! bit-for-bit over random shapes, scales, and both bit widths, the
+//! nibble-pack edge cases, and the serving stack over the native model.
+//! Runs on the default (no-xla) feature set — this is tier-1 coverage.
+
+use mkq::kernels::{gemm, Dispatcher, PackedWeights, NR};
+use mkq::quant;
+use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+use mkq::util::proptest::{check, ensure, PropConfig};
+use mkq::util::rng::Rng;
+use mkq::util::threadpool::ThreadPool;
+
+fn random_case(
+    rng: &mut Rng,
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> (Vec<f32>, Vec<i8>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * (0.5 + rng.f32())).collect();
+    let codes = quant::random_codes(rng, k * n, bits);
+    let sx: Vec<f32> = (0..m).map(|_| 0.01 + rng.f32() * 0.3).collect();
+    let sw: Vec<f32> = (0..n).map(|_| 0.005 + rng.f32() * 0.05).collect();
+    (x, codes, sx, sw)
+}
+
+#[test]
+fn native_gemm_matches_oracle_bit_for_bit() {
+    // Random shapes (k kept even for the int4 packer, and small enough
+    // that the oracle's f32 accumulation stays exact — see gemm.rs).
+    check("native-gemm-vs-oracle", PropConfig { cases: 48, ..Default::default() }, |rng, size| {
+        let m = 1 + rng.range(0, 2 * size.max(1));
+        let k = 2 * (1 + rng.range(0, size.max(1)));
+        let n = 1 + rng.range(0, 2 * size.max(1));
+        for bits in [4u32, 8] {
+            let (x, codes, sx, sw) = random_case(rng, m, k, n, bits);
+            let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+            let pw = PackedWeights::from_codes(&codes, k, n, sw.clone(), bits);
+
+            let qx = gemm::quantize_activations(&x, m, k, &sx, bits);
+            let rs = gemm::act_row_sums(&qx, m, k);
+            let mut serial = vec![0f32; m * n];
+            gemm::gemm_serial(&qx, &rs, m, k, &pw, &sx, &mut serial);
+            ensure(serial == want, format!("serial != oracle (m={m} k={k} n={n} bits={bits})"))?;
+
+            let pool = ThreadPool::new(2);
+            let mut par = vec![0f32; m * n];
+            gemm::gemm_parallel(&qx, &rs, m, k, &pw, &sx, &mut par, &pool, 3);
+            ensure(par == want, format!("parallel != oracle (m={m} k={k} n={n} bits={bits})"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatcher_is_kernel_invariant() {
+    // Whatever variant the dispatcher picks, results are identical.
+    let mut rng = Rng::new(77);
+    let (m, k, n) = (37usize, 48usize, 33usize);
+    for bits in [4u32, 8] {
+        let (x, codes, sx, sw) = random_case(&mut rng, m, k, n, bits);
+        let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+        let pw = PackedWeights::from_codes(&codes, k, n, sw, bits);
+        for threads in [1usize, 2, 8] {
+            let d = Dispatcher::with_threads(threads);
+            assert_eq!(d.qmatmul(&x, m, k, &pw, &sx), want, "threads={threads} bits={bits}");
+        }
+    }
+}
+
+#[test]
+fn nibble_pack_edge_cases() {
+    // Panel-boundary widths around NR, plus the pack_int4_k roundtrip
+    // shapes the artifact path relies on.
+    let mut rng = Rng::new(5);
+    for &n in &[1usize, NR - 1, NR, NR + 1, 2 * NR, 2 * NR + 3] {
+        for &k in &[2usize, 4, 10] {
+            let codes: Vec<i8> =
+                (0..k * n).map(|_| (rng.range(0, 16) as i32 - 7) as i8).collect();
+            let pw = PackedWeights::from_codes(&codes, k, n, vec![1.0; n], 4);
+            assert_eq!(pw.unpack_codes(), codes, "panel roundtrip k={k} n={n}");
+
+            let packed = quant::pack_int4_k(&codes, k, n);
+            assert_eq!(quant::unpack_int4_k(&packed, k, n), codes, "K-pack roundtrip k={k} n={n}");
+        }
+    }
+    // extreme codes in every nibble position
+    let codes = vec![-7i8, 8, 8, -7, 0, 8, -7, 0];
+    let pw = PackedWeights::from_codes(&codes, 4, 2, vec![1.0; 2], 4);
+    assert_eq!(pw.unpack_codes(), codes);
+}
+
+#[test]
+fn prequant_sharing_equals_fresh_quantization() {
+    // The q/k/v fan-out path (quantize once, three matmuls) must equal
+    // three independent qmatmul calls.
+    let mut rng = Rng::new(13);
+    let (m, k, n) = (11usize, 24usize, 9usize);
+    let (x, codes, sx, sw) = random_case(&mut rng, m, k, n, 8);
+    let pw = PackedWeights::from_codes(&codes, k, n, sw, 8);
+    let d = Dispatcher::with_threads(2);
+    let direct = d.qmatmul(&x, m, k, &pw, &sx);
+    let qx = gemm::quantize_activations(&x, m, k, &sx, 8);
+    let rs = gemm::act_row_sums(&qx, m, k);
+    let shared = d.qmatmul_prequant(&qx, &rs, m, k, &pw, &sx);
+    assert_eq!(direct, shared);
+}
+
+#[test]
+fn serving_stack_end_to_end_native() {
+    use mkq::coordinator::{Server, ServerConfig};
+    let dims = NativeDims { vocab: 96, seq: 12, n_layers: 2, d_model: 24, n_heads: 3, d_ff: 48, n_classes: 3 };
+    let backend = NativeBackend::with_model(NativeModel::random(dims, &[8, 4], 21));
+    let mut server = Server::new(
+        &backend,
+        ServerConfig { buckets: vec![2, 4], batch_window: std::time::Duration::ZERO },
+    )
+    .unwrap();
+    let mut rng = Rng::new(2);
+    for _ in 0..9 {
+        let ids: Vec<i32> = (0..dims.seq).map(|_| rng.range(0, dims.vocab) as i32).collect();
+        let mut mask = vec![1.0f32; dims.seq];
+        let valid = rng.range(1, dims.seq);
+        for v in mask[valid..].iter_mut() {
+            *v = 0.0;
+        }
+        server.submit(ids, mask).unwrap();
+    }
+    let mut got = server.drain().unwrap();
+    assert_eq!(got.len(), 9);
+    got.sort_by_key(|r| r.id);
+    for r in &got {
+        assert_eq!(r.logits.len(), dims.n_classes);
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+    }
+    let summary = server.summary();
+    assert_eq!(summary.served, 9);
+    assert!(summary.batches >= 3); // buckets of at most 4
+}
