@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_kernels.json files and fail on per-bucket regressions.
+
+Usage: bench_diff.py BASELINE CURRENT [--max-regress 0.20] [--min-us 20]
+
+Compares the per-kernel timing buckets of the current run against the
+previous run's artifact. A bucket regresses when its best-observed time
+(`min_us` — the least noisy statistic on shared CI runners) grows by more
+than --max-regress relative to the baseline. Buckets faster than --min-us
+in the baseline are skipped (timer noise dominates), as are buckets that
+exist on only one side (kernels come and go across PRs).
+
+Exit codes: 0 ok / baseline missing (first run), 1 regression found,
+2 malformed input.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_buckets(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("kernels", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="fail when min_us grows more than this fraction (default 0.20)")
+    ap.add_argument("--min-us", type=float, default=20.0,
+                    help="skip buckets whose baseline min_us is below this (noise floor)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench-diff: no baseline at {args.baseline} (first run?) — skipping gate")
+        return 0
+
+    try:
+        base = load_buckets(args.baseline)
+        cur = load_buckets(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench-diff: cannot parse inputs: {e}", file=sys.stderr)
+        return 2
+
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print("bench-diff: no shared kernel buckets — skipping gate")
+        return 0
+
+    regressions = []
+    print(f"bench-diff: {len(shared)} shared buckets "
+          f"(gate: >{args.max_regress:.0%} on min_us, noise floor {args.min_us}us)")
+    for name in shared:
+        b, c = base[name]["min_us"], cur[name]["min_us"]
+        if b < args.min_us:
+            continue
+        ratio = c / b - 1.0
+        flag = ""
+        if ratio > args.max_regress:
+            regressions.append((name, b, c, ratio))
+            flag = "  <-- REGRESSION"
+        print(f"  {name:<48} {b:>10.1f}us -> {c:>10.1f}us  {ratio:+7.1%}{flag}")
+
+    if regressions:
+        print(f"\nbench-diff: {len(regressions)} bucket(s) regressed "
+              f"more than {args.max_regress:.0%}:", file=sys.stderr)
+        for name, b, c, ratio in regressions:
+            print(f"  {name}: {b:.1f}us -> {c:.1f}us ({ratio:+.1%})", file=sys.stderr)
+        return 1
+    print("bench-diff: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

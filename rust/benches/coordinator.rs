@@ -49,6 +49,19 @@ fn main() {
     bench.report("quantize 768x768 per-channel int4", || {
         let _ = quant::quantize_weight_per_channel(&w, 768, 768, 4);
     });
+    // per-token activation scaling — the serving-site path (scales from
+    // row maxes + quantize + row sums) that runs before every quantized
+    // matmul; must stay negligible next to the GEMM itself.
+    {
+        use mkq::kernels::gemm;
+        let (m, k) = (128usize, 768usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        bench.report("per-token scales + quantize + rowsums 128x768 int4", || {
+            let sx = gemm::per_token_scales(&x, m, k, 4, 0.05);
+            let qx = gemm::quantize_activations(&x, m, k, &sx, 4);
+            let _ = gemm::act_row_sums(&qx, m, k);
+        });
+    }
     let (codes, _) = quant::quantize_weight_per_channel(&w, 768, 768, 4);
     bench.report("pack_int4_k 768x768", || {
         let _ = quant::pack_int4_k(&codes, 768, 768);

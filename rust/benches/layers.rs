@@ -1,15 +1,18 @@
 //! `cargo bench --bench layers`: the native-kernel microbenches (vs the
-//! scalar `qmatmul_ref` oracle), the prepack/quantizer costs, per-layer
-//! latency across precisions through the [`Backend`] trait — native
-//! always, AOT artifacts side by side when built with `--features xla` —
-//! and a `BENCH_kernels.json` dump (mean/p50/σ per kernel) so the perf
-//! trajectory is tracked across PRs.
+//! scalar `qmatmul_ref` oracle), every dispatchable kernel variant side
+//! by side (scalar blocked vs AVX2/NEON SIMD, serial vs row-block
+//! parallel, after a bit-for-bit gate), the prepack/quantizer costs,
+//! per-layer latency across precisions through the [`Backend`] trait —
+//! native always, AOT artifacts side by side when built with
+//! `--features xla` — and a `BENCH_kernels.json` dump (mean/p50/σ per
+//! kernel) so the perf trajectory is tracked across PRs (CI diffs it
+//! against the previous run and fails on >20% regressions).
 //!
 //! Flags (after `--`): `--iters N` (default 20), `--ref-iters N` (3),
 //! `--quick` (small shapes), `--out PATH` (default BENCH_kernels.json).
 
 use mkq::bench_support as bs;
-use mkq::kernels::{Dispatcher, PackedWeights};
+use mkq::kernels::{Dispatcher, KernelKind, PackedWeights};
 use mkq::quant;
 use mkq::runtime::{Backend, NativeBackend, Precision};
 use mkq::util::benchkit::{Bench, BenchResult};
@@ -36,7 +39,8 @@ fn main() {
     let ref_bench = Bench::new(1, ref_iters.max(1));
     let mut rec = Records { rows: vec![] };
 
-    let disp = Dispatcher::new();
+    let mut disp = Dispatcher::new();
+    disp.autotune();
     println!("{}", disp.describe());
 
     // ---- native GEMM vs the scalar oracle (acceptance shape) ------------
@@ -67,6 +71,54 @@ fn main() {
         let sp = rr.mean_us / rn.mean_us;
         println!("  -> int{bits} speedup vs scalar ref: {sp:.1}x (bit-for-bit equal)");
         speedups.push((format!("int{bits}_vs_ref"), sp));
+    }
+
+    // ---- kernel variants side by side (SIMD vs scalar, serial vs parallel)
+    // The acceptance shape family: m=128 rows at BERT-base K widths. Every
+    // dispatchable variant is timed into its own BENCH_kernels.json bucket
+    // after a bit-for-bit gate against the blocked kernel's output.
+    let variant_shapes: &[(usize, usize, usize)] =
+        if quick { &[(128, 768, 768)] } else { &[(128, 768, 768), (128, 3072, 768)] };
+    for &(vm, vk, vn) in variant_shapes {
+        println!("\n== kernel variants ({vm}x{vk}x{vn}) ==");
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..vm * vk).map(|_| rng.normal() as f32).collect();
+        let sx: Vec<f32> = (0..vm).map(|_| 0.05 + rng.f32() * 0.1).collect();
+        for bits in [8u32, 4] {
+            let codes = quant::random_codes(&mut rng, vk * vn, bits);
+            let sw: Vec<f32> = (0..vn).map(|_| 0.01 + rng.f32() * 0.02).collect();
+            let pw = PackedWeights::from_codes(&codes, vk, vn, sw, bits);
+            let want = Dispatcher::forced(disp.threads(), KernelKind::Blocked)
+                .qmatmul(&x, vm, vk, &pw, &sx);
+            let mut blocked_mean = f64::NAN;
+            for kind in KernelKind::ALL {
+                // Reference re-unpacks panels per call — a correctness
+                // baseline, not a timing contender. Unsupported SIMD kinds
+                // would just re-time the scalar fallback.
+                if kind == KernelKind::Reference || !kind.supported() {
+                    continue;
+                }
+                let d = Dispatcher::forced(disp.threads(), kind);
+                let got = d.qmatmul(&x, vm, vk, &pw, &sx);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} int{bits} disagrees with blocked (bit-for-bit gate)",
+                    kind.name()
+                );
+                let r = bench.report(&format!("{} int{bits} {vm}x{vk}x{vn}", kind.name()), || {
+                    let _ = std::hint::black_box(d.qmatmul(&x, vm, vk, &pw, &sx));
+                });
+                rec.push(&format!("kernel_{}_int{bits}_m{vm}_k{vk}_n{vn}", kind.name()), r);
+                if kind == KernelKind::Blocked {
+                    blocked_mean = r.mean_us;
+                } else if !kind.is_parallel() && blocked_mean.is_finite() {
+                    let sp = blocked_mean / r.mean_us;
+                    println!("  -> int{bits} {} vs blocked: {sp:.2}x", kind.name());
+                    speedups.push((format!("int{bits}_{}_vs_blocked_k{vk}", kind.name()), sp));
+                }
+            }
+        }
     }
 
     // ---- quantizer traversal fix: row-major vs column-major -------------
@@ -108,6 +160,7 @@ fn main() {
     let mut native = NativeBackend::new();
     let (l32, l8, l4) = bs::native_bench_layers(&weights);
     native.set_bench_layers(l32, l8, l4);
+    native.autotune();
     let layer_buckets: &[(usize, usize)] =
         if quick { &[(16, 28)] } else { &[(16, 28), (64, 27)] };
     bench_layers(&native, &bench, layer_buckets, &mut rec);

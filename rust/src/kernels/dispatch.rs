@@ -1,34 +1,41 @@
 //! Runtime kernel dispatch.
 //!
 //! One [`Dispatcher`] is built per backend at model-load time. For every
-//! GEMM call it selects a kernel variant from the problem shape and the
-//! machine (`available_parallelism`), so the same code path serves tiny
-//! eval batches and full serving buckets:
+//! GEMM call it selects a kernel variant from the problem shape, the
+//! machine (`available_parallelism` + SIMD feature detection), and the
+//! recorded [`Tuning`], so the same code path serves tiny eval batches
+//! and full serving buckets:
 //!
-//!   * `Reference`       — the scalar column-strided oracle loop
-//!                          (`qmatmul_ref` structure). A *correctness*
-//!                          baseline for numeric debugging: it re-unpacks
-//!                          the packed panels on every call, so don't time
-//!                          it (the benches time `qmatmul_ref` directly
-//!                          over row-major codes instead).
-//!   * `Blocked`         — single-thread cache-tiled/register-blocked
-//!                          microkernel; picked for small problems where
-//!                          fork/join overhead dominates.
-//!   * `BlockedParallel` — row-block fan-out over the shared
-//!                          [`ThreadPool`]; picked when `m*k*n` clears
-//!                          [`PARALLEL_MACS_THRESHOLD`].
+//! | kind               | body                          | picked when |
+//! |--------------------|-------------------------------|-------------|
+//! | `Reference`        | scalar column-strided oracle  | forced only (correctness debugging; re-unpacks panels per call — don't time it) |
+//! | `Blocked`          | scalar cache-tiled `MR x NR`  | no SIMD on this machine, small problems |
+//! | `BlockedParallel`  | row-block fan-out of Blocked  | no SIMD, MACs ≥ parallel threshold |
+//! | `Avx2`             | `_mm256_madd_epi16` microkernel ([`super::simd`]) | x86_64 with AVX2, small problems |
+//! | `Avx2Parallel`     | row-block fan-out of Avx2     | AVX2, MACs ≥ parallel threshold |
+//! | `Neon`             | `vmlal_s16` microkernel       | aarch64, small problems |
+//! | `NeonParallel`     | row-block fan-out of Neon     | aarch64, MACs ≥ parallel threshold |
 //!
-//! Env overrides (serving ops knobs): `MKQ_KERNEL=reference|blocked|parallel`
-//! forces a variant, `MKQ_THREADS=N` caps the pool.
+//! Every variant obeys the same i32-accumulation contract, so selection
+//! never changes results — only latency.
+//!
+//! Env overrides (serving ops knobs):
+//! `MKQ_KERNEL=reference|blocked|parallel|avx2|avx2-parallel|neon|neon-parallel|simd|simd-parallel`
+//! forces a variant (unsupported picks degrade to the scalar blocked
+//! kernels with a warning — never an illegal instruction),
+//! `MKQ_THREADS=N` caps the pool, `MKQ_AUTOTUNE=0` skips the load-time
+//! microbenchmark ([`Dispatcher::autotune`]) for deterministic CI.
 
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::gemm;
 use super::pack::{PackedF32, PackedWeights};
+use super::simd;
 
 /// Below this many multiply-accumulates the fork/join cost of the pool
-/// outweighs the parallel win (measured on the layers bench; revisit with
-/// the autotuning lever in ROADMAP).
+/// outweighs the parallel win (measured on the layers bench; the
+/// load-time [`Dispatcher::autotune`] re-measures it per machine).
 pub const PARALLEL_MACS_THRESHOLD: usize = 1 << 20;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,14 +43,114 @@ pub enum KernelKind {
     Reference,
     Blocked,
     BlockedParallel,
+    Avx2,
+    Avx2Parallel,
+    Neon,
+    NeonParallel,
 }
 
 impl KernelKind {
+    /// Every variant, serial kinds before their parallel twins.
+    pub const ALL: [KernelKind; 7] = [
+        KernelKind::Reference,
+        KernelKind::Blocked,
+        KernelKind::BlockedParallel,
+        KernelKind::Avx2,
+        KernelKind::Avx2Parallel,
+        KernelKind::Neon,
+        KernelKind::NeonParallel,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Reference => "reference",
             KernelKind::Blocked => "blocked",
             KernelKind::BlockedParallel => "blocked-parallel",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Avx2Parallel => "avx2-parallel",
+            KernelKind::Neon => "neon",
+            KernelKind::NeonParallel => "neon-parallel",
+        }
+    }
+
+    /// Parse an `MKQ_KERNEL` value. `simd`/`simd-parallel` resolve to the
+    /// best SIMD kind on this machine (`None` when there is none — the
+    /// caller warns and falls back to auto selection).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "reference" => Some(KernelKind::Reference),
+            "blocked" => Some(KernelKind::Blocked),
+            "parallel" | "blocked-parallel" => Some(KernelKind::BlockedParallel),
+            "avx2" => Some(KernelKind::Avx2),
+            "avx2-parallel" => Some(KernelKind::Avx2Parallel),
+            "neon" => Some(KernelKind::Neon),
+            "neon-parallel" => Some(KernelKind::NeonParallel),
+            "simd" => simd::best(),
+            "simd-parallel" => simd::best().map(KernelKind::parallel_variant),
+            _ => None,
+        }
+    }
+
+    pub fn is_parallel(self) -> bool {
+        matches!(
+            self,
+            KernelKind::BlockedParallel | KernelKind::Avx2Parallel | KernelKind::NeonParallel
+        )
+    }
+
+    /// The row-block parallel twin of a serial kind (identity for
+    /// `Reference` and for kinds that are already parallel).
+    pub fn parallel_variant(self) -> KernelKind {
+        match self {
+            KernelKind::Blocked => KernelKind::BlockedParallel,
+            KernelKind::Avx2 => KernelKind::Avx2Parallel,
+            KernelKind::Neon => KernelKind::NeonParallel,
+            other => other,
+        }
+    }
+
+    /// The serial twin of a parallel kind (identity otherwise).
+    pub fn serial_variant(self) -> KernelKind {
+        match self {
+            KernelKind::BlockedParallel => KernelKind::Blocked,
+            KernelKind::Avx2Parallel => KernelKind::Avx2,
+            KernelKind::NeonParallel => KernelKind::Neon,
+            other => other,
+        }
+    }
+
+    /// Can this variant actually run on this machine?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelKind::Reference | KernelKind::Blocked | KernelKind::BlockedParallel => true,
+            KernelKind::Avx2 | KernelKind::Avx2Parallel => simd::avx2_available(),
+            KernelKind::Neon | KernelKind::NeonParallel => simd::neon_available(),
+        }
+    }
+}
+
+/// Machine-specific selection parameters, either the static defaults or
+/// the result of the load-time [`Dispatcher::autotune`] microbenchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Tuning {
+    /// MACs above which row-block parallelism beats fork/join overhead.
+    pub parallel_macs_threshold: usize,
+    /// MACs above which the SIMD kernel is preferred over scalar blocked
+    /// (`0` = always when available, `usize::MAX` = never).
+    pub simd_macs_threshold: usize,
+    /// Best SIMD serial kernel on this machine (`None` = scalar only).
+    pub simd: Option<KernelKind>,
+    /// Whether [`Dispatcher::autotune`] produced these numbers.
+    pub autotuned: bool,
+}
+
+impl Default for Tuning {
+    fn default() -> Self {
+        Tuning {
+            parallel_macs_threshold: PARALLEL_MACS_THRESHOLD,
+            simd_macs_threshold: 0,
+            simd: simd::best(),
+            autotuned: false,
         }
     }
 }
@@ -52,6 +159,7 @@ pub struct Dispatcher {
     threads: usize,
     pool: Option<ThreadPool>,
     force: Option<KernelKind>,
+    tuning: Tuning,
 }
 
 impl Default for Dispatcher {
@@ -73,17 +181,24 @@ impl Dispatcher {
             Err(_) => None,
         }
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
-        let force = match std::env::var("MKQ_KERNEL").as_deref() {
-            Ok("reference") => Some(KernelKind::Reference),
-            Ok("blocked") => Some(KernelKind::Blocked),
-            Ok("parallel") | Ok("blocked-parallel") => Some(KernelKind::BlockedParallel),
-            Ok(other) => {
-                eprintln!(
-                    "warning: ignoring MKQ_KERNEL={other:?} \
-                     (want reference|blocked|parallel)"
-                );
-                None
-            }
+        let force = match std::env::var("MKQ_KERNEL") {
+            Ok(s) => match KernelKind::parse(&s) {
+                Some(k) => Some(k),
+                None if s == "simd" || s == "simd-parallel" => {
+                    eprintln!(
+                        "warning: MKQ_KERNEL={s} but no SIMD kernel is available on this \
+                         machine; auto-selecting"
+                    );
+                    None
+                }
+                None => {
+                    eprintln!(
+                        "warning: ignoring MKQ_KERNEL={s:?} (want reference|blocked|parallel|\
+                         avx2|avx2-parallel|neon|neon-parallel|simd|simd-parallel)"
+                    );
+                    None
+                }
+            },
             Err(_) => None,
         };
         Self::with_threads_forced(threads, force)
@@ -93,39 +208,168 @@ impl Dispatcher {
         Self::with_threads_forced(threads.max(1), None)
     }
 
+    /// A dispatcher pinned to one kernel variant — the forced-`MKQ_KERNEL`
+    /// path without the env var (benches and the forced-variant tests).
+    /// Unsupported picks degrade to the scalar blocked twin, like the env.
+    pub fn forced(threads: usize, kind: KernelKind) -> Self {
+        Self::with_threads_forced(threads.max(1), Some(kind))
+    }
+
     fn with_threads_forced(threads: usize, force: Option<KernelKind>) -> Self {
         // The caller thread works too, so spawn threads-1 workers.
         let pool = if threads > 1 { Some(ThreadPool::new(threads - 1)) } else { None };
-        Dispatcher { threads, pool, force }
+        // Degrade an unsupported forced SIMD pick to its scalar twin here,
+        // once, so select() never has to re-check ISA support per call.
+        let force = force.map(|f| {
+            if f.supported() {
+                f
+            } else {
+                let fb = if f.is_parallel() { KernelKind::BlockedParallel } else { KernelKind::Blocked };
+                eprintln!(
+                    "warning: kernel {} is not supported on this machine; using {}",
+                    f.name(),
+                    fb.name()
+                );
+                fb
+            }
+        });
+        Dispatcher { threads, pool, force, tuning: Tuning::default() }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    pub fn tuning(&self) -> Tuning {
+        self.tuning
+    }
+
     pub fn describe(&self) -> String {
+        let simd = self.tuning.simd.map(|k| k.name()).unwrap_or("none");
+        let simd_thr = match self.tuning.simd_macs_threshold {
+            0 => "always".to_string(),
+            usize::MAX => "never".to_string(),
+            t => format!(">={t} MACs"),
+        };
         format!(
-            "native kernel dispatch: threads={} force={} parallel-threshold={} MACs",
+            "native kernel dispatch: threads={} force={} simd={simd} ({simd_thr}) \
+             parallel-threshold={} MACs{}",
             self.threads,
             self.force.map(|k| k.name()).unwrap_or("auto"),
-            PARALLEL_MACS_THRESHOLD
+            self.tuning.parallel_macs_threshold,
+            if self.tuning.autotuned { " [autotuned]" } else { "" }
         )
     }
 
     /// Kernel selection for an `(m, k) x (k, n)` problem.
     pub fn select(&self, m: usize, k: usize, n: usize) -> KernelKind {
-        if let Some(f) = self.force {
-            // A forced parallel pick degrades gracefully on 1 thread.
-            if f == KernelKind::BlockedParallel && self.pool.is_none() {
-                return KernelKind::Blocked;
-            }
-            return f;
-        }
-        if self.pool.is_some() && m * k * n >= PARALLEL_MACS_THRESHOLD && m >= 2 {
-            KernelKind::BlockedParallel
+        let kind = if let Some(f) = self.force {
+            f
         } else {
-            KernelKind::Blocked
+            let macs = m * k * n;
+            let base = match self.tuning.simd {
+                Some(s) if macs >= self.tuning.simd_macs_threshold => s,
+                _ => KernelKind::Blocked,
+            };
+            if self.pool.is_some() && macs >= self.tuning.parallel_macs_threshold && m >= 2 {
+                base.parallel_variant()
+            } else {
+                base
+            }
+        };
+        // A parallel pick degrades gracefully on 1 thread.
+        if kind.is_parallel() && self.pool.is_none() {
+            kind.serial_variant()
+        } else {
+            kind
         }
+    }
+
+    /// One-shot load-time autotune: a quick microbenchmark over two shape
+    /// buckets (eval-sized and serving-sized) that re-measures the
+    /// SIMD-vs-scalar and serial-vs-parallel crossovers on *this* machine
+    /// and records them into [`Tuning`] (shown by [`describe`]). Selection
+    /// changes latency only — every kernel is bit-for-bit identical — so
+    /// this is safe to run by default; `MKQ_AUTOTUNE=0` skips it for
+    /// deterministic CI, and a forced `MKQ_KERNEL` makes it a no-op.
+    ///
+    /// [`describe`]: Self::describe
+    pub fn autotune(&mut self) {
+        if matches!(std::env::var("MKQ_AUTOTUNE").as_deref(), Ok("0") | Ok("off")) {
+            return;
+        }
+        if self.force.is_some() {
+            return;
+        }
+        // (m, k, n) buckets: small ≈ single-request eval, large ≈ a
+        // serving batch at modest model width. Kept small enough that the
+        // whole tune is a few milliseconds at model load.
+        let buckets: [(usize, usize, usize); 2] = [(8, 192, 192), (64, 512, 512)];
+        let mut scalar_t = [f64::INFINITY; 2];
+        let mut simd_t = [f64::INFINITY; 2];
+        let mut par_t = [f64::INFINITY; 2];
+        for (bi, &(m, k, n)) in buckets.iter().enumerate() {
+            let mut rng = Rng::new(0x7A11 + bi as u64);
+            let codes = crate::quant::random_codes(&mut rng, k * n, 8);
+            let pw = PackedWeights::from_codes(&codes, k, n, vec![0.02; n], 8);
+            let qx: Vec<i16> = (0..m * k).map(|_| rng.range(0, 255) as i16 - 127).collect();
+            let rs = gemm::act_row_sums(&qx, m, k);
+            let sx = vec![0.05f32; m];
+            let mut out = vec![0f32; m * n];
+            // one warm pass + best-of-2 timed passes per variant
+            let mut time = |f: &mut dyn FnMut(&mut [f32])| -> f64 {
+                f(&mut out);
+                let mut best = f64::INFINITY;
+                for _ in 0..2 {
+                    let t0 = std::time::Instant::now();
+                    f(&mut out);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                best
+            };
+            scalar_t[bi] = time(&mut |o| gemm::gemm_serial(&qx, &rs, m, k, &pw, &sx, o));
+            if let Some(s) = self.tuning.simd {
+                let f = simd::serial_fn(s);
+                simd_t[bi] = time(&mut |o| f(&qx, &rs, m, k, &pw, &sx, o));
+            }
+            if let Some(pool) = &self.pool {
+                let f = match self.tuning.simd {
+                    Some(s) => simd::serial_fn(s),
+                    None => gemm::gemm_serial as gemm::SerialKernel,
+                };
+                let threads = self.threads;
+                par_t[bi] =
+                    time(&mut |o| gemm::gemm_parallel_with(f, &qx, &rs, m, k, &pw, &sx, o, pool, threads));
+            }
+        }
+        let small_macs = buckets[0].0 * buckets[0].1 * buckets[0].2;
+        let large_macs = buckets[1].0 * buckets[1].1 * buckets[1].2;
+        let gmean = ((small_macs as f64) * (large_macs as f64)).sqrt() as usize;
+        if self.tuning.simd.is_some() {
+            self.tuning.simd_macs_threshold = if simd_t[1] < scalar_t[1] {
+                if simd_t[0] <= scalar_t[0] {
+                    0
+                } else {
+                    gmean
+                }
+            } else {
+                usize::MAX
+            };
+        }
+        if self.pool.is_some() {
+            let serial_small = scalar_t[0].min(simd_t[0]);
+            let serial_large = scalar_t[1].min(simd_t[1]);
+            self.tuning.parallel_macs_threshold = if par_t[1] < serial_large {
+                if par_t[0] < serial_small {
+                    small_macs / 2
+                } else {
+                    gmean
+                }
+            } else {
+                4 * large_macs
+            };
+        }
+        self.tuning.autotuned = true;
     }
 
     /// Quantized matmul from fp32 activations: quantize rows, then run the
@@ -150,30 +394,46 @@ impl Dispatcher {
         sx: &[f32],
     ) -> Vec<f32> {
         let mut out = vec![0f32; m * pw.n];
-        match self.select(m, k, pw.n) {
+        let kind = self.select(m, k, pw.n);
+        match kind {
             KernelKind::Reference => {
                 let codes = pw.unpack_codes();
                 gemm::gemm_reference(qx, m, k, &codes, pw.n, sx, &pw.scales, &mut out);
             }
             KernelKind::Blocked => gemm::gemm_serial(qx, rowsums, m, k, pw, sx, &mut out),
-            KernelKind::BlockedParallel => {
+            KernelKind::Avx2 | KernelKind::Neon => {
+                simd::serial_fn(kind)(qx, rowsums, m, k, pw, sx, &mut out)
+            }
+            KernelKind::BlockedParallel | KernelKind::Avx2Parallel | KernelKind::NeonParallel => {
                 let pool = self.pool.as_ref().expect("parallel kernel without pool");
-                gemm::gemm_parallel(qx, rowsums, m, k, pw, sx, &mut out, pool, self.threads);
+                gemm::gemm_parallel_with(
+                    simd::serial_fn(kind),
+                    qx,
+                    rowsums,
+                    m,
+                    k,
+                    pw,
+                    sx,
+                    &mut out,
+                    pool,
+                    self.threads,
+                );
             }
         }
         out
     }
 
-    /// fp32 matmul over panel-packed weights (the unquantized baseline and
-    /// the never-quantized model heads).
+    /// fp32 matmul over panel-packed weights (the unquantized baseline,
+    /// the never-quantized model heads, and the attention score/apply
+    /// GEMMs). Scalar tiles only — fp32 SIMD is left to autovectorization;
+    /// the parallel threshold from [`Tuning`] still applies.
     pub fn matmul_f32(&self, x: &[f32], m: usize, k: usize, pf: &PackedF32) -> Vec<f32> {
         let mut out = vec![0f32; m * pf.n];
-        match self.select(m, k, pf.n) {
-            KernelKind::BlockedParallel => {
-                let pool = self.pool.as_ref().expect("parallel kernel without pool");
-                gemm::sgemm_parallel(x, m, k, pf, &mut out, pool, self.threads);
-            }
-            _ => gemm::sgemm_serial(x, m, k, pf, &mut out),
+        if self.select(m, k, pf.n).is_parallel() {
+            let pool = self.pool.as_ref().expect("parallel kernel without pool");
+            gemm::sgemm_parallel(x, m, k, pf, &mut out, pool, self.threads);
+        } else {
+            gemm::sgemm_serial(x, m, k, pf, &mut out);
         }
         out
     }
@@ -188,10 +448,50 @@ mod tests {
     #[test]
     fn selection_scales_with_problem_size() {
         let d = Dispatcher::with_threads(4);
-        assert_eq!(d.select(4, 16, 16), KernelKind::Blocked);
-        assert_eq!(d.select(512, 768, 768), KernelKind::BlockedParallel);
+        // tiny problem: never parallel; big problem: parallel twin of the
+        // machine's best serial kernel.
+        assert!(!d.select(4, 16, 16).is_parallel());
+        let big = d.select(512, 768, 768);
+        assert!(big.is_parallel());
+        assert_eq!(big.serial_variant(), d.select(4, 16, 16));
         let single = Dispatcher::with_threads(1);
-        assert_eq!(single.select(512, 768, 768), KernelKind::Blocked);
+        assert!(!single.select(512, 768, 768).is_parallel());
+    }
+
+    #[test]
+    fn forced_kind_degrades_gracefully() {
+        // parallel force on 1 thread degrades to the serial twin
+        let d = Dispatcher::forced(1, KernelKind::BlockedParallel);
+        assert_eq!(d.select(512, 768, 768), KernelKind::Blocked);
+        // an unsupported SIMD force degrades to the scalar twin at
+        // construction; a supported one sticks.
+        for kind in [KernelKind::Avx2, KernelKind::Neon] {
+            let d = Dispatcher::forced(2, kind);
+            let got = d.select(64, 64, 64);
+            if kind.supported() {
+                assert_eq!(got, kind);
+            } else {
+                assert_eq!(got, KernelKind::Blocked);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_covers_every_env_value() {
+        assert_eq!(KernelKind::parse("reference"), Some(KernelKind::Reference));
+        assert_eq!(KernelKind::parse("blocked"), Some(KernelKind::Blocked));
+        assert_eq!(KernelKind::parse("parallel"), Some(KernelKind::BlockedParallel));
+        assert_eq!(KernelKind::parse("blocked-parallel"), Some(KernelKind::BlockedParallel));
+        assert_eq!(KernelKind::parse("avx2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("avx2-parallel"), Some(KernelKind::Avx2Parallel));
+        assert_eq!(KernelKind::parse("neon"), Some(KernelKind::Neon));
+        assert_eq!(KernelKind::parse("neon-parallel"), Some(KernelKind::NeonParallel));
+        assert_eq!(KernelKind::parse("simd"), crate::kernels::simd::best());
+        assert_eq!(KernelKind::parse("bogus"), None);
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()), Some(k), "name/parse roundtrip {k:?}");
+            assert_eq!(k.parallel_variant().serial_variant(), k.serial_variant());
+        }
     }
 
     #[test]
@@ -209,5 +509,24 @@ mod tests {
                 assert_eq!(d.qmatmul(&x, m, k, &pw, &sx), want, "bits={bits}");
             }
         }
+    }
+
+    #[test]
+    fn autotune_records_into_tuning() {
+        let mut d = Dispatcher::with_threads(2);
+        // only exercise the non-skipped path when the env doesn't disable it
+        if matches!(std::env::var("MKQ_AUTOTUNE").as_deref(), Ok("0") | Ok("off")) {
+            d.autotune();
+            assert!(!d.tuning().autotuned);
+            return;
+        }
+        d.autotune();
+        assert!(d.tuning().autotuned);
+        assert!(d.describe().contains("[autotuned]"));
+        assert!(d.tuning().parallel_macs_threshold > 0);
+        // forced dispatchers never autotune (nothing to select)
+        let mut f = Dispatcher::forced(2, KernelKind::Blocked);
+        f.autotune();
+        assert!(!f.tuning().autotuned);
     }
 }

@@ -67,12 +67,34 @@ pub fn act_row_sums(qx: &[i16], m: usize, k: usize) -> Vec<i32> {
         .collect()
 }
 
+/// Shared accumulator→fp32 epilogue (also used by the SIMD microkernels
+/// in [`super::simd`] so every variant dequantizes identically).
 #[inline(always)]
-fn store_row(out: &mut [f32], acc: &[i32; NR], corr: i32, sxi: f32, sw: &[f32], nc: usize) {
+pub(crate) fn store_row(out: &mut [f32], acc: &[i32; NR], corr: i32, sxi: f32, sw: &[f32], nc: usize) {
     // matches qmatmul_ref's `acc * sx[i] * sw[c]` association exactly
     for c in 0..nc {
         out[c] = ((acc[c] - corr) as f32 * sxi) * sw[c];
     }
+}
+
+/// Per-token (per-row) activation scales from each row's abs-max — the
+/// ROADMAP "per-token scales" lever: recovers int4 accuracy at zero kernel
+/// cost because the kernels already take `sx: &[f32]` per row. All-zero
+/// (or non-finite) rows fall back to the calibrated per-tensor scale so
+/// fully padded sequences quantize exactly as before.
+pub fn per_token_scales(x: &[f32], m: usize, k: usize, bits: u32, fallback: f32) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    let lmax = quant::qbounds(bits).1;
+    (0..m)
+        .map(|i| {
+            let amax = x[i * k..(i + 1) * k].iter().fold(0f32, |a, &v| a.max(v.abs()));
+            if amax > 0.0 && amax.is_finite() {
+                amax / lmax
+            } else {
+                fallback
+            }
+        })
+        .collect()
 }
 
 /// Single-threaded tiled GEMM over `m` rows. `rowsums` is only read for
@@ -237,10 +259,35 @@ fn block_i4(
     }
 }
 
+/// Signature every serial quantized-GEMM kernel shares ([`gemm_serial`]
+/// and the SIMD variants in [`super::simd`]) — what the row-block
+/// parallel driver fans out over.
+pub type SerialKernel = fn(&[i16], &[i32], usize, usize, &PackedWeights, &[f32], &mut [f32]);
+
 /// Row-block parallel GEMM: contiguous row chunks (one per thread) run
 /// [`gemm_serial`] on disjoint output slices via the shared pool.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
+    qx: &[i16],
+    rowsums: &[i32],
+    m: usize,
+    k: usize,
+    pw: &PackedWeights,
+    sx: &[f32],
+    out: &mut [f32],
+    pool: &ThreadPool,
+    chunks: usize,
+) {
+    gemm_parallel_with(gemm_serial, qx, rowsums, m, k, pw, sx, out, pool, chunks);
+}
+
+/// Row-block parallel driver over any serial kernel (scalar or SIMD):
+/// contiguous row chunks run `kernel` on disjoint output slices via the
+/// shared pool. Bit-for-bit equal to running `kernel` serially because
+/// row blocks are independent.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel_with(
+    kernel: SerialKernel,
     qx: &[i16],
     rowsums: &[i32],
     m: usize,
@@ -266,7 +313,7 @@ pub fn gemm_parallel(
         let qx_c = &qx[row0 * k..(row0 + rows) * k];
         let rs_c = &rowsums[row0..row0 + rows];
         let sx_c = &sx[row0..row0 + rows];
-        jobs.push(Box::new(move || gemm_serial(qx_c, rs_c, rows, k, pw, sx_c, chunk_out)));
+        jobs.push(Box::new(move || kernel(qx_c, rs_c, rows, k, pw, sx_c, chunk_out)));
         row0 += rows;
     }
     pool.scoped(jobs);
@@ -450,6 +497,19 @@ mod tests {
         assert_eq!(qx[3], 1);
         assert_eq!(qx[4], -1); // round half away from zero
         assert_eq!(act_row_sums(&qx, 1, 5), vec![128 - 127 + 0 + 1 - 1]);
+    }
+
+    #[test]
+    fn per_token_scales_from_row_max() {
+        let x = vec![1.0f32, -4.0, 2.0, 0.0, 0.0, 0.0, 0.5, 0.25, -0.125];
+        let s = per_token_scales(&x, 3, 3, 8, 0.123);
+        let lmax = quant::qbounds(8).1;
+        assert_eq!(s[0], 4.0 / lmax);
+        assert_eq!(s[1], 0.123); // all-zero row falls back to per-tensor
+        assert_eq!(s[2], 0.5 / lmax);
+        // a positive row max lands exactly on l_max (the paper grid's +2^{b-1})
+        let qx = quantize_activations(&x, 3, 3, &s, 8);
+        assert_eq!(qx[6], lmax as i16);
     }
 
     #[test]

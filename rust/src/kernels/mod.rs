@@ -14,26 +14,46 @@
 //! per output element through the quantized-activation row sum instead of
 //! per nibble. Per-channel scales ride with the panels.
 //!
+//! The same layout feeds scalar and SIMD kernels alike: `NR == 8` i32
+//! accumulators fill exactly one AVX2 `__m256i` (one NEON `int32x4_t`
+//! pair), and K-major panel rows make two K steps of all 8 channels — 16
+//! int8 bytes, or 8 int4 nibble-pair bytes — one contiguous vector load
+//! (see [`simd`] for the interleave/madd scheme).
+//!
 //! # Microkernels
 //!
 //! [`gemm`] holds the cache-tiled (MC rows), register-blocked (MR x NR
-//! i32 accumulator tile) kernels for int8 and int4, a panel-packed fp32
-//! baseline, and the scalar reference loop. Outputs are bit-for-bit equal
-//! to [`crate::quant::qmatmul_ref`] (see the contract note in `gemm`).
+//! i32 accumulator tile) scalar kernels for int8 and nibble-packed int4,
+//! a panel-packed fp32 baseline, and the scalar reference loop. [`simd`]
+//! holds the hand-vectorized twins: AVX2 (`_mm256_madd_epi16` i16×i16→i32
+//! dot products, two K steps per instruction) and NEON (`vmlal_s16`
+//! widening multiply-accumulate), each with a fused nibble unpack for
+//! int4 and the same row-sum offset correction.
+//!
+//! **Numerical contract:** every variant — scalar, AVX2, NEON, serial or
+//! row-block parallel — accumulates exactly in i32 and is bit-for-bit
+//! identical to the others at every shape, and to
+//! [`crate::quant::qmatmul_ref`] inside the oracle's f32 bound (see the
+//! contract note in `gemm`); `rust/tests/kernels.rs` enforces this across
+//! random shapes, ragged edges, and every dispatchable variant.
 //!
 //! # Runtime dispatch
 //!
-//! [`dispatch::Dispatcher`] picks a kernel variant per call — scalar
-//! reference, single-thread blocked, or row-block parallel over
-//! [`crate::util::threadpool::ThreadPool`] — from the problem shape and
-//! core count, with `MKQ_KERNEL` / `MKQ_THREADS` env overrides.
+//! [`dispatch::Dispatcher`] picks a [`dispatch::KernelKind`] per call
+//! from the problem shape, core count, and runtime feature detection
+//! (`is_x86_feature_detected!("avx2")` / NEON on aarch64), with optional
+//! load-time autotuning of the crossover thresholds
+//! ([`dispatch::Dispatcher::autotune`]). `MKQ_KERNEL` forces a variant
+//! (degrading to the scalar blocked kernels where the ISA is absent),
+//! `MKQ_THREADS` caps the pool, `MKQ_AUTOTUNE=0` keeps CI deterministic.
 //!
-//! Follow-on perf levers are tracked in ROADMAP.md (SIMD microkernels,
-//! per-token activation scales, bucket autotuning).
+//! Remaining perf levers are tracked in ROADMAP.md (tile-size autotuning,
+//! QAT-checkpoint import).
 
 pub mod dispatch;
 pub mod gemm;
 pub mod pack;
+pub mod simd;
 
-pub use dispatch::{Dispatcher, KernelKind};
+pub use dispatch::{Dispatcher, KernelKind, Tuning};
 pub use pack::{PackedF32, PackedWeights, MR, NR};

@@ -17,6 +17,14 @@
 //! per output via the quantized-activation row sum (see
 //! [`super::gemm`]). Padded channels hold nibble 7 (code 0) so the same
 //! correction zeroes them exactly.
+//!
+//! This geometry is also what the SIMD microkernels consume directly:
+//! with `NR == 8`, two K-consecutive int8 panel rows are 16 contiguous
+//! bytes (one `_mm_loadu_si128`) and one int4 packed row is 8 bytes (one
+//! `_mm_loadl_epi64` / `vld1_u8`), each filling a full `MR x NR` i32
+//! accumulator lane — see [`super::simd`]. Changing `NR`/`MR` means
+//! revisiting the interleave schemes there (both modules carry
+//! compile-time guards).
 
 use crate::quant;
 

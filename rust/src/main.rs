@@ -30,9 +30,15 @@ fn usage() -> ! {
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
                 --window-us N   --buckets 1,8,16
-  kernels:      (no options)
+  kernels:      (no options; prints the dispatch table and runs a
+                per-variant self-check)
   train|serve|info: artifact path — needs --features xla + make artifacts;
-                also --artifacts DIR, see README"
+                also --artifacts DIR, see README
+  env knobs:    MKQ_KERNEL=reference|blocked|parallel|avx2|avx2-parallel|
+                  neon|neon-parallel|simd|simd-parallel  (force a kernel;
+                  unsupported picks degrade to the scalar blocked kernels)
+                MKQ_THREADS=N    cap the kernel thread pool
+                MKQ_AUTOTUNE=0   skip the load-time kernel autotune"
     );
     std::process::exit(2);
 }
@@ -53,15 +59,26 @@ fn run() -> Result<()> {
 }
 
 fn kernels_info() -> Result<()> {
-    use mkq::kernels::{Dispatcher, PackedWeights};
+    use mkq::kernels::{Dispatcher, KernelKind, PackedWeights};
     use mkq::quant;
     use mkq::util::rng::Rng;
 
-    let disp = Dispatcher::new();
+    let mut disp = Dispatcher::new();
+    disp.autotune();
     println!("mkq-bert {}", mkq::version());
     println!("{}", disp.describe());
 
-    // quick self-check: native kernels vs the scalar oracle, both widths
+    println!("kernel variants (MKQ_KERNEL values):");
+    for kind in KernelKind::ALL {
+        println!(
+            "  {:<18} {}",
+            kind.name(),
+            if kind.supported() { "available" } else { "unsupported on this machine" }
+        );
+    }
+
+    // self-check: every dispatchable variant vs the scalar oracle, both
+    // bit widths (unsupported variants degrade to scalar and still pass).
     let mut rng = Rng::new(1);
     let (m, k, n) = (32usize, 64usize, 48usize);
     let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
@@ -71,11 +88,19 @@ fn kernels_info() -> Result<()> {
         let sw: Vec<f32> = (0..n).map(|_| 0.01 + rng.f32() * 0.02).collect();
         let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
         let pw = PackedWeights::from_codes(&codes, k, n, sw, bits);
-        let got = disp.qmatmul(&x, m, k, &pw, &sx);
-        if got != want {
-            anyhow::bail!("int{bits} kernel self-check FAILED (native != qmatmul_ref)");
+        for kind in KernelKind::ALL {
+            let forced = Dispatcher::forced(disp.threads(), kind);
+            if forced.qmatmul(&x, m, k, &pw, &sx) != want {
+                anyhow::bail!(
+                    "int{bits} kernel self-check FAILED ({} != qmatmul_ref)",
+                    kind.name()
+                );
+            }
         }
-        println!("int{bits} kernel self-check: bit-for-bit vs qmatmul_ref ok ({m}x{k}x{n})");
+        println!(
+            "int{bits} kernel self-check: all {} variants bit-for-bit vs qmatmul_ref ok ({m}x{k}x{n})",
+            KernelKind::ALL.len()
+        );
     }
     Ok(())
 }

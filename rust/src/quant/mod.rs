@@ -198,6 +198,9 @@ pub fn parse_bits(s: &str, n_layers: usize) -> anyhow::Result<Vec<u32>> {
 /// quantization therefore we start from the last layer" — n_int4 last
 /// layers at 4 bits, the rest at 8.
 pub fn bits_last_n_int4(n_layers: usize, n_int4: usize) -> Vec<u32> {
+    // clamp instead of underflowing: `--n-int4 99` on a 4-layer model means
+    // "all int4", not a debug-build panic / release-build all-int8 wrap
+    let n_int4 = n_int4.min(n_layers);
     (0..n_layers).map(|l| if l >= n_layers - n_int4 { 4 } else { 8 }).collect()
 }
 
@@ -325,6 +328,7 @@ mod tests {
         assert_eq!(bits_last_n_int4(4, 1), vec![8, 8, 8, 4]);
         assert_eq!(bits_last_n_int4(4, 2), vec![8, 8, 4, 4]);
         assert_eq!(bits_last_n_int4(4, 4), vec![4, 4, 4, 4]);
+        assert_eq!(bits_last_n_int4(4, 9), vec![4, 4, 4, 4]); // clamped, no underflow
     }
 
     #[test]

@@ -98,10 +98,21 @@ impl NativeBackend {
         NativeBackend { disp: Dispatcher::new(), bench_layers: None, model: None }
     }
 
+    /// Model-load entry point: installs the model and runs the one-shot
+    /// dispatcher autotune (skippable with `MKQ_AUTOTUNE=0`; a no-op under
+    /// a forced `MKQ_KERNEL`). Selection only changes latency — every
+    /// kernel variant is bit-for-bit identical.
     pub fn with_model(model: NativeModel) -> Self {
         let mut b = Self::new();
         b.set_model(model);
+        b.autotune();
         b
+    }
+
+    /// Re-run the load-time kernel autotune (see
+    /// [`Dispatcher::autotune`](crate::kernels::Dispatcher::autotune)).
+    pub fn autotune(&mut self) {
+        self.disp.autotune();
     }
 
     pub fn set_model(&mut self, model: NativeModel) {

@@ -3,10 +3,13 @@
 //!
 //! Mirrors `python/compile/model.py`: word+position embeddings with
 //! LayerNorm, `n_layers` transformer encoder layers with the paper's six
-//! quantized matmul sites per layer (activations per-tensor, weights
-//! per-output-channel), fp32 LayerNorm/softmax/GELU, tanh pooler over the
-//! first token, linear classifier. Embeddings and heads are never
-//! quantized (paper §5).
+//! quantized matmul sites per layer (activations *per-token* from each
+//! row's abs-max with the calibrated per-tensor scale as all-zero-row
+//! fallback, weights per-output-channel), fp32 LayerNorm/softmax/GELU,
+//! tanh pooler over the first token, linear classifier. Embeddings and
+//! heads are never quantized (paper §5). Attention scores (`q·kᵀ`) and
+//! apply (`p·v`) run through the packed f32 GEMM path per `(batch, head)`
+//! slice, so long sequences ride the tiled/parallel kernels.
 //!
 //! Numerics are *deployed-kernel* semantics (integer codes, not QAT
 //! fake-quant), exactly the arithmetic `qmatmul_ref` specifies; agreement
@@ -73,11 +76,15 @@ impl Linear {
     }
 
     /// Forward from fp32 activations, quantizing them here if needed.
+    /// Activations quantize with *per-token* scales (each row's abs-max —
+    /// the ROADMAP accuracy lever, free because the kernels take `sx` per
+    /// row); `act_scale` is the calibrated per-tensor fallback used for
+    /// all-zero rows (fully padded sequences).
     pub fn forward(&self, disp: &Dispatcher, x: &[f32], m: usize, act_scale: f32) -> Vec<f32> {
         let mut out = match &self.w {
             LinearW::F32(pf) => disp.matmul_f32(x, m, self.k, pf),
             LinearW::Quant(pw) => {
-                let sx = vec![act_scale; m];
+                let sx = gemm::per_token_scales(x, m, self.k, pw.bits, act_scale);
                 disp.qmatmul(x, m, self.k, pw, &sx)
             }
         };
@@ -199,7 +206,10 @@ impl NativeLayer {
         assert_eq!(h.len(), m * d);
         assert_eq!(mask.len(), m);
 
-        // q/k/v share one activation-quantization site.
+        // q/k/v share one activation-quantization site: per-token scales
+        // computed once from the row maxes, one quantization pass, three
+        // matmuls (calibrated per-tensor scale as the all-zero-row
+        // fallback).
         let (q, k, v) = if self.bits == 32 {
             (
                 self.wq.forward(disp, h, m, 0.0),
@@ -207,8 +217,7 @@ impl NativeLayer {
                 self.wv.forward(disp, h, m, 0.0),
             )
         } else {
-            let s = self.act_scales[0];
-            let sx = vec![s; m];
+            let sx = gemm::per_token_scales(h, m, d, self.bits, self.act_scales[0]);
             let qx = gemm::quantize_activations(h, m, d, &sx, self.bits);
             let rs = gemm::act_row_sums(&qx, m, d);
             (
@@ -218,7 +227,7 @@ impl NativeLayer {
             )
         };
 
-        let oa = attention(&q, &k, &v, bsz, t, d, self.heads, mask);
+        let oa = attention(disp, &q, &k, &v, bsz, t, d, self.heads, mask);
         let attn_out = self.wo.forward(disp, &oa, m, self.act_scales[1]);
         let mut h1: Vec<f32> = h.iter().zip(attn_out.iter()).map(|(a, b)| a + b).collect();
         layer_norm(&mut h1, &self.ln1_g, &self.ln1_b, d);
@@ -246,7 +255,16 @@ impl NativeLayer {
     }
 }
 
+/// Multi-head attention with both matmuls routed through the packed f32
+/// GEMM path: per `(batch, head)` slice, scores `q·kᵀ` run as a
+/// `(t, dk) x (dk, t)` GEMM over the gathered/transposed K head and apply
+/// `p·v` as `(t, t) x (t, dk)` over the gathered V head, so long-sequence
+/// serving scales with the tiled (and, past the threshold, row-block
+/// parallel) kernels instead of a scalar triple loop. The head
+/// gather/pack is O(t·dk) against the GEMMs' O(t²·dk).
+#[allow(clippy::too_many_arguments)]
 fn attention(
+    disp: &Dispatcher,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -259,38 +277,43 @@ fn attention(
     let dk = d / heads;
     let scale = 1.0 / (dk as f32).sqrt();
     let mut out = vec![0f32; bsz * t * d];
-    let mut scores = vec![0f32; t];
+    let mut qh = vec![0f32; t * dk]; // Q head, (t, dk) row-major
+    let mut kt = vec![0f32; dk * t]; // K head transposed, (dk, t) row-major
+    let mut vh = vec![0f32; t * dk]; // V head, (t, dk) row-major
     for b in 0..bsz {
         for hd in 0..heads {
+            for j in 0..t {
+                let row = (b * t + j) * d + hd * dk;
+                qh[j * dk..(j + 1) * dk].copy_from_slice(&q[row..row + dk]);
+                vh[j * dk..(j + 1) * dk].copy_from_slice(&v[row..row + dk]);
+                for c in 0..dk {
+                    kt[c * t + j] = k[row + c];
+                }
+            }
+            let pk = PackedF32::from_rowmajor(&kt, dk, t);
+            let mut p = disp.matmul_f32(&qh, t, dk, &pk); // (t, t) scores
             for i in 0..t {
-                let qrow = &q[(b * t + i) * d + hd * dk..][..dk];
+                let row = &mut p[i * t..(i + 1) * t];
                 let mut maxs = f32::NEG_INFINITY;
                 for j in 0..t {
-                    let krow = &k[(b * t + j) * d + hd * dk..][..dk];
-                    let mut s = 0f32;
-                    for c in 0..dk {
-                        s += qrow[c] * krow[c];
-                    }
-                    let s = s * scale + (1.0 - mask[b * t + j]) * NEG_INF;
-                    scores[j] = s;
-                    maxs = maxs.max(s);
+                    row[j] = row[j] * scale + (1.0 - mask[b * t + j]) * NEG_INF;
+                    maxs = maxs.max(row[j]);
                 }
                 let mut denom = 0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - maxs).exp();
-                    denom += *sc;
+                for x in row.iter_mut() {
+                    *x = (*x - maxs).exp();
+                    denom += *x;
                 }
                 let inv = 1.0 / denom;
-                let orow = &mut out[(b * t + i) * d + hd * dk..][..dk];
-                for j in 0..t {
-                    let w = scores[j] * inv;
-                    if w > 0.0 {
-                        let vrow = &v[(b * t + j) * d + hd * dk..][..dk];
-                        for c in 0..dk {
-                            orow[c] += w * vrow[c];
-                        }
-                    }
+                for x in row.iter_mut() {
+                    *x *= inv;
                 }
+            }
+            let pv = PackedF32::from_rowmajor(&vh, t, dk);
+            let oh = disp.matmul_f32(&p, t, t, &pv); // (t, dk) context
+            for i in 0..t {
+                let row = (b * t + i) * d + hd * dk;
+                out[row..row + dk].copy_from_slice(&oh[i * dk..(i + 1) * dk]);
             }
         }
     }
@@ -502,6 +525,59 @@ mod tests {
             let logits = model.forward(&disp, &ids, &mask, bsz);
             assert_eq!(logits.len(), bsz * dims.n_classes);
             assert!(logits.iter().all(|x| x.is_finite()), "bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn attention_gemm_matches_scalar_reference() {
+        // The GEMM-routed attention must agree with the naive triple loop
+        // (same math, different summation order) to fp32 noise, including
+        // under padding.
+        let mut rng = Rng::new(23);
+        let (bsz, t, d, heads) = (2usize, 7usize, 24usize, 3usize);
+        let dk = d / heads;
+        let q: Vec<f32> = (0..bsz * t * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..bsz * t * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..bsz * t * d).map(|_| rng.normal() as f32).collect();
+        let mut mask = vec![1.0f32; bsz * t];
+        mask[t - 1] = 0.0; // one padded position in batch 0
+        for m in mask[t..2 * t].iter_mut() {
+            *m = 0.0; // batch 1 fully padded — must stay finite
+        }
+        for threads in [1usize, 3] {
+            let disp = Dispatcher::with_threads(threads);
+            let got = attention(&disp, &q, &k, &v, bsz, t, d, heads, &mask);
+            let scale = 1.0 / (dk as f32).sqrt();
+            for b in 0..bsz {
+                for hd in 0..heads {
+                    for i in 0..t {
+                        let qrow = &q[(b * t + i) * d + hd * dk..][..dk];
+                        let mut scores = vec![0f32; t];
+                        let mut maxs = f32::NEG_INFINITY;
+                        for j in 0..t {
+                            let krow = &k[(b * t + j) * d + hd * dk..][..dk];
+                            let s: f32 = (0..dk).map(|c| qrow[c] * krow[c]).sum();
+                            scores[j] = s * scale + (1.0 - mask[b * t + j]) * NEG_INF;
+                            maxs = maxs.max(scores[j]);
+                        }
+                        let mut denom = 0f32;
+                        for s in scores.iter_mut() {
+                            *s = (*s - maxs).exp();
+                            denom += *s;
+                        }
+                        for c in 0..dk {
+                            let want: f32 =
+                                (0..t).map(|j| scores[j] / denom * v[(b * t + j) * d + hd * dk + c]).sum();
+                            let g = got[(b * t + i) * d + hd * dk + c];
+                            assert!(g.is_finite(), "non-finite attention output");
+                            assert!(
+                                (g - want).abs() < 1e-4,
+                                "attention mismatch b={b} hd={hd} i={i} c={c}: {g} vs {want}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -1,10 +1,13 @@
 //! Native-backend integration tests: property tests cross-checking the
-//! blocked int4/int8 GEMM against the scalar `qmatmul_ref` oracle
-//! bit-for-bit over random shapes, scales, and both bit widths, the
-//! nibble-pack edge cases, and the serving stack over the native model.
-//! Runs on the default (no-xla) feature set — this is tier-1 coverage.
+//! blocked *and SIMD* int4/int8 GEMM kernels against `gemm_serial` and
+//! the scalar `qmatmul_ref` oracle bit-for-bit over random shapes,
+//! scales, and both bit widths (including ragged `m % MR != 0`,
+//! `n % NR != 0` edges and `m > MC` cache-block splits), a forced pass
+//! over every `MKQ_KERNEL` variant, the nibble-pack edge cases, and the
+//! serving stack over the native model. Runs on the default (no-xla)
+//! feature set — this is tier-1 coverage.
 
-use mkq::kernels::{gemm, Dispatcher, PackedWeights, NR};
+use mkq::kernels::{gemm, simd, Dispatcher, KernelKind, PackedWeights, MR, NR};
 use mkq::quant;
 use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
 use mkq::util::proptest::{check, ensure, PropConfig};
@@ -51,6 +54,115 @@ fn native_gemm_matches_oracle_bit_for_bit() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn simd_gemm_matches_serial_and_oracle_bit_for_bit() {
+    // The SIMD entry points run the vector kernels where the ISA exists
+    // and fall back to scalar elsewhere — either way they must equal both
+    // gemm_serial and the oracle exactly, serial and row-block parallel.
+    check("simd-gemm-vs-oracle", PropConfig { cases: 40, ..Default::default() }, |rng, size| {
+        let m = 1 + rng.range(0, 2 * size.max(1));
+        let k = 2 * (1 + rng.range(0, size.max(1)));
+        let n = 1 + rng.range(0, 2 * size.max(1));
+        for bits in [4u32, 8] {
+            let (x, codes, sx, sw) = random_case(rng, m, k, n, bits);
+            let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+            let pw = PackedWeights::from_codes(&codes, k, n, sw.clone(), bits);
+            let qx = gemm::quantize_activations(&x, m, k, &sx, bits);
+            let rs = gemm::act_row_sums(&qx, m, k);
+
+            let mut serial = vec![0f32; m * n];
+            gemm::gemm_serial(&qx, &rs, m, k, &pw, &sx, &mut serial);
+            ensure(serial == want, format!("serial != oracle (m={m} k={k} n={n} bits={bits})"))?;
+
+            for (name, f) in [
+                ("avx2", simd::gemm_serial_avx2 as gemm::SerialKernel),
+                ("neon", simd::gemm_serial_neon as gemm::SerialKernel),
+            ] {
+                let mut got = vec![0f32; m * n];
+                f(&qx, &rs, m, k, &pw, &sx, &mut got);
+                ensure(got == want, format!("{name} != oracle (m={m} k={k} n={n} bits={bits})"))?;
+
+                let pool = ThreadPool::new(2);
+                let mut got_p = vec![0f32; m * n];
+                gemm::gemm_parallel_with(f, &qx, &rs, m, k, &pw, &sx, &mut got_p, &pool, 3);
+                ensure(
+                    got_p == want,
+                    format!("{name}-parallel != oracle (m={m} k={k} n={n} bits={bits})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_ragged_edges_match_oracle() {
+    // Deterministic edge shapes the random generator may miss: row
+    // remainders around MR, column remainders around NR, and m > MC so
+    // the cache-block loop splits (MC = 128).
+    let mut rng = Rng::new(91);
+    for &(m, k, n) in &[
+        (1usize, 2usize, 1usize),
+        (MR - 1, 6, NR - 1),
+        (MR + 1, 8, NR + 1),
+        (2 * MR + 3, 10, 2 * NR + 5),
+        (gemm::MC + MR + 1, 32, NR + 1),
+        (130, 16, 17),
+    ] {
+        for bits in [4u32, 8] {
+            let (x, codes, sx, sw) = random_case(&mut rng, m, k, n, bits);
+            let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+            let pw = PackedWeights::from_codes(&codes, k, n, sw, bits);
+            let qx = gemm::quantize_activations(&x, m, k, &sx, bits);
+            let rs = gemm::act_row_sums(&qx, m, k);
+            for (name, f) in [
+                ("serial", gemm::gemm_serial as gemm::SerialKernel),
+                ("avx2", simd::gemm_serial_avx2 as gemm::SerialKernel),
+                ("neon", simd::gemm_serial_neon as gemm::SerialKernel),
+            ] {
+                let mut got = vec![0f32; m * n];
+                f(&qx, &rs, m, k, &pw, &sx, &mut got);
+                assert_eq!(got, want, "{name} m={m} k={k} n={n} bits={bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_kernel_pass_over_all_variants() {
+    // Every MKQ_KERNEL value must produce oracle-exact results through
+    // the dispatcher — supported variants run their real kernel,
+    // unsupported ones degrade to the scalar blocked twins.
+    let mut rng = Rng::new(55);
+    let (m, k, n) = (37usize, 48usize, 33usize);
+    for bits in [4u32, 8] {
+        let (x, codes, sx, sw) = random_case(&mut rng, m, k, n, bits);
+        let want = quant::qmatmul_ref(&x, m, k, &codes, n, &sx, &sw, bits);
+        let pw = PackedWeights::from_codes(&codes, k, n, sw, bits);
+        for kind in KernelKind::ALL {
+            // parse() must round-trip the name the env var would use
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+            for threads in [1usize, 3] {
+                let d = Dispatcher::forced(threads, kind);
+                assert_eq!(
+                    d.qmatmul(&x, m, k, &pw, &sx),
+                    want,
+                    "forced {} threads={threads} bits={bits}",
+                    kind.name()
+                );
+            }
+        }
+    }
+    // the machine-relative values resolve to something dispatchable
+    if let Some(simd_kind) = KernelKind::parse("simd") {
+        assert!(simd_kind.supported());
+        assert!(!simd_kind.is_parallel());
+    }
+    if let Some(simd_par) = KernelKind::parse("simd-parallel") {
+        assert!(simd_par.is_parallel());
+    }
 }
 
 #[test]
