@@ -7,8 +7,9 @@ Compares the per-kernel timing buckets of the current run against the
 previous run's artifact. A bucket regresses when its best-observed time
 (`min_us` — the least noisy statistic on shared CI runners) grows by more
 than --max-regress relative to the baseline. Buckets faster than --min-us
-in the baseline are skipped (timer noise dominates), as are buckets that
-exist on only one side (kernels come and go across PRs).
+in the baseline are skipped (timer noise dominates). Buckets that exist
+on only one side (renamed/new/removed kernels across PRs) are reported
+as warnings but never fail the gate — and never KeyError the comparison.
 
 Exit codes: 0 ok / baseline missing (first run), 1 regression found,
 2 malformed input.
@@ -48,6 +49,14 @@ def main():
         return 2
 
     shared = sorted(set(base) & set(cur))
+    # one-sided buckets: a rename/addition/removal is expected across PRs,
+    # so warn (visibly, for the reviewer) instead of failing or KeyErroring.
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+    for name in only_base:
+        print(f"bench-diff: WARNING bucket {name!r} only in baseline (removed/renamed?) — not gated")
+    for name in only_cur:
+        print(f"bench-diff: WARNING bucket {name!r} only in current run (new/renamed?) — not gated")
     if not shared:
         print("bench-diff: no shared kernel buckets — skipping gate")
         return 0

@@ -1,0 +1,183 @@
+"""MKQC checkpoint exporter — pure numpy, no jax.
+
+Writes the flat-tensor binary format defined in
+``rust/src/checkpoint/mod.rs`` (the authoritative byte-level spec) out of
+the compile path's parameter flattening, so a model trained or
+initialized on the Python side serves natively through
+``mkq-bert serve-native --checkpoint FILE.mkqc``.
+
+Layout recap (all little-endian): magic ``MKQC`` + u32 version(=1) +
+7 x u32 dims (vocab, seq, n_layers, d_model, n_heads, d_ff, n_classes) +
+u32 n_tensors + n_layers x u32 bits + n_layers x 4 x f32 activation
+scales, then the tensor directory (u16 name_len, name, u8 dtype=0 (f32),
+u8 rank, rank x u32 dims, u64 offset, u64 len), then the raw payload
+bytes, then a u32 CRC-32 (zlib) over the payload.
+
+Tensor names/shapes come from ``config.param_specs`` — the same flat
+ordering contract the AOT manifest records — so the Rust reader's spec
+check passes by construction.
+
+Usage:
+    python -m compile.export_ckpt --out model.mkqc [--preset default]
+        [--bits 8,8,4,4 | --n-int4 N] [--seed 0]
+        [--params params.npz] [--act-scales s.npz]
+
+Without ``--params`` the exporter writes a BERT-style random init
+(N(0, 0.02) matrices, unit LN gains, zero biases) — the smoke-test path
+CI drives end to end. ``--params`` loads an ``.npz`` whose keys are the
+spec names (e.g. a dump of QAT'd weights); ``--act-scales`` an ``.npz``
+with key ``act_scales`` of shape (n_layers, 4).
+"""
+
+from __future__ import annotations
+
+import argparse
+import struct
+import zlib
+
+import numpy as np
+
+from .config import PRESETS, ModelConfig, param_specs
+
+MAGIC = b"MKQC"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+def qmax(bits: int) -> float:
+    """Paper grid l_max = 2^{k-1} (int8 grid for fp32 layers)."""
+    b = 8 if bits == 32 else bits
+    return float(1 << (b - 1))
+
+
+def parse_bits(spec: str, n_layers: int) -> list[int]:
+    bits = [int(p) for p in spec.split(",")]
+    if len(bits) != n_layers:
+        raise ValueError(f"bits spec {spec!r} has {len(bits)} entries, model has {n_layers} layers")
+    for b in bits:
+        if b not in (4, 8, 32):
+            raise ValueError(f"unsupported bit width {b} (use 4, 8 or 32)")
+    return bits
+
+
+def bits_last_n_int4(n_layers: int, n_int4: int) -> list[int]:
+    n_int4 = min(n_int4, n_layers)
+    return [4 if l >= n_layers - n_int4 else 8 for l in range(n_layers)]
+
+
+def default_act_scales(bits: list[int]) -> np.ndarray:
+    """|act| ~ 6 after LayerNorm over the grid l_max — the uncalibrated
+    fallback (mirrors ``runtime::native::default_act_scales``)."""
+    return np.array([[6.0 / qmax(b)] * 4 for b in bits], dtype=np.float32)
+
+
+def random_params(cfg: ModelConfig, seed: int) -> dict[str, np.ndarray]:
+    """BERT-style init matching ``model.init_params`` distributions
+    (numpy RNG — the values differ from the jax init, the shapes and
+    statistics do not)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("_g"):
+            out[name] = np.ones(shape, np.float32)
+        elif len(shape) == 2:
+            out[name] = (0.02 * rng.standard_normal(shape)).astype(np.float32)
+        else:
+            out[name] = np.zeros(shape, np.float32)
+    return out
+
+
+def validate_header(cfg: ModelConfig, bits: list[int], act_scales: np.ndarray):
+    """Mirror ``CkptHeader::validate`` on the Rust side, so a file the
+    reader would reject is never produced (errors surface at export time,
+    not at deploy time)."""
+    if len(bits) != cfg.n_layers:
+        raise ValueError(f"{len(bits)} bit entries for {cfg.n_layers} layers")
+    if act_scales.shape != (cfg.n_layers, 4):
+        raise ValueError(f"act_scales shape {act_scales.shape} != ({cfg.n_layers}, 4)")
+    if cfg.d_model % cfg.n_heads != 0:
+        raise ValueError(f"n_heads {cfg.n_heads} does not divide d_model {cfg.d_model}")
+    for l, b in enumerate(bits):
+        if b not in (4, 8, 32):
+            raise ValueError(f"layer {l}: unsupported bit width {b} (use 4, 8 or 32)")
+        if b == 4 and (cfg.d_model % 2 or cfg.d_ff % 2):
+            raise ValueError(
+                f"layer {l} is int4 but d_model {cfg.d_model} / d_ff {cfg.d_ff} "
+                "are not both even (K-nibble packing)")
+        row = act_scales[l]
+        if b != 32 and not (np.all(np.isfinite(row)) and np.all(row > 0)):
+            raise ValueError(f"layer {l}: act scales {row} must be finite and positive")
+
+
+def write_checkpoint(path: str, cfg: ModelConfig, bits: list[int],
+                     act_scales: np.ndarray, params: dict[str, np.ndarray]) -> int:
+    """Serialize one MKQC file; returns the byte count written."""
+    act_scales = np.asarray(act_scales, np.float32)
+    validate_header(cfg, bits, act_scales)
+
+    specs = param_specs(cfg)
+    directory = bytearray()
+    payload = bytearray()
+    for name, shape in specs:
+        if name not in params:
+            raise KeyError(f"params missing spec tensor {name!r}")
+        arr = np.ascontiguousarray(params[name], dtype="<f4")
+        if arr.shape != tuple(shape):
+            raise ValueError(f"{name}: shape {arr.shape} != spec {tuple(shape)}")
+        raw = arr.tobytes()
+        nb = name.encode("utf-8")
+        directory += struct.pack("<H", len(nb)) + nb
+        directory += struct.pack("<BB", DTYPE_F32, arr.ndim)
+        directory += struct.pack(f"<{arr.ndim}I", *arr.shape)
+        directory += struct.pack("<QQ", len(payload), len(raw))
+        payload += raw
+
+    header = MAGIC + struct.pack("<I", VERSION)
+    header += struct.pack("<7I", cfg.vocab, cfg.seq, cfg.n_layers,
+                          cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_classes)
+    header += struct.pack("<I", len(specs))
+    header += struct.pack(f"<{cfg.n_layers}I", *bits)
+    header += act_scales.astype("<f4").tobytes()
+
+    crc = zlib.crc32(bytes(payload)) & 0xFFFFFFFF
+    blob = header + bytes(directory) + bytes(payload) + struct.pack("<I", crc)
+    with open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", required=True, help="output .mkqc path")
+    ap.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    ap.add_argument("--bits", default=None, help="per-layer bits, e.g. 8,8,4,4")
+    ap.add_argument("--n-int4", type=int, default=4,
+                    help="last-N-layers-int4 rule when --bits is absent (default 4)")
+    ap.add_argument("--seed", type=int, default=17)
+    ap.add_argument("--params", default=None,
+                    help=".npz of spec-named fp32 tensors (default: random init)")
+    ap.add_argument("--act-scales", default=None,
+                    help=".npz with key act_scales, shape (n_layers, 4)")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    bits = (parse_bits(args.bits, cfg.n_layers) if args.bits
+            else bits_last_n_int4(cfg.n_layers, args.n_int4))
+    if args.params:
+        with np.load(args.params) as z:
+            params = {k: z[k] for k in z.files}
+    else:
+        params = random_params(cfg, args.seed)
+    if args.act_scales:
+        with np.load(args.act_scales) as z:
+            act = z["act_scales"]
+    else:
+        act = default_act_scales(bits)
+
+    n = write_checkpoint(args.out, cfg, bits, act, params)
+    print(f"wrote {args.out}: {n} bytes, L={cfg.n_layers} d={cfg.d_model} bits={bits} "
+          f"({len(param_specs(cfg))} tensors)")
+
+
+if __name__ == "__main__":
+    main()

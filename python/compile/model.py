@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .config import ModelConfig
+from .config import ModelConfig, param_specs, scale_specs
 from .kernels.quant import fake_quant
 from .kernels import ref
 
@@ -27,48 +27,10 @@ NEG_INF = -1e9
 
 
 # ---------------------------------------------------------------------------
-# Parameter / scale specs (the flat ordering contract with Rust)
+# Parameter / scale specs — canonical order lives in config.py (jax-free,
+# shared with the MKQC checkpoint exporter); re-exported here for the
+# existing ``model.param_specs`` / ``model.scale_specs`` call sites.
 # ---------------------------------------------------------------------------
-
-def param_specs(cfg: ModelConfig):
-    """[(name, shape)] in canonical order."""
-    specs = [
-        ("emb_word", (cfg.vocab, cfg.d_model)),
-        ("emb_pos", (cfg.seq, cfg.d_model)),
-        ("emb_ln_g", (cfg.d_model,)),
-        ("emb_ln_b", (cfg.d_model,)),
-    ]
-    for l in range(cfg.n_layers):
-        d, f = cfg.d_model, cfg.d_ff
-        specs += [
-            (f"l{l}_wq", (d, d)), (f"l{l}_bq", (d,)),
-            (f"l{l}_wk", (d, d)), (f"l{l}_bk", (d,)),
-            (f"l{l}_wv", (d, d)), (f"l{l}_bv", (d,)),
-            (f"l{l}_wo", (d, d)), (f"l{l}_bo", (d,)),
-            (f"l{l}_ln1_g", (d,)), (f"l{l}_ln1_b", (d,)),
-            (f"l{l}_w1", (d, f)), (f"l{l}_b1", (f,)),
-            (f"l{l}_w2", (f, d)), (f"l{l}_b2", (d,)),
-            (f"l{l}_ln2_g", (d,)), (f"l{l}_ln2_b", (d,)),
-        ]
-    specs += [
-        ("pool_w", (cfg.d_model, cfg.d_model)),
-        ("pool_b", (cfg.d_model,)),
-        ("cls_w", (cfg.d_model, cfg.n_classes)),
-        ("cls_b", (cfg.n_classes,)),
-    ]
-    return specs
-
-
-def scale_specs(cfg: ModelConfig):
-    """Quantization scales, all shape (1,): 4 activation sites + 6 weight
-    sites per layer, in layer-major order."""
-    specs = []
-    for l in range(cfg.n_layers):
-        for a in ModelConfig.ACT_SITE_NAMES:
-            specs.append((f"l{l}_s_act_{a}", (1,)))
-        for w in ModelConfig.W_SITE_NAMES:
-            specs.append((f"l{l}_s_w_{w}", (1,)))
-    return specs
 
 
 def flat_to_dict(specs, flat):

@@ -1,0 +1,144 @@
+"""MKQC exporter header/layout unit tests (pure numpy — no jax).
+
+Parses the bytes the exporter writes against the byte-level spec in
+``rust/src/checkpoint/mod.rs``: fixed header fields, directory entry
+structure, contiguous non-overlapping payload ranges, and the trailing
+payload CRC-32.
+"""
+
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig, param_specs
+from compile import export_ckpt
+
+
+@pytest.fixture
+def tiny_cfg():
+    return ModelConfig(vocab=16, seq=4, n_layers=2, d_model=8, n_heads=2,
+                       d_ff=16, n_classes=2)
+
+
+def write_tiny(tmp_path, cfg, bits=None, seed=3):
+    bits = bits or [8, 4]
+    path = tmp_path / "tiny.mkqc"
+    params = export_ckpt.random_params(cfg, seed)
+    act = export_ckpt.default_act_scales(bits)
+    n = export_ckpt.write_checkpoint(str(path), cfg, bits, act, params)
+    blob = path.read_bytes()
+    assert len(blob) == n
+    return blob, bits, act, params
+
+
+def test_header_layout(tmp_path, tiny_cfg):
+    blob, bits, act, _ = write_tiny(tmp_path, tiny_cfg)
+    assert blob[:4] == b"MKQC"
+    (version,) = struct.unpack_from("<I", blob, 4)
+    assert version == 1
+    dims = struct.unpack_from("<7I", blob, 8)
+    assert dims == (16, 4, 2, 8, 2, 16, 2)
+    (n_tensors,) = struct.unpack_from("<I", blob, 36)
+    assert n_tensors == len(param_specs(tiny_cfg))
+    got_bits = struct.unpack_from("<2I", blob, 40)
+    assert list(got_bits) == bits
+    got_scales = np.frombuffer(blob, dtype="<f4", count=2 * 4, offset=48).reshape(2, 4)
+    np.testing.assert_array_equal(got_scales, act)
+
+
+def parse_directory(blob, cfg):
+    """Walk the directory; returns (entries, payload_start)."""
+    n_layers = cfg.n_layers
+    pos = 40 + 4 * n_layers + 16 * n_layers
+    (n_tensors,) = struct.unpack_from("<I", blob, 36)
+    entries = []
+    for _ in range(n_tensors):
+        (name_len,) = struct.unpack_from("<H", blob, pos)
+        pos += 2
+        name = blob[pos:pos + name_len].decode("utf-8")
+        pos += name_len
+        dtype, rank = struct.unpack_from("<BB", blob, pos)
+        pos += 2
+        shape = struct.unpack_from(f"<{rank}I", blob, pos)
+        pos += 4 * rank
+        offset, length = struct.unpack_from("<QQ", blob, pos)
+        pos += 16
+        entries.append((name, dtype, shape, offset, length))
+    return entries, pos
+
+
+def test_directory_matches_spec_and_payload_tiles(tmp_path, tiny_cfg):
+    blob, _, _, params = write_tiny(tmp_path, tiny_cfg)
+    entries, payload_start = parse_directory(blob, tiny_cfg)
+    specs = param_specs(tiny_cfg)
+    assert [e[0] for e in entries] == [n for n, _ in specs]
+    payload_len = len(blob) - payload_start - 4
+    expect_off = 0
+    for (name, dtype, shape, offset, length), (sname, sshape) in zip(entries, specs):
+        assert dtype == 0, name
+        assert shape == tuple(sshape), name
+        assert length == 4 * int(np.prod(sshape)), name
+        # writer emits spec order with a gap-free, non-overlapping payload
+        assert offset == expect_off, name
+        expect_off += length
+    assert expect_off == payload_len
+    # spot-check one tensor's bytes decode back to the source values
+    name, _, shape, offset, length = entries[0]
+    got = np.frombuffer(
+        blob, dtype="<f4", count=length // 4, offset=payload_start + offset
+    ).reshape(shape)
+    np.testing.assert_array_equal(got, params[name])
+
+
+def test_trailing_crc_covers_payload(tmp_path, tiny_cfg):
+    blob, _, _, _ = write_tiny(tmp_path, tiny_cfg)
+    _, payload_start = parse_directory(blob, tiny_cfg)
+    payload = blob[payload_start:-4]
+    (stored,) = struct.unpack_from("<I", blob, len(blob) - 4)
+    assert stored == (zlib.crc32(payload) & 0xFFFFFFFF)
+
+
+def test_writer_validates_inputs(tmp_path, tiny_cfg):
+    cfg = tiny_cfg
+    params = export_ckpt.random_params(cfg, 0)
+    act = export_ckpt.default_act_scales([8, 8])
+    out = str(tmp_path / "x.mkqc")
+
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8], act, params)  # bits len
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 8], act[:1], params)  # scales shape
+    bad = dict(params)
+    del bad["cls_b"]
+    with pytest.raises(KeyError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 8], act, bad)  # missing tensor
+    bad = dict(params)
+    bad["cls_b"] = np.zeros((3,), np.float32)
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 8], act, bad)  # wrong shape
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 3], act, params)  # bad bit width
+    bad_act = act.copy()
+    bad_act[1, 2] = 0.0
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 8], bad_act, params)  # zero scale
+    bad_act = act.copy()
+    bad_act[0, 0] = np.nan
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(out, cfg, [8, 8], bad_act, params)  # NaN scale
+
+
+def test_bits_helpers():
+    assert export_ckpt.bits_last_n_int4(4, 0) == [8, 8, 8, 8]
+    assert export_ckpt.bits_last_n_int4(4, 2) == [8, 8, 4, 4]
+    assert export_ckpt.bits_last_n_int4(4, 9) == [4, 4, 4, 4]
+    assert export_ckpt.parse_bits("8,8,4,4", 4) == [8, 8, 4, 4]
+    with pytest.raises(ValueError):
+        export_ckpt.parse_bits("8,8", 4)
+    with pytest.raises(ValueError):
+        export_ckpt.parse_bits("8,8,3,4", 4)
+    assert export_ckpt.qmax(4) == 8.0
+    assert export_ckpt.qmax(8) == 128.0
+    assert export_ckpt.qmax(32) == 128.0

@@ -11,7 +11,12 @@
 //! layers run int8.
 //!
 //! Usage: cargo run --release --bin e2e_speedup -- [--layers 12]
-//!            [--iters 10] [--bucket 16x28]
+//!            [--iters 10] [--bucket 16x28] [--checkpoint FILE.mkqc]
+//!
+//! With `--checkpoint`, the three bench layers (f32/int8/int4) are built
+//! from layer 0 of an MKQC checkpoint (its dims and calibrated activation
+//! scales) instead of random BERT-base-dim weights, so the sweep measures
+//! the model actually being deployed.
 
 use anyhow::Result;
 use mkq::bench_support as bs;
@@ -89,26 +94,88 @@ fn main() -> Result<()> {
     let bench = Bench::new(2, iters);
 
     println!("§5.4: end-to-end encoder time vs #int4 layers ({n_layers} layers, bucket {bucket})");
-    let weights = bs::make_weights(1);
-    let (h, mask) = bs::make_hidden(bsz, t, 2);
-    let h0 = h.as_f32()?;
-    let mask_v = mask.as_f32()?;
-
     let mut native = NativeBackend::new();
-    let (l32, l8, l4) = bs::native_bench_layers(&weights);
-    native.set_bench_layers(l32, l8, l4);
+    #[cfg_attr(not(feature = "xla"), allow(unused))]
+    let mut bench_weights: Option<bs::LayerWeights> = None;
+    let (h0, mask_v): (Vec<f32>, Vec<f32>) = if let Some(ck_path) = args.get("checkpoint") {
+        use mkq::checkpoint::Checkpoint;
+        use mkq::runtime::NativeLayer;
+        use mkq::util::rng::Rng;
+        let ck = Checkpoint::read(std::path::Path::new(ck_path)).map_err(anyhow::Error::new)?;
+        let hd = ck.header().clone();
+        let (d, dff, heads) = (hd.dims.d_model, hd.dims.d_ff, hd.dims.n_heads);
+        anyhow::ensure!(
+            d % 2 == 0 && dff % 2 == 0,
+            "checkpoint dims d_model={d} / d_ff={dff} must be even for the int4 bench row"
+        );
+        println!(
+            "bench layers from checkpoint {ck_path}: d={d} d_ff={dff} heads={heads} \
+             (layer 0 weights; header act scales as the quantization fallback)"
+        );
+        let tensors: Vec<(String, Vec<usize>, Vec<f32>)> = ck
+            .named_tensors()
+            .into_iter()
+            .filter_map(|(n, td, v)| n.strip_prefix("l0_").map(|s| (s.to_string(), td, v)))
+            .collect();
+        // typed failure (not a layer-constructor panic) on an incomplete
+        // or mis-shaped layer-0 tensor set
+        for (name, dims) in mkq::checkpoint::param_specs(&hd.dims) {
+            if let Some(suffix) = name.strip_prefix("l0_") {
+                anyhow::ensure!(
+                    tensors.iter().any(|(n, td, _)| n == suffix && *td == dims),
+                    "checkpoint layer-0 tensor {name} is missing or mis-shaped"
+                );
+            }
+        }
+        let mk = |bits: u32| {
+            let act = if bits == 32 {
+                [0.0; 4]
+            } else {
+                // header scales are the all-zero-row fallback only; when
+                // layer 0 is fp32 its stored scales are unvalidated (may
+                // be 0/NaN) and in any case calibrated for its own grid —
+                // substitute the grid default wherever unusable.
+                let default = mkq::runtime::native::default_act_scales(&[bits])[0];
+                let mut row = hd.act_scales[0];
+                for (v, dflt) in row.iter_mut().zip(default) {
+                    if !(v.is_finite() && *v > 0.0) {
+                        *v = dflt;
+                    }
+                }
+                row
+            };
+            NativeLayer::from_tensors(&tensors, heads, bits, act)
+        };
+        native.set_bench_layers(mk(32), mk(8), mk(4));
+        let mut rng = Rng::new(2);
+        ((0..bsz * t * d).map(|_| rng.normal() as f32).collect(), vec![1.0; bsz * t])
+    } else {
+        let weights = bs::make_weights(1);
+        let (h, mask) = bs::make_hidden(bsz, t, 2);
+        let pair = (h.as_f32()?.to_vec(), mask.as_f32()?.to_vec());
+        let (l32, l8, l4) = bs::native_bench_layers(&weights);
+        native.set_bench_layers(l32, l8, l4);
+        bench_weights = Some(weights);
+        pair
+    };
     println!("{}", native.disp.describe());
-    run_stack(&native, &bench, n_layers, bsz, t, h0, mask_v)?;
+    run_stack(&native, &bench, n_layers, bsz, t, &h0, &mask_v)?;
 
     #[cfg(feature = "xla")]
     {
         use mkq::runtime::{ArtifactBackend, Engine};
-        match Engine::load(&mkq::artifacts_dir()) {
-            Ok(eng) => {
-                let backend = ArtifactBackend::new(&eng).with_bench_weights(&weights)?;
-                run_stack(&backend, &bench, n_layers, bsz, t, h0, mask_v)?;
-            }
-            Err(e) => eprintln!("(artifact backend skipped: {e})"),
+        match &bench_weights {
+            Some(weights) => match Engine::load(&mkq::artifacts_dir()) {
+                Ok(eng) => {
+                    let backend = ArtifactBackend::new(&eng).with_bench_weights(weights)?;
+                    run_stack(&backend, &bench, n_layers, bsz, t, &h0, &mask_v)?;
+                }
+                Err(e) => eprintln!("(artifact backend skipped: {e})"),
+            },
+            None => eprintln!(
+                "(artifact backend skipped under --checkpoint: artifact layer shapes are \
+                 fixed at BERT-base dims)"
+            ),
         }
     }
     #[cfg(not(feature = "xla"))]

@@ -1,0 +1,353 @@
+//! MKQC — the MKQ-BERT flat-tensor checkpoint format.
+//!
+//! This is the on-disk contract between training (Rust QAT trainer or the
+//! Python compile path) and native serving: a QAT run exports one `.mkqc`
+//! file; [`crate::runtime::NativeModel::from_checkpoint`] loads it and
+//! prepacks the int4/int8 column panels at load time. Weights are stored
+//! as **fp32 master tensors** (the trainer's output); quantization grids
+//! are derived at load from the per-layer bit vector and the per-output-
+//! channel abs-max, exactly as the in-memory constructors do — so a saved
+//! and reloaded model produces bit-for-bit identical logits.
+//!
+//! # Byte-level layout (version 1, all fields little-endian)
+//!
+//! | offset            | size          | field                                         |
+//! |-------------------|---------------|-----------------------------------------------|
+//! | 0                 | 4             | magic `"MKQC"`                                |
+//! | 4                 | 4             | `u32` format version (= 1)                    |
+//! | 8                 | 28            | `7 x u32` NativeDims: vocab, seq, n_layers, d_model, n_heads, d_ff, n_classes |
+//! | 36                | 4             | `u32` n_tensors (directory entry count)       |
+//! | 40                | 4·L           | `u32 x n_layers` per-layer bit vector (4/8/32)|
+//! | 40+4L             | 16·L          | `f32 x 4 x n_layers` calibrated per-tensor activation scales (qkv_in, attn_out_in, ffn1_in, ffn2_in per layer) |
+//! | —                 | variable      | tensor directory, n_tensors entries (below)   |
+//! | —                 | variable      | payload: raw tensor bytes, directory order    |
+//! | end−4             | 4             | `u32` CRC-32 (zlib/IEEE) over the payload     |
+//!
+//! Directory entry:
+//!
+//! | size      | field                                              |
+//! |-----------|----------------------------------------------------|
+//! | 2         | `u16` name length (UTF-8 bytes, ≤ 256)             |
+//! | name_len  | tensor name                                        |
+//! | 1         | `u8` dtype (0 = f32; others reserved)              |
+//! | 1         | `u8` rank (≤ 8)                                    |
+//! | 4·rank    | `u32 x rank` dims                                  |
+//! | 8         | `u64` byte offset from payload start               |
+//! | 8         | `u64` byte length (= 4·Π dims for f32)             |
+//!
+//! The reader rejects bad magic/version, header inconsistencies,
+//! truncated files, out-of-bounds or overlapping directory entries, size
+//! mismatches and CRC failures with typed [`CkptError`]s. The CRC covers
+//! the payload only (the ISSUE-specified trailer): corrupt tensor bytes
+//! always surface as [`CkptError::BadCrc`], while header/directory
+//! corruption is caught by the structural checks — which reject
+//! *inconsistent* headers, not every semantically-plausible bit flip
+//! (e.g. a mantissa flip inside a stored activation scale passes
+//! validation). A format v2 extending a second CRC over header +
+//! directory is listed as a ROADMAP follow-on.
+//!
+//! # Tensor naming contract
+//!
+//! Names mirror `python/compile/model.py::param_specs` (the flat ordering
+//! contract with the compile path): `emb_word`, `emb_pos`, `emb_ln_g`,
+//! `emb_ln_b`, then per layer `l{i}_wq`, `l{i}_bq`, … `l{i}_ln2_b`
+//! (see [`LAYER_TENSOR_SUFFIXES`]), then `pool_w`, `pool_b`, `cls_w`,
+//! `cls_b`. [`param_specs`] generates the full expected (name, dims) list
+//! from a [`NativeDims`]; directory order is not significant — lookup is
+//! by name — but both writers emit spec order.
+//!
+//! Follow-ons tracked in ROADMAP.md: mmap zero-copy load, persisting the
+//! prepacked panels themselves, multi-shard checkpoints.
+
+pub mod reader;
+pub mod writer;
+
+pub use reader::Checkpoint;
+pub use writer::Writer;
+
+use crate::runtime::native::NativeDims;
+
+/// File magic: the first four bytes of every checkpoint.
+pub const MAGIC: [u8; 4] = *b"MKQC";
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+/// dtype byte for fp32 tensors (the only payload dtype in version 1).
+pub const DTYPE_F32: u8 = 0;
+
+/// Hard caps the reader enforces before trusting any length field.
+pub const MAX_NAME_LEN: usize = 256;
+pub const MAX_RANK: usize = 8;
+pub const MAX_LAYERS: usize = 4096;
+pub const MAX_TENSORS: usize = 1 << 20;
+
+/// Per-layer tensor-name suffixes in spec order (full name: `l{i}_wq` …).
+pub const LAYER_TENSOR_SUFFIXES: [&str; 16] = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "ln1_g", "ln1_b", "w1", "b1", "w2", "b2",
+    "ln2_g", "ln2_b",
+];
+
+/// Typed checkpoint errors — every reader rejection is one of these, so
+/// callers (and the corrupt-input tests) can match on the failure mode.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// First four bytes are not `"MKQC"`.
+    BadMagic { got: [u8; 4] },
+    /// Unknown format version.
+    BadVersion { got: u32 },
+    /// The file ends before a required field/section.
+    Truncated { what: &'static str, need: usize, have: usize },
+    /// Header fields are structurally invalid (bit widths, zero dims, …).
+    BadHeader(String),
+    /// A directory entry is malformed (name/rank/dtype/size bounds).
+    BadDirectory(String),
+    /// Two directory entries claim overlapping payload ranges.
+    Overlap { a: String, b: String },
+    /// Payload CRC-32 does not match the stored trailer.
+    BadCrc { stored: u32, computed: u32 },
+    /// A tensor exists but its shape contradicts the header dims.
+    DimsMismatch(String),
+    /// A tensor required by the model spec is absent.
+    MissingTensor(String),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint i/o error: {e}"),
+            CkptError::BadMagic { got } => {
+                write!(f, "bad checkpoint magic {:02x?} (want \"MKQC\")", got)
+            }
+            CkptError::BadVersion { got } => {
+                write!(f, "unsupported checkpoint version {got} (reader supports {VERSION})")
+            }
+            CkptError::Truncated { what, need, have } => {
+                write!(f, "truncated checkpoint: {what} needs {need} bytes, {have} available")
+            }
+            CkptError::BadHeader(m) => write!(f, "bad checkpoint header: {m}"),
+            CkptError::BadDirectory(m) => write!(f, "bad checkpoint directory: {m}"),
+            CkptError::Overlap { a, b } => {
+                write!(f, "overlapping checkpoint directory entries: {a:?} and {b:?}")
+            }
+            CkptError::BadCrc { stored, computed } => write!(
+                f,
+                "checkpoint payload CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            CkptError::DimsMismatch(m) => write!(f, "checkpoint dims mismatch: {m}"),
+            CkptError::MissingTensor(n) => write!(f, "checkpoint is missing tensor {n:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+/// The fixed header: model dims, per-layer bits, calibrated activation
+/// scales. Everything [`crate::runtime::NativeModel::from_checkpoint`]
+/// needs besides the tensors themselves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptHeader {
+    pub dims: NativeDims,
+    /// Per-layer bit widths (4, 8 or 32), length `dims.n_layers`.
+    pub bits: Vec<u32>,
+    /// Per-layer calibrated per-tensor activation scales, length
+    /// `dims.n_layers`: qkv_in, attn_out_in, ffn1_in, ffn2_in.
+    pub act_scales: Vec<[f32; 4]>,
+}
+
+impl CkptHeader {
+    /// Structural validation shared by writer and reader.
+    pub fn validate(&self) -> Result<(), CkptError> {
+        let d = &self.dims;
+        let bad = |m: String| Err(CkptError::BadHeader(m));
+        if d.n_layers == 0 || d.n_layers > MAX_LAYERS {
+            return bad(format!("n_layers {} out of range 1..={MAX_LAYERS}", d.n_layers));
+        }
+        for (name, v) in [
+            ("vocab", d.vocab),
+            ("seq", d.seq),
+            ("d_model", d.d_model),
+            ("n_heads", d.n_heads),
+            ("d_ff", d.d_ff),
+            ("n_classes", d.n_classes),
+        ] {
+            if v == 0 {
+                return bad(format!("{name} is zero"));
+            }
+        }
+        if d.d_model % d.n_heads != 0 {
+            return bad(format!("n_heads {} does not divide d_model {}", d.n_heads, d.d_model));
+        }
+        if self.bits.len() != d.n_layers {
+            return bad(format!("bit vector has {} entries, n_layers {}", self.bits.len(), d.n_layers));
+        }
+        if self.act_scales.len() != d.n_layers {
+            return bad(format!(
+                "act-scale table has {} rows, n_layers {}",
+                self.act_scales.len(),
+                d.n_layers
+            ));
+        }
+        for (l, &b) in self.bits.iter().enumerate() {
+            if !matches!(b, 4 | 8 | 32) {
+                return bad(format!("layer {l}: unsupported bit width {b} (use 4, 8 or 32)"));
+            }
+            // int4 panels nibble-pack along K — both GEMM K dims must be even.
+            if b == 4 && (d.d_model % 2 != 0 || d.d_ff % 2 != 0) {
+                return bad(format!(
+                    "layer {l} is int4 but d_model {} / d_ff {} are not both even (K-nibble packing)",
+                    d.d_model, d.d_ff
+                ));
+            }
+        }
+        for (l, s) in self.act_scales.iter().enumerate() {
+            if self.bits[l] != 32 && s.iter().any(|&v| !(v.is_finite() && v > 0.0)) {
+                return bad(format!("layer {l}: activation scales {s:?} must be finite and positive"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The full expected tensor list (name, dims) for a model of the given
+/// dims, in the canonical spec order — mirrors
+/// `python/compile/model.py::param_specs` exactly.
+pub fn param_specs(d: &NativeDims) -> Vec<(String, Vec<usize>)> {
+    let (dm, dff) = (d.d_model, d.d_ff);
+    let mut specs: Vec<(String, Vec<usize>)> = vec![
+        ("emb_word".into(), vec![d.vocab, dm]),
+        ("emb_pos".into(), vec![d.seq, dm]),
+        ("emb_ln_g".into(), vec![dm]),
+        ("emb_ln_b".into(), vec![dm]),
+    ];
+    for l in 0..d.n_layers {
+        for suffix in LAYER_TENSOR_SUFFIXES {
+            let dims = match suffix {
+                "wq" | "wk" | "wv" | "wo" => vec![dm, dm],
+                "w1" => vec![dm, dff],
+                "w2" => vec![dff, dm],
+                "b1" => vec![dff],
+                _ => vec![dm], // biases and LN params
+            };
+            specs.push((format!("l{l}_{suffix}"), dims));
+        }
+    }
+    specs.push(("pool_w".into(), vec![dm, dm]));
+    specs.push(("pool_b".into(), vec![dm]));
+    specs.push(("cls_w".into(), vec![dm, d.n_classes]));
+    specs.push(("cls_b".into(), vec![d.n_classes]));
+    specs
+}
+
+/// Write a full model checkpoint from named tensors (spec naming). The
+/// tensor list does not have to be in spec order, but every spec tensor
+/// must be present with matching dims — this is the same contract the
+/// reader-side model constructor enforces, applied at write time so a
+/// broken checkpoint is never produced.
+pub fn write_model_checkpoint(
+    path: &std::path::Path,
+    header: &CkptHeader,
+    tensors: &[(String, Vec<usize>, Vec<f32>)],
+) -> Result<(), CkptError> {
+    let mut w = Writer::new(header.clone())?;
+    for (name, dims, data) in tensors {
+        w.add_f32(name, dims, data)?;
+    }
+    for (name, dims) in param_specs(&header.dims) {
+        match tensors.iter().find(|(n, _, _)| *n == name) {
+            None => return Err(CkptError::MissingTensor(name)),
+            Some((_, got, _)) if *got != dims => {
+                return Err(CkptError::DimsMismatch(format!("{name}: {got:?} != spec {dims:?}")))
+            }
+            Some(_) => {}
+        }
+    }
+    w.write_to(path)
+}
+
+/// Export a random-init model checkpoint — the demo/CI path: the same
+/// tensors [`crate::runtime::NativeModel::random`] builds from, so
+/// loading the file reproduces that model bit-for-bit.
+pub fn export_random(
+    path: &std::path::Path,
+    dims: NativeDims,
+    bits: &[u32],
+    seed: u64,
+) -> Result<(), CkptError> {
+    use crate::runtime::native;
+    let header = CkptHeader {
+        dims,
+        bits: bits.to_vec(),
+        act_scales: native::default_act_scales(bits),
+    };
+    let tensors = native::random_model_tensors(&dims, seed);
+    write_model_checkpoint(path, &header, &tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_header() -> CkptHeader {
+        let dims = NativeDims { vocab: 16, seq: 4, n_layers: 2, d_model: 8, n_heads: 2, d_ff: 16, n_classes: 2 };
+        CkptHeader { dims, bits: vec![8, 4], act_scales: vec![[0.05; 4], [0.75; 4]] }
+    }
+
+    #[test]
+    fn header_validation_accepts_and_rejects() {
+        let h = tiny_header();
+        assert!(h.validate().is_ok());
+
+        let mut bad = h.clone();
+        bad.bits = vec![8, 3];
+        assert!(matches!(bad.validate(), Err(CkptError::BadHeader(_))));
+
+        let mut bad = h.clone();
+        bad.bits = vec![8];
+        assert!(matches!(bad.validate(), Err(CkptError::BadHeader(_))));
+
+        let mut bad = h.clone();
+        bad.dims.n_heads = 3; // does not divide d_model=8
+        assert!(matches!(bad.validate(), Err(CkptError::BadHeader(_))));
+
+        let mut bad = h.clone();
+        bad.act_scales[1] = [f32::NAN; 4];
+        assert!(matches!(bad.validate(), Err(CkptError::BadHeader(_))));
+
+        // fp32 layers may carry any scale value (it is ignored at 32 bits)
+        let mut ok = h.clone();
+        ok.bits = vec![32, 4];
+        ok.act_scales[0] = [0.0; 4];
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn param_specs_cover_model() {
+        let h = tiny_header();
+        let specs = param_specs(&h.dims);
+        // 4 embedding + 16 per layer + 4 head tensors
+        assert_eq!(specs.len(), 4 + 16 * h.dims.n_layers + 4);
+        assert_eq!(specs[0].0, "emb_word");
+        assert_eq!(specs[0].1, vec![16, 8]);
+        assert_eq!(specs[4].0, "l0_wq");
+        assert!(specs.iter().any(|(n, d)| n == "l1_w2" && *d == vec![16, 8]));
+        assert_eq!(specs.last().unwrap().0, "cls_b");
+        // names unique
+        let mut names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), specs.len());
+    }
+}

@@ -1,0 +1,356 @@
+//! MKQC reader: parse + validate a checkpoint file, then serve tensors
+//! by name.
+//!
+//! Validation order (each failure is a typed [`CkptError`]):
+//! magic → version → header fields ([`CkptHeader::validate`]) → directory
+//! structure (name/rank/dtype/size bounds) → payload bounds (every entry
+//! inside the payload, no overlapping entries) → payload CRC-32 against
+//! the stored trailer. Only a fully validated file hands out tensors.
+
+use std::path::Path;
+
+use crate::util::crc32::crc32;
+
+use super::{
+    CkptError, CkptHeader, DTYPE_F32, MAGIC, MAX_LAYERS, MAX_NAME_LEN, MAX_RANK, MAX_TENSORS,
+    VERSION,
+};
+use crate::runtime::native::NativeDims;
+
+/// One parsed directory entry (exposed for `mkq-bert ckpt inspect`).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub dtype: u8,
+    pub dims: Vec<usize>,
+    /// Byte offset from payload start.
+    pub offset: usize,
+    /// Byte length.
+    pub len: usize,
+}
+
+/// A validated, in-memory checkpoint.
+pub struct Checkpoint {
+    header: CkptHeader,
+    entries: Vec<Entry>,
+    data: Vec<u8>,
+    payload_start: usize,
+    payload_len: usize,
+}
+
+struct Cur<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CkptError> {
+        let have = self.data.len() - self.pos;
+        if have < n {
+            return Err(CkptError::Truncated { what, need: n, have });
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, CkptError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, CkptError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, CkptError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CkptError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &'static str) -> Result<f32, CkptError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+}
+
+impl Checkpoint {
+    /// Read and fully validate a checkpoint file.
+    pub fn read(path: &Path) -> Result<Self, CkptError> {
+        Self::from_bytes(std::fs::read(path)?)
+    }
+
+    /// Parse + validate checkpoint bytes (the whole file image).
+    pub fn from_bytes(data: Vec<u8>) -> Result<Self, CkptError> {
+        let mut cur = Cur { data: &data[..], pos: 0 };
+
+        let magic = cur.take(4, "magic")?;
+        if magic != MAGIC {
+            return Err(CkptError::BadMagic { got: magic.try_into().unwrap() });
+        }
+        let version = cur.u32("version")?;
+        if version != VERSION {
+            return Err(CkptError::BadVersion { got: version });
+        }
+
+        let mut dims_v = [0usize; 7];
+        for (slot, what) in dims_v.iter_mut().zip([
+            "vocab", "seq", "n_layers", "d_model", "n_heads", "d_ff", "n_classes",
+        ]) {
+            *slot = cur.u32(what)? as usize;
+        }
+        let dims = NativeDims {
+            vocab: dims_v[0],
+            seq: dims_v[1],
+            n_layers: dims_v[2],
+            d_model: dims_v[3],
+            n_heads: dims_v[4],
+            d_ff: dims_v[5],
+            n_classes: dims_v[6],
+        };
+        let n_tensors = cur.u32("n_tensors")? as usize;
+        if n_tensors > MAX_TENSORS {
+            return Err(CkptError::BadDirectory(format!(
+                "n_tensors {n_tensors} exceeds {MAX_TENSORS}"
+            )));
+        }
+        // bound n_layers BEFORE allocating header tables from it
+        if dims.n_layers == 0 || dims.n_layers > MAX_LAYERS {
+            return Err(CkptError::BadHeader(format!(
+                "n_layers {} out of range 1..={MAX_LAYERS}",
+                dims.n_layers
+            )));
+        }
+        let mut bits = Vec::with_capacity(dims.n_layers);
+        for _ in 0..dims.n_layers {
+            bits.push(cur.u32("bit vector")?);
+        }
+        let mut act_scales = Vec::with_capacity(dims.n_layers);
+        for _ in 0..dims.n_layers {
+            let mut row = [0f32; 4];
+            for s in row.iter_mut() {
+                *s = cur.f32("activation scales")?;
+            }
+            act_scales.push(row);
+        }
+        let header = CkptHeader { dims, bits, act_scales };
+        header.validate()?;
+
+        // cap the pre-allocation by what the remaining bytes could hold (a
+        // directory entry is at least 21 bytes), so a corrupt n_tensors in
+        // a tiny file cannot force a large allocation before parsing fails
+        const MIN_ENTRY_BYTES: usize = 2 + 1 + 1 + 1 + 8 + 8;
+        let cap = n_tensors.min((data.len() - cur.pos) / MIN_ENTRY_BYTES + 1);
+        let mut entries = Vec::with_capacity(cap);
+        for i in 0..n_tensors {
+            let name_len = cur.u16("directory name length")? as usize;
+            if name_len == 0 || name_len > MAX_NAME_LEN {
+                return Err(CkptError::BadDirectory(format!(
+                    "entry {i}: name length {name_len} out of range 1..={MAX_NAME_LEN}"
+                )));
+            }
+            let name = std::str::from_utf8(cur.take(name_len, "directory name")?)
+                .map_err(|_| CkptError::BadDirectory(format!("entry {i}: name is not UTF-8")))?
+                .to_string();
+            let dtype = cur.u8("directory dtype")?;
+            if dtype != DTYPE_F32 {
+                return Err(CkptError::BadDirectory(format!(
+                    "{name}: unknown dtype {dtype} (version-1 payloads are f32)"
+                )));
+            }
+            let rank = cur.u8("directory rank")? as usize;
+            if rank > MAX_RANK {
+                return Err(CkptError::BadDirectory(format!("{name}: rank {rank} exceeds {MAX_RANK}")));
+            }
+            let mut dims_t = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims_t.push(cur.u32("directory dims")? as usize);
+            }
+            let offset = cur.u64("directory offset")?;
+            let len = cur.u64("directory length")?;
+            let (offset, len) = (
+                usize::try_from(offset)
+                    .map_err(|_| CkptError::BadDirectory(format!("{name}: offset {offset} overflows")))?,
+                usize::try_from(len)
+                    .map_err(|_| CkptError::BadDirectory(format!("{name}: length {len} overflows")))?,
+            );
+            let count = dims_t
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .ok_or_else(|| CkptError::BadDirectory(format!("{name}: dims {dims_t:?} overflow")))?;
+            let expect = count
+                .checked_mul(4)
+                .ok_or_else(|| CkptError::BadDirectory(format!("{name}: byte size overflows")))?;
+            if len != expect {
+                return Err(CkptError::BadDirectory(format!(
+                    "{name}: payload length {len} != dims {dims_t:?} x 4 = {expect}"
+                )));
+            }
+            entries.push(Entry { name, dtype, dims: dims_t, offset, len });
+        }
+        // duplicate-name detection in O(n log n), not O(n^2) per insert —
+        // n_tensors is attacker-controlled up to MAX_TENSORS
+        {
+            let mut names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+            names.sort_unstable();
+            for w in names.windows(2) {
+                if w[0] == w[1] {
+                    return Err(CkptError::BadDirectory(format!(
+                        "duplicate tensor name {:?}",
+                        w[0]
+                    )));
+                }
+            }
+        }
+
+        let payload_start = cur.pos;
+        let rest = data.len() - payload_start;
+        if rest < 4 {
+            return Err(CkptError::Truncated { what: "payload CRC trailer", need: 4, have: rest });
+        }
+        let payload_len = rest - 4;
+
+        // every entry inside the payload, and no two entries overlapping
+        for e in &entries {
+            let end = e.offset.checked_add(e.len).ok_or_else(|| {
+                CkptError::BadDirectory(format!("{}: offset+len overflows", e.name))
+            })?;
+            if end > payload_len {
+                return Err(CkptError::Truncated {
+                    what: "tensor payload",
+                    need: end,
+                    have: payload_len,
+                });
+            }
+        }
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by_key(|&i| entries[i].offset);
+        for w in order.windows(2) {
+            let (a, b) = (&entries[w[0]], &entries[w[1]]);
+            if a.offset + a.len > b.offset {
+                return Err(CkptError::Overlap { a: a.name.clone(), b: b.name.clone() });
+            }
+        }
+
+        let payload = &data[payload_start..payload_start + payload_len];
+        let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        let computed = crc32(payload);
+        if stored != computed {
+            return Err(CkptError::BadCrc { stored, computed });
+        }
+
+        Ok(Checkpoint { header, entries, data, payload_start, payload_len })
+    }
+
+    pub fn header(&self) -> &CkptHeader {
+        &self.header
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_len
+    }
+
+    /// Decode one fp32 tensor by name.
+    pub fn f32_tensor(&self, name: &str) -> Result<(&[usize], Vec<f32>), CkptError> {
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| CkptError::MissingTensor(name.to_string()))?;
+        let raw = &self.data[self.payload_start + e.offset..self.payload_start + e.offset + e.len];
+        let data = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok((&e.dims, data))
+    }
+
+    /// Decode every tensor into the `(name, dims, data)` form the native
+    /// model constructors consume.
+    pub fn named_tensors(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let (dims, data) = self.f32_tensor(&e.name).expect("entry self-lookup");
+                (e.name.clone(), dims.to_vec(), data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Writer;
+    use super::*;
+
+    fn tiny_bytes() -> Vec<u8> {
+        let dims = NativeDims { vocab: 8, seq: 4, n_layers: 1, d_model: 4, n_heads: 2, d_ff: 8, n_classes: 2 };
+        let header = CkptHeader { dims, bits: vec![4], act_scales: vec![[0.25; 4]] };
+        let mut w = Writer::new(header).unwrap();
+        w.add_f32("t0", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        w.add_f32("t1", &[2], &[-1.0, 1.0]).unwrap();
+        w.to_bytes()
+    }
+
+    #[test]
+    fn parses_valid_bytes() {
+        let ck = Checkpoint::from_bytes(tiny_bytes()).unwrap();
+        assert_eq!(ck.header().bits, vec![4]);
+        assert_eq!(ck.entries().len(), 2);
+        assert_eq!(ck.payload_bytes(), 4 * 8);
+        let named = ck.named_tensors();
+        assert_eq!(named[0].0, "t0");
+        assert_eq!(named[0].1, vec![2, 3]);
+        assert_eq!(named[1].2, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_crc_truncation() {
+        let good = tiny_bytes();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadMagic { .. })));
+
+        let mut bad = good.clone();
+        bad[4] = 99; // version LE byte 0
+        assert!(matches!(
+            Checkpoint::from_bytes(bad),
+            Err(CkptError::BadVersion { got: 99 })
+        ));
+
+        let mut bad = good.clone();
+        let flip = good.len() - 10; // inside the payload
+        bad[flip] ^= 0xFF;
+        assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadCrc { .. })));
+
+        for cut in [2usize, 30, good.len() - 5, good.len() - 1] {
+            let bad = good[..cut].to_vec();
+            assert!(
+                matches!(Checkpoint::from_bytes(bad), Err(CkptError::Truncated { .. })),
+                "cut at {cut} must be Truncated"
+            );
+        }
+        assert!(matches!(
+            Checkpoint::from_bytes(Vec::new()),
+            Err(CkptError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_garbage_after_header() {
+        // valid header, then directory bytes that cannot parse
+        let good = tiny_bytes();
+        let mut bad = good[..60].to_vec(); // fixed header is exactly 60 bytes for L=1
+        bad.extend_from_slice(&[0xFF; 3]);
+        assert!(Checkpoint::from_bytes(bad).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! MKQC writer: stream tensors in, emit header + directory + payload +
+//! trailing payload CRC-32 in one pass at [`Writer::write_to`].
+//!
+//! Tensor bytes are accumulated into the payload buffer (and the CRC) as
+//! they are added, so each tensor is converted to little-endian exactly
+//! once; the header and directory are serialized last, when every offset
+//! is known. `write_to` writes to a `.tmp` sibling and renames, so a
+//! crash mid-export never leaves a half-written checkpoint at the target
+//! path. (Follow-on, see ROADMAP: spill the payload to disk instead of
+//! RAM for checkpoints that approach memory size.)
+
+use std::path::Path;
+
+use crate::util::crc32::Crc32;
+
+use super::{CkptError, CkptHeader, DTYPE_F32, MAGIC, MAX_NAME_LEN, MAX_RANK, VERSION};
+
+pub(crate) struct DirEntry {
+    pub name: String,
+    pub dtype: u8,
+    pub dims: Vec<usize>,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Serializer for one checkpoint file. Add every tensor, then call
+/// [`write_to`](Writer::write_to) (or [`to_bytes`](Writer::to_bytes)).
+pub struct Writer {
+    header: CkptHeader,
+    entries: Vec<DirEntry>,
+    payload: Vec<u8>,
+    crc: Crc32,
+}
+
+impl Writer {
+    /// Validates the header up front so a structurally broken checkpoint
+    /// can never be produced.
+    pub fn new(header: CkptHeader) -> Result<Self, CkptError> {
+        header.validate()?;
+        Ok(Writer { header, entries: Vec::new(), payload: Vec::new(), crc: Crc32::new() })
+    }
+
+    pub fn header(&self) -> &CkptHeader {
+        &self.header
+    }
+
+    /// Append one fp32 tensor. Rejects duplicate names, over-long names,
+    /// rank > [`MAX_RANK`] and dims/data length mismatches.
+    pub fn add_f32(&mut self, name: &str, dims: &[usize], data: &[f32]) -> Result<(), CkptError> {
+        if name.is_empty() || name.len() > MAX_NAME_LEN {
+            return Err(CkptError::BadDirectory(format!(
+                "tensor name {name:?} length {} out of range 1..={MAX_NAME_LEN}",
+                name.len()
+            )));
+        }
+        if self.entries.iter().any(|e| e.name == name) {
+            return Err(CkptError::BadDirectory(format!("duplicate tensor name {name:?}")));
+        }
+        if dims.len() > MAX_RANK {
+            return Err(CkptError::BadDirectory(format!(
+                "{name}: rank {} exceeds {MAX_RANK}",
+                dims.len()
+            )));
+        }
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(CkptError::DimsMismatch(format!(
+                "{name}: dims {dims:?} imply {count} elements, got {}",
+                data.len()
+            )));
+        }
+        let offset = self.payload.len() as u64;
+        self.payload.reserve(data.len() * 4);
+        for &v in data {
+            let b = v.to_le_bytes();
+            self.crc.update(&b);
+            self.payload.extend_from_slice(&b);
+        }
+        self.entries.push(DirEntry {
+            name: name.to_string(),
+            dtype: DTYPE_F32,
+            dims: dims.to_vec(),
+            offset,
+            len: (data.len() * 4) as u64,
+        });
+        Ok(())
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Serialize the whole checkpoint to a byte vector.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let d = &self.header.dims;
+        let dir_len: usize =
+            self.entries.iter().map(|e| 2 + e.name.len() + 1 + 1 + 4 * e.dims.len() + 16).sum();
+        let header_len = 4 + 4 + 7 * 4 + 4 + 4 * d.n_layers + 16 * d.n_layers;
+        let mut out = Vec::with_capacity(header_len + dir_len + self.payload.len() + 4);
+
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        for v in [d.vocab, d.seq, d.n_layers, d.d_model, d.n_heads, d.d_ff, d.n_classes] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for &b in &self.header.bits {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        for row in &self.header.act_scales {
+            for &s in row {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        for e in &self.entries {
+            out.extend_from_slice(&(e.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(e.name.as_bytes());
+            out.push(e.dtype);
+            out.push(e.dims.len() as u8);
+            for &dim in &e.dims {
+                out.extend_from_slice(&(dim as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.len.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+        out.extend_from_slice(&self.crc.finish().to_le_bytes());
+        out
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over the
+    /// target. The suffix is appended to the full file name (not swapped
+    /// for the extension) so concurrent exports to distinct targets never
+    /// share a temp file.
+    pub fn write_to(&self, path: &Path) -> Result<(), CkptError> {
+        let bytes = self.to_bytes();
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Checkpoint;
+    use super::*;
+    use crate::runtime::native::NativeDims;
+
+    fn header() -> CkptHeader {
+        let dims = NativeDims { vocab: 8, seq: 4, n_layers: 1, d_model: 4, n_heads: 2, d_ff: 8, n_classes: 2 };
+        CkptHeader { dims, bits: vec![8], act_scales: vec![[0.1; 4]] }
+    }
+
+    #[test]
+    fn writer_rejects_bad_tensors() {
+        let mut w = Writer::new(header()).unwrap();
+        w.add_f32("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!(matches!(
+            w.add_f32("a", &[1], &[0.0]),
+            Err(CkptError::BadDirectory(_))
+        ));
+        assert!(matches!(
+            w.add_f32("b", &[3], &[0.0]),
+            Err(CkptError::DimsMismatch(_))
+        ));
+        assert!(matches!(
+            w.add_f32("", &[1], &[0.0]),
+            Err(CkptError::BadDirectory(_))
+        ));
+        let long = "x".repeat(MAX_NAME_LEN + 1);
+        assert!(matches!(
+            w.add_f32(&long, &[1], &[0.0]),
+            Err(CkptError::BadDirectory(_))
+        ));
+    }
+
+    #[test]
+    fn writer_rejects_bad_header() {
+        let mut h = header();
+        h.bits = vec![5];
+        assert!(matches!(Writer::new(h), Err(CkptError::BadHeader(_))));
+    }
+
+    #[test]
+    fn bytes_roundtrip_through_reader() {
+        let mut w = Writer::new(header()).unwrap();
+        let a = vec![1.0f32, -2.5, 3.25, 0.0];
+        let b = vec![9.0f32; 8];
+        w.add_f32("a", &[2, 2], &a).unwrap();
+        w.add_f32("b", &[8], &b).unwrap();
+        assert_eq!(w.tensor_count(), 2);
+        assert_eq!(w.payload_bytes(), 4 * (4 + 8));
+        let ck = Checkpoint::from_bytes(w.to_bytes()).unwrap();
+        assert_eq!(ck.header(), w.header());
+        let (dims_a, data_a) = ck.f32_tensor("a").unwrap();
+        assert_eq!(dims_a, &[2, 2]);
+        assert_eq!(data_a, a);
+        let (dims_b, data_b) = ck.f32_tensor("b").unwrap();
+        assert_eq!(dims_b, &[8]);
+        assert_eq!(data_b, b);
+        assert!(matches!(ck.f32_tensor("zzz"), Err(CkptError::MissingTensor(_))));
+    }
+}

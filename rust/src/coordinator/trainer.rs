@@ -94,6 +94,9 @@ pub struct QatConfig {
     /// Evaluate the dev set every N steps (and at the end).
     pub eval_every: usize,
     pub seed: u64,
+    /// Export the best-eval QAT state as an MKQC checkpoint after
+    /// training (served natively via `serve-native --checkpoint`).
+    pub ckpt_out: Option<std::path::PathBuf>,
 }
 
 impl Default for QatConfig {
@@ -110,6 +113,7 @@ impl Default for QatConfig {
             lr_scale_w: 0.001,
             eval_every: 100,
             seed: 17,
+            ckpt_out: None,
         }
     }
 }
@@ -353,6 +357,8 @@ impl<'e> Trainer<'e> {
         let mut curve = TrainCurve { points: vec![] };
         let mut evals: Vec<(usize, f64)> = vec![];
         let mut best = 0f64;
+        // best-eval params+scales snapshot, kept for the checkpoint export
+        let mut best_state: Option<Vec<Literal>> = None;
         let mut done = 0usize;
         while done < cfg.steps {
             let k = d.k_steps;
@@ -390,6 +396,15 @@ impl<'e> Trainer<'e> {
             if done % cfg.eval_every < k || done >= cfg.steps {
                 let acc = self.eval_student(&state[..d.n_params + d.n_scales], &bits_f, &task.dev)?;
                 evals.push((done, acc));
+                // snapshot only when an export will actually consume it
+                if cfg.ckpt_out.is_some() && (acc > best || best_state.is_none()) {
+                    best_state = Some(
+                        state[..d.n_params + d.n_scales]
+                            .iter()
+                            .map(clone_literal)
+                            .collect::<Result<_>>()?,
+                    );
+                }
                 best = best.max(acc);
                 if self.verbose {
                     println!(
@@ -402,7 +417,86 @@ impl<'e> Trainer<'e> {
             }
         }
         let final_acc = evals.last().map(|&(_, a)| a).unwrap_or(0.0);
+        if let Some(path) = &cfg.ckpt_out {
+            let snap = best_state
+                .as_ref()
+                .map(|s| &s[..])
+                .unwrap_or(&state[..d.n_params + d.n_scales]);
+            self.export_checkpoint(snap, &cfg.bits, path)?;
+            if self.verbose {
+                println!("  [qat] exported best-eval checkpoint to {}", path.display());
+            }
+        }
         Ok(QatResult { best_dev_acc: best, final_dev_acc: final_acc, evals, curve })
+    }
+
+    /// Export a QAT state (params + scales, manifest order) as an MKQC
+    /// checkpoint: fp32 master weights under the `param_specs` naming
+    /// contract, the per-layer bit vector, and the 4 learned activation
+    /// scales per layer in the header. `serve-native --checkpoint` then
+    /// prepacks and serves it without Python or XLA.
+    pub fn export_checkpoint(
+        &self,
+        params_scales: &[Literal],
+        bits: &[u32],
+        path: &std::path::Path,
+    ) -> Result<()> {
+        use crate::checkpoint::{write_model_checkpoint, CkptHeader};
+        use crate::runtime::NativeDims;
+
+        let d = &self.dims;
+        anyhow::ensure!(
+            params_scales.len() == d.n_params + d.n_scales,
+            "export_checkpoint wants {} params + {} scales, got {}",
+            d.n_params,
+            d.n_scales,
+            params_scales.len()
+        );
+        // tensor names come from the manifest's eval_step input list
+        // ("p.<name>" params then "s.<name>" scales) — the same flat
+        // ordering contract the Python compile path emits.
+        let spec = self.eng.spec("eval_step")?;
+        let mut tensors: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::with_capacity(d.n_params);
+        for (lit, inp) in params_scales[..d.n_params].iter().zip(&spec.inputs) {
+            let name = inp
+                .name
+                .strip_prefix("p.")
+                .ok_or_else(|| anyhow::anyhow!("manifest input {} is not a p.* param", inp.name))?;
+            let t = HostTensor::from_literal(lit)?;
+            tensors.push((name.to_string(), t.dims.clone(), t.as_f32()?.to_vec()));
+        }
+        // per layer: 4 activation-site scales, then 6 weight scales (the
+        // weight scales are re-derived at load from the fp32 weights).
+        let per_layer = d.n_scales / d.n_layers;
+        anyhow::ensure!(
+            per_layer * d.n_layers == d.n_scales && per_layer >= 4,
+            "manifest n_scales {} is not a per-layer multiple >= 4 of n_layers {}",
+            d.n_scales,
+            d.n_layers
+        );
+        let mut act_scales = Vec::with_capacity(d.n_layers);
+        for l in 0..d.n_layers {
+            let mut row = [0f32; 4];
+            for (a, slot) in row.iter_mut().enumerate() {
+                let lit = &params_scales[d.n_params + l * per_layer + a];
+                *slot = HostTensor::from_literal(lit)?.as_f32()?[0];
+            }
+            act_scales.push(row);
+        }
+        let header = CkptHeader {
+            dims: NativeDims {
+                vocab: d.vocab,
+                seq: d.seq,
+                n_layers: d.n_layers,
+                d_model: d.d_model,
+                n_heads: d.n_heads,
+                d_ff: d.d_ff,
+                n_classes: d.n_classes,
+            },
+            bits: bits.to_vec(),
+            act_scales,
+        };
+        write_model_checkpoint(path, &header, &tensors).map_err(anyhow::Error::new)
     }
 
     /// Dev-set accuracy of the quantized student (argmax over logits,

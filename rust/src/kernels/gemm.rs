@@ -80,15 +80,26 @@ pub(crate) fn store_row(out: &mut [f32], acc: &[i32; NR], corr: i32, sxi: f32, s
 /// Per-token (per-row) activation scales from each row's abs-max — the
 /// ROADMAP "per-token scales" lever: recovers int4 accuracy at zero kernel
 /// cost because the kernels already take `sx: &[f32]` per row. All-zero
-/// (or non-finite) rows fall back to the calibrated per-tensor scale so
-/// fully padded sequences quantize exactly as before.
+/// rows and rows containing any non-finite value (NaN/Inf activations)
+/// fall back to the calibrated per-tensor scale, so fully padded
+/// sequences quantize exactly as before and a poisoned row can never
+/// hand the kernels a NaN `sx` (note `f32::max` silently *ignores* NaN,
+/// so an abs-max alone would miss NaN elements).
 pub fn per_token_scales(x: &[f32], m: usize, k: usize, bits: u32, fallback: f32) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     let lmax = quant::qbounds(bits).1;
     (0..m)
         .map(|i| {
-            let amax = x[i * k..(i + 1) * k].iter().fold(0f32, |a, &v| a.max(v.abs()));
-            if amax > 0.0 && amax.is_finite() {
+            let mut amax = 0f32;
+            let mut finite = true;
+            for &v in &x[i * k..(i + 1) * k] {
+                if v.is_finite() {
+                    amax = amax.max(v.abs());
+                } else {
+                    finite = false;
+                }
+            }
+            if finite && amax > 0.0 {
                 amax / lmax
             } else {
                 fallback
@@ -510,6 +521,26 @@ mod tests {
         // a positive row max lands exactly on l_max (the paper grid's +2^{b-1})
         let qx = quantize_activations(&x, 3, 3, &s, 8);
         assert_eq!(qx[6], lmax as i16);
+    }
+
+    #[test]
+    fn per_token_scales_guard_non_finite_rows() {
+        // NaN is invisible to f32::max, and Inf would blow the scale up —
+        // both rows must fall back to the calibrated per-tensor scale so
+        // the kernels never receive a non-finite sx.
+        let x = vec![
+            1.0f32, f32::NAN, 2.0,          // NaN row
+            f32::INFINITY, 0.5, 0.25,       // +Inf row
+            0.1, f32::NEG_INFINITY, 0.2,    // -Inf row
+            0.5, -0.25, 0.125,              // healthy row
+        ];
+        let s = per_token_scales(&x, 4, 3, 8, 0.321);
+        assert_eq!(s[0], 0.321);
+        assert_eq!(s[1], 0.321);
+        assert_eq!(s[2], 0.321);
+        let lmax = quant::qbounds(8).1;
+        assert_eq!(s[3], 0.5 / lmax);
+        assert!(s.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -3,6 +3,10 @@
 //! Layers (DESIGN.md):
 //!   * [`kernels`] — native quantized GEMM backend: prepacked int4/int8
 //!     weights, cache-tiled microkernels, runtime kernel dispatch.
+//!   * [`checkpoint`] — the MKQC flat-tensor checkpoint format: the
+//!     on-disk contract that carries QAT'd fp32 master weights (plus the
+//!     per-layer bit vector and calibrated activation scales) from
+//!     training to native serving.
 //!   * [`runtime`] — execution backends behind one trait: the native
 //!     model forward, and (feature `xla`) the PJRT engine over AOT
 //!     HLO-text artifacts.
@@ -17,6 +21,7 @@
 //!     config, thread pool, property testing, stats, bench harness).
 
 pub mod bench_support;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
 pub mod kernels;

@@ -2,8 +2,16 @@
 //!
 //! Native subcommands (always available):
 //!   serve-native — batching inference server over the native int4/int8
-//!                  GEMM backend on a Poisson request trace
+//!                  GEMM backend on a Poisson request trace; with
+//!                  `--checkpoint FILE.mkqc` the model (dims, per-layer
+//!                  bits, calibrated activation scales, weights) comes
+//!                  from an MKQC checkpoint instead of random init
 //!   kernels      — print kernel-dispatch info and run a quick self-check
+//!   ckpt         — MKQC checkpoint tools: `export-random` writes a
+//!                  random-init model file, `inspect` dumps the header +
+//!                  tensor directory, `verify` fully validates (magic /
+//!                  version / dims / CRC), loads the model and runs a
+//!                  forward smoke test
 //!
 //! Artifact subcommands (build with `--features xla`, run `make artifacts`):
 //!   train        — teacher finetune + calibration + QAT on one synthetic task
@@ -26,14 +34,23 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mkq-bert <serve-native|kernels|train|serve|info> [options]
+        "usage: mkq-bert <serve-native|kernels|ckpt|train|serve|info> [options]
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
                 --window-us N   --buckets 1,8,16
+                --checkpoint FILE.mkqc  (serve a saved model; the file's
+                dims/bits/scales are authoritative)
   kernels:      (no options; prints the dispatch table and runs a
                 per-variant self-check)
+  ckpt export-random FILE.mkqc  [--bits 8,8,4,4 | --n-int4 N] [--seed N]
+                write a random-init MKQC checkpoint (tiny preset dims)
+  ckpt inspect FILE.mkqc        print header, bit vector, activation
+                scales and the tensor directory
+  ckpt verify FILE.mkqc         full validation (magic/version/dims/CRC),
+                model load + forward smoke test
   train|serve|info: artifact path — needs --features xla + make artifacts;
-                also --artifacts DIR, see README
+                also --artifacts DIR; train also takes --ckpt-out FILE.mkqc
+                (export the best-eval QAT state as an MKQC checkpoint)
   env knobs:    MKQ_KERNEL=reference|blocked|parallel|avx2|avx2-parallel|
                   neon|neon-parallel|simd|simd-parallel  (force a kernel;
                   unsupported picks degrade to the scalar blocked kernels)
@@ -54,6 +71,7 @@ fn run() -> Result<()> {
         "" => usage(),
         "kernels" => kernels_info(),
         "serve-native" => serve_native(&args, &conf),
+        "ckpt" => ckpt_cmd(&args, &conf),
         other => artifact::run(other, &args, &conf),
     }
 }
@@ -105,24 +123,120 @@ fn kernels_info() -> Result<()> {
     Ok(())
 }
 
+/// MKQC checkpoint tools: export-random / inspect / verify.
+fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
+    use mkq::checkpoint::{self, Checkpoint};
+    use mkq::coordinator::{bits_last_n_int4, parse_bits};
+    use mkq::kernels::Dispatcher;
+    use mkq::runtime::{NativeDims, NativeModel};
+
+    let sub = args.positional.get(1).cloned().unwrap_or_default();
+    let path = match args.positional.get(2) {
+        Some(p) => std::path::PathBuf::from(p),
+        None => anyhow::bail!("usage: mkq-bert ckpt <export-random|inspect|verify> FILE.mkqc"),
+    };
+    match sub.as_str() {
+        "export-random" => {
+            let dims = NativeDims::tiny();
+            let bits = if let Some(spec) = args.get("bits") {
+                parse_bits(spec, dims.n_layers)?
+            } else {
+                bits_last_n_int4(dims.n_layers, args.usize("n-int4", conf.usize("serve.n_int4", 4)))
+            };
+            let seed = args.usize("seed", 17) as u64;
+            checkpoint::export_random(&path, dims, &bits, seed).map_err(anyhow::Error::new)?;
+            println!(
+                "wrote {} (L={} d={} heads={} seq={} bits={bits:?} seed={seed})",
+                path.display(),
+                dims.n_layers,
+                dims.d_model,
+                dims.n_heads,
+                dims.seq
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let ck = Checkpoint::read(&path).map_err(anyhow::Error::new)?;
+            let h = ck.header();
+            let d = &h.dims;
+            println!("{} — MKQC v{}", path.display(), checkpoint::VERSION);
+            println!(
+                "dims: vocab={} seq={} L={} d_model={} heads={} d_ff={} classes={}",
+                d.vocab, d.seq, d.n_layers, d.d_model, d.n_heads, d.d_ff, d.n_classes
+            );
+            println!("bits: {:?}", h.bits);
+            for (l, s) in h.act_scales.iter().enumerate() {
+                println!(
+                    "  layer {l} act scales: qkv_in={:.6} attn_out_in={:.6} ffn1_in={:.6} ffn2_in={:.6}",
+                    s[0], s[1], s[2], s[3]
+                );
+            }
+            println!("tensors ({}), payload {} bytes:", ck.entries().len(), ck.payload_bytes());
+            for e in ck.entries() {
+                let dims_s =
+                    e.dims.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x");
+                println!("  {:<12} f32 {:<12} @{:<10} {} bytes", e.name, dims_s, e.offset, e.len);
+            }
+            Ok(())
+        }
+        "verify" => {
+            let ck = Checkpoint::read(&path).map_err(anyhow::Error::new)?;
+            let model = NativeModel::from_checkpoint_data(&ck).map_err(anyhow::Error::new)?;
+            // forward smoke test: one small batch must produce finite logits
+            let d = model.dims;
+            let disp = Dispatcher::new();
+            let bsz = 2usize;
+            let ids: Vec<i32> = (0..bsz * d.seq).map(|i| (i % d.vocab) as i32).collect();
+            let mask = vec![1.0f32; bsz * d.seq];
+            let logits = model.forward(&disp, &ids, &mask, bsz);
+            anyhow::ensure!(
+                logits.len() == bsz * d.n_classes && logits.iter().all(|x| x.is_finite()),
+                "forward smoke test produced non-finite logits"
+            );
+            println!(
+                "{}: ok — header/directory/CRC valid, {} tensors, model loads (bits {:?}), \
+                 forward smoke test finite",
+                path.display(),
+                ck.entries().len(),
+                model.bits
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown ckpt subcommand {other:?} (use export-random|inspect|verify)"
+        ),
+    }
+}
+
 fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     use mkq::coordinator::{bits_last_n_int4, parse_bits, Server, ServerConfig};
     use mkq::data::{Suite, TaskKind};
     use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
     use mkq::util::rng::Rng;
 
-    let dims = NativeDims::tiny();
-    let bits = if let Some(spec) = args.get("bits") {
-        parse_bits(spec, dims.n_layers)?
+    let model = if let Some(ck_path) = args.get("checkpoint") {
+        if args.get("bits").is_some() || args.get("n-int4").is_some() {
+            eprintln!("note: --bits/--n-int4 ignored — the checkpoint's bit vector is authoritative");
+        }
+        let m = NativeModel::from_checkpoint(std::path::Path::new(ck_path))
+            .map_err(anyhow::Error::new)?;
+        println!("loaded checkpoint {ck_path}");
+        m
     } else {
-        bits_last_n_int4(dims.n_layers, args.usize("n-int4", conf.usize("serve.n_int4", 4)))
+        let dims = NativeDims::tiny();
+        let bits = if let Some(spec) = args.get("bits") {
+            parse_bits(spec, dims.n_layers)?
+        } else {
+            bits_last_n_int4(dims.n_layers, args.usize("n-int4", conf.usize("serve.n_int4", 4)))
+        };
+        let seed = args.usize("seed", 17) as u64;
+        NativeModel::random(dims, &bits, seed)
     };
-    let seed = args.usize("seed", 17) as u64;
+    let dims = model.dims;
     println!(
-        "native serving demo: L={} d={} heads={} seq={} bits={bits:?}",
-        dims.n_layers, dims.d_model, dims.n_heads, dims.seq
+        "native serving demo: L={} d={} heads={} seq={} bits={:?}",
+        dims.n_layers, dims.d_model, dims.n_heads, dims.seq, model.bits
     );
-    let model = NativeModel::random(dims, &bits, seed);
     let backend = NativeBackend::with_model(model);
     println!("{}", backend.disp.describe());
 
@@ -249,6 +363,7 @@ mod artifact {
         } else {
             bits_last_n_int4(n_layers, args.usize("n-int4", 0))
         };
+        cfg.ckpt_out = args.get("ckpt-out").map(std::path::PathBuf::from);
         Ok(cfg)
     }
 
@@ -295,6 +410,14 @@ mod artifact {
         );
         for (step, acc) in &res.evals {
             println!("        step {step:>5}: dev acc {acc:.4}");
+        }
+        if let Some(p) = &cfg.ckpt_out {
+            println!(
+                "      best-eval checkpoint exported to {} — serve it natively with \
+                 `mkq-bert serve-native --checkpoint {}`",
+                p.display(),
+                p.display()
+            );
         }
         Ok(())
     }

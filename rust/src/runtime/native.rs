@@ -24,8 +24,9 @@ use crate::util::rng::Rng;
 pub const NEG_INF: f32 = -1e9;
 
 /// Model dimensions for the native path (the artifact path reads these
-/// from the manifest; natively they are explicit).
-#[derive(Debug, Clone, Copy)]
+/// from the manifest; natively they are explicit, and the MKQC
+/// checkpoint header serializes exactly this struct).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NativeDims {
     pub vocab: usize,
     pub seq: usize,
@@ -400,6 +401,54 @@ fn randn(rng: &mut Rng, count: usize, scale: f32) -> Vec<f32> {
     (0..count).map(|_| rng.normal() as f32 * scale).collect()
 }
 
+/// The full random-init tensor set for a model, under the checkpoint
+/// naming contract (`emb_word`, `l{i}_wq`, …, `cls_b` — see
+/// [`crate::checkpoint::param_specs`]). [`NativeModel::random`] and
+/// [`crate::checkpoint::export_random`] both build from this, which is
+/// what makes export-random → load reproduce the in-memory model
+/// bit-for-bit.
+pub fn random_model_tensors(dims: &NativeDims, seed: u64) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let (d, dff) = (dims.d_model, dims.d_ff);
+    let mut out: Vec<(String, Vec<usize>, Vec<f32>)> = vec![
+        ("emb_word".into(), vec![dims.vocab, d], randn(&mut rng, dims.vocab * d, 0.02)),
+        ("emb_pos".into(), vec![dims.seq, d], randn(&mut rng, dims.seq * d, 0.02)),
+        ("emb_ln_g".into(), vec![d], vec![1.0; d]),
+        ("emb_ln_b".into(), vec![d], vec![0.0; d]),
+    ];
+    for l in 0..dims.n_layers {
+        // random_layer_tensors draws in artifact input order; re-emit in
+        // the checkpoint spec order (ln1 between wo and w1) so the file
+        // layout matches `checkpoint::param_specs` exactly.
+        let mut layer = random_layer_tensors(&mut rng, d, dff, 0.02);
+        for suffix in crate::checkpoint::LAYER_TENSOR_SUFFIXES {
+            let idx = layer
+                .iter()
+                .position(|(n, _, _)| n == suffix)
+                .expect("random_layer_tensors missing a spec tensor");
+            let (name, t_dims, data) = layer.remove(idx);
+            out.push((format!("l{l}_{name}"), t_dims, data));
+        }
+    }
+    out.push(("pool_w".into(), vec![d, d], randn(&mut rng, d * d, 0.02)));
+    out.push(("pool_b".into(), vec![d], vec![0.0; d]));
+    out.push(("cls_w".into(), vec![d, dims.n_classes], randn(&mut rng, d * dims.n_classes, 0.02)));
+    out.push(("cls_b".into(), vec![dims.n_classes], vec![0.0; dims.n_classes]));
+    out
+}
+
+/// Default per-layer activation scales when no calibration exists (|act|
+/// ≈ 6 after LayerNorm over the quantization grid's l_max; fp32 layers
+/// use the int8 grid so the value stays meaningful if bits are lowered).
+pub fn default_act_scales(bits: &[u32]) -> Vec<[f32; 4]> {
+    bits.iter()
+        .map(|&b| {
+            let lmax = quant::qbounds(if b == 32 { 8 } else { b }).1;
+            [6.0 / lmax; 4]
+        })
+        .collect()
+}
+
 /// The full deployed encoder.
 pub struct NativeModel {
     pub dims: NativeDims,
@@ -414,37 +463,96 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    /// Random-init deployed model (the serving demo / batching benches —
-    /// real weights would come from a QAT checkpoint through the same
-    /// constructor path as `NativeLayer::from_tensors`).
+    /// Random-init deployed model (the serving demo / batching benches):
+    /// [`random_model_tensors`] through the same constructor path a real
+    /// QAT checkpoint takes, so demo and deployment never diverge.
     pub fn random(dims: NativeDims, bits: &[u32], seed: u64) -> Self {
+        let tensors = random_model_tensors(&dims, seed);
+        let act_scales = default_act_scales(bits);
+        Self::from_named_tensors(dims, bits, &act_scales, &tensors)
+    }
+
+    /// Build from the full named-tensor set under the checkpoint naming
+    /// contract (see [`crate::checkpoint::param_specs`]). Weight matrices
+    /// are quantized per-output-channel and prepacked into column panels
+    /// here, once; embeddings and heads stay fp32 (paper §5). Panics on
+    /// missing tensors or dim mismatches — callers loading untrusted
+    /// bytes go through [`NativeModel::from_checkpoint`], which validates
+    /// the full spec first and returns typed errors.
+    pub fn from_named_tensors(
+        dims: NativeDims,
+        bits: &[u32],
+        act_scales: &[[f32; 4]],
+        tensors: &[(String, Vec<usize>, Vec<f32>)],
+    ) -> Self {
         assert_eq!(bits.len(), dims.n_layers);
-        let mut rng = Rng::new(seed);
-        let (d, dff) = (dims.d_model, dims.d_ff);
-        let emb_word = randn(&mut rng, dims.vocab * d, 0.02);
-        let emb_pos = randn(&mut rng, dims.seq * d, 0.02);
+        assert_eq!(act_scales.len(), dims.n_layers);
+        let d = dims.d_model;
         let layers = (0..dims.n_layers)
             .map(|l| {
-                let b = bits[l];
-                let lmax = quant::qbounds(if b == 32 { 8 } else { b }).1;
-                let act = 6.0 / lmax;
-                let tensors = random_layer_tensors(&mut rng, d, dff, 0.02);
-                NativeLayer::from_tensors(&tensors, dims.n_heads, b, [act; 4])
+                let prefix = format!("l{l}_");
+                let layer_tensors: Vec<(String, Vec<usize>, Vec<f32>)> = tensors
+                    .iter()
+                    .filter(|(n, _, _)| n.starts_with(&prefix))
+                    .map(|(n, td, data)| (n[prefix.len()..].to_string(), td.clone(), data.clone()))
+                    .collect();
+                NativeLayer::from_tensors(&layer_tensors, dims.n_heads, bits[l], act_scales[l])
             })
             .collect();
-        let pool_w = randn(&mut rng, d * d, 0.02);
-        let cls_w = randn(&mut rng, d * dims.n_classes, 0.02);
         NativeModel {
             dims,
             bits: bits.to_vec(),
-            emb_word,
-            emb_pos,
-            emb_ln_g: vec![1.0; d],
-            emb_ln_b: vec![0.0; d],
+            emb_word: lookup(tensors, "emb_word").1.to_vec(),
+            emb_pos: lookup(tensors, "emb_pos").1.to_vec(),
+            emb_ln_g: lookup(tensors, "emb_ln_g").1.to_vec(),
+            emb_ln_b: lookup(tensors, "emb_ln_b").1.to_vec(),
             layers,
-            pool: Linear::f32(&pool_w, d, d, vec![0.0; d]),
-            cls: Linear::f32(&cls_w, d, dims.n_classes, vec![0.0; dims.n_classes]),
+            pool: Linear::f32(lookup(tensors, "pool_w").1, d, d, lookup(tensors, "pool_b").1.to_vec()),
+            cls: Linear::f32(
+                lookup(tensors, "cls_w").1,
+                d,
+                dims.n_classes,
+                lookup(tensors, "cls_b").1.to_vec(),
+            ),
         }
+    }
+
+    /// Load a deployed model from an MKQC checkpoint file: read +
+    /// validate ([`crate::checkpoint::Checkpoint::read`]), check every
+    /// spec tensor's presence and shape against the header dims, then
+    /// prepack the int4/int8 column panels from the stored fp32 master
+    /// weights. Every failure is a typed
+    /// [`CkptError`](crate::checkpoint::CkptError).
+    pub fn from_checkpoint(path: &std::path::Path) -> Result<Self, crate::checkpoint::CkptError> {
+        let ck = crate::checkpoint::Checkpoint::read(path)?;
+        Self::from_checkpoint_data(&ck)
+    }
+
+    /// [`NativeModel::from_checkpoint`] over an already-parsed
+    /// [`Checkpoint`](crate::checkpoint::Checkpoint).
+    pub fn from_checkpoint_data(
+        ck: &crate::checkpoint::Checkpoint,
+    ) -> Result<Self, crate::checkpoint::CkptError> {
+        use crate::checkpoint::CkptError;
+        let h = ck.header();
+        // dims come straight from the directory — no payload decode needed
+        // for the spec check (each tensor's bytes are decoded exactly once,
+        // in named_tensors below).
+        for (name, dims) in crate::checkpoint::param_specs(&h.dims) {
+            let e = ck
+                .entries()
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| CkptError::MissingTensor(name.clone()))?;
+            if e.dims != dims {
+                return Err(CkptError::DimsMismatch(format!(
+                    "{name}: stored dims {:?} != header-implied {dims:?}",
+                    e.dims
+                )));
+            }
+        }
+        let tensors = ck.named_tensors();
+        Ok(Self::from_named_tensors(h.dims, &h.bits, &h.act_scales, &tensors))
     }
 
     /// Forward a padded `(bsz, seq)` batch to `(bsz, n_classes)` logits.
@@ -578,6 +686,21 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn random_model_tensors_match_checkpoint_spec() {
+        // The random-init tensor set must agree with the checkpoint spec
+        // list in names, order and dims — it is what export-random writes.
+        let dims = NativeDims { vocab: 32, seq: 6, n_layers: 2, d_model: 16, n_heads: 2, d_ff: 32, n_classes: 3 };
+        let tensors = random_model_tensors(&dims, 5);
+        let specs = crate::checkpoint::param_specs(&dims);
+        assert_eq!(tensors.len(), specs.len());
+        for ((n1, d1, data), (n2, d2)) in tensors.iter().zip(&specs) {
+            assert_eq!(n1, n2);
+            assert_eq!(d1, d2);
+            assert_eq!(data.len(), d1.iter().product::<usize>());
         }
     }
 

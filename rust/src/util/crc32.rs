@@ -1,0 +1,78 @@
+//! CRC-32 (IEEE 802.3 / zlib polynomial, reflected) — the checkpoint
+//! trailer checksum.
+//!
+//! Matches Python's `zlib.crc32` / `binascii.crc32` exactly (polynomial
+//! 0xEDB88320, init 0xFFFFFFFF, final xor 0xFFFFFFFF), which is what
+//! `python/compile/export_ckpt.py` writes — the two sides of the MKQC
+//! format must agree bit-for-bit. Table-driven, 256-entry table built at
+//! construction (trivial cost next to any payload worth checksumming).
+
+/// Streaming CRC-32 state. Feed bytes with [`update`](Crc32::update),
+/// read the digest with [`finish`](Crc32::finish).
+pub struct Crc32 {
+    table: [u32; 256],
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        let mut table = [0u32; 256];
+        for (i, e) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        Crc32 { table, state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = self.table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value and a few zlib.crc32 cross-checks.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 7 + 3) as u8).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(13) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(&data));
+    }
+}

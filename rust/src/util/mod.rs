@@ -6,6 +6,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod crc32;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

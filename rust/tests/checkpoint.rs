@@ -1,0 +1,192 @@
+//! MKQC checkpoint round-trip and corrupt-input tests.
+//!
+//! The acceptance contract: a model exported to disk and reloaded must
+//! produce **bit-for-bit identical logits** to the in-memory model, on
+//! every dispatchable kernel variant (unsupported SIMD picks degrade to
+//! scalar, which must also agree); and every class of file corruption
+//! must surface as the matching typed [`CkptError`], never a panic or a
+//! garbage model.
+
+use std::path::PathBuf;
+
+use mkq::checkpoint::{self, Checkpoint, CkptError, CkptHeader, Writer};
+use mkq::kernels::{Dispatcher, KernelKind};
+use mkq::runtime::{native, NativeDims, NativeModel};
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mkqc_test_{}_{name}", std::process::id()))
+}
+
+fn small_dims() -> NativeDims {
+    NativeDims { vocab: 64, seq: 8, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 }
+}
+
+#[test]
+fn roundtrip_logits_bit_for_bit_across_kernels() {
+    let dims = small_dims();
+    for (seed, bits) in [(3u64, vec![8u32, 8]), (4, vec![8, 4]), (5, vec![4, 4]), (6, vec![32, 4])] {
+        let path = tmp_path(&format!("rt_{seed}.mkqc"));
+        let in_mem = NativeModel::random(dims, &bits, seed);
+        checkpoint::export_random(&path, dims, &bits, seed).unwrap();
+        let loaded = NativeModel::from_checkpoint(&path).unwrap();
+        assert_eq!(loaded.bits, bits);
+        assert_eq!(loaded.dims, dims);
+
+        let bsz = 3usize;
+        let ids: Vec<i32> = (0..bsz * dims.seq).map(|i| ((i * 7) % dims.vocab) as i32).collect();
+        let mut mask = vec![1.0f32; bsz * dims.seq];
+        for m in mask[2 * dims.seq..].iter_mut() {
+            *m = 0.0; // one fully padded row rides along
+        }
+        for kind in KernelKind::ALL {
+            for threads in [1usize, 3] {
+                let disp = Dispatcher::forced(threads, kind);
+                let a = in_mem.forward(&disp, &ids, &mask, bsz);
+                let b = loaded.forward(&disp, &ids, &mask, bsz);
+                assert_eq!(a, b, "logits diverge: bits={bits:?} kernel={} threads={threads}", kind.name());
+                assert!(a.iter().all(|x| x.is_finite()));
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn export_is_deterministic() {
+    let dims = small_dims();
+    let (p1, p2) = (tmp_path("det_a.mkqc"), tmp_path("det_b.mkqc"));
+    checkpoint::export_random(&p1, dims, &[8, 4], 11).unwrap();
+    checkpoint::export_random(&p2, dims, &[8, 4], 11).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+fn valid_bytes() -> Vec<u8> {
+    let dims = small_dims();
+    let path = tmp_path("corrupt_src.mkqc");
+    checkpoint::export_random(&path, dims, &[8, 4], 9).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+#[test]
+fn corrupt_magic_version_crc_truncation() {
+    let good = valid_bytes();
+    assert!(Checkpoint::from_bytes(good.clone()).is_ok());
+
+    let mut bad = good.clone();
+    bad[0] = b'Z';
+    assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadMagic { .. })));
+
+    let mut bad = good.clone();
+    bad[4] = 7; // version field
+    assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadVersion { got: 7 })));
+
+    // flip one payload byte: structure parses, CRC catches it
+    let mut bad = good.clone();
+    let n = bad.len();
+    bad[n - 100] ^= 0x40;
+    assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadCrc { .. })));
+
+    // truncations at every structural region
+    for cut in [0usize, 3, 10, 45, 70, good.len() / 2, good.len() - 3] {
+        let bad = good[..cut].to_vec();
+        assert!(
+            matches!(Checkpoint::from_bytes(bad), Err(CkptError::Truncated { .. })),
+            "cut at {cut} must report Truncated"
+        );
+    }
+}
+
+#[test]
+fn corrupt_header_dims_is_typed_dims_mismatch() {
+    let good = valid_bytes();
+    // d_model lives at byte offset 8 + 3*4 = 20 (vocab, seq, n_layers
+    // precede it). Halving it keeps the header self-consistent (still
+    // divisible by n_heads, still even) but contradicts every stored
+    // tensor shape — the model loader must reject with DimsMismatch.
+    let mut bad = good.clone();
+    bad[20..24].copy_from_slice(&16u32.to_le_bytes());
+    let ck = Checkpoint::from_bytes(bad);
+    match ck {
+        // directory sizes no longer matching is also acceptable only as a
+        // typed error; with this format tensor dims are stored per entry,
+        // so parsing succeeds and the spec check catches it:
+        Ok(ck) => {
+            let err = NativeModel::from_checkpoint_data(&ck).unwrap_err();
+            assert!(matches!(err, CkptError::DimsMismatch(_)), "got {err:?}");
+        }
+        Err(e) => panic!("header patch should still parse, got {e}"),
+    }
+
+    // an *inconsistent* header (n_heads not dividing d_model) is caught
+    // at parse time as BadHeader
+    let mut bad = good;
+    bad[24..28].copy_from_slice(&7u32.to_le_bytes()); // n_heads = 7
+    assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadHeader(_))));
+}
+
+#[test]
+fn overlapping_directory_entries_rejected() {
+    // hand-build a 2-tensor file, then patch the second entry's offset to
+    // alias the first tensor's bytes
+    let dims = NativeDims { vocab: 8, seq: 4, n_layers: 1, d_model: 4, n_heads: 2, d_ff: 8, n_classes: 2 };
+    let header = CkptHeader { dims, bits: vec![8], act_scales: vec![[0.1; 4]] };
+    let mut w = Writer::new(header).unwrap();
+    w.add_f32("a", &[2], &[1.0, 2.0]).unwrap();
+    w.add_f32("b", &[2], &[3.0, 4.0]).unwrap();
+    let mut bytes = w.to_bytes();
+    // fixed header: 40 + 4*1 + 16*1 = 60 bytes. entry "a" = 25 bytes
+    // (2 name_len + 1 name + 1 dtype + 1 rank + 4 dims + 8 offset + 8 len),
+    // entry "b"'s offset field starts at 60 + 25 + 9 = 94.
+    assert_eq!(&bytes[85 + 2..85 + 3], b"b", "layout drifted — fix the patch offset");
+    bytes[94..102].copy_from_slice(&0u64.to_le_bytes());
+    match Checkpoint::from_bytes(bytes) {
+        Err(CkptError::Overlap { a, b }) => {
+            assert_eq!((a.as_str(), b.as_str()), ("a", "b"));
+        }
+        other => panic!("want Overlap, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn missing_spec_tensor_is_typed() {
+    // a structurally valid file that simply lacks most of the model
+    let dims = small_dims();
+    let header = CkptHeader {
+        dims,
+        bits: vec![8, 8],
+        act_scales: native::default_act_scales(&[8, 8]),
+    };
+    let mut w = Writer::new(header).unwrap();
+    w.add_f32("emb_word", &[dims.vocab, dims.d_model], &vec![0.0; dims.vocab * dims.d_model])
+        .unwrap();
+    let ck = Checkpoint::from_bytes(w.to_bytes()).unwrap();
+    let err = NativeModel::from_checkpoint_data(&ck).unwrap_err();
+    assert!(matches!(err, CkptError::MissingTensor(_)), "got {err:?}");
+}
+
+#[test]
+fn write_model_checkpoint_validates_spec() {
+    let dims = small_dims();
+    let header = CkptHeader {
+        dims,
+        bits: vec![8, 4],
+        act_scales: native::default_act_scales(&[8, 4]),
+    };
+    let mut tensors = native::random_model_tensors(&dims, 1);
+    let path = tmp_path("wmc.mkqc");
+
+    // dropping a tensor → MissingTensor at write time
+    let dropped = tensors.remove(0);
+    let err = checkpoint::write_model_checkpoint(&path, &header, &tensors).unwrap_err();
+    assert!(matches!(err, CkptError::MissingTensor(_)), "got {err:?}");
+
+    // wrong dims → DimsMismatch at write time
+    tensors.insert(0, (dropped.0.clone(), vec![1, dropped.2.len()], dropped.2.clone()));
+    let err = checkpoint::write_model_checkpoint(&path, &header, &tensors).unwrap_err();
+    assert!(matches!(err, CkptError::DimsMismatch(_)), "got {err:?}");
+    assert!(!path.exists(), "failed export must not leave a file behind");
+}
