@@ -92,6 +92,49 @@ fn main() {
         );
     }
 
+    // Mixed-length serving: the 2-D (batch x seq-length) bucket policy vs
+    // full-seq padding on the same trace — the padded-token win.
+    {
+        use mkq::coordinator::{Server, ServerConfig, TraceGen, TraceKind};
+        use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+        println!("\n== mixed-length serving (seq buckets vs full-seq padding) ==");
+        let dims = NativeDims::tiny();
+        let backend = NativeBackend::with_model(NativeModel::random(dims, &[4; 4], 7));
+        let task = suite.task(TaskKind::Sst2, 1);
+        let b = Bench::new(1, 10);
+        for (label, kind, seq_buckets) in [
+            ("seq-bucketed mixed trace", TraceKind::Mixed, vec![6, 12, 18]),
+            ("full-seq padded trace", TraceKind::Full, vec![]),
+        ] {
+            let mut server = Server::new(
+                &backend,
+                ServerConfig {
+                    batch_buckets: vec![1, 8, 16],
+                    seq_buckets,
+                    batch_window: std::time::Duration::ZERO,
+                },
+            )
+            .unwrap();
+            let mut tracegen = TraceGen::new(&task.dev, kind, 3);
+            b.report(&format!("{label}: 64 requests, drain"), || {
+                for _ in 0..64 {
+                    let (ids, mask) = tracegen.next_request();
+                    server.submit(ids, mask).unwrap();
+                }
+                let out = server.drain().unwrap();
+                assert_eq!(out.len(), 64);
+            });
+            let s = server.summary();
+            println!(
+                "  {label}: padded tokens {}/{} ({:.1}%), exec p50 {:.1}us",
+                s.padded_tokens,
+                s.total_tokens,
+                100.0 * s.padded_token_fraction(),
+                s.exec.p50_us
+            );
+        }
+    }
+
     // Artifact serving step (only with the xla feature + artifacts present).
     #[cfg(feature = "xla")]
     {

@@ -283,12 +283,8 @@ fn write_json(
     s.push_str("},\n  \"kernels\": [\n");
     for (i, (name, r)) in rec.rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"name\": \"{name}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \"stddev_us\": {:.3}, \"min_us\": {:.3}, \"iters\": {}}}{}\n",
-            r.mean_us,
-            r.p50_us,
-            r.stddev_us,
-            r.min_us,
-            r.iters,
+            "    {}{}\n",
+            r.json_row(name),
             if i + 1 == rec.rows.len() { "" } else { "," }
         ));
     }

@@ -11,7 +11,12 @@
 //! layers run int8.
 //!
 //! Usage: cargo run --release --bin e2e_speedup -- [--layers 12]
-//!            [--iters 10] [--bucket 16x28] [--checkpoint FILE.mkqc]
+//!            [--iters 10] [--bucket 16x28,16x12] [--checkpoint FILE.mkqc]
+//!
+//! `--bucket` takes a comma-separated list of `BSxT` shapes; mixed `T`s
+//! measure exactly what the 2-D seq-bucket batcher serves (short buckets
+//! ride the same sequence-length-generic forward, through the backend's
+//! reusable workspace).
 //!
 //! With `--checkpoint`, the three bench layers (f32/int8/int4) are built
 //! from layer 0 of an MKQC checkpoint (its dims and calibrated activation
@@ -87,20 +92,26 @@ fn main() -> Result<()> {
     let n_layers = args.usize("layers", 12);
     let iters = args.usize("iters", 10);
     let bucket = args.str("bucket", "16x28");
-    let (bsz, t) = bucket
-        .split_once('x')
-        .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
-        .expect("--bucket BSxT");
+    let buckets: Vec<(usize, usize)> = bucket
+        .split(',')
+        .map(|b| {
+            b.trim()
+                .split_once('x')
+                .map(|(a, t)| (a.parse().unwrap(), t.parse().unwrap()))
+                .expect("--bucket BSxT[,BSxT...]")
+        })
+        .collect();
     let bench = Bench::new(2, iters);
 
-    println!("§5.4: end-to-end encoder time vs #int4 layers ({n_layers} layers, bucket {bucket})");
+    println!("§5.4: end-to-end encoder time vs #int4 layers ({n_layers} layers, buckets {bucket})");
     let mut native = NativeBackend::new();
     #[cfg_attr(not(feature = "xla"), allow(unused))]
     let mut bench_weights: Option<bs::LayerWeights> = None;
-    let (h0, mask_v): (Vec<f32>, Vec<f32>) = if let Some(ck_path) = args.get("checkpoint") {
+    // hidden-state width of the installed bench layers (checkpoint dims
+    // or BERT-base), for generating per-bucket inputs below
+    let d_model: usize = if let Some(ck_path) = args.get("checkpoint") {
         use mkq::checkpoint::Checkpoint;
         use mkq::runtime::NativeLayer;
-        use mkq::util::rng::Rng;
         let ck = Checkpoint::read(std::path::Path::new(ck_path)).map_err(anyhow::Error::new)?;
         let hd = ck.header().clone();
         let (d, dff, heads) = (hd.dims.d_model, hd.dims.d_ff, hd.dims.n_heads);
@@ -147,39 +158,50 @@ fn main() -> Result<()> {
             NativeLayer::from_tensors(&tensors, heads, bits, act)
         };
         native.set_bench_layers(mk(32), mk(8), mk(4));
-        let mut rng = Rng::new(2);
-        ((0..bsz * t * d).map(|_| rng.normal() as f32).collect(), vec![1.0; bsz * t])
+        d
     } else {
         let weights = bs::make_weights(1);
-        let (h, mask) = bs::make_hidden(bsz, t, 2);
-        let pair = (h.as_f32()?.to_vec(), mask.as_f32()?.to_vec());
         let (l32, l8, l4) = bs::native_bench_layers(&weights);
         native.set_bench_layers(l32, l8, l4);
         bench_weights = Some(weights);
-        pair
+        bs::D
     };
     println!("{}", native.disp.describe());
-    run_stack(&native, &bench, n_layers, bsz, t, &h0, &mask_v)?;
+    for &(bsz, t) in &buckets {
+        use mkq::util::rng::Rng;
+        println!("\n---- bucket {bsz}x{t} ----");
+        let mut rng = Rng::new(2);
+        let h0: Vec<f32> = (0..bsz * t * d_model).map(|_| rng.normal() as f32).collect();
+        let mask_v = vec![1.0f32; bsz * t];
+        run_stack(&native, &bench, n_layers, bsz, t, &h0, &mask_v)?;
 
-    #[cfg(feature = "xla")]
-    {
-        use mkq::runtime::{ArtifactBackend, Engine};
-        match &bench_weights {
-            Some(weights) => match Engine::load(&mkq::artifacts_dir()) {
-                Ok(eng) => {
-                    let backend = ArtifactBackend::new(&eng).with_bench_weights(weights)?;
-                    run_stack(&backend, &bench, n_layers, bsz, t, &h0, &mask_v)?;
-                }
-                Err(e) => eprintln!("(artifact backend skipped: {e})"),
-            },
-            None => eprintln!(
-                "(artifact backend skipped under --checkpoint: artifact layer shapes are \
-                 fixed at BERT-base dims)"
-            ),
+        #[cfg(feature = "xla")]
+        {
+            use mkq::runtime::{ArtifactBackend, Engine};
+            match &bench_weights {
+                Some(weights) => match Engine::load(&mkq::artifacts_dir()) {
+                    Ok(eng) => match ArtifactBackend::new(&eng).with_bench_weights(weights) {
+                        // a failure for one bucket (AOT executables exist
+                        // only at the emitted shapes) skips that bucket,
+                        // not the rest of the sweep
+                        Ok(backend) => {
+                            if let Err(e) = run_stack(&backend, &bench, n_layers, bsz, t, &h0, &mask_v) {
+                                eprintln!("(artifact backend skipped for bucket {bsz}x{t}: {e})");
+                            }
+                        }
+                        Err(e) => eprintln!("(artifact backend skipped: {e})"),
+                    },
+                    Err(e) => eprintln!("(artifact backend skipped: {e})"),
+                },
+                None => eprintln!(
+                    "(artifact backend skipped under --checkpoint: artifact layer shapes are \
+                     fixed at BERT-base dims)"
+                ),
+            }
         }
+        #[cfg(not(feature = "xla"))]
+        println!("(artifact backend skipped — build with --features xla + make artifacts)");
     }
-    #[cfg(not(feature = "xla"))]
-    println!("\n(artifact backend skipped — build with --features xla + make artifacts)");
 
     // Bits-reduction accounting (paper: "5.3x of bits reduction").
     println!("\nbits-reduction vs fp32 (TinyBERT4 shapes, embedding kept fp32):");

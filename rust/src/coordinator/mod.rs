@@ -2,19 +2,23 @@
 //!
 //! * [`trainer`]  — calibration → QAT → eval orchestration (Tables 1 & 3);
 //!                  artifact-path only (feature `xla`).
-//! * [`server`]   — request router + valid-token dynamic batcher +
-//!                  executor over any [`crate::runtime::Backend`]
-//!                  (Table 2, §5.4).
+//! * [`server`]   — request router + 2-D (batch × seq-length) dynamic
+//!                  batcher + executor over any
+//!                  [`crate::runtime::Backend`] (Table 2, §5.4).
+//! * [`trace`]    — mixed-length request-trace generation for the
+//!                  serving demo and benches.
 //! * [`scheduler`]— the paper's warmup/decay lr schedule (§5.2).
 
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 #[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use crate::quant::{bits_last_n_int4, parse_bits};
 pub use scheduler::LrSchedule;
 pub use server::{Request, Response, Server, ServerConfig, ServerSummary};
+pub use trace::{TraceGen, TraceKind};
 
 #[cfg(feature = "xla")]
 pub use crate::runtime::ServeModel;

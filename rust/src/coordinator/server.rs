@@ -5,11 +5,19 @@
 //! batched inference service (Table 2 reports per-layer latency at
 //! serving batch shapes). This module is the vLLM-router-shaped L3 piece:
 //!
-//!   * requests arrive with variable valid-token counts;
-//!   * the dynamic batcher groups them into the largest available batch
-//!     bucket within a bounded batching window;
-//!   * the executor runs the backend forward and the router fans
-//!     responses back out, recording queue/execute/total latency.
+//!   * requests arrive at their **true token length** (no caller-side
+//!     padding — `submit` accepts any `1 <= len <= seq`);
+//!   * the dynamic batcher groups them into 2-D **(batch × seq-length)
+//!     buckets**: each request is admitted to the smallest seq bucket
+//!     that fits it, and a batch pads only to that bucket's ceiling, so a
+//!     12-token query never pays full-`seq` O(seq²) attention;
+//!   * the executor runs the backend forward at the bucket's length and
+//!     the router fans responses back out, recording queue/execute/total
+//!     latency plus padded-slot *and padded-token* accounting.
+//!
+//! Fixed-shape backends (the AOT artifact path) keep working: they reject
+//! short seq buckets via [`Backend::check_seq_bucket`] at construction,
+//! leaving the single full-`seq` bucket — exactly the old 1-D behavior.
 //!
 //! Single-threaded event loop by design: both backends already
 //! parallelize one execution across cores (the native path via the kernel
@@ -18,9 +26,12 @@
 //!
 //! §Perf: the batch staging buffers (`ids_stage` / `mask_stage`) persist
 //! across pumps — one allocation at server construction, zero on the hot
-//! path — and padded slots are zero-filled (an all-zero mask row is fully
-//! masked, so its logits are well-defined garbage that is never fanned
-//! out) instead of cloning a victim request's tokens.
+//! path — and padded positions are zero-filled (a zero-mask position is
+//! fully masked, so its logits are well-defined garbage that is never
+//! fanned out) instead of cloning a victim request's tokens. Combined
+//! with the native backend's [`Workspace`](crate::runtime::Workspace)
+//! arena, a steady-state `pump()` performs no per-batch heap allocation
+//! inside the native forward.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -45,19 +56,31 @@ pub struct Response {
     pub queue_us: f64,
     pub exec_us: f64,
     pub batch_size: usize,
+    /// Seq-bucket ceiling this request's batch was padded to.
+    pub seq_bucket: usize,
 }
 
 pub struct ServerConfig {
-    /// Available batch buckets (for the artifact backend these must match
-    /// emitted `serve_fwd_b*` executables; the native backend accepts any).
-    pub buckets: Vec<usize>,
+    /// Available batch-size buckets (for the artifact backend these must
+    /// match emitted `serve_fwd_b*` executables; the native backend
+    /// accepts any).
+    pub batch_buckets: Vec<usize>,
+    /// Sequence-length bucket ceilings. Empty means "full model seq
+    /// only" (the fixed-shape default every backend supports); the model
+    /// seq is always appended so any admissible request has a bucket.
+    /// Each bucket must pass [`Backend::check_seq_bucket`].
+    pub seq_buckets: Vec<usize>,
     /// Max time a request may wait for batchmates.
     pub batch_window: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { buckets: vec![1, 8, 16], batch_window: Duration::from_micros(500) }
+        ServerConfig {
+            batch_buckets: vec![1, 8, 16],
+            seq_buckets: vec![],
+            batch_window: Duration::from_micros(500),
+        }
     }
 }
 
@@ -65,113 +88,196 @@ pub struct Server<'b, B: Backend> {
     backend: &'b B,
     seq: usize,
     n_classes: usize,
+    /// Config with *resolved* bucket lists (sorted/deduped; the last
+    /// seq bucket is always the model `seq`).
     cfg: ServerConfig,
-    queue: VecDeque<Request>,
+    /// One FIFO per seq bucket (parallel to `cfg.seq_buckets`).
+    queues: Vec<VecDeque<Request>>,
     next_id: u64,
     ids_stage: Vec<i32>,
     mask_stage: Vec<f32>,
     pub queue_lat: LatencyRecorder,
     pub exec_lat: LatencyRecorder,
+    /// Per-*batch* execution latency (one sample per pump, unlike
+    /// `exec_lat`'s one per request) — batch-size-unweighted, the stat
+    /// the serving bench gates.
+    pub batch_exec_lat: LatencyRecorder,
     pub total_lat: LatencyRecorder,
     pub served: u64,
     pub batches: u64,
+    /// Empty batch slots executed (bucket minus actual requests).
     pub padded_slots: u64,
+    /// Padded tokens executed: `bucket * ceiling - valid tokens`, summed
+    /// over batches — the waste the 2-D bucket policy exists to shrink.
+    pub padded_tokens: u64,
+    /// All tokens executed (`bucket * ceiling` summed over batches).
+    pub total_tokens: u64,
+    /// Total backend execution time, summed once per *batch* (unlike
+    /// `exec_lat`, which records once per request) — the compute-bound
+    /// numerator for throughput metrics.
+    pub exec_us_total: f64,
 }
 
 impl<'b, B: Backend> Server<'b, B> {
     pub fn new(backend: &'b B, cfg: ServerConfig) -> Result<Self> {
         let dims = backend.serve_dims()?;
-        let mut buckets = cfg.buckets.clone();
-        buckets.sort_unstable();
-        if buckets.is_empty() {
+        let mut batch_buckets = cfg.batch_buckets.clone();
+        batch_buckets.sort_unstable();
+        batch_buckets.dedup();
+        if batch_buckets.is_empty() {
             bail!("server needs at least one batch bucket");
         }
-        for &b in &buckets {
+        for &b in &batch_buckets {
             backend.check_bucket(b)?; // fail fast if a bucket can't execute
         }
-        let largest = *buckets.last().unwrap();
+        let mut seq_buckets = cfg.seq_buckets.clone();
+        seq_buckets.sort_unstable();
+        seq_buckets.dedup();
+        if let Some(&t) = seq_buckets.first() {
+            if t == 0 {
+                bail!("seq bucket 0");
+            }
+        }
+        if seq_buckets.last() != Some(&dims.seq) {
+            if seq_buckets.last().map(|&t| t > dims.seq).unwrap_or(false) {
+                bail!("seq bucket {} exceeds model seq {}", seq_buckets.last().unwrap(), dims.seq);
+            }
+            seq_buckets.push(dims.seq); // full-length requests always fit
+        }
+        for &t in &seq_buckets {
+            backend.check_seq_bucket(t)?;
+        }
+        let largest = *batch_buckets.last().unwrap();
+        let n_seq = seq_buckets.len();
         Ok(Server {
             backend,
             seq: dims.seq,
             n_classes: dims.n_classes,
-            cfg: ServerConfig { buckets, ..cfg },
-            queue: VecDeque::new(),
+            // the stored config carries the *resolved* bucket lists —
+            // the single source of truth the policy reads
+            cfg: ServerConfig { batch_buckets, seq_buckets, ..cfg },
+            queues: (0..n_seq).map(|_| VecDeque::new()).collect(),
             next_id: 0,
-            ids_stage: Vec::with_capacity(largest * dims.seq),
-            mask_stage: Vec::with_capacity(largest * dims.seq),
+            // staging sized once for the largest batch at full seq —
+            // shorter buckets slice a prefix, so pumps never reallocate
+            ids_stage: vec![0; largest * dims.seq],
+            mask_stage: vec![0.0; largest * dims.seq],
             queue_lat: LatencyRecorder::new(),
             exec_lat: LatencyRecorder::new(),
+            batch_exec_lat: LatencyRecorder::new(),
             total_lat: LatencyRecorder::new(),
             served: 0,
             batches: 0,
             padded_slots: 0,
+            padded_tokens: 0,
+            total_tokens: 0,
+            exec_us_total: 0.0,
         })
     }
 
-    /// Enqueue a tokenized request; returns its id.
+    /// Enqueue a tokenized request *at its true length* — `ids`/`mask`
+    /// may be any `1..=seq` tokens long (full-`seq` padded submissions
+    /// keep working and land in the full-length bucket). Returns its id.
     pub fn submit(&mut self, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
-        if ids.len() != self.seq || mask.len() != self.seq {
-            bail!("request must be padded to seq={} (got {})", self.seq, ids.len());
+        if ids.len() != mask.len() {
+            bail!("ids/mask length mismatch ({} vs {})", ids.len(), mask.len());
         }
+        let len = ids.len();
+        if len == 0 || len > self.seq {
+            bail!("request length {len} out of range 1..={}", self.seq);
+        }
+        // smallest seq bucket that fits (last bucket == seq, so always found)
+        let qi = self.cfg.seq_buckets.iter().position(|&t| t >= len).unwrap();
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Request { id, ids, mask, enqueued: Instant::now() });
+        self.queues[qi].push_back(Request { id, ids, mask, enqueued: Instant::now() });
         Ok(id)
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
-    /// Batching policy: the largest bucket that is full, or — once the
-    /// oldest request has waited past the batching window — the largest
-    /// bucket ≤ queue length (padding if even the smallest is short).
-    fn pick_bucket(&self) -> Option<usize> {
-        let n = self.queue.len();
-        if n == 0 {
-            return None;
+    /// Batching policy over the 2-D buckets. Fires, in priority order:
+    ///   1. **aging**: if any queue's front has waited past the batching
+    ///      window, the queue with the globally-oldest expired front, at
+    ///      the largest batch bucket `<=` its queue length (padding slots
+    ///      if even the smallest batch bucket is short). Expiry outranks
+    ///      fullness so a continuously-full seq bucket under sustained
+    ///      short traffic can never starve a long request — every
+    ///      admitted request waits at most ~window + one execution;
+    ///   2. otherwise, any seq bucket whose queue fills the largest batch
+    ///      bucket (oldest front wins among several), at the largest
+    ///      batch — the no-waiting fast path.
+    fn pick(&self) -> Option<(usize, usize)> {
+        let mut expired: Option<(usize, Instant)> = None;
+        for (qi, q) in self.queues.iter().enumerate() {
+            if let Some(front) = q.front() {
+                if front.enqueued.elapsed() >= self.cfg.batch_window
+                    && expired.map(|(_, e)| front.enqueued < e).unwrap_or(true)
+                {
+                    expired = Some((qi, front.enqueued));
+                }
+            }
         }
-        let largest = *self.cfg.buckets.last().unwrap();
-        if n >= largest {
-            return Some(largest);
-        }
-        let waited = self.queue.front().unwrap().enqueued.elapsed();
-        if waited < self.cfg.batch_window {
-            return None; // keep accumulating batchmates
-        }
-        Some(
-            self.cfg
-                .buckets
+        if let Some((qi, _)) = expired {
+            let n = self.queues[qi].len();
+            let bucket = self
+                .cfg
+                .batch_buckets
                 .iter()
                 .copied()
                 .filter(|&b| b <= n)
                 .max()
-                .unwrap_or(self.cfg.buckets[0]),
-        )
+                .unwrap_or(self.cfg.batch_buckets[0]);
+            return Some((qi, bucket));
+        }
+        let largest = *self.cfg.batch_buckets.last().unwrap();
+        let mut full: Option<(usize, Instant)> = None;
+        for (qi, q) in self.queues.iter().enumerate() {
+            if q.len() >= largest {
+                let front = q.front().unwrap().enqueued;
+                if full.map(|(_, e)| front < e).unwrap_or(true) {
+                    full = Some((qi, front));
+                }
+            }
+        }
+        full.map(|(qi, _)| (qi, largest))
     }
 
     /// One event-loop turn: batch + execute if the policy fires.
     pub fn pump(&mut self) -> Result<Vec<Response>> {
-        let Some(bucket) = self.pick_bucket() else {
+        let Some((qi, bucket)) = self.pick() else {
             return Ok(vec![]);
         };
-        let take = bucket.min(self.queue.len());
-        let reqs: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
+        let tcap = self.cfg.seq_buckets[qi];
+        let take = bucket.min(self.queues[qi].len());
+        let reqs: Vec<Request> = (0..take).map(|_| self.queues[qi].pop_front().unwrap()).collect();
         self.padded_slots += (bucket - take) as u64;
 
-        let t = self.seq;
-        self.ids_stage.clear();
-        self.ids_stage.resize(bucket * t, 0);
-        self.mask_stage.clear();
-        self.mask_stage.resize(bucket * t, 0.0);
+        let stage = bucket * tcap;
+        self.ids_stage[..stage].fill(0);
+        self.mask_stage[..stage].fill(0.0);
+        let mut valid_tokens = 0u64;
         for (i, r) in reqs.iter().enumerate() {
-            self.ids_stage[i * t..(i + 1) * t].copy_from_slice(&r.ids);
-            self.mask_stage[i * t..(i + 1) * t].copy_from_slice(&r.mask);
+            let len = r.ids.len();
+            self.ids_stage[i * tcap..i * tcap + len].copy_from_slice(&r.ids);
+            self.mask_stage[i * tcap..i * tcap + len].copy_from_slice(&r.mask);
+            valid_tokens += r.mask.iter().filter(|&&m| m == 1.0).count() as u64;
         }
+        self.total_tokens += stage as u64;
+        self.padded_tokens += stage as u64 - valid_tokens;
 
         let exec_start = Instant::now();
-        let logits = self.backend.serve_forward(bucket, &self.ids_stage, &self.mask_stage)?;
+        let logits = self.backend.serve_forward(
+            bucket,
+            tcap,
+            &self.ids_stage[..stage],
+            &self.mask_stage[..stage],
+        )?;
         let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+        self.exec_us_total += exec_us;
+        self.batch_exec_lat.record(exec_us);
 
         self.batches += 1;
         let nc = self.n_classes;
@@ -189,22 +295,34 @@ impl<'b, B: Backend> Server<'b, B> {
                 queue_us,
                 exec_us,
                 batch_size: bucket,
+                seq_bucket: tcap,
             });
         }
         Ok(responses)
     }
 
-    /// Drain the queue fully (end of trace).
+    /// Drain the queues fully (end of trace). The batching window is
+    /// forced open for the duration and restored afterwards **even if an
+    /// inner `pump()` fails** — a failed drain must not leave the server
+    /// batching with a permanently-zero window.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let win = std::mem::replace(&mut self.cfg.batch_window, Duration::ZERO);
         let mut all = vec![];
-        // Force the window open.
-        let win = self.cfg.batch_window;
-        self.cfg.batch_window = Duration::ZERO;
-        while !self.queue.is_empty() {
-            all.extend(self.pump()?);
+        let mut failed = None;
+        while self.pending() > 0 {
+            match self.pump() {
+                Ok(rs) => all.extend(rs),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
         }
         self.cfg.batch_window = win;
-        Ok(all)
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(all),
+        }
     }
 
     pub fn summary(&self) -> ServerSummary {
@@ -213,8 +331,12 @@ impl<'b, B: Backend> Server<'b, B> {
             served: self.served,
             batches: self.batches,
             padded_slots: self.padded_slots,
+            padded_tokens: self.padded_tokens,
+            total_tokens: self.total_tokens,
+            exec_us_total: self.exec_us_total,
             queue: self.queue_lat.summary(),
             exec: self.exec_lat.summary(),
+            batch_exec: self.batch_exec_lat.summary(),
             total: self.total_lat.summary(),
         }
     }
@@ -226,21 +348,45 @@ pub struct ServerSummary {
     pub served: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    pub padded_tokens: u64,
+    pub total_tokens: u64,
+    pub exec_us_total: f64,
     pub queue: LatencySummary,
     pub exec: LatencySummary,
+    /// Per-batch execution latency (one sample per executed batch).
+    pub batch_exec: LatencySummary,
     pub total: LatencySummary,
+}
+
+impl ServerSummary {
+    /// Fraction of executed tokens that were padding (slot padding plus
+    /// in-sequence padding up to the bucket ceiling).
+    pub fn padded_token_fraction(&self) -> f64 {
+        self.padded_tokens as f64 / self.total_tokens.max(1) as f64
+    }
+
+    /// Backend execution microseconds per 1000 *valid* tokens — a
+    /// compute-bound throughput stat (arrival-schedule idle time is
+    /// excluded, so "grows = serving got slower" actually holds).
+    pub fn exec_us_per_ktok(&self) -> f64 {
+        let valid = self.total_tokens.saturating_sub(self.padded_tokens).max(1);
+        self.exec_us_total / (valid as f64 / 1000.0)
+    }
 }
 
 impl std::fmt::Display for ServerSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "[{}] served={} batches={} avg_batch={:.1} padded={}",
+            "[{}] served={} batches={} avg_batch={:.1} padded_slots={} padded_tokens={}/{} ({:.1}%)",
             self.model,
             self.served,
             self.batches,
             self.served as f64 / self.batches.max(1) as f64,
-            self.padded_slots
+            self.padded_slots,
+            self.padded_tokens,
+            self.total_tokens,
+            100.0 * self.padded_token_fraction(),
         )?;
         writeln!(f, "  queue : {}", self.queue)?;
         writeln!(f, "  exec  : {}", self.exec)?;
@@ -266,8 +412,12 @@ mod tests {
         NativeBackend::with_model(NativeModel::random(dims, &[4], 1))
     }
 
-    fn mk_server(backend: &NativeBackend, buckets: Vec<usize>, window: Duration) -> Server<'_, NativeBackend> {
-        Server::new(backend, ServerConfig { buckets, batch_window: window }).unwrap()
+    fn mk_server(backend: &NativeBackend, batch_buckets: Vec<usize>, window: Duration) -> Server<'_, NativeBackend> {
+        Server::new(
+            backend,
+            ServerConfig { batch_buckets, seq_buckets: vec![], batch_window: window },
+        )
+        .unwrap()
     }
 
     fn submit_n(server: &mut Server<'_, NativeBackend>, n: usize) {
@@ -285,7 +435,13 @@ mod tests {
         let out = s.pump().unwrap();
         assert_eq!(out.len(), 8);
         assert_eq!(s.padded_slots, 0);
-        assert!(out.iter().all(|r| r.batch_size == 8));
+        assert_eq!(s.padded_tokens, 0);
+        assert_eq!(s.total_tokens, 64);
+        let summary = s.summary();
+        assert!(summary.exec_us_total > 0.0);
+        assert_eq!(summary.batch_exec.count, 1);
+        assert!(summary.exec_us_per_ktok() > 0.0);
+        assert!(out.iter().all(|r| r.batch_size == 8 && r.seq_bucket == 8));
         assert!(out.iter().all(|r| r.logits.len() == 2 && r.logits.iter().all(|x| x.is_finite())));
     }
 
@@ -307,7 +463,78 @@ mod tests {
         let out = s.pump().unwrap();
         assert_eq!(out.len(), 3);
         assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.padded_tokens, 8); // the empty slot's 8 tokens
         assert!(out.iter().all(|r| r.batch_size == 4));
+    }
+
+    #[test]
+    fn seq_buckets_group_by_length() {
+        let be = tiny_backend();
+        let mut s = Server::new(
+            &be,
+            ServerConfig {
+                batch_buckets: vec![2],
+                seq_buckets: vec![4, 8],
+                batch_window: Duration::from_secs(60),
+            },
+        )
+        .unwrap();
+        // two short requests fill the t<=4 bucket; a long one waits alone
+        s.submit(vec![1, 2, 3], vec![1.0; 3]).unwrap();
+        s.submit(vec![5; 7], vec![1.0; 7]).unwrap();
+        s.submit(vec![4, 5], vec![1.0; 2]).unwrap();
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 2, "the short bucket fires full");
+        assert!(out.iter().all(|r| r.seq_bucket == 4 && r.batch_size == 2));
+        // 2 slots * 4 tokens, 3 + 2 valid
+        assert_eq!(s.total_tokens, 8);
+        assert_eq!(s.padded_tokens, 3);
+        assert_eq!(s.pending(), 1);
+        assert!(s.pump().unwrap().is_empty(), "long request still inside its window");
+        let rest = s.drain().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].seq_bucket, 8);
+    }
+
+    #[test]
+    fn expired_request_beats_full_bucket_no_starvation() {
+        // a continuously-full short bucket must not starve a long request
+        // whose batching window has expired: aging outranks fullness.
+        let be = tiny_backend();
+        let mut s = Server::new(
+            &be,
+            ServerConfig {
+                batch_buckets: vec![1, 2],
+                seq_buckets: vec![4, 8],
+                batch_window: Duration::from_millis(40),
+            },
+        )
+        .unwrap();
+        s.submit(vec![1; 7], vec![1.0; 7]).unwrap(); // long, t<=8 bucket
+        std::thread::sleep(Duration::from_millis(60)); // expire its window
+        // the short bucket is now full (>= largest batch bucket) but fresh
+        s.submit(vec![1, 2], vec![1.0; 2]).unwrap();
+        s.submit(vec![3, 4], vec![1.0; 2]).unwrap();
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1, "the expired long request must fire first");
+        assert_eq!(out[0].seq_bucket, 8);
+        // next pump serves the full short bucket
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.seq_bucket == 4));
+    }
+
+    #[test]
+    fn short_request_in_full_seq_bucket_pads_to_seq() {
+        // without explicit seq buckets, a 3-token request pads to seq=8
+        // (the old 1-D behavior) and the padded tokens are accounted
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        s.submit(vec![1, 2, 3], vec![1.0; 3]).unwrap();
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].seq_bucket, 8);
+        assert_eq!(s.padded_tokens, 5);
     }
 
     #[test]
@@ -326,6 +553,18 @@ mod tests {
     }
 
     #[test]
+    fn failed_drain_restores_batch_window() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        s.submit(vec![-1; 8], vec![1.0; 8]).unwrap(); // out-of-vocab: exec fails
+        assert!(s.drain().is_err());
+        // the window must be back to 60s: a short queue may not fire
+        submit_n(&mut s, 3);
+        assert!(s.pump().unwrap().is_empty(), "drain failure leaked batch_window = ZERO");
+        assert_eq!(s.pending(), 3);
+    }
+
+    #[test]
     fn empty_queue_never_fires() {
         let be = tiny_backend();
         let mut s = mk_server(&be, vec![1, 4, 8], Duration::ZERO);
@@ -336,7 +575,27 @@ mod tests {
     fn rejects_misshapen_requests() {
         let be = tiny_backend();
         let mut s = mk_server(&be, vec![1], Duration::ZERO);
-        assert!(s.submit(vec![0; 5], vec![1.0; 5]).is_err());
+        assert!(s.submit(vec![], vec![]).is_err(), "empty request");
+        assert!(s.submit(vec![0; 9], vec![1.0; 9]).is_err(), "longer than model seq");
+        assert!(s.submit(vec![0; 5], vec![1.0; 4]).is_err(), "ids/mask mismatch");
+        // true-length submission is legal now
+        assert!(s.submit(vec![0; 5], vec![1.0; 5]).is_ok());
+    }
+
+    #[test]
+    fn rejects_out_of_range_seq_buckets() {
+        let be = tiny_backend();
+        for bad in [vec![0usize, 8], vec![4, 9]] {
+            let r = Server::new(
+                &be,
+                ServerConfig {
+                    batch_buckets: vec![1],
+                    seq_buckets: bad.clone(),
+                    batch_window: Duration::ZERO,
+                },
+            );
+            assert!(r.is_err(), "seq_buckets {bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Mixed-length request-trace generation for the serving demo and the
+//! coordinator benchmarks.
+//!
+//! Real classification traffic is short and mixed-length; the synthetic
+//! GLUE datasets already carry that distribution (every row is tokenized
+//! to `seq` with a prefix-of-ones mask over its true tokens). A
+//! [`TraceGen`] samples dataset rows and emits them either **trimmed to
+//! their valid length** (`mixed` — what the 2-D seq-bucket batcher is
+//! for) or **padded to full `seq`** (`full` — the old fixed-shape
+//! behavior, kept for A/B comparison and for fixed-shape backends).
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// How request lengths are drawn from the dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Requests at their true token length (mixed lengths).
+    Mixed,
+    /// Requests padded to the full model `seq` (fixed shape).
+    Full,
+}
+
+impl TraceKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mixed" => Some(TraceKind::Mixed),
+            "full" => Some(TraceKind::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Mixed => "mixed",
+            TraceKind::Full => "full",
+        }
+    }
+}
+
+/// Seeded sampler of `(ids, mask)` requests over a tokenized dataset.
+pub struct TraceGen<'d> {
+    ds: &'d Dataset,
+    rng: Rng,
+    kind: TraceKind,
+}
+
+impl<'d> TraceGen<'d> {
+    pub fn new(ds: &'d Dataset, kind: TraceKind, seed: u64) -> Self {
+        assert!(!ds.is_empty(), "trace over an empty dataset");
+        TraceGen { ds, rng: Rng::new(seed), kind }
+    }
+
+    /// Sample the next request. `Mixed` trims to the row's valid-token
+    /// count (mask is a prefix of ones by tokenizer construction), `Full`
+    /// returns the row as stored (padded to `seq`).
+    pub fn next_request(&mut self) -> (Vec<i32>, Vec<f32>) {
+        let row = self.rng.below(self.ds.len());
+        let ids = &self.ds.ids[row];
+        let mask = &self.ds.masks[row];
+        match self.kind {
+            TraceKind::Full => (ids.clone(), mask.clone()),
+            TraceKind::Mixed => {
+                let valid = mask.iter().filter(|&&m| m == 1.0).count().max(1);
+                (ids[..valid].to_vec(), mask[..valid].to_vec())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Suite, TaskKind};
+
+    #[test]
+    fn mixed_trims_full_pads() {
+        let suite = Suite::new(42, 128, 16);
+        let task = suite.task(TaskKind::Sst2, 1);
+        let mut mixed = TraceGen::new(&task.dev, TraceKind::Mixed, 7);
+        let mut full = TraceGen::new(&task.dev, TraceKind::Full, 7);
+        let mut saw_short = false;
+        for _ in 0..32 {
+            let (ids, mask) = mixed.next_request();
+            assert_eq!(ids.len(), mask.len());
+            assert!(!ids.is_empty() && ids.len() <= 16);
+            assert!(mask.iter().all(|&m| m == 1.0), "mixed requests carry no padding");
+            if ids.len() < 16 {
+                saw_short = true;
+            }
+            let (fids, fmask) = full.next_request();
+            assert_eq!(fids.len(), 16);
+            assert_eq!(fmask.len(), 16);
+        }
+        assert!(saw_short, "synthetic traffic should contain short requests");
+    }
+
+    #[test]
+    fn trace_kind_parses() {
+        assert_eq!(TraceKind::parse("mixed"), Some(TraceKind::Mixed));
+        assert_eq!(TraceKind::parse("full"), Some(TraceKind::Full));
+        assert_eq!(TraceKind::parse("bogus"), None);
+        for k in [TraceKind::Mixed, TraceKind::Full] {
+            assert_eq!(TraceKind::parse(k.name()), Some(k));
+        }
+    }
+}

@@ -394,15 +394,36 @@ impl Dispatcher {
         sx: &[f32],
     ) -> Vec<f32> {
         let mut out = vec![0f32; m * pw.n];
+        self.qmatmul_prequant_into(qx, rowsums, m, k, pw, sx, &mut out);
+        out
+    }
+
+    /// [`Self::qmatmul_prequant`] writing into a caller-provided buffer —
+    /// the zero-allocation serving path ([`crate::runtime::Workspace`]).
+    /// Every kernel variant is allocation-free here except the forced
+    /// `reference` debug kernel, which re-unpacks the weight panels per
+    /// call by design.
+    #[allow(clippy::too_many_arguments)]
+    pub fn qmatmul_prequant_into(
+        &self,
+        qx: &[i16],
+        rowsums: &[i32],
+        m: usize,
+        k: usize,
+        pw: &PackedWeights,
+        sx: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), m * pw.n);
         let kind = self.select(m, k, pw.n);
         match kind {
             KernelKind::Reference => {
                 let codes = pw.unpack_codes();
-                gemm::gemm_reference(qx, m, k, &codes, pw.n, sx, &pw.scales, &mut out);
+                gemm::gemm_reference(qx, m, k, &codes, pw.n, sx, &pw.scales, out);
             }
-            KernelKind::Blocked => gemm::gemm_serial(qx, rowsums, m, k, pw, sx, &mut out),
+            KernelKind::Blocked => gemm::gemm_serial(qx, rowsums, m, k, pw, sx, out),
             KernelKind::Avx2 | KernelKind::Neon => {
-                simd::serial_fn(kind)(qx, rowsums, m, k, pw, sx, &mut out)
+                simd::serial_fn(kind)(qx, rowsums, m, k, pw, sx, out)
             }
             KernelKind::BlockedParallel | KernelKind::Avx2Parallel | KernelKind::NeonParallel => {
                 let pool = self.pool.as_ref().expect("parallel kernel without pool");
@@ -414,13 +435,12 @@ impl Dispatcher {
                     k,
                     pw,
                     sx,
-                    &mut out,
+                    out,
                     pool,
                     self.threads,
                 );
             }
         }
-        out
     }
 
     /// fp32 matmul over panel-packed weights (the unquantized baseline,
@@ -429,13 +449,20 @@ impl Dispatcher {
     /// the parallel threshold from [`Tuning`] still applies.
     pub fn matmul_f32(&self, x: &[f32], m: usize, k: usize, pf: &PackedF32) -> Vec<f32> {
         let mut out = vec![0f32; m * pf.n];
+        self.matmul_f32_into(x, m, k, pf, &mut out);
+        out
+    }
+
+    /// [`Self::matmul_f32`] writing into a caller-provided buffer — the
+    /// zero-allocation serving path.
+    pub fn matmul_f32_into(&self, x: &[f32], m: usize, k: usize, pf: &PackedF32, out: &mut [f32]) {
+        assert_eq!(out.len(), m * pf.n);
         if self.select(m, k, pf.n).is_parallel() {
             let pool = self.pool.as_ref().expect("parallel kernel without pool");
-            gemm::sgemm_parallel(x, m, k, pf, &mut out, pool, self.threads);
+            gemm::sgemm_parallel(x, m, k, pf, out, pool, self.threads);
         } else {
-            gemm::sgemm_serial(x, m, k, pf, &mut out);
+            gemm::sgemm_serial(x, m, k, pf, out);
         }
-        out
     }
 }
 

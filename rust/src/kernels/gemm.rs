@@ -108,6 +108,56 @@ pub fn per_token_scales(x: &[f32], m: usize, k: usize, bits: u32, fallback: f32)
         .collect()
 }
 
+/// Fused per-token activation preparation: one traversal of `x` at the
+/// memory level computing, per row, the per-token scale (abs-max with
+/// the calibrated fallback — exactly [`per_token_scales`]' rule), the
+/// quantized codes ([`quantize_activations`]' grid) and the row sum
+/// ([`act_row_sums`]), written into caller-provided buffers so the
+/// serving hot path allocates nothing. Each row is swept twice (abs-max,
+/// then quantize+sum) but stays cache-hot between sweeps, so `x` streams
+/// from memory once — versus three full-matrix passes for the unfused
+/// composition. Bit-for-bit identical to
+/// `per_token_scales` → `quantize_activations` → `act_row_sums`
+/// (enforced by `fused_pass_matches_three_pass_composition`).
+pub fn quantize_rows_fused(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    bits: u32,
+    fallback: f32,
+    sx: &mut [f32],
+    qx: &mut [i16],
+    rs: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(sx.len(), m);
+    assert_eq!(qx.len(), m * k);
+    assert_eq!(rs.len(), m);
+    let (lmin, lmax) = quant::qbounds(bits);
+    for i in 0..m {
+        let row = &x[i * k..(i + 1) * k];
+        let mut amax = 0f32;
+        let mut finite = true;
+        for &v in row {
+            if v.is_finite() {
+                amax = amax.max(v.abs());
+            } else {
+                finite = false;
+            }
+        }
+        let s = if finite && amax > 0.0 { amax / lmax } else { fallback };
+        sx[i] = s;
+        let out = &mut qx[i * k..(i + 1) * k];
+        let mut sum = 0i32;
+        for j in 0..k {
+            let q = (row[j] / s).round().clamp(lmin, lmax) as i16;
+            out[j] = q;
+            sum += q as i32;
+        }
+        rs[i] = sum;
+    }
+}
+
 /// Single-threaded tiled GEMM over `m` rows. `rowsums` is only read for
 /// int4 weights (pass `&[]`-compatible data for int8 is NOT allowed —
 /// callers always provide it; it is one add per row to build).
@@ -541,6 +591,37 @@ mod tests {
         let lmax = quant::qbounds(8).1;
         assert_eq!(s[3], 0.5 / lmax);
         assert!(s.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_pass_matches_three_pass_composition() {
+        // quantize_rows_fused must be bit-for-bit the composition of
+        // per_token_scales -> quantize_activations -> act_row_sums,
+        // including the all-zero-row and non-finite-row fallbacks.
+        let mut rng = Rng::new(41);
+        for &(m, k) in &[(1usize, 2usize), (3, 5), (7, 16), (33, 24), (130, 12)] {
+            for bits in [4u32, 8] {
+                let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+                if m > 2 {
+                    // one all-zero row and one poisoned row ride along
+                    for v in x[k..2 * k].iter_mut() {
+                        *v = 0.0;
+                    }
+                    x[2 * k] = f32::NAN;
+                }
+                let fallback = 0.037f32;
+                let want_sx = per_token_scales(&x, m, k, bits, fallback);
+                let want_qx = quantize_activations(&x, m, k, &want_sx, bits);
+                let want_rs = act_row_sums(&want_qx, m, k);
+                let mut sx = vec![0f32; m];
+                let mut qx = vec![0i16; m * k];
+                let mut rs = vec![0i32; m];
+                quantize_rows_fused(&x, m, k, bits, fallback, &mut sx, &mut qx, &mut rs);
+                assert_eq!(sx, want_sx, "sx m={m} k={k} bits={bits}");
+                assert_eq!(qx, want_qx, "qx m={m} k={k} bits={bits}");
+                assert_eq!(rs, want_rs, "rs m={m} k={k} bits={bits}");
+            }
+        }
     }
 
     #[test]

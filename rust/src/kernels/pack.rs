@@ -182,7 +182,7 @@ impl PackedWeights {
 
 /// fp32 weights in the same panel layout (the native f32 baseline the
 /// quantized kernels are compared against).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PackedF32 {
     pub k: usize,
     pub n: usize,
@@ -191,21 +191,38 @@ pub struct PackedF32 {
 
 impl PackedF32 {
     pub fn from_rowmajor(w: &[f32], k: usize, n: usize) -> Self {
+        let mut pf = Self::empty();
+        pf.repack_rowmajor(w, k, n);
+        pf
+    }
+
+    /// An empty pack to be filled by [`Self::repack_rowmajor`] — the
+    /// workspace slots the attention path re-packs per `(batch, head)`.
+    pub fn empty() -> Self {
+        PackedF32 { k: 0, n: 0, data: Vec::new() }
+    }
+
+    /// Re-pack a row-major `(k, n)` matrix in place, reusing the existing
+    /// allocation whenever capacity allows — at a steady serving shape
+    /// this never touches the heap (the zero-alloc workspace contract).
+    pub fn repack_rowmajor(&mut self, w: &[f32], k: usize, n: usize) {
         assert_eq!(w.len(), k * n);
         let n_panels = (n + NR - 1) / NR;
-        let mut data = vec![0f32; n_panels * k * NR];
+        self.k = k;
+        self.n = n;
+        self.data.clear();
+        self.data.resize(n_panels * k * NR, 0.0);
         for p in 0..n_panels {
             let base = p * k * NR;
             for kk in 0..k {
                 for jj in 0..NR {
                     let col = p * NR + jj;
                     if col < n {
-                        data[base + kk * NR + jj] = w[kk * n + col];
+                        self.data[base + kk * NR + jj] = w[kk * n + col];
                     }
                 }
             }
         }
-        PackedF32 { k, n, data }
     }
 
     pub fn n_panels(&self) -> usize {
@@ -263,6 +280,20 @@ mod tests {
             let pw = PackedWeights::from_f32(&w, k, n, bits);
             assert_eq!(pw.unpack_codes(), codes);
             assert_eq!(pw.scales, scales);
+        }
+    }
+
+    #[test]
+    fn repack_reuses_buffer_and_matches_from_rowmajor() {
+        // shrinking then re-growing through the same slot must reproduce
+        // a fresh pack exactly (stale tail data cleared, zero padding back)
+        let mut pf = PackedF32::empty();
+        for &(k, n) in &[(3usize, 11usize), (2, 5), (4, 16), (3, 11)] {
+            let w: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.5 - 1.0).collect();
+            pf.repack_rowmajor(&w, k, n);
+            let fresh = PackedF32::from_rowmajor(&w, k, n);
+            assert_eq!((pf.k, pf.n), (fresh.k, fresh.n));
+            assert_eq!(pf.data, fresh.data, "k={k} n={n}");
         }
     }
 

@@ -37,7 +37,13 @@ fn usage() -> ! {
         "usage: mkq-bert <serve-native|kernels|ckpt|train|serve|info> [options]
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
-                --window-us N   --buckets 1,8,16
+                --window-us N   --buckets 1,8,16 (batch buckets)
+                --seq-buckets 6,12,24  (seq-length bucket ceilings; the
+                model seq is always available; default: quarters of seq)
+                --trace mixed|full  (mixed = requests at true length,
+                full = padded to seq; default mixed)
+                --bench-trace [PATH]  (write serving-latency JSON for the
+                CI regression gate; default path BENCH_serve.json)
                 --checkpoint FILE.mkqc  (serve a saved model; the file's
                 dims/bits/scales are authoritative)
   kernels:      (no options; prints the dispatch table and runs a
@@ -188,7 +194,7 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
             let bsz = 2usize;
             let ids: Vec<i32> = (0..bsz * d.seq).map(|i| (i % d.vocab) as i32).collect();
             let mask = vec![1.0f32; bsz * d.seq];
-            let logits = model.forward(&disp, &ids, &mask, bsz);
+            let logits = model.forward(&disp, &ids, &mask, bsz, d.seq);
             anyhow::ensure!(
                 logits.len() == bsz * d.n_classes && logits.iter().all(|x| x.is_finite()),
                 "forward smoke test produced non-finite logits"
@@ -208,11 +214,18 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
     }
 }
 
+/// Default seq-length bucket ceilings: quarters of the model seq (the
+/// model seq itself is always appended by the server).
+fn default_seq_buckets(seq: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = (1..=4).map(|q| q * seq / 4).filter(|&t| t > 0).collect();
+    v.dedup();
+    v
+}
+
 fn serve_native(args: &Args, conf: &Config) -> Result<()> {
-    use mkq::coordinator::{bits_last_n_int4, parse_bits, Server, ServerConfig};
+    use mkq::coordinator::{bits_last_n_int4, parse_bits, Server, ServerConfig, TraceGen, TraceKind};
     use mkq::data::{Suite, TaskKind};
     use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
-    use mkq::util::rng::Rng;
 
     let model = if let Some(ck_path) = args.get("checkpoint") {
         if args.get("bits").is_some() || args.get("n-int4").is_some() {
@@ -240,19 +253,35 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     let backend = NativeBackend::with_model(model);
     println!("{}", backend.disp.describe());
 
-    let buckets: Vec<usize> = match args.list("buckets") {
-        Some(v) => v
-            .iter()
-            .map(|s| s.parse::<usize>())
-            .collect::<Result<_, _>>()
-            .map_err(|_| anyhow::anyhow!("--buckets expects a comma-separated list of integers"))?,
-        None => vec![1, 8, 16],
+    let parse_usize_list = |key: &str| -> Result<Option<Vec<usize>>> {
+        match args.list(key) {
+            Some(v) => v
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<Result<Vec<usize>, _>>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects a comma-separated list of integers")),
+            None => Ok(None),
+        }
+    };
+    let batch_buckets = parse_usize_list("buckets")?.unwrap_or_else(|| vec![1, 8, 16]);
+    let seq_buckets =
+        parse_usize_list("seq-buckets")?.unwrap_or_else(|| default_seq_buckets(dims.seq));
+    let trace_kind = {
+        let s = args.str("trace", &conf.str("serve.trace", "mixed"));
+        TraceKind::parse(&s).ok_or_else(|| anyhow::anyhow!("--trace expects mixed|full, got {s:?}"))?
     };
     let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
+    println!(
+        "batch buckets {batch_buckets:?}, seq buckets {seq_buckets:?} (+{}), trace {}",
+        dims.seq,
+        trace_kind.name()
+    );
     let mut server = Server::new(
         &backend,
         ServerConfig {
-            buckets,
+            batch_buckets,
+            seq_buckets,
             batch_window: std::time::Duration::from_micros(window_us as u64),
         },
     )?;
@@ -262,24 +291,76 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     let rate = args.f64("rate", conf.f64("serve.rate", 500.0));
     let n_req = args.usize("requests", conf.usize("serve.requests", 400));
     println!("replaying Poisson trace: {n_req} requests at {rate} rps, window {window_us}us");
-    let mut rng = Rng::new(99);
+    let mut tracegen = TraceGen::new(&task.dev, trace_kind, 99);
+    let mut arrivals = mkq::util::rng::Rng::new(99);
     let mut sent = 0usize;
-    let mut next_arrival = std::time::Instant::now();
+    let replay_start = std::time::Instant::now();
+    let mut next_arrival = replay_start;
     while sent < n_req || server.pending() > 0 {
         let now = std::time::Instant::now();
         if sent < n_req && now >= next_arrival {
-            let row = rng.below(task.dev.len());
-            server.submit(task.dev.ids[row].clone(), task.dev.masks[row].clone())?;
+            let (ids, mask) = tracegen.next_request();
+            server.submit(ids, mask)?;
             sent += 1;
-            next_arrival = now + std::time::Duration::from_secs_f64(rng.exp(rate));
+            next_arrival = now + std::time::Duration::from_secs_f64(arrivals.exp(rate));
         }
         server.pump()?;
         if sent >= n_req {
             server.drain()?;
         }
     }
-    println!("{}", server.summary());
+    let replay_s = replay_start.elapsed().as_secs_f64();
+    let summary = server.summary();
+    println!("{summary}");
+
+    if let Some(out) = args.get("bench-trace") {
+        let path = if out == "true" { "BENCH_serve.json" } else { out };
+        write_bench_serve(path, &summary, replay_s)?;
+        println!("wrote {path}");
+    }
     Ok(())
+}
+
+/// Serving benchmark dump, schema-compatible with `BENCH_kernels.json`
+/// so `ci/bench_diff.py` applies the same >20% regression rule.
+///
+/// Only *compute-bound* statistics are gated (placed in the `kernels`
+/// array the differ reads): `serve_batch_exec_p50` (median per-*batch*
+/// backend execution — one sample per pump, so batch-size mix doesn't
+/// weight it) and `serve_exec_us_per_ktok` (total backend execution
+/// time per 1000 valid tokens). Queue/total latencies and tail
+/// percentiles are single-replay, arrival-schedule- and scheduler-
+/// jitter-dependent — flaky at a 20% threshold on shared runners — so
+/// they are emitted as ungated metadata instead.
+fn write_bench_serve(path: &str, s: &mkq::coordinator::ServerSummary, replay_s: f64) -> Result<()> {
+    use mkq::util::benchkit::BenchResult;
+    let gated = [
+        ("serve_batch_exec_p50", BenchResult::single(s.batch_exec.p50_us, s.batches as usize)),
+        ("serve_exec_us_per_ktok", BenchResult::single(s.exec_us_per_ktok(), s.batches as usize)),
+    ];
+    let mut out = String::from("{\n  \"kernels\": [\n");
+    for (i, (name, r)) in gated.iter().enumerate() {
+        out.push_str(&format!(
+            "    {}{}\n",
+            r.json_row(name),
+            if i + 1 == gated.len() { "" } else { "," }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"ungated\": {{\"exec_p99_us\": {:.3}, \"queue_p50_us\": {:.3}, \
+         \"total_p50_us\": {:.3}, \"total_p99_us\": {:.3}, \"replay_s\": {:.3}}},\n",
+        s.exec.p99_us, s.queue.p50_us, s.total.p50_us, s.total.p99_us, replay_s
+    ));
+    out.push_str(&format!(
+        "  \"served\": {},\n  \"batches\": {},\n  \"padded_tokens\": {},\n  \
+         \"total_tokens\": {},\n  \"padded_token_fraction\": {:.4}\n}}\n",
+        s.served,
+        s.batches,
+        s.padded_tokens,
+        s.total_tokens,
+        s.padded_token_fraction()
+    ));
+    std::fs::write(path, out).map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))
 }
 
 #[cfg(not(feature = "xla"))]
@@ -456,10 +537,13 @@ mod artifact {
         let backend = ArtifactBackend::new(eng).with_serve_model(model)?;
 
         let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
+        // fixed-shape AOT executables: full-seq bucket only (the empty
+        // seq_buckets default), requests stay padded to seq
         let mut server = Server::new(
             &backend,
             ServerConfig {
-                buckets: vec![1, 8, 16],
+                batch_buckets: vec![1, 8, 16],
+                seq_buckets: vec![],
                 batch_window: std::time::Duration::from_micros(window_us as u64),
             },
         )?;

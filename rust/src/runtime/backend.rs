@@ -13,11 +13,14 @@
 //! report them side by side, which is how the native-vs-XLA speedup
 //! numbers in `BENCH_kernels.json` are produced.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
 use crate::kernels::Dispatcher;
 
 use super::native::{NativeLayer, NativeModel};
+use super::workspace::Workspace;
 
 /// Serving-facing model dimensions.
 #[derive(Debug, Clone, Copy)]
@@ -64,9 +67,24 @@ pub trait Backend {
     /// no model).
     fn check_bucket(&self, bucket: usize) -> Result<()>;
 
-    /// Forward a padded `(bucket, seq)` batch to `(bucket, n_classes)`
-    /// logits.
-    fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>>;
+    /// Fail fast if a sequence-length bucket cannot be served. The
+    /// default accepts only the full model `seq` — the fixed-shape
+    /// contract of AOT backends; shape-generic backends override.
+    fn check_seq_bucket(&self, t: usize) -> Result<()> {
+        let dims = self.serve_dims()?;
+        if t == dims.seq {
+            Ok(())
+        } else {
+            bail!("backend serves fixed seq={} only (got seq bucket {t})", dims.seq)
+        }
+    }
+
+    /// Forward a `(bucket, t)` batch to `(bucket, n_classes)` logits.
+    /// `t` is the batch's token length — the seq bucket the dynamic
+    /// batcher padded to, not necessarily the model's full `seq`;
+    /// backends that validated the bucket via
+    /// [`Backend::check_seq_bucket`] receive only values they accepted.
+    fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>>;
 
     /// One BERT-base encoder layer at the given precision over `(bsz*t, d)`
     /// hidden states (the Table-2 per-layer benchmark surface).
@@ -85,6 +103,11 @@ pub struct NativeBackend {
     pub disp: Dispatcher,
     bench_layers: Option<Box<[NativeLayer; 3]>>,
     model: Option<NativeModel>,
+    /// Reusable forward scratch: grown to the largest shape seen, then
+    /// zero steady-state allocation across `serve_forward`/`layer_forward`
+    /// calls. `RefCell` because the `Backend` trait takes `&self` and the
+    /// serving event loop is single-threaded by design.
+    ws: RefCell<Workspace>,
 }
 
 impl Default for NativeBackend {
@@ -95,7 +118,12 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend { disp: Dispatcher::new(), bench_layers: None, model: None }
+        NativeBackend {
+            disp: Dispatcher::new(),
+            bench_layers: None,
+            model: None,
+            ws: RefCell::new(Workspace::new()),
+        }
     }
 
     /// Model-load entry point: installs the model and runs the one-shot
@@ -155,14 +183,30 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
-    fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+    fn check_seq_bucket(&self, t: usize) -> Result<()> {
+        let dims = self.serve_dims()?;
+        if t >= 1 && t <= dims.seq {
+            Ok(())
+        } else {
+            bail!("seq bucket {t} out of range 1..={}", dims.seq)
+        }
+    }
+
+    fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
         match &self.model {
             Some(m) => {
+                if t < 1 || t > m.dims.seq {
+                    bail!("token length {t} out of range 1..={}", m.dims.seq);
+                }
                 let vocab = m.dims.vocab;
                 if let Some(&bad) = ids.iter().find(|&&id| id < 0 || id as usize >= vocab) {
                     bail!("token id {bad} out of range for vocab {vocab}");
                 }
-                Ok(m.forward(&self.disp, ids, mask, bucket))
+                let mut ws = self.ws.borrow_mut();
+                // The copy-out is the one remaining per-batch allocation
+                // (bucket * n_classes floats); the forward itself is
+                // allocation-free at a steady shape.
+                Ok(m.forward_ws(&self.disp, &mut ws, ids, mask, bucket, t).to_vec())
             }
             None => bail!("native backend has no serving model configured"),
         }
@@ -185,7 +229,10 @@ impl Backend for NativeBackend {
             Precision::Int8 => &layers[1],
             Precision::Int4 => &layers[2],
         };
-        Ok(layer.forward(&self.disp, h, mask, bsz, t))
+        let mut ws = self.ws.borrow_mut();
+        let mut out = vec![0f32; bsz * t * layer.d];
+        layer.forward_ws(&self.disp, &mut ws, h, &mut out, mask, bsz, t);
+        Ok(out)
     }
 }
 
@@ -278,12 +325,17 @@ mod artifact {
             self.eng.spec(&format!("serve_fwd_b{bucket}")).map(|_| ())
         }
 
-        fn serve_forward(&self, bucket: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+        fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
             let (model, dims) = match &self.serve {
                 Some(s) => s,
                 None => bail!("artifact backend has no serving model configured"),
             };
-            let t = dims.seq;
+            // AOT executables are fixed-shape: the batcher must pad to the
+            // manifest seq (check_seq_bucket's default enforces this at
+            // server construction; this is the per-call belt-and-braces).
+            if t != dims.seq {
+                bail!("artifact backend serves fixed seq={} only (got {t})", dims.seq);
+            }
             let ids_l = HostTensor::i32(&[bucket, t], ids.to_vec()).to_literal()?;
             let mask_l = HostTensor::f32(&[bucket, t], mask.to_vec()).to_literal()?;
             let mut inputs: Vec<&Literal> = model.params_scales.iter().collect();

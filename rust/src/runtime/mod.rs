@@ -17,6 +17,7 @@ pub mod engine;
 pub mod manifest;
 pub mod native;
 pub mod tensor;
+pub mod workspace;
 
 pub use backend::{Backend, NativeBackend, Precision, ServeDims};
 #[cfg(feature = "xla")]
@@ -26,3 +27,4 @@ pub use engine::Engine;
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use native::{NativeDims, NativeLayer, NativeModel};
 pub use tensor::{HostData, HostTensor};
+pub use workspace::Workspace;

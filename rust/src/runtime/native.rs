@@ -16,10 +16,23 @@
 //! with the artifact path is statistical (same distributional contract
 //! the int4-vs-f32 layer test uses), agreement with `qmatmul_ref` is
 //! bit-for-bit.
+//!
+//! Every forward is **sequence-length-generic**: batches run at their
+//! actual token length `t <= dims.seq` (position embeddings slice
+//! `emb_pos[..t]`, attention and FFN run at `bsz * t` rows), and the
+//! `_ws` variants thread a reusable [`Workspace`] arena so the
+//! steady-state serving hot path performs zero heap allocation. Because
+//! every op is row-independent (per-token scales, row-wise LayerNorm)
+//! and fully masked key positions get exactly-zero attention weight, the
+//! valid-token logits of a length-`t` batch equal the same batch padded
+//! to full `seq` (`rust/tests/server_varlen.rs` enforces this across all
+//! kernel variants).
 
 use crate::kernels::{gemm, Dispatcher, PackedF32, PackedWeights};
 use crate::quant;
 use crate::util::rng::Rng;
+
+use super::workspace::Workspace;
 
 pub const NEG_INF: f32 = -1e9;
 
@@ -76,39 +89,62 @@ impl Linear {
         }
     }
 
-    /// Forward from fp32 activations, quantizing them here if needed.
-    /// Activations quantize with *per-token* scales (each row's abs-max —
-    /// the ROADMAP accuracy lever, free because the kernels take `sx` per
-    /// row); `act_scale` is the calibrated per-tensor fallback used for
-    /// all-zero rows (fully padded sequences).
-    pub fn forward(&self, disp: &Dispatcher, x: &[f32], m: usize, act_scale: f32) -> Vec<f32> {
-        let mut out = match &self.w {
-            LinearW::F32(pf) => disp.matmul_f32(x, m, self.k, pf),
+    /// Forward from fp32 activations into a caller buffer: fp32 weights
+    /// run the packed f32 GEMM directly; quantized weights quantize with
+    /// *per-token* scales (each row's abs-max — the ROADMAP accuracy
+    /// lever, free because the kernels take `sx` per row; `act_scale` is
+    /// the calibrated per-tensor fallback for all-zero/non-finite rows,
+    /// e.g. fully padded sequences), staged through the caller's
+    /// `sx`/`qx`/`rs` workspace slices via the fused scale/quantize/
+    /// rowsum pass — zero heap allocation either way.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_into(
+        &self,
+        disp: &Dispatcher,
+        x: &[f32],
+        m: usize,
+        act_scale: f32,
+        sx: &mut [f32],
+        qx: &mut [i16],
+        rs: &mut [i32],
+        out: &mut [f32],
+    ) {
+        match &self.w {
+            LinearW::F32(pf) => disp.matmul_f32_into(x, m, self.k, pf, out),
             LinearW::Quant(pw) => {
-                let sx = gemm::per_token_scales(x, m, self.k, pw.bits, act_scale);
-                disp.qmatmul(x, m, self.k, pw, &sx)
+                gemm::quantize_rows_fused(x, m, self.k, pw.bits, act_scale, sx, qx, rs);
+                disp.qmatmul_prequant_into(qx, rs, m, self.k, pw, sx, out);
             }
-        };
-        add_bias(&mut out, &self.bias, m, self.n);
-        out
+        }
+        add_bias(out, &self.bias, m, self.n);
     }
 
-    /// Forward from pre-quantized activations (the shared q/k/v site).
-    fn forward_prequant(
+    /// Forward an fp32-weighted projection into a caller buffer (the
+    /// never-quantized pooler/classifier heads).
+    fn forward_f32_into(&self, disp: &Dispatcher, x: &[f32], m: usize, out: &mut [f32]) {
+        let LinearW::F32(pf) = &self.w else {
+            panic!("forward_f32_into on a quantized projection");
+        };
+        disp.matmul_f32_into(x, m, self.k, pf, out);
+        add_bias(out, &self.bias, m, self.n);
+    }
+
+    /// Forward from pre-quantized activations into a caller buffer (the
+    /// shared q/k/v site).
+    fn forward_prequant_into(
         &self,
         disp: &Dispatcher,
         qx: &[i16],
         rowsums: &[i32],
         m: usize,
         sx: &[f32],
-    ) -> Vec<f32> {
-        let pw = match &self.w {
-            LinearW::Quant(pw) => pw,
-            LinearW::F32(_) => panic!("forward_prequant on an fp32 projection"),
+        out: &mut [f32],
+    ) {
+        let LinearW::Quant(pw) = &self.w else {
+            panic!("forward_prequant_into on an fp32 projection");
         };
-        let mut out = disp.qmatmul_prequant(qx, rowsums, m, self.k, pw, sx);
-        add_bias(&mut out, &self.bias, m, self.n);
-        out
+        disp.qmatmul_prequant_into(qx, rowsums, m, self.k, pw, sx, out);
+        add_bias(out, &self.bias, m, self.n);
     }
 }
 
@@ -200,47 +236,107 @@ impl NativeLayer {
     }
 
     /// Encoder layer forward: `h` is `(bsz*t, d)` row-major, `mask` is
-    /// `(bsz*t)` of {0,1}. Returns the new hidden states.
+    /// `(bsz*t)` of {0,1}. Returns the new hidden states. Allocating
+    /// convenience wrapper over [`NativeLayer::forward_ws`] (builds a
+    /// throwaway [`Workspace`]) — serving paths hold a workspace instead.
     pub fn forward(&self, disp: &Dispatcher, h: &[f32], mask: &[f32], bsz: usize, t: usize) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; bsz * t * self.d];
+        self.forward_ws(disp, &mut ws, h, &mut out, mask, bsz, t);
+        out
+    }
+
+    /// Encoder layer forward through a reusable [`Workspace`]: every
+    /// intermediate (q/k/v, per-head attention scratch, FFN buffer,
+    /// quantized-activation staging) lives in `ws`, so at a steady batch
+    /// shape this performs **zero heap allocation**. `t` is the batch's
+    /// actual token length — any `t >= 1` works; nothing here assumes a
+    /// model-level `seq`.
+    pub fn forward_ws(
+        &self,
+        disp: &Dispatcher,
+        ws: &mut Workspace,
+        h: &[f32],
+        out: &mut [f32],
+        mask: &[f32],
+        bsz: usize,
+        t: usize,
+    ) {
         let d = self.d;
         let m = bsz * t;
         assert_eq!(h.len(), m * d);
+        assert_eq!(out.len(), m * d);
         assert_eq!(mask.len(), m);
+        ws.ensure_layer(d, self.dff, self.heads, bsz, t);
 
-        // q/k/v share one activation-quantization site: per-token scales
-        // computed once from the row maxes, one quantization pass, three
-        // matmuls (calibrated per-tensor scale as the all-zero-row
+        // q/k/v share one activation-quantization site: one fused
+        // scale/quantize/rowsum pass over `h`, three matmuls over the
+        // same codes (calibrated per-tensor scale as the all-zero-row
         // fallback).
-        let (q, k, v) = if self.bits == 32 {
-            (
-                self.wq.forward(disp, h, m, 0.0),
-                self.wk.forward(disp, h, m, 0.0),
-                self.wv.forward(disp, h, m, 0.0),
-            )
+        if self.bits == 32 {
+            self.wq.forward_f32_into(disp, h, m, &mut ws.q[..m * d]);
+            self.wk.forward_f32_into(disp, h, m, &mut ws.k[..m * d]);
+            self.wv.forward_f32_into(disp, h, m, &mut ws.v[..m * d]);
         } else {
-            let sx = gemm::per_token_scales(h, m, d, self.bits, self.act_scales[0]);
-            let qx = gemm::quantize_activations(h, m, d, &sx, self.bits);
-            let rs = gemm::act_row_sums(&qx, m, d);
-            (
-                self.wq.forward_prequant(disp, &qx, &rs, m, &sx),
-                self.wk.forward_prequant(disp, &qx, &rs, m, &sx),
-                self.wv.forward_prequant(disp, &qx, &rs, m, &sx),
-            )
-        };
+            gemm::quantize_rows_fused(
+                h,
+                m,
+                d,
+                self.bits,
+                self.act_scales[0],
+                &mut ws.sx[..m],
+                &mut ws.qx[..m * d],
+                &mut ws.rs[..m],
+            );
+            self.wq.forward_prequant_into(disp, &ws.qx[..m * d], &ws.rs[..m], m, &ws.sx[..m], &mut ws.q[..m * d]);
+            self.wk.forward_prequant_into(disp, &ws.qx[..m * d], &ws.rs[..m], m, &ws.sx[..m], &mut ws.k[..m * d]);
+            self.wv.forward_prequant_into(disp, &ws.qx[..m * d], &ws.rs[..m], m, &ws.sx[..m], &mut ws.v[..m * d]);
+        }
 
-        let oa = attention(disp, &q, &k, &v, bsz, t, d, self.heads, mask);
-        let attn_out = self.wo.forward(disp, &oa, m, self.act_scales[1]);
-        let mut h1: Vec<f32> = h.iter().zip(attn_out.iter()).map(|(a, b)| a + b).collect();
-        layer_norm(&mut h1, &self.ln1_g, &self.ln1_b, d);
+        attention_ws(disp, ws, bsz, t, d, self.heads, mask);
 
-        let mut f = self.w1.forward(disp, &h1, m, self.act_scales[2]);
-        for x in f.iter_mut() {
+        self.wo.forward_into(
+            disp,
+            &ws.attn[..m * d],
+            m,
+            self.act_scales[1],
+            &mut ws.sx[..m],
+            &mut ws.qx[..m * d],
+            &mut ws.rs[..m],
+            &mut ws.proj[..m * d],
+        );
+        for i in 0..m * d {
+            out[i] = h[i] + ws.proj[i];
+        }
+        layer_norm(out, &self.ln1_g, &self.ln1_b, d);
+
+        self.w1.forward_into(
+            disp,
+            out,
+            m,
+            self.act_scales[2],
+            &mut ws.sx[..m],
+            &mut ws.qx[..m * d],
+            &mut ws.rs[..m],
+            &mut ws.ffn[..m * self.dff],
+        );
+        for x in ws.ffn[..m * self.dff].iter_mut() {
             *x = gelu(*x);
         }
-        let f2 = self.w2.forward(disp, &f, m, self.act_scales[3]);
-        let mut h2: Vec<f32> = h1.iter().zip(f2.iter()).map(|(a, b)| a + b).collect();
-        layer_norm(&mut h2, &self.ln2_g, &self.ln2_b, d);
-        h2
+        self.w2.forward_into(
+            disp,
+            &ws.ffn[..m * self.dff],
+            m,
+            self.act_scales[3],
+            &mut ws.sx[..m],
+            &mut ws.qx[..m * self.dff],
+            &mut ws.rs[..m],
+            &mut ws.proj[..m * d],
+        );
+        for i in 0..m * d {
+            out[i] += ws.proj[i];
+        }
+        layer_norm(out, &self.ln2_g, &self.ln2_b, d);
     }
 
     /// Packed weight bytes streamed per token — the memory-traffic story.
@@ -263,38 +359,35 @@ impl NativeLayer {
 /// serving scales with the tiled (and, past the threshold, row-block
 /// parallel) kernels instead of a scalar triple loop. The head
 /// gather/pack is O(t·dk) against the GEMMs' O(t²·dk).
-#[allow(clippy::too_many_arguments)]
-fn attention(
+///
+/// Reads `ws.q`/`ws.k`/`ws.v`, writes `ws.attn`; all per-head scratch
+/// (`qh`/`kt`/`vh`, probs, context, the two reusable `PackedF32` slots)
+/// lives in the workspace — zero heap allocation at a steady shape.
+fn attention_ws(
     disp: &Dispatcher,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
+    ws: &mut Workspace,
     bsz: usize,
     t: usize,
     d: usize,
     heads: usize,
     mask: &[f32],
-) -> Vec<f32> {
+) {
     let dk = d / heads;
     let scale = 1.0 / (dk as f32).sqrt();
-    let mut out = vec![0f32; bsz * t * d];
-    let mut qh = vec![0f32; t * dk]; // Q head, (t, dk) row-major
-    let mut kt = vec![0f32; dk * t]; // K head transposed, (dk, t) row-major
-    let mut vh = vec![0f32; t * dk]; // V head, (t, dk) row-major
     for b in 0..bsz {
         for hd in 0..heads {
             for j in 0..t {
                 let row = (b * t + j) * d + hd * dk;
-                qh[j * dk..(j + 1) * dk].copy_from_slice(&q[row..row + dk]);
-                vh[j * dk..(j + 1) * dk].copy_from_slice(&v[row..row + dk]);
+                ws.qh[j * dk..(j + 1) * dk].copy_from_slice(&ws.q[row..row + dk]);
+                ws.vh[j * dk..(j + 1) * dk].copy_from_slice(&ws.v[row..row + dk]);
                 for c in 0..dk {
-                    kt[c * t + j] = k[row + c];
+                    ws.kt[c * t + j] = ws.k[row + c];
                 }
             }
-            let pk = PackedF32::from_rowmajor(&kt, dk, t);
-            let mut p = disp.matmul_f32(&qh, t, dk, &pk); // (t, t) scores
+            ws.pk.repack_rowmajor(&ws.kt[..dk * t], dk, t);
+            disp.matmul_f32_into(&ws.qh[..t * dk], t, dk, &ws.pk, &mut ws.probs[..t * t]); // (t, t) scores
             for i in 0..t {
-                let row = &mut p[i * t..(i + 1) * t];
+                let row = &mut ws.probs[i * t..(i + 1) * t];
                 let mut maxs = f32::NEG_INFINITY;
                 for j in 0..t {
                     row[j] = row[j] * scale + (1.0 - mask[b * t + j]) * NEG_INF;
@@ -310,15 +403,39 @@ fn attention(
                     *x *= inv;
                 }
             }
-            let pv = PackedF32::from_rowmajor(&vh, t, dk);
-            let oh = disp.matmul_f32(&p, t, t, &pv); // (t, dk) context
+            ws.pv.repack_rowmajor(&ws.vh[..t * dk], t, dk);
+            disp.matmul_f32_into(&ws.probs[..t * t], t, t, &ws.pv, &mut ws.oh[..t * dk]); // (t, dk) context
             for i in 0..t {
                 let row = (b * t + i) * d + hd * dk;
-                out[row..row + dk].copy_from_slice(&oh[i * dk..(i + 1) * dk]);
+                ws.attn[row..row + dk].copy_from_slice(&ws.oh[i * dk..(i + 1) * dk]);
             }
         }
     }
-    out
+}
+
+/// Allocating [`attention_ws`] wrapper over caller-owned q/k/v — kept for
+/// the scalar-reference equivalence test.
+#[cfg(test)]
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    disp: &Dispatcher,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bsz: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    mask: &[f32],
+) -> Vec<f32> {
+    let mut ws = Workspace::new();
+    ws.ensure_layer(d, d, heads, bsz, t);
+    let m = bsz * t * d;
+    ws.q[..m].copy_from_slice(q);
+    ws.k[..m].copy_from_slice(k);
+    ws.v[..m].copy_from_slice(v);
+    attention_ws(disp, &mut ws, bsz, t, d, heads, mask);
+    ws.attn[..m].to_vec()
 }
 
 /// Row-wise LayerNorm over the last dimension, in place (eps matches the
@@ -555,36 +672,75 @@ impl NativeModel {
         Ok(Self::from_named_tensors(h.dims, &h.bits, &h.act_scales, &tensors))
     }
 
-    /// Forward a padded `(bsz, seq)` batch to `(bsz, n_classes)` logits.
-    pub fn forward(&self, disp: &Dispatcher, ids: &[i32], mask: &[f32], bsz: usize) -> Vec<f32> {
-        let (d, t) = (self.dims.d_model, self.dims.seq);
+    /// Forward a `(bsz, t)` batch to `(bsz, n_classes)` logits, for any
+    /// `1 <= t <= dims.seq`. Allocating convenience wrapper over
+    /// [`NativeModel::forward_ws`] — serving paths hold a [`Workspace`].
+    pub fn forward(&self, disp: &Dispatcher, ids: &[i32], mask: &[f32], bsz: usize, t: usize) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        self.forward_ws(disp, &mut ws, ids, mask, bsz, t).to_vec()
+    }
+
+    /// Forward a `(bsz, t)` batch through a reusable [`Workspace`] to
+    /// `(bsz, n_classes)` logits (a view into `ws`, valid until the next
+    /// forward). `t` is the batch's actual token length — any
+    /// `1 <= t <= dims.seq` works: position embeddings slice
+    /// `emb_pos[..t]` and every layer runs at `bsz * t` rows, so a short
+    /// bucket pays O(t²) attention and O(t) FFN instead of the full
+    /// O(seq²)/O(seq). At a steady batch shape the whole forward performs
+    /// **zero heap allocation** (enforced by
+    /// `rust/tests/workspace_alloc.rs`).
+    pub fn forward_ws<'w>(
+        &self,
+        disp: &Dispatcher,
+        ws: &'w mut Workspace,
+        ids: &[i32],
+        mask: &[f32],
+        bsz: usize,
+        t: usize,
+    ) -> &'w [f32] {
+        let d = self.dims.d_model;
+        let nc = self.dims.n_classes;
+        assert!(
+            t >= 1 && t <= self.dims.seq,
+            "token length {t} out of range 1..={}",
+            self.dims.seq
+        );
         assert_eq!(ids.len(), bsz * t);
         assert_eq!(mask.len(), bsz * t);
-        let mut h = vec![0f32; bsz * t * d];
+        ws.ensure_model(d, self.dims.d_ff, self.dims.n_heads, nc, bsz, t);
+        let m = bsz * t;
+        // Take the ping-pong buffers out so layer calls can borrow the
+        // workspace mutably alongside them (returned below; take/swap
+        // never touch the heap).
+        let mut ha = std::mem::take(&mut ws.h_a);
+        let mut hb = std::mem::take(&mut ws.h_b);
         for (r, &id) in ids.iter().enumerate() {
             let tok = (id as usize).min(self.dims.vocab - 1);
             let j = r % t;
-            let row = &mut h[r * d..(r + 1) * d];
+            let row = &mut ha[r * d..(r + 1) * d];
             let w = &self.emb_word[tok * d..(tok + 1) * d];
             let p = &self.emb_pos[j * d..(j + 1) * d];
             for c in 0..d {
                 row[c] = w[c] + p[c];
             }
         }
-        layer_norm(&mut h, &self.emb_ln_g, &self.emb_ln_b, d);
+        layer_norm(&mut ha[..m * d], &self.emb_ln_g, &self.emb_ln_b, d);
         for layer in &self.layers {
-            h = layer.forward(disp, &h, mask, bsz, t);
+            layer.forward_ws(disp, ws, &ha[..m * d], &mut hb[..m * d], mask, bsz, t);
+            std::mem::swap(&mut ha, &mut hb);
         }
         // tanh pooler over the first token of each sequence.
-        let mut first = vec![0f32; bsz * d];
         for b in 0..bsz {
-            first[b * d..(b + 1) * d].copy_from_slice(&h[b * t * d..b * t * d + d]);
+            ws.first[b * d..(b + 1) * d].copy_from_slice(&ha[b * t * d..b * t * d + d]);
         }
-        let mut pooled = self.pool.forward(disp, &first, bsz, 0.0);
-        for x in pooled.iter_mut() {
+        self.pool.forward_f32_into(disp, &ws.first[..bsz * d], bsz, &mut ws.pooled[..bsz * d]);
+        for x in ws.pooled[..bsz * d].iter_mut() {
             *x = x.tanh();
         }
-        self.cls.forward(disp, &pooled, bsz, 0.0)
+        self.cls.forward_f32_into(disp, &ws.pooled[..bsz * d], bsz, &mut ws.logits[..bsz * nc]);
+        ws.h_a = ha;
+        ws.h_b = hb;
+        &ws.logits[..bsz * nc]
     }
 }
 
@@ -624,15 +780,35 @@ mod tests {
         for bits in [vec![32u32, 32], vec![8, 8], vec![8, 4]] {
             let model = NativeModel::random(dims, &bits, 3);
             let bsz = 3;
-            let ids: Vec<i32> = (0..bsz * dims.seq).map(|i| (i % dims.vocab) as i32).collect();
-            let mut mask = vec![1.0f32; bsz * dims.seq];
-            // one fully padded row must not produce NaNs
-            for v in mask[2 * dims.seq..3 * dims.seq].iter_mut() {
-                *v = 0.0;
+            // any t <= seq must serve, including the degenerate t=1
+            for t in [1usize, 5, dims.seq] {
+                let ids: Vec<i32> = (0..bsz * t).map(|i| (i % dims.vocab) as i32).collect();
+                let mut mask = vec![1.0f32; bsz * t];
+                // one fully padded row must not produce NaNs
+                for v in mask[2 * t..3 * t].iter_mut() {
+                    *v = 0.0;
+                }
+                let logits = model.forward(&disp, &ids, &mask, bsz, t);
+                assert_eq!(logits.len(), bsz * dims.n_classes);
+                assert!(logits.iter().all(|x| x.is_finite()), "bits={bits:?} t={t}");
             }
-            let logits = model.forward(&disp, &ids, &mask, bsz);
-            assert_eq!(logits.len(), bsz * dims.n_classes);
-            assert!(logits.iter().all(|x| x.is_finite()), "bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_forward_matches_allocating_forward() {
+        // forward_ws through one long-lived workspace — across *changing*
+        // batch shapes — must equal the fresh-workspace wrapper exactly.
+        let dims = NativeDims { vocab: 64, seq: 8, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 };
+        let model = NativeModel::random(dims, &[8, 4], 9);
+        let disp = Dispatcher::with_threads(2);
+        let mut ws = Workspace::new();
+        for (bsz, t) in [(4usize, 8usize), (1, 3), (2, 6), (3, 1), (4, 8)] {
+            let ids: Vec<i32> = (0..bsz * t).map(|i| ((i * 5) % dims.vocab) as i32).collect();
+            let mask = vec![1.0f32; bsz * t];
+            let want = model.forward(&disp, &ids, &mask, bsz, t);
+            let got = model.forward_ws(&disp, &mut ws, &ids, &mask, bsz, t);
+            assert_eq!(got, &want[..], "bsz={bsz} t={t}");
         }
     }
 

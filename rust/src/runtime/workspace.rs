@@ -1,0 +1,116 @@
+//! Reusable scratch arena for the native forward path.
+//!
+//! One [`Workspace`] holds every intermediate buffer an encoder forward
+//! needs — hidden-state ping-pong, q/k/v projections, per-head attention
+//! scratch (`qh`/`kt`/`vh`, probs, context), the FFN intermediate,
+//! quantized-activation staging (`qx`/`rs`/`sx`), and the pooler/logits
+//! tail — sized lazily by [`Workspace::ensure_layer`] /
+//! [`Workspace::ensure_model`] and only ever *grown*. After the first
+//! forward at a given shape, the steady-state hot path performs **zero
+//! heap allocation**: buffers are reused across batches and across
+//! `Server::pump` calls (`rust/tests/workspace_alloc.rs` enforces this
+//! with a counting global allocator).
+//!
+//! The arena is deliberately dumb — plain `Vec`s plus two reusable
+//! [`PackedF32`] slots for the per-`(batch, head)` attention packs — so
+//! borrow-splitting stays trivial: callers slice disjoint fields
+//! (`&ws.qx[..]` next to `&mut ws.q[..]`) and the compiler proves
+//! disjointness field-by-field.
+
+use crate::kernels::PackedF32;
+
+/// Grow-only buffer resize: never shrinks, never reallocates once the
+/// high-water shape has been seen.
+fn grow<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+}
+
+/// Scratch arena for [`crate::runtime::NativeModel::forward_ws`] and
+/// [`crate::runtime::NativeLayer::forward_ws`]. See the module docs.
+#[derive(Default)]
+pub struct Workspace {
+    /// Hidden-state ping/pong (`bsz*t*d` each); taken out via
+    /// `std::mem::take` during a model forward and restored after.
+    pub(crate) h_a: Vec<f32>,
+    pub(crate) h_b: Vec<f32>,
+    /// q/k/v projections, `bsz*t*d` each.
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    /// Attention context output, `bsz*t*d`.
+    pub(crate) attn: Vec<f32>,
+    /// Projection output staging (`wo` / `w2`), `bsz*t*d`.
+    pub(crate) proj: Vec<f32>,
+    /// FFN intermediate, `bsz*t*d_ff`.
+    pub(crate) ffn: Vec<f32>,
+    /// Per-head gathers: Q head `(t, dk)`, K head transposed `(dk, t)`,
+    /// V head `(t, dk)`.
+    pub(crate) qh: Vec<f32>,
+    pub(crate) kt: Vec<f32>,
+    pub(crate) vh: Vec<f32>,
+    /// Attention probabilities `(t, t)` and per-head context `(t, dk)`.
+    pub(crate) probs: Vec<f32>,
+    pub(crate) oh: Vec<f32>,
+    /// Reusable packs for the score/apply GEMM weights (K head, V head).
+    pub(crate) pk: PackedF32,
+    pub(crate) pv: PackedF32,
+    /// Quantized-activation staging: codes `(m, max(d, d_ff))`, row sums
+    /// and per-token scales `(m,)`.
+    pub(crate) qx: Vec<i16>,
+    pub(crate) rs: Vec<i32>,
+    pub(crate) sx: Vec<f32>,
+    /// Pooler/classifier tail: first-token gather and pooled `(bsz, d)`,
+    /// logits `(bsz, n_classes)`.
+    pub(crate) first: Vec<f32>,
+    pub(crate) pooled: Vec<f32>,
+    pub(crate) logits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer a single encoder-layer forward touches for a
+    /// `(bsz, t)` batch at width `d` / FFN width `dff` / `heads` heads.
+    pub(crate) fn ensure_layer(&mut self, d: usize, dff: usize, heads: usize, bsz: usize, t: usize) {
+        let m = bsz * t;
+        let dk = d / heads;
+        grow(&mut self.q, m * d);
+        grow(&mut self.k, m * d);
+        grow(&mut self.v, m * d);
+        grow(&mut self.attn, m * d);
+        grow(&mut self.proj, m * d);
+        grow(&mut self.ffn, m * dff);
+        grow(&mut self.qh, t * dk);
+        grow(&mut self.kt, dk * t);
+        grow(&mut self.vh, t * dk);
+        grow(&mut self.probs, t * t);
+        grow(&mut self.oh, t * dk);
+        grow(&mut self.qx, m * d.max(dff));
+        grow(&mut self.rs, m);
+        grow(&mut self.sx, m);
+    }
+
+    /// [`Self::ensure_layer`] plus the model-level buffers (hidden-state
+    /// ping-pong and the pooler/classifier tail).
+    pub(crate) fn ensure_model(
+        &mut self,
+        d: usize,
+        dff: usize,
+        heads: usize,
+        n_classes: usize,
+        bsz: usize,
+        t: usize,
+    ) {
+        self.ensure_layer(d, dff, heads, bsz, t);
+        let m = bsz * t;
+        grow(&mut self.h_a, m * d);
+        grow(&mut self.h_b, m * d);
+        grow(&mut self.first, bsz * d);
+        grow(&mut self.pooled, bsz * d);
+        grow(&mut self.logits, bsz * n_classes);
+    }
+}

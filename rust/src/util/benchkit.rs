@@ -18,6 +18,24 @@ pub struct BenchResult {
     pub min_us: f64,
 }
 
+impl BenchResult {
+    /// A single-observation result (serving summaries gate one statistic
+    /// per JSON row): every timing field carries the same value.
+    pub fn single(value_us: f64, iters: usize) -> Self {
+        BenchResult { iters, mean_us: value_us, p50_us: value_us, stddev_us: 0.0, min_us: value_us }
+    }
+
+    /// The one `BENCH_*.json` bucket-row shape `ci/bench_diff.py`
+    /// consumes (gates on `min_us`) — shared by `benches/layers.rs` and
+    /// `serve-native --bench-trace` so the two emitters cannot drift.
+    pub fn json_row(&self, name: &str) -> String {
+        format!(
+            "{{\"name\": \"{name}\", \"mean_us\": {:.3}, \"p50_us\": {:.3}, \"stddev_us\": {:.3}, \"min_us\": {:.3}, \"iters\": {}}}",
+            self.mean_us, self.p50_us, self.stddev_us, self.min_us, self.iters
+        )
+    }
+}
+
 impl std::fmt::Display for BenchResult {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(

@@ -41,8 +41,8 @@ fn roundtrip_logits_bit_for_bit_across_kernels() {
         for kind in KernelKind::ALL {
             for threads in [1usize, 3] {
                 let disp = Dispatcher::forced(threads, kind);
-                let a = in_mem.forward(&disp, &ids, &mask, bsz);
-                let b = loaded.forward(&disp, &ids, &mask, bsz);
+                let a = in_mem.forward(&disp, &ids, &mask, bsz, dims.seq);
+                let b = loaded.forward(&disp, &ids, &mask, bsz, dims.seq);
                 assert_eq!(a, b, "logits diverge: bits={bits:?} kernel={} threads={threads}", kind.name());
                 assert!(a.iter().all(|x| x.is_finite()));
             }

@@ -226,17 +226,19 @@ fn serving_stack_end_to_end_native() {
     let backend = NativeBackend::with_model(NativeModel::random(dims, &[8, 4], 21));
     let mut server = Server::new(
         &backend,
-        ServerConfig { buckets: vec![2, 4], batch_window: std::time::Duration::ZERO },
+        ServerConfig {
+            batch_buckets: vec![2, 4],
+            seq_buckets: vec![4, 8],
+            batch_window: std::time::Duration::ZERO,
+        },
     )
     .unwrap();
     let mut rng = Rng::new(2);
     for _ in 0..9 {
-        let ids: Vec<i32> = (0..dims.seq).map(|_| rng.range(0, dims.vocab) as i32).collect();
-        let mut mask = vec![1.0f32; dims.seq];
+        // true-length submissions land in mixed seq buckets
         let valid = rng.range(1, dims.seq);
-        for v in mask[valid..].iter_mut() {
-            *v = 0.0;
-        }
+        let ids: Vec<i32> = (0..valid).map(|_| rng.range(0, dims.vocab) as i32).collect();
+        let mask = vec![1.0f32; valid];
         server.submit(ids, mask).unwrap();
     }
     let mut got = server.drain().unwrap();

@@ -1,0 +1,105 @@
+//! Zero-allocation contract of the workspace-threaded native forward.
+//!
+//! A counting global allocator wraps `System`; after warmup at the trace
+//! shapes, repeated `NativeModel::forward_ws` calls through one
+//! [`Workspace`] must perform **zero heap allocations** — the ISSUE-4
+//! acceptance criterion behind "steady-state `pump()` performs no
+//! per-batch heap allocation in the native forward".
+//!
+//! Single-threaded dispatcher on purpose: the row-block parallel driver
+//! boxes its O(threads) scoped jobs (an explicit, tiny exception to the
+//! contract — tensor-sized allocations are what this test polices), and
+//! keeping the binary to this one test keeps the counter race-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use mkq::kernels::Dispatcher;
+use mkq::runtime::{NativeDims, NativeModel, Workspace};
+
+struct CountingAlloc;
+
+// Thread-local arming flag: only allocations made by the *test thread*
+// between arm/disarm count, so harness threads can't pollute the count.
+// Const-initialized Cell — no lazy init, no TLS destructor, safe to read
+// from inside the allocator.
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+}
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+fn record_if_counting() {
+    let armed = COUNTING.try_with(|c| c.get()).unwrap_or(false);
+    if armed {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record_if_counting();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record_if_counting();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record_if_counting();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_forward_ws_allocates_nothing() {
+    let dims = NativeDims { vocab: 64, seq: 12, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 };
+    let model = NativeModel::random(dims, &[8, 4], 7);
+    let disp = Dispatcher::with_threads(1);
+    let mut ws = Workspace::new();
+
+    // a mixed-length steady state: several (bsz, t) shapes, all warmed
+    let shapes: [(usize, usize); 3] = [(4, 12), (2, 5), (1, 3)];
+    let batches: Vec<(usize, usize, Vec<i32>, Vec<f32>)> = shapes
+        .iter()
+        .map(|&(bsz, t)| {
+            let ids: Vec<i32> = (0..bsz * t).map(|i| ((i * 13 + 5) % dims.vocab) as i32).collect();
+            (bsz, t, ids, vec![1.0f32; bsz * t])
+        })
+        .collect();
+    for (bsz, t, ids, mask) in &batches {
+        for _ in 0..2 {
+            let logits = model.forward_ws(&disp, &mut ws, ids, mask, *bsz, *t);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    COUNTING.with(|c| c.set(true));
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let mut checksum = 0f32;
+    for _ in 0..4 {
+        for (bsz, t, ids, mask) in &batches {
+            let logits = model.forward_ws(&disp, &mut ws, ids, mask, *bsz, *t);
+            checksum += logits[0];
+        }
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    COUNTING.with(|c| c.set(false));
+
+    assert!(checksum.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward_ws must not touch the heap ({} allocations observed)",
+        after - before
+    );
+}
