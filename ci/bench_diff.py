@@ -11,8 +11,15 @@ in the baseline are skipped (timer noise dominates). Buckets that exist
 on only one side (renamed/new/removed kernels across PRs) are reported
 as warnings but never fail the gate — and never KeyError the comparison.
 
-Exit codes: 0 ok / baseline missing (first run), 1 regression found,
-2 malformed input.
+The baseline side is best-effort by design: a missing file, a path that
+is a directory (a partially-downloaded artifact), or unreadable /
+malformed JSON all mean "no baseline for this bench file yet" — the
+first CI run after a new BENCH_*.json is introduced has nothing to diff
+against, and must pass with a notice rather than fail the gate. Only a
+broken *current* file (the run that just produced it) is an error.
+
+Exit codes: 0 ok / baseline absent or unusable (first run), 1 regression
+found, 2 malformed current input.
 """
 
 import argparse
@@ -37,15 +44,23 @@ def main():
                     help="skip buckets whose baseline min_us is below this (noise floor)")
     args = ap.parse_args()
 
-    if not os.path.exists(args.baseline):
-        print(f"bench-diff: no baseline at {args.baseline} (first run?) — skipping gate")
+    if not os.path.isfile(args.baseline):
+        what = "is a directory" if os.path.isdir(args.baseline) else "is absent"
+        print(f"bench-diff: NOTICE baseline {args.baseline} {what} "
+              f"(first run for this bench file?) — skipping gate")
         return 0
 
     try:
         base = load_buckets(args.baseline)
+    except (OSError, ValueError, KeyError) as e:
+        # an unusable baseline is the first-run case too (e.g. a truncated
+        # artifact download) — notice, never a gate failure
+        print(f"bench-diff: NOTICE cannot read baseline {args.baseline}: {e} — skipping gate")
+        return 0
+    try:
         cur = load_buckets(args.current)
     except (OSError, ValueError, KeyError) as e:
-        print(f"bench-diff: cannot parse inputs: {e}", file=sys.stderr)
+        print(f"bench-diff: cannot parse current run {args.current}: {e}", file=sys.stderr)
         return 2
 
     shared = sorted(set(base) & set(cur))

@@ -6,12 +6,20 @@ the compile path's parameter flattening, so a model trained or
 initialized on the Python side serves natively through
 ``mkq-bert serve-native --checkpoint FILE.mkqc``.
 
-Layout recap (all little-endian): magic ``MKQC`` + u32 version(=1) +
+Layout recap (all little-endian): magic ``MKQC`` + u32 version +
 7 x u32 dims (vocab, seq, n_layers, d_model, n_heads, d_ff, n_classes) +
 u32 n_tensors + n_layers x u32 bits + n_layers x 4 x f32 activation
 scales, then the tensor directory (u16 name_len, name, u8 dtype=0 (f32),
-u8 rank, rank x u32 dims, u64 offset, u64 len), then the raw payload
-bytes, then a u32 CRC-32 (zlib) over the payload.
+[v2: u8 panel-layout=0,] u8 rank, rank x u32 dims, u64 offset, u64 len),
+[v2: u32 CRC-32 over all bytes so far + zero padding to a 16-byte-aligned
+payload start,] then the raw payload bytes, then a u32 CRC-32 (zlib)
+over the payload.
+
+``--format`` selects version 1 (default — the long-standing
+cross-language CI contract) or 2. This exporter always writes fp32
+masters; the prepacked-panel dtypes of v2 are produced by
+``mkq-bert ckpt migrate`` on the Rust side, whose reader loads either
+version from either language unchanged.
 
 Tensor names/shapes come from ``config.param_specs`` — the same flat
 ordering contract the AOT manifest records — so the Rust reader's spec
@@ -41,7 +49,9 @@ from .config import PRESETS, ModelConfig, param_specs
 
 MAGIC = b"MKQC"
 VERSION = 1
+VERSION_V2 = 2
 DTYPE_F32 = 0
+PAYLOAD_ALIGN = 16
 
 
 def qmax(bits: int) -> float:
@@ -110,8 +120,12 @@ def validate_header(cfg: ModelConfig, bits: list[int], act_scales: np.ndarray):
 
 
 def write_checkpoint(path: str, cfg: ModelConfig, bits: list[int],
-                     act_scales: np.ndarray, params: dict[str, np.ndarray]) -> int:
-    """Serialize one MKQC file; returns the byte count written."""
+                     act_scales: np.ndarray, params: dict[str, np.ndarray],
+                     version: int = VERSION) -> int:
+    """Serialize one MKQC file (format ``version``, 1 or 2); returns the
+    byte count written."""
+    if version not in (VERSION, VERSION_V2):
+        raise ValueError(f"unsupported checkpoint version {version} (use 1 or 2)")
     act_scales = np.asarray(act_scales, np.float32)
     validate_header(cfg, bits, act_scales)
 
@@ -127,20 +141,30 @@ def write_checkpoint(path: str, cfg: ModelConfig, bits: list[int],
         raw = arr.tobytes()
         nb = name.encode("utf-8")
         directory += struct.pack("<H", len(nb)) + nb
-        directory += struct.pack("<BB", DTYPE_F32, arr.ndim)
+        if version >= VERSION_V2:
+            directory += struct.pack("<BBB", DTYPE_F32, 0, arr.ndim)  # dtype, layout, rank
+        else:
+            directory += struct.pack("<BB", DTYPE_F32, arr.ndim)
         directory += struct.pack(f"<{arr.ndim}I", *arr.shape)
         directory += struct.pack("<QQ", len(payload), len(raw))
         payload += raw
 
-    header = MAGIC + struct.pack("<I", VERSION)
+    header = MAGIC + struct.pack("<I", version)
     header += struct.pack("<7I", cfg.vocab, cfg.seq, cfg.n_layers,
                           cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_classes)
     header += struct.pack("<I", len(specs))
     header += struct.pack(f"<{cfg.n_layers}I", *bits)
     header += act_scales.astype("<f4").tobytes()
 
+    prefix = header + bytes(directory)
+    if version >= VERSION_V2:
+        # header/directory CRC, then zero padding to a 16-byte-aligned
+        # payload start (recomputed by the reader, not stored)
+        prefix += struct.pack("<I", zlib.crc32(prefix) & 0xFFFFFFFF)
+        prefix += b"\x00" * ((PAYLOAD_ALIGN - len(prefix) % PAYLOAD_ALIGN) % PAYLOAD_ALIGN)
+
     crc = zlib.crc32(bytes(payload)) & 0xFFFFFFFF
-    blob = header + bytes(directory) + bytes(payload) + struct.pack("<I", crc)
+    blob = prefix + bytes(payload) + struct.pack("<I", crc)
     with open(path, "wb") as f:
         f.write(blob)
     return len(blob)
@@ -158,6 +182,8 @@ def main():
                     help=".npz of spec-named fp32 tensors (default: random init)")
     ap.add_argument("--act-scales", default=None,
                     help=".npz with key act_scales, shape (n_layers, 4)")
+    ap.add_argument("--format", type=int, default=VERSION, choices=(VERSION, VERSION_V2),
+                    help="MKQC format version to emit (default 1)")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
@@ -174,9 +200,9 @@ def main():
     else:
         act = default_act_scales(bits)
 
-    n = write_checkpoint(args.out, cfg, bits, act, params)
-    print(f"wrote {args.out}: {n} bytes, L={cfg.n_layers} d={cfg.d_model} bits={bits} "
-          f"({len(param_specs(cfg))} tensors)")
+    n = write_checkpoint(args.out, cfg, bits, act, params, version=args.format)
+    print(f"wrote {args.out}: {n} bytes, MKQC v{args.format}, L={cfg.n_layers} "
+          f"d={cfg.d_model} bits={bits} ({len(param_specs(cfg))} tensors)")
 
 
 if __name__ == "__main__":

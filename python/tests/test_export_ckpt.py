@@ -100,6 +100,52 @@ def test_trailing_crc_covers_payload(tmp_path, tiny_cfg):
     assert stored == (zlib.crc32(payload) & 0xFFFFFFFF)
 
 
+def test_v2_layout_header_crc_and_alignment(tmp_path, tiny_cfg):
+    cfg = tiny_cfg
+    bits = [8, 4]
+    params = export_ckpt.random_params(cfg, 7)
+    act = export_ckpt.default_act_scales(bits)
+    path = str(tmp_path / "v2.mkqc")
+    n = export_ckpt.write_checkpoint(path, cfg, bits, act, params, version=2)
+    blob = open(path, "rb").read()
+    assert len(blob) == n
+    (version,) = struct.unpack_from("<I", blob, 4)
+    assert version == 2
+
+    # walk the v2 directory (extra layout byte per entry)
+    pos = 40 + 4 * cfg.n_layers + 16 * cfg.n_layers
+    (n_tensors,) = struct.unpack_from("<I", blob, 36)
+    for _ in range(n_tensors):
+        (name_len,) = struct.unpack_from("<H", blob, pos)
+        pos += 2 + name_len
+        dtype, layout, rank = struct.unpack_from("<BBB", blob, pos)
+        assert (dtype, layout) == (0, 0), "f32 entries carry layout 0"
+        pos += 3 + 4 * rank + 16
+
+    # header/directory CRC over everything before it
+    (stored_hcrc,) = struct.unpack_from("<I", blob, pos)
+    assert stored_hcrc == (zlib.crc32(blob[:pos]) & 0xFFFFFFFF)
+    pos += 4
+    pad = (export_ckpt.PAYLOAD_ALIGN - pos % export_ckpt.PAYLOAD_ALIGN) \
+        % export_ckpt.PAYLOAD_ALIGN
+    assert blob[pos:pos + pad] == b"\x00" * pad
+    payload_start = pos + pad
+    assert payload_start % export_ckpt.PAYLOAD_ALIGN == 0
+
+    # payload identical to the v1 encoding of the same params, CRC intact
+    (stored,) = struct.unpack_from("<I", blob, len(blob) - 4)
+    payload = blob[payload_start:-4]
+    assert stored == (zlib.crc32(payload) & 0xFFFFFFFF)
+    v1_path = str(tmp_path / "v1.mkqc")
+    export_ckpt.write_checkpoint(v1_path, cfg, bits, act, params, version=1)
+    v1_blob = open(v1_path, "rb").read()
+    _, v1_payload_start = parse_directory(v1_blob, cfg)
+    assert v1_blob[v1_payload_start:-4] == payload
+
+    with pytest.raises(ValueError):
+        export_ckpt.write_checkpoint(path, cfg, bits, act, params, version=3)
+
+
 def test_writer_validates_inputs(tmp_path, tiny_cfg):
     cfg = tiny_cfg
     params = export_ckpt.random_params(cfg, 0)

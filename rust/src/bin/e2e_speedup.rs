@@ -120,23 +120,35 @@ fn main() -> Result<()> {
             "checkpoint dims d_model={d} / d_ff={dff} must be even for the int4 bench row"
         );
         println!(
-            "bench layers from checkpoint {ck_path}: d={d} d_ff={dff} heads={heads} \
-             (layer 0 weights; header act scales as the quantization fallback)"
+            "bench layers from checkpoint {ck_path} (MKQC v{}): d={d} d_ff={dff} heads={heads} \
+             (layer 0 weights; header act scales as the quantization fallback)",
+            ck.version()
         );
-        let tensors: Vec<(String, Vec<usize>, Vec<f32>)> = ck
-            .named_tensors()
-            .into_iter()
-            .filter_map(|(n, td, v)| n.strip_prefix("l0_").map(|s| (s.to_string(), td, v)))
-            .collect();
-        // typed failure (not a layer-constructor panic) on an incomplete
-        // or mis-shaped layer-0 tensor set
+        // layer-0 tensor set: fp32 masters where stored, dequantized
+        // (code × scale) masters where a v2 checkpoint persists prepacked
+        // panels instead — the f32/int8/int4 bench rows then re-quantize
+        // from that grid, so the sweep stays runnable on prepacked files.
+        let mut dequantized = false;
+        let mut tensors: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
         for (name, dims) in mkq::checkpoint::param_specs(&hd.dims) {
-            if let Some(suffix) = name.strip_prefix("l0_") {
-                anyhow::ensure!(
-                    tensors.iter().any(|(n, td, _)| n == suffix && *td == dims),
-                    "checkpoint layer-0 tensor {name} is missing or mis-shaped"
-                );
-            }
+            let Some(suffix) = name.strip_prefix("l0_") else { continue };
+            let e = ck
+                .entry(&name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint layer-0 tensor {name} is missing"))?;
+            anyhow::ensure!(
+                e.dims == dims,
+                "checkpoint layer-0 tensor {name} is mis-shaped ({:?} != {dims:?})",
+                e.dims
+            );
+            dequantized |= e.dtype != mkq::checkpoint::DTYPE_F32;
+            let (td, v) = ck.f32_or_dequant(&name).map_err(anyhow::Error::new)?;
+            tensors.push((suffix.to_string(), td, v));
+        }
+        if dequantized {
+            println!(
+                "(layer 0 is stored prepacked — bench masters are dequantized codes, so the \
+                 f32 row measures the quantization grid, not the original fp32 weights)"
+            );
         }
         let mk = |bits: u32| {
             let act = if bits == 32 {

@@ -9,42 +9,83 @@
 //! channel abs-max, exactly as the in-memory constructors do — so a saved
 //! and reloaded model produces bit-for-bit identical logits.
 //!
-//! # Byte-level layout (version 1, all fields little-endian)
+//! # Byte-level layout (versions 1 and 2, all fields little-endian)
 //!
 //! | offset            | size          | field                                         |
 //! |-------------------|---------------|-----------------------------------------------|
 //! | 0                 | 4             | magic `"MKQC"`                                |
-//! | 4                 | 4             | `u32` format version (= 1)                    |
+//! | 4                 | 4             | `u32` format version (1 or 2)                 |
 //! | 8                 | 28            | `7 x u32` NativeDims: vocab, seq, n_layers, d_model, n_heads, d_ff, n_classes |
 //! | 36                | 4             | `u32` n_tensors (directory entry count)       |
 //! | 40                | 4·L           | `u32 x n_layers` per-layer bit vector (4/8/32)|
 //! | 40+4L             | 16·L          | `f32 x 4 x n_layers` calibrated per-tensor activation scales (qkv_in, attn_out_in, ffn1_in, ffn2_in per layer) |
 //! | —                 | variable      | tensor directory, n_tensors entries (below)   |
+//! | —                 | 4 (v2 only)   | `u32` CRC-32 over bytes `[0, directory end)` — the header/directory CRC |
+//! | —                 | 0–15 (v2 only)| zero padding so the payload starts 16-byte-aligned in the file (computed, not stored) |
 //! | —                 | variable      | payload: raw tensor bytes, directory order    |
 //! | end−4             | 4             | `u32` CRC-32 (zlib/IEEE) over the payload     |
 //!
-//! Directory entry:
+//! Directory entry (the `layout` byte exists only in v2):
 //!
 //! | size      | field                                              |
 //! |-----------|----------------------------------------------------|
 //! | 2         | `u16` name length (UTF-8 bytes, ≤ 256)             |
 //! | name_len  | tensor name                                        |
-//! | 1         | `u8` dtype (0 = f32; others reserved)              |
+//! | 1         | `u8` dtype (see below)                             |
+//! | 1 (v2)    | `u8` panel-layout version (0 for f32 entries, [`PANEL_LAYOUT`] for packed entries) |
 //! | 1         | `u8` rank (≤ 8)                                    |
-//! | 4·rank    | `u32 x rank` dims                                  |
+//! | 4·rank    | `u32 x rank` dims (always the *logical* shape)     |
 //! | 8         | `u64` byte offset from payload start               |
-//! | 8         | `u64` byte length (= 4·Π dims for f32)             |
+//! | 8         | `u64` byte length (dtype-dependent, see below)     |
+//!
+//! dtypes:
+//!
+//! * [`DTYPE_F32`] (0) — raw little-endian fp32, `len = 4·Π dims`. The
+//!   only dtype version 1 allows.
+//! * [`DTYPE_I8_PANELS`] (1) — prepacked int8 column panels in the
+//!   kernel layout ([`crate::kernels::PackedWeights`]): rank must be 2
+//!   (`dims = [k, n]`), `len = ceil(n/NR)·k·NR`.
+//! * [`DTYPE_I4_PANELS`] (2) — prepacked nibble int4 panels: rank 2,
+//!   `k` even, `len = ceil(n/NR)·(k/2)·NR`.
+//!
+//! A packed weight entry keeps the *master tensor's name* (`l0_wq` …)
+//! and logical dims, so the model-spec check is dtype-agnostic; its
+//! per-output-channel scales ride in a sibling f32 entry named
+//! `{name}.scales` with dims `[n]`. Packed entries replace the fp32
+//! masters (`mkq-bert ckpt migrate` converts v1 → v2), which is both the
+//! storage win and what lets [`crate::runtime::NativeModel::from_checkpoint`]
+//! skip quantize+pack at load. The panel-layout byte pins the kernel
+//! geometry (`NR`/`MR`, K-major nibble order, `INT4_OFFSET` bias): a
+//! reader whose kernels use a different layout rejects the entry instead
+//! of silently serving garbage — re-run `ckpt migrate` to repack.
+//!
+//! Payload byte lengths are multiples of 4 for every dtype, so payload
+//! offsets stay 4-byte aligned; v2 additionally pads the payload start
+//! to a 16-byte *file* offset, which makes `&[f32]` views into an
+//! mmap'd file properly aligned (see `reader::Checkpoint::f32_view`).
 //!
 //! The reader rejects bad magic/version, header inconsistencies,
 //! truncated files, out-of-bounds or overlapping directory entries, size
-//! mismatches and CRC failures with typed [`CkptError`]s. The CRC covers
-//! the payload only (the ISSUE-specified trailer): corrupt tensor bytes
-//! always surface as [`CkptError::BadCrc`], while header/directory
-//! corruption is caught by the structural checks — which reject
-//! *inconsistent* headers, not every semantically-plausible bit flip
-//! (e.g. a mantissa flip inside a stored activation scale passes
-//! validation). A format v2 extending a second CRC over header +
-//! directory is listed as a ROADMAP follow-on.
+//! mismatches and CRC failures with typed [`CkptError`]s. In v1 the CRC
+//! covers the payload only, so corrupt tensor bytes always surface as
+//! [`CkptError::BadCrc`] while a semantically-plausible header bit flip
+//! (e.g. inside a stored activation scale) can pass the structural
+//! checks; v2 closes that hole with the header/directory CRC
+//! ([`CkptError::BadHeaderCrc`]), verified before semantic validation so
+//! any header/directory flip is caught.
+//!
+//! # Sharded checkpoints
+//!
+//! A checkpoint may also be a *directory* containing a manifest file
+//! ([`MANIFEST_NAME`]) plus N shard files. The manifest is line-based
+//! text: the tag line [`MANIFEST_TAG`], then one shard file name per
+//! line (relative to the directory, `#` comments and blank lines
+//! ignored). Every shard is a complete v2 single-file checkpoint with a
+//! bit-identical header; tensors are distributed across shards with no
+//! duplicate names. A manifest naming a missing file fails typed
+//! ([`CkptError::ShardMissing`]); mismatched shard headers fail
+//! [`CkptError::BadHeader`]. `Checkpoint::read` on a directory path
+//! loads and merges all shards transparently.
 //!
 //! # Tensor naming contract
 //!
@@ -54,10 +95,8 @@
 //! (see [`LAYER_TENSOR_SUFFIXES`]), then `pool_w`, `pool_b`, `cls_w`,
 //! `cls_b`. [`param_specs`] generates the full expected (name, dims) list
 //! from a [`NativeDims`]; directory order is not significant — lookup is
-//! by name — but both writers emit spec order.
-//!
-//! Follow-ons tracked in ROADMAP.md: mmap zero-copy load, persisting the
-//! prepacked panels themselves, multi-shard checkpoints.
+//! by name — but both writers emit spec order. `.scales` siblings are
+//! supplementary entries outside the spec list.
 
 pub mod reader;
 pub mod writer;
@@ -69,10 +108,28 @@ use crate::runtime::native::NativeDims;
 
 /// File magic: the first four bytes of every checkpoint.
 pub const MAGIC: [u8; 4] = *b"MKQC";
-/// Current (and only) format version.
-pub const VERSION: u32 = 1;
+/// The original fp32-masters-only format.
+pub const VERSION_V1: u32 = 1;
+/// Current write version: prepacked panels, header/directory CRC,
+/// aligned payload, shardable.
+pub const VERSION: u32 = 2;
 /// dtype byte for fp32 tensors (the only payload dtype in version 1).
 pub const DTYPE_F32: u8 = 0;
+/// dtype byte for prepacked int8 column panels (v2).
+pub const DTYPE_I8_PANELS: u8 = 1;
+/// dtype byte for prepacked nibble int4 column panels (v2).
+pub const DTYPE_I4_PANELS: u8 = 2;
+/// Panel-layout version the current kernels consume: K-major `NR = 8`
+/// column panels, int4 as two K-consecutive offset nibbles per byte
+/// (`code + INT4_OFFSET`, even K in the low nibble). Bump when the pack
+/// geometry changes (e.g. the ROADMAP NR=16 revision).
+pub const PANEL_LAYOUT: u8 = 1;
+/// Payload start alignment (file offset) in v2.
+pub const PAYLOAD_ALIGN: usize = 16;
+/// Manifest file name marking a directory as a sharded checkpoint.
+pub const MANIFEST_NAME: &str = "manifest.mkqs";
+/// First line of a shard manifest.
+pub const MANIFEST_TAG: &str = "MKQS1";
 
 /// Hard caps the reader enforces before trusting any length field.
 pub const MAX_NAME_LEN: usize = 256;
@@ -105,6 +162,10 @@ pub enum CkptError {
     Overlap { a: String, b: String },
     /// Payload CRC-32 does not match the stored trailer.
     BadCrc { stored: u32, computed: u32 },
+    /// v2 header/directory CRC-32 does not match the stored field.
+    BadHeaderCrc { stored: u32, computed: u32 },
+    /// A shard manifest references a file that does not exist.
+    ShardMissing { manifest: String, shard: String },
     /// A tensor exists but its shape contradicts the header dims.
     DimsMismatch(String),
     /// A tensor required by the model spec is absent.
@@ -119,7 +180,10 @@ impl std::fmt::Display for CkptError {
                 write!(f, "bad checkpoint magic {:02x?} (want \"MKQC\")", got)
             }
             CkptError::BadVersion { got } => {
-                write!(f, "unsupported checkpoint version {got} (reader supports {VERSION})")
+                write!(
+                    f,
+                    "unsupported checkpoint version {got} (reader supports {VERSION_V1}..={VERSION})"
+                )
             }
             CkptError::Truncated { what, need, have } => {
                 write!(f, "truncated checkpoint: {what} needs {need} bytes, {have} available")
@@ -133,6 +197,13 @@ impl std::fmt::Display for CkptError {
                 f,
                 "checkpoint payload CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
             ),
+            CkptError::BadHeaderCrc { stored, computed } => write!(
+                f,
+                "checkpoint header/directory CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            CkptError::ShardMissing { manifest, shard } => {
+                write!(f, "shard manifest {manifest} references missing shard file {shard:?}")
+            }
             CkptError::DimsMismatch(m) => write!(f, "checkpoint dims mismatch: {m}"),
             CkptError::MissingTensor(n) => write!(f, "checkpoint is missing tensor {n:?}"),
         }
@@ -261,7 +332,24 @@ pub fn write_model_checkpoint(
     header: &CkptHeader,
     tensors: &[(String, Vec<usize>, Vec<f32>)],
 ) -> Result<(), CkptError> {
-    let mut w = Writer::new(header.clone())?;
+    write_model_checkpoint_with(path, header, tensors, VERSION)
+}
+
+/// [`write_model_checkpoint`] at an explicit format version — v1 exists
+/// for the migration tests and the `export-random --format 1` CI path
+/// (both formats store fp32 masters here; `ckpt migrate` is what
+/// produces prepacked-panel payloads).
+pub fn write_model_checkpoint_with(
+    path: &std::path::Path,
+    header: &CkptHeader,
+    tensors: &[(String, Vec<usize>, Vec<f32>)],
+    version: u32,
+) -> Result<(), CkptError> {
+    if version != VERSION_V1 && version != VERSION {
+        return Err(CkptError::BadVersion { got: version });
+    }
+    let mut w =
+        if version == VERSION_V1 { Writer::v1(header.clone())? } else { Writer::new(header.clone())? };
     for (name, dims, data) in tensors {
         w.add_f32(name, dims, data)?;
     }
@@ -286,6 +374,17 @@ pub fn export_random(
     bits: &[u32],
     seed: u64,
 ) -> Result<(), CkptError> {
+    export_random_with(path, dims, bits, seed, VERSION)
+}
+
+/// [`export_random`] at an explicit format version (1 or 2).
+pub fn export_random_with(
+    path: &std::path::Path,
+    dims: NativeDims,
+    bits: &[u32],
+    seed: u64,
+    version: u32,
+) -> Result<(), CkptError> {
     use crate::runtime::native;
     let header = CkptHeader {
         dims,
@@ -293,7 +392,7 @@ pub fn export_random(
         act_scales: native::default_act_scales(bits),
     };
     let tensors = native::random_model_tensors(&dims, seed);
-    write_model_checkpoint(path, &header, &tensors)
+    write_model_checkpoint_with(path, &header, &tensors, version)
 }
 
 #[cfg(test)]

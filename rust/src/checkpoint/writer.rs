@@ -1,5 +1,6 @@
-//! MKQC writer: stream tensors in, emit header + directory + payload +
-//! trailing payload CRC-32 in one pass at [`Writer::write_to`].
+//! MKQC writer: stream tensors in, emit header + directory (+ v2
+//! header/directory CRC + alignment pad) + payload + trailing payload
+//! CRC-32 in one pass at [`Writer::write_to`].
 //!
 //! Tensor bytes are accumulated into the payload buffer (and the CRC) as
 //! they are added, so each tensor is converted to little-endian exactly
@@ -8,16 +9,28 @@
 //! crash mid-export never leaves a half-written checkpoint at the target
 //! path. (Follow-on, see ROADMAP: spill the payload to disk instead of
 //! RAM for checkpoints that approach memory size.)
+//!
+//! [`Writer::new`] emits the current format ([`VERSION`] = 2: per-entry
+//! panel-layout byte, header/directory CRC, 16-byte-aligned payload
+//! start, packed-panel dtypes). [`Writer::v1`] keeps emitting the
+//! original fp32-masters-only v1 — the compatibility surface the
+//! v1→migrate tests and the (deliberately v1) Python exporter cross-check
+//! exercise.
 
 use std::path::Path;
 
-use crate::util::crc32::Crc32;
+use crate::kernels::PackedWeights;
+use crate::util::crc32::{crc32, Crc32};
 
-use super::{CkptError, CkptHeader, DTYPE_F32, MAGIC, MAX_NAME_LEN, MAX_RANK, VERSION};
+use super::{
+    CkptError, CkptHeader, DTYPE_F32, DTYPE_I4_PANELS, DTYPE_I8_PANELS, MAGIC, MAX_NAME_LEN,
+    MAX_RANK, PANEL_LAYOUT, PAYLOAD_ALIGN, VERSION, VERSION_V1,
+};
 
 pub(crate) struct DirEntry {
     pub name: String,
     pub dtype: u8,
+    pub layout: u8,
     pub dims: Vec<usize>,
     pub offset: u64,
     pub len: u64,
@@ -27,26 +40,39 @@ pub(crate) struct DirEntry {
 /// [`write_to`](Writer::write_to) (or [`to_bytes`](Writer::to_bytes)).
 pub struct Writer {
     header: CkptHeader,
+    version: u32,
     entries: Vec<DirEntry>,
     payload: Vec<u8>,
     crc: Crc32,
 }
 
 impl Writer {
-    /// Validates the header up front so a structurally broken checkpoint
-    /// can never be produced.
+    /// A current-version (v2) writer. Validates the header up front so a
+    /// structurally broken checkpoint can never be produced.
     pub fn new(header: CkptHeader) -> Result<Self, CkptError> {
+        Self::with_version(header, VERSION)
+    }
+
+    /// A legacy v1 writer (fp32 masters only, payload CRC only).
+    pub fn v1(header: CkptHeader) -> Result<Self, CkptError> {
+        Self::with_version(header, VERSION_V1)
+    }
+
+    fn with_version(header: CkptHeader, version: u32) -> Result<Self, CkptError> {
+        assert!(version == VERSION_V1 || version == VERSION, "writer supports v1/v2");
         header.validate()?;
-        Ok(Writer { header, entries: Vec::new(), payload: Vec::new(), crc: Crc32::new() })
+        Ok(Writer { header, version, entries: Vec::new(), payload: Vec::new(), crc: Crc32::new() })
     }
 
     pub fn header(&self) -> &CkptHeader {
         &self.header
     }
 
-    /// Append one fp32 tensor. Rejects duplicate names, over-long names,
-    /// rank > [`MAX_RANK`] and dims/data length mismatches.
-    pub fn add_f32(&mut self, name: &str, dims: &[usize], data: &[f32]) -> Result<(), CkptError> {
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn check_name(&self, name: &str) -> Result<(), CkptError> {
         if name.is_empty() || name.len() > MAX_NAME_LEN {
             return Err(CkptError::BadDirectory(format!(
                 "tensor name {name:?} length {} out of range 1..={MAX_NAME_LEN}",
@@ -56,6 +82,13 @@ impl Writer {
         if self.entries.iter().any(|e| e.name == name) {
             return Err(CkptError::BadDirectory(format!("duplicate tensor name {name:?}")));
         }
+        Ok(())
+    }
+
+    /// Append one fp32 tensor. Rejects duplicate names, over-long names,
+    /// rank > [`MAX_RANK`] and dims/data length mismatches.
+    pub fn add_f32(&mut self, name: &str, dims: &[usize], data: &[f32]) -> Result<(), CkptError> {
+        self.check_name(name)?;
         if dims.len() > MAX_RANK {
             return Err(CkptError::BadDirectory(format!(
                 "{name}: rank {} exceeds {MAX_RANK}",
@@ -79,11 +112,49 @@ impl Writer {
         self.entries.push(DirEntry {
             name: name.to_string(),
             dtype: DTYPE_F32,
+            layout: 0,
             dims: dims.to_vec(),
             offset,
             len: (data.len() * 4) as u64,
         });
         Ok(())
+    }
+
+    /// Append one prepacked weight under the master tensor's name plus
+    /// its `{name}.scales` f32 sibling — the v2 persistence of a
+    /// quantized [`PackedWeights`]. The entry's dims stay the *logical*
+    /// `[k, n]`; the byte length is the panel-layout size. v1 writers
+    /// reject this (v1 has no packed dtypes).
+    pub fn add_packed(&mut self, name: &str, pw: &PackedWeights) -> Result<(), CkptError> {
+        if self.version < VERSION {
+            return Err(CkptError::BadDirectory(format!(
+                "{name}: packed panels need format v2 (writer is v{})",
+                self.version
+            )));
+        }
+        self.check_name(name)?;
+        let dtype = match pw.bits {
+            8 => DTYPE_I8_PANELS,
+            4 => DTYPE_I4_PANELS,
+            b => {
+                return Err(CkptError::BadDirectory(format!(
+                    "{name}: no packed dtype for {b}-bit weights"
+                )))
+            }
+        };
+        let raw = pw.raw_bytes();
+        let offset = self.payload.len() as u64;
+        self.crc.update(raw);
+        self.payload.extend_from_slice(raw);
+        self.entries.push(DirEntry {
+            name: name.to_string(),
+            dtype,
+            layout: PANEL_LAYOUT,
+            dims: vec![pw.k, pw.n],
+            offset,
+            len: raw.len() as u64,
+        });
+        self.add_f32(&format!("{name}.scales"), &[pw.n], &pw.scales)
     }
 
     pub fn tensor_count(&self) -> usize {
@@ -97,13 +168,15 @@ impl Writer {
     /// Serialize the whole checkpoint to a byte vector.
     pub fn to_bytes(&self) -> Vec<u8> {
         let d = &self.header.dims;
+        let entry_fixed = if self.version >= VERSION { 2 + 1 + 1 + 1 + 16 } else { 2 + 1 + 1 + 16 };
         let dir_len: usize =
-            self.entries.iter().map(|e| 2 + e.name.len() + 1 + 1 + 4 * e.dims.len() + 16).sum();
+            self.entries.iter().map(|e| entry_fixed + e.name.len() + 4 * e.dims.len()).sum();
         let header_len = 4 + 4 + 7 * 4 + 4 + 4 * d.n_layers + 16 * d.n_layers;
-        let mut out = Vec::with_capacity(header_len + dir_len + self.payload.len() + 4);
+        let mut out =
+            Vec::with_capacity(header_len + dir_len + PAYLOAD_ALIGN + self.payload.len() + 8);
 
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
         for v in [d.vocab, d.seq, d.n_layers, d.d_model, d.n_heads, d.d_ff, d.n_classes] {
             out.extend_from_slice(&(v as u32).to_le_bytes());
         }
@@ -120,12 +193,24 @@ impl Writer {
             out.extend_from_slice(&(e.name.len() as u16).to_le_bytes());
             out.extend_from_slice(e.name.as_bytes());
             out.push(e.dtype);
+            if self.version >= VERSION {
+                out.push(e.layout);
+            }
             out.push(e.dims.len() as u8);
             for &dim in &e.dims {
                 out.extend_from_slice(&(dim as u32).to_le_bytes());
             }
             out.extend_from_slice(&e.offset.to_le_bytes());
             out.extend_from_slice(&e.len.to_le_bytes());
+        }
+        if self.version >= VERSION {
+            // header/directory CRC over everything serialized so far,
+            // then zero padding to a PAYLOAD_ALIGN'd payload start (the
+            // reader recomputes the pad, it is not stored).
+            let hcrc = crc32(&out);
+            out.extend_from_slice(&hcrc.to_le_bytes());
+            let pad = (PAYLOAD_ALIGN - out.len() % PAYLOAD_ALIGN) % PAYLOAD_ALIGN;
+            out.extend(std::iter::repeat(0u8).take(pad));
         }
         out.extend_from_slice(&self.payload);
         out.extend_from_slice(&self.crc.finish().to_le_bytes());
@@ -190,21 +275,65 @@ mod tests {
 
     #[test]
     fn bytes_roundtrip_through_reader() {
+        type Mk = fn(CkptHeader) -> Result<Writer, CkptError>;
+        for mk in [Writer::new as Mk, Writer::v1 as Mk] {
+            let mut w = mk(header()).unwrap();
+            let a = vec![1.0f32, -2.5, 3.25, 0.0];
+            let b = vec![9.0f32; 8];
+            w.add_f32("a", &[2, 2], &a).unwrap();
+            w.add_f32("b", &[8], &b).unwrap();
+            assert_eq!(w.tensor_count(), 2);
+            assert_eq!(w.payload_bytes(), 4 * (4 + 8));
+            let ck = Checkpoint::from_bytes(w.to_bytes()).unwrap();
+            assert_eq!(ck.header(), w.header());
+            assert_eq!(ck.version(), w.version());
+            let (dims_a, data_a) = ck.f32_tensor("a").unwrap();
+            assert_eq!(dims_a, &[2, 2]);
+            assert_eq!(data_a, a);
+            let (dims_b, data_b) = ck.f32_tensor("b").unwrap();
+            assert_eq!(dims_b, &[8]);
+            assert_eq!(data_b, b);
+            assert!(matches!(ck.f32_tensor("zzz"), Err(CkptError::MissingTensor(_))));
+        }
+    }
+
+    #[test]
+    fn v2_payload_is_aligned_and_header_crc_present() {
         let mut w = Writer::new(header()).unwrap();
-        let a = vec![1.0f32, -2.5, 3.25, 0.0];
-        let b = vec![9.0f32; 8];
-        w.add_f32("a", &[2, 2], &a).unwrap();
-        w.add_f32("b", &[8], &b).unwrap();
-        assert_eq!(w.tensor_count(), 2);
-        assert_eq!(w.payload_bytes(), 4 * (4 + 8));
+        w.add_f32("a", &[3], &[1.0, 2.0, 3.0]).unwrap();
+        let bytes = w.to_bytes();
+        let ck = Checkpoint::from_bytes(bytes).unwrap();
+        assert_eq!(ck.version(), VERSION);
+        assert!(ck.header_crc().is_some());
+        assert_eq!(ck.payload_file_offset(0) % PAYLOAD_ALIGN, 0);
+    }
+
+    #[test]
+    fn packed_entries_roundtrip_and_v1_rejects_them() {
+        use crate::quant;
+        use crate::util::rng::Rng;
+        let (k, n) = (4usize, 10usize);
+        let mut rng = Rng::new(8);
+        let codes = quant::random_codes(&mut rng, k * n, 4);
+        let scales: Vec<f32> = (0..n).map(|i| 0.02 + i as f32 * 0.003).collect();
+        let pw = PackedWeights::from_codes(&codes, k, n, scales.clone(), 4);
+
+        let mut w1 = Writer::v1(header()).unwrap();
+        assert!(matches!(w1.add_packed("w", &pw), Err(CkptError::BadDirectory(_))));
+
+        let mut w = Writer::new(header()).unwrap();
+        w.add_packed("w", &pw).unwrap();
+        assert_eq!(w.tensor_count(), 2, "packed entry + scales sibling");
         let ck = Checkpoint::from_bytes(w.to_bytes()).unwrap();
-        assert_eq!(ck.header(), w.header());
-        let (dims_a, data_a) = ck.f32_tensor("a").unwrap();
-        assert_eq!(dims_a, &[2, 2]);
-        assert_eq!(data_a, a);
-        let (dims_b, data_b) = ck.f32_tensor("b").unwrap();
-        assert_eq!(dims_b, &[8]);
-        assert_eq!(data_b, b);
-        assert!(matches!(ck.f32_tensor("zzz"), Err(CkptError::MissingTensor(_))));
+        let e = ck.entries().iter().find(|e| e.name == "w").unwrap();
+        assert_eq!(e.dtype, DTYPE_I4_PANELS);
+        assert_eq!(e.layout, PANEL_LAYOUT);
+        assert_eq!(e.dims, vec![k, n]);
+        let bytes = ck.panel_bytes("w").unwrap();
+        let back = PackedWeights::from_panels(4, k, n, scales, bytes).unwrap();
+        assert_eq!(back.unpack_codes(), codes);
+        let (sdims, sdata) = ck.f32_tensor("w.scales").unwrap();
+        assert_eq!(sdims, &[n]);
+        assert_eq!(sdata, back.scales);
     }
 }

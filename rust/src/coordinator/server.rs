@@ -19,6 +19,17 @@
 //! short seq buckets via [`Backend::check_seq_bucket`] at construction,
 //! leaving the single full-`seq` bucket — exactly the old 1-D behavior.
 //!
+//! **Multi-model routing:** when the backend registers several models
+//! (`Backend::n_models() > 1` — the model-store
+//! [`Registry`](crate::modelstore::Registry)), requests carry a model
+//! index ([`Server::submit_to`]) and the bucket grid becomes
+//! (model × seq-length): a batch is always one forward through one
+//! model, routed via [`Backend::serve_forward_for`], while every model
+//! shares this one batcher, its aging policy, and the staging buffers.
+//! Seq buckets resolve *per model* (each model's own `seq` is always a
+//! bucket; configured ceilings above a model's `seq` don't apply to it),
+//! and [`ServerSummary::per_model`] reports routed counts.
+//!
 //! Single-threaded event loop by design: both backends already
 //! parallelize one execution across cores (the native path via the kernel
 //! dispatcher's row-block fan-out), so concurrent executes only thrash;
@@ -52,12 +63,23 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Model index this request was routed to (0 on single-model
+    /// backends).
+    pub model: usize,
     pub logits: Vec<f32>,
     pub queue_us: f64,
     pub exec_us: f64,
     pub batch_size: usize,
     /// Seq-bucket ceiling this request's batch was padded to.
     pub seq_bucket: usize,
+}
+
+/// One (model × seq-bucket) FIFO.
+struct Slot {
+    model: usize,
+    /// Seq-length ceiling batches from this slot pad to.
+    tcap: usize,
+    q: VecDeque<Request>,
 }
 
 pub struct ServerConfig {
@@ -86,13 +108,21 @@ impl Default for ServerConfig {
 
 pub struct Server<'b, B: Backend> {
     backend: &'b B,
-    seq: usize,
-    n_classes: usize,
-    /// Config with *resolved* bucket lists (sorted/deduped; the last
-    /// seq bucket is always the model `seq`).
+    /// Per-model full sequence length (index = model).
+    seqs: Vec<usize>,
+    /// Per-model logits width.
+    n_classes: Vec<usize>,
+    /// Per-model display labels (the registry names).
+    labels: Vec<String>,
+    /// Config with the *resolved* batch-bucket list (sorted/deduped);
+    /// `seq_buckets` keeps the caller's request — the operative
+    /// per-model resolution lives in `slots`.
     cfg: ServerConfig,
-    /// One FIFO per seq bucket (parallel to `cfg.seq_buckets`).
-    queues: Vec<VecDeque<Request>>,
+    /// The (model × seq-bucket) FIFO grid, grouped by model, ascending
+    /// `tcap` within a model; every model's own `seq` is its last slot.
+    slots: Vec<Slot>,
+    /// Requests served per model (parallel to `labels`).
+    served_by_model: Vec<u64>,
     next_id: u64,
     ids_stage: Vec<i32>,
     mask_stage: Vec<f32>,
@@ -120,48 +150,73 @@ pub struct Server<'b, B: Backend> {
 
 impl<'b, B: Backend> Server<'b, B> {
     pub fn new(backend: &'b B, cfg: ServerConfig) -> Result<Self> {
-        let dims = backend.serve_dims()?;
+        let n_models = backend.n_models();
+        if n_models == 0 {
+            bail!("backend registers no models");
+        }
         let mut batch_buckets = cfg.batch_buckets.clone();
         batch_buckets.sort_unstable();
         batch_buckets.dedup();
         if batch_buckets.is_empty() {
             bail!("server needs at least one batch bucket");
         }
-        for &b in &batch_buckets {
-            backend.check_bucket(b)?; // fail fast if a bucket can't execute
+        let mut seq_req = cfg.seq_buckets.clone();
+        seq_req.sort_unstable();
+        seq_req.dedup();
+        if seq_req.first() == Some(&0) {
+            bail!("seq bucket 0");
         }
-        let mut seq_buckets = cfg.seq_buckets.clone();
-        seq_buckets.sort_unstable();
-        seq_buckets.dedup();
-        if let Some(&t) = seq_buckets.first() {
-            if t == 0 {
-                bail!("seq bucket 0");
+
+        let mut seqs = Vec::with_capacity(n_models);
+        let mut n_classes = Vec::with_capacity(n_models);
+        let mut labels = Vec::with_capacity(n_models);
+        let mut slots: Vec<Slot> = Vec::new();
+        for m in 0..n_models {
+            let dims = backend.serve_dims_for(m)?;
+            for &b in &batch_buckets {
+                backend.check_bucket_for(m, b)?; // fail fast if a bucket can't execute
             }
-        }
-        if seq_buckets.last() != Some(&dims.seq) {
-            if seq_buckets.last().map(|&t| t > dims.seq).unwrap_or(false) {
-                bail!("seq bucket {} exceeds model seq {}", seq_buckets.last().unwrap(), dims.seq);
+            // per-model seq buckets: the configured ceilings that fit this
+            // model, plus the model's own seq so every admissible request
+            // has a bucket
+            let mut buckets: Vec<usize> =
+                seq_req.iter().copied().filter(|&t| t <= dims.seq).collect();
+            if buckets.last() != Some(&dims.seq) {
+                buckets.push(dims.seq);
             }
-            seq_buckets.push(dims.seq); // full-length requests always fit
+            for &t in &buckets {
+                backend.check_seq_bucket_for(m, t)?;
+            }
+            for t in buckets {
+                slots.push(Slot { model: m, tcap: t, q: VecDeque::new() });
+            }
+            seqs.push(dims.seq);
+            n_classes.push(dims.n_classes);
+            labels.push(backend.model_label(m));
         }
-        for &t in &seq_buckets {
-            backend.check_seq_bucket(t)?;
+        let max_seq = *seqs.iter().max().unwrap();
+        // preserve the single-model contract: a configured ceiling no
+        // model can serve is a config error, not a silent drop
+        if let Some(&too_big) = seq_req.iter().find(|&&t| t > max_seq) {
+            bail!("seq bucket {too_big} exceeds every model's seq (max {max_seq})");
         }
         let largest = *batch_buckets.last().unwrap();
-        let n_seq = seq_buckets.len();
         Ok(Server {
             backend,
-            seq: dims.seq,
-            n_classes: dims.n_classes,
-            // the stored config carries the *resolved* bucket lists —
+            seqs,
+            n_classes,
+            labels,
+            // the stored config carries the *resolved* batch buckets —
             // the single source of truth the policy reads
-            cfg: ServerConfig { batch_buckets, seq_buckets, ..cfg },
-            queues: (0..n_seq).map(|_| VecDeque::new()).collect(),
+            cfg: ServerConfig { batch_buckets, seq_buckets: seq_req, ..cfg },
+            slots,
+            served_by_model: vec![0; n_models],
             next_id: 0,
-            // staging sized once for the largest batch at full seq —
-            // shorter buckets slice a prefix, so pumps never reallocate
-            ids_stage: vec![0; largest * dims.seq],
-            mask_stage: vec![0.0; largest * dims.seq],
+            // staging sized once for the largest batch at the largest
+            // model seq — every slot slices a prefix, so pumps never
+            // reallocate
+            ids_stage: vec![0; largest * max_seq],
+            mask_stage: vec![0.0; largest * max_seq],
             queue_lat: LatencyRecorder::new(),
             exec_lat: LatencyRecorder::new(),
             batch_exec_lat: LatencyRecorder::new(),
@@ -177,51 +232,77 @@ impl<'b, B: Backend> Server<'b, B> {
 
     /// Enqueue a tokenized request *at its true length* — `ids`/`mask`
     /// may be any `1..=seq` tokens long (full-`seq` padded submissions
-    /// keep working and land in the full-length bucket). Returns its id.
+    /// keep working and land in the full-length bucket). Routes to model
+    /// 0; multi-model callers use [`Server::submit_to`]. Returns its id.
     pub fn submit(&mut self, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
+        self.submit_to(0, ids, mask)
+    }
+
+    /// Enqueue a request for one registered model (index from
+    /// [`Server::find_model`] or the registry). Returns its id.
+    pub fn submit_to(&mut self, model: usize, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
+        if model >= self.seqs.len() {
+            bail!("model index {model} out of range ({} registered)", self.seqs.len());
+        }
         if ids.len() != mask.len() {
             bail!("ids/mask length mismatch ({} vs {})", ids.len(), mask.len());
         }
         let len = ids.len();
-        if len == 0 || len > self.seq {
-            bail!("request length {len} out of range 1..={}", self.seq);
+        if len == 0 || len > self.seqs[model] {
+            bail!(
+                "request length {len} out of range 1..={} for model {}",
+                self.seqs[model],
+                self.labels[model]
+            );
         }
-        // smallest seq bucket that fits (last bucket == seq, so always found)
-        let qi = self.cfg.seq_buckets.iter().position(|&t| t >= len).unwrap();
+        // smallest seq bucket of this model that fits (its last bucket ==
+        // its seq, so always found)
+        let si = self
+            .slots
+            .iter()
+            .position(|s| s.model == model && s.tcap >= len)
+            .expect("every model ends with a full-seq slot");
         let id = self.next_id;
         self.next_id += 1;
-        self.queues[qi].push_back(Request { id, ids, mask, enqueued: Instant::now() });
+        self.slots[si].q.push_back(Request { id, ids, mask, enqueued: Instant::now() });
         Ok(id)
     }
 
-    pub fn pending(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+    /// Model index for a backend label (registry name), if any.
+    pub fn find_model(&self, label: &str) -> Option<usize> {
+        self.labels.iter().position(|l| l == label)
     }
 
-    /// Batching policy over the 2-D buckets. Fires, in priority order:
-    ///   1. **aging**: if any queue's front has waited past the batching
-    ///      window, the queue with the globally-oldest expired front, at
+    pub fn pending(&self) -> usize {
+        self.slots.iter().map(|s| s.q.len()).sum()
+    }
+
+    /// Batching policy over the (model × seq) bucket grid. Fires, in
+    /// priority order:
+    ///   1. **aging**: if any slot's front has waited past the batching
+    ///      window, the slot with the globally-oldest expired front, at
     ///      the largest batch bucket `<=` its queue length (padding slots
     ///      if even the smallest batch bucket is short). Expiry outranks
-    ///      fullness so a continuously-full seq bucket under sustained
-    ///      short traffic can never starve a long request — every
+    ///      fullness so a continuously-full bucket under sustained
+    ///      short traffic can never starve a long request — or one
+    ///      model's traffic another, lightly-loaded model's — every
     ///      admitted request waits at most ~window + one execution;
-    ///   2. otherwise, any seq bucket whose queue fills the largest batch
+    ///   2. otherwise, any slot whose queue fills the largest batch
     ///      bucket (oldest front wins among several), at the largest
     ///      batch — the no-waiting fast path.
     fn pick(&self) -> Option<(usize, usize)> {
         let mut expired: Option<(usize, Instant)> = None;
-        for (qi, q) in self.queues.iter().enumerate() {
-            if let Some(front) = q.front() {
+        for (si, s) in self.slots.iter().enumerate() {
+            if let Some(front) = s.q.front() {
                 if front.enqueued.elapsed() >= self.cfg.batch_window
                     && expired.map(|(_, e)| front.enqueued < e).unwrap_or(true)
                 {
-                    expired = Some((qi, front.enqueued));
+                    expired = Some((si, front.enqueued));
                 }
             }
         }
-        if let Some((qi, _)) = expired {
-            let n = self.queues[qi].len();
+        if let Some((si, _)) = expired {
+            let n = self.slots[si].q.len();
             let bucket = self
                 .cfg
                 .batch_buckets
@@ -230,29 +311,30 @@ impl<'b, B: Backend> Server<'b, B> {
                 .filter(|&b| b <= n)
                 .max()
                 .unwrap_or(self.cfg.batch_buckets[0]);
-            return Some((qi, bucket));
+            return Some((si, bucket));
         }
         let largest = *self.cfg.batch_buckets.last().unwrap();
         let mut full: Option<(usize, Instant)> = None;
-        for (qi, q) in self.queues.iter().enumerate() {
-            if q.len() >= largest {
-                let front = q.front().unwrap().enqueued;
+        for (si, s) in self.slots.iter().enumerate() {
+            if s.q.len() >= largest {
+                let front = s.q.front().unwrap().enqueued;
                 if full.map(|(_, e)| front < e).unwrap_or(true) {
-                    full = Some((qi, front));
+                    full = Some((si, front));
                 }
             }
         }
-        full.map(|(qi, _)| (qi, largest))
+        full.map(|(si, _)| (si, largest))
     }
 
     /// One event-loop turn: batch + execute if the policy fires.
     pub fn pump(&mut self) -> Result<Vec<Response>> {
-        let Some((qi, bucket)) = self.pick() else {
+        let Some((si, bucket)) = self.pick() else {
             return Ok(vec![]);
         };
-        let tcap = self.cfg.seq_buckets[qi];
-        let take = bucket.min(self.queues[qi].len());
-        let reqs: Vec<Request> = (0..take).map(|_| self.queues[qi].pop_front().unwrap()).collect();
+        let (model, tcap) = (self.slots[si].model, self.slots[si].tcap);
+        let take = bucket.min(self.slots[si].q.len());
+        let reqs: Vec<Request> =
+            (0..take).map(|_| self.slots[si].q.pop_front().unwrap()).collect();
         self.padded_slots += (bucket - take) as u64;
 
         let stage = bucket * tcap;
@@ -269,7 +351,8 @@ impl<'b, B: Backend> Server<'b, B> {
         self.padded_tokens += stage as u64 - valid_tokens;
 
         let exec_start = Instant::now();
-        let logits = self.backend.serve_forward(
+        let logits = self.backend.serve_forward_for(
+            model,
             bucket,
             tcap,
             &self.ids_stage[..stage],
@@ -280,7 +363,7 @@ impl<'b, B: Backend> Server<'b, B> {
         self.batch_exec_lat.record(exec_us);
 
         self.batches += 1;
-        let nc = self.n_classes;
+        let nc = self.n_classes[model];
         let mut responses = Vec::with_capacity(take);
         for (i, r) in reqs.into_iter().enumerate() {
             let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -289,8 +372,10 @@ impl<'b, B: Backend> Server<'b, B> {
             self.exec_lat.record(exec_us);
             self.total_lat.record(total_us);
             self.served += 1;
+            self.served_by_model[model] += 1;
             responses.push(Response {
                 id: r.id,
+                model,
                 logits: logits[i * nc..(i + 1) * nc].to_vec(),
                 queue_us,
                 exec_us,
@@ -328,6 +413,12 @@ impl<'b, B: Backend> Server<'b, B> {
     pub fn summary(&self) -> ServerSummary {
         ServerSummary {
             model: self.backend.name(),
+            per_model: self
+                .labels
+                .iter()
+                .cloned()
+                .zip(self.served_by_model.iter().copied())
+                .collect(),
             served: self.served,
             batches: self.batches,
             padded_slots: self.padded_slots,
@@ -345,6 +436,9 @@ impl<'b, B: Backend> Server<'b, B> {
 #[derive(Debug, Clone)]
 pub struct ServerSummary {
     pub model: String,
+    /// (label, requests served) per registered model — one entry on
+    /// single-model backends.
+    pub per_model: Vec<(String, u64)>,
     pub served: u64,
     pub batches: u64,
     pub padded_slots: u64,
@@ -388,6 +482,11 @@ impl std::fmt::Display for ServerSummary {
             self.total_tokens,
             100.0 * self.padded_token_fraction(),
         )?;
+        if self.per_model.len() > 1 {
+            let routed: Vec<String> =
+                self.per_model.iter().map(|(l, n)| format!("{l}={n}")).collect();
+            writeln!(f, "  routed: {}", routed.join(" "))?;
+        }
         writeln!(f, "  queue : {}", self.queue)?;
         writeln!(f, "  exec  : {}", self.exec)?;
         write!(f, "  total : {}", self.total)
@@ -604,6 +703,65 @@ mod tests {
         let mut s = mk_server(&be, vec![1], Duration::ZERO);
         s.submit(vec![-1; 8], vec![1.0; 8]).unwrap();
         assert!(s.pump().is_err(), "negative token ids must not serve silently");
+    }
+
+    #[test]
+    fn multi_model_server_routes_bit_for_bit() {
+        // Two models of different shapes behind one registry-backed
+        // server: every response must equal the same request served
+        // through a dedicated single-model server, and model indices
+        // must fan back out correctly.
+        use crate::modelstore::Registry;
+        let dims_a = NativeDims {
+            vocab: 64, seq: 8, n_layers: 1, d_model: 16, n_heads: 2, d_ff: 32, n_classes: 2,
+        };
+        let dims_b = NativeDims {
+            vocab: 48, seq: 6, n_layers: 2, d_model: 24, n_heads: 3, d_ff: 48, n_classes: 3,
+        };
+        let mut reg = Registry::new();
+        reg.register("a", NativeModel::random(dims_a, &[4], 21)).unwrap();
+        reg.register("b", NativeModel::random(dims_b, &[8, 4], 22)).unwrap();
+        let cfg = || ServerConfig {
+            batch_buckets: vec![1, 2],
+            seq_buckets: vec![4],
+            batch_window: Duration::ZERO,
+        };
+        let mut s = Server::new(&reg, cfg()).unwrap();
+        assert_eq!(s.find_model("b"), Some(1));
+        let reqs: [(usize, Vec<i32>); 4] = [
+            (0, vec![1, 2, 3]),
+            (1, vec![4, 5]),
+            (0, (0..8).collect()),
+            (1, vec![7; 6]),
+        ];
+        for (m, ids) in &reqs {
+            let mask = vec![1.0f32; ids.len()];
+            s.submit_to(*m, ids.clone(), mask).unwrap();
+        }
+        // a request longer than the target model's seq is rejected up front
+        assert!(s.submit_to(1, vec![0; 7], vec![1.0; 7]).is_err());
+        assert!(s.submit_to(9, vec![0; 2], vec![1.0; 2]).is_err());
+        let mut out = s.drain().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 4);
+        let summary = s.summary();
+        assert_eq!(summary.per_model, vec![("a".into(), 2u64), ("b".into(), 2u64)]);
+
+        for (i, (m, ids)) in reqs.iter().enumerate() {
+            assert_eq!(out[i].model, *m, "response {i} routed to the wrong model");
+            // reference: a dedicated single-model server over the same model
+            let solo_model = if *m == 0 {
+                NativeModel::random(dims_a, &[4], 21)
+            } else {
+                NativeModel::random(dims_b, &[8, 4], 22)
+            };
+            let mut solo_reg = Registry::new();
+            solo_reg.register("solo", solo_model).unwrap();
+            let mut solo = Server::new(&solo_reg, cfg()).unwrap();
+            solo.submit(ids.clone(), vec![1.0; ids.len()]).unwrap();
+            let want = solo.drain().unwrap().remove(0);
+            assert_eq!(out[i].logits, want.logits, "request {i}: multi-model logits diverge");
+        }
     }
 
     #[test]

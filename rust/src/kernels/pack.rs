@@ -111,6 +111,64 @@ impl PackedWeights {
         Self::from_codes(&codes, k, n, scales, bits)
     }
 
+    /// Packed byte length of a `(k, n)` matrix at the given bit width —
+    /// the size contract between this layout and the MKQC v2 checkpoint
+    /// format (`None` for unsupported widths or odd-K int4).
+    pub fn packed_len(bits: u32, k: usize, n: usize) -> Option<usize> {
+        let n_panels = (n + NR - 1) / NR;
+        match bits {
+            8 => Some(n_panels * k * NR),
+            4 if k % 2 == 0 => Some(n_panels * (k / 2) * NR),
+            _ => None,
+        }
+    }
+
+    /// Rebuild from raw panel bytes persisted by a v2 checkpoint — the
+    /// load path that skips quantize+pack entirely. The bytes must be
+    /// exactly what [`PackedWeights::raw_bytes`] produced for the same
+    /// `(bits, k, n)` under the current panel layout; length is the only
+    /// thing that can be validated here (every byte pattern is a legal
+    /// code stream), so callers gate on the checkpoint's panel-layout
+    /// version byte first.
+    pub fn from_panels(
+        bits: u32,
+        k: usize,
+        n: usize,
+        scales: Vec<f32>,
+        bytes: &[u8],
+    ) -> Result<Self, String> {
+        if scales.len() != n {
+            return Err(format!("panel scales: {} entries for n={n}", scales.len()));
+        }
+        let want = Self::packed_len(bits, k, n)
+            .ok_or_else(|| format!("unsupported panel geometry: bits={bits} k={k} n={n}"))?;
+        if bytes.len() != want {
+            return Err(format!(
+                "panel bytes: {} for bits={bits} k={k} n={n} (want {want})",
+                bytes.len()
+            ));
+        }
+        let data = match bits {
+            8 => PackedData::I8(bytes.iter().map(|&b| b as i8).collect()),
+            _ => PackedData::I4(bytes.to_vec()),
+        };
+        Ok(PackedWeights { bits, k, n, scales, data })
+    }
+
+    /// The raw packed panel bytes, as persisted by the MKQC v2 writer.
+    /// int8 codes reinterpret as bytes (same width, two's complement on
+    /// both sides of the file boundary).
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            // i8 -> u8 reinterpret: same size/alignment, every bit
+            // pattern valid in both directions.
+            PackedData::I8(d) => unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len())
+            },
+            PackedData::I4(d) => d,
+        }
+    }
+
     pub fn n_panels(&self) -> usize {
         (self.n + NR - 1) / NR
     }
@@ -268,6 +326,28 @@ mod tests {
     fn pack_i4_rejects_odd_k() {
         let codes = vec![0i8; 3 * 4];
         let _ = PackedWeights::from_codes(&codes, 3, 4, vec![1.0; 4], 4);
+    }
+
+    #[test]
+    fn panel_bytes_roundtrip_from_panels() {
+        // raw_bytes -> from_panels must reproduce the pack exactly (the
+        // MKQC v2 persistence contract), including ragged last panels.
+        for bits in [4u32, 8] {
+            for &(k, n) in &[(2usize, 1usize), (4, 7), (6, 8), (8, 9), (16, 24)] {
+                let codes = random_codes(k, n, bits, 100 + n as u64);
+                let scales: Vec<f32> = (0..n).map(|i| 0.01 + i as f32 * 0.001).collect();
+                let pw = PackedWeights::from_codes(&codes, k, n, scales.clone(), bits);
+                assert_eq!(pw.raw_bytes().len(), PackedWeights::packed_len(bits, k, n).unwrap());
+                let back =
+                    PackedWeights::from_panels(bits, k, n, scales, pw.raw_bytes()).unwrap();
+                assert_eq!(back.unpack_codes(), codes, "bits={bits} k={k} n={n}");
+                assert_eq!(back.raw_bytes(), pw.raw_bytes());
+            }
+        }
+        // wrong byte count and odd-K int4 are rejected
+        assert!(PackedWeights::from_panels(8, 4, 4, vec![1.0; 4], &[0u8; 3]).is_err());
+        assert!(PackedWeights::from_panels(4, 3, 4, vec![1.0; 4], &[0u8; 12]).is_err());
+        assert!(PackedWeights::packed_len(32, 4, 4).is_none());
     }
 
     #[test]

@@ -3,10 +3,15 @@
 //! Layers (DESIGN.md):
 //!   * [`kernels`] — native quantized GEMM backend: prepacked int4/int8
 //!     weights, cache-tiled microkernels, runtime kernel dispatch.
-//!   * [`checkpoint`] — the MKQC flat-tensor checkpoint format: the
-//!     on-disk contract that carries QAT'd fp32 master weights (plus the
+//!   * [`checkpoint`] — the MKQC flat-tensor checkpoint format (v1 fp32
+//!     masters, v2 prepacked int4/int8 panels + header CRC + shards):
+//!     the on-disk contract that carries QAT'd weights (plus the
 //!     per-layer bit vector and calibrated activation scales) from
 //!     training to native serving.
+//!   * [`modelstore`] — the checkpoint→serving lifecycle: mmap-backed
+//!     zero-copy file bytes, v1→v2 migration (persisting the quantized
+//!     panels so load skips quantize+pack), sharded checkpoints, and the
+//!     multi-model serving [`modelstore::Registry`].
 //!   * [`runtime`] — execution backends behind one trait: the native
 //!     model forward, and (feature `xla`) the PJRT engine over AOT
 //!     HLO-text artifacts.
@@ -25,6 +30,7 @@ pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
 pub mod kernels;
+pub mod modelstore;
 pub mod quant;
 pub mod runtime;
 pub mod tokenizer;

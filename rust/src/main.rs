@@ -5,13 +5,20 @@
 //!                  GEMM backend on a Poisson request trace; with
 //!                  `--checkpoint FILE.mkqc` the model (dims, per-layer
 //!                  bits, calibrated activation scales, weights) comes
-//!                  from an MKQC checkpoint instead of random init
+//!                  from an MKQC checkpoint instead of random init; with
+//!                  repeated `--model name=PATH` flags one server hosts
+//!                  several named checkpoints behind the model-store
+//!                  registry and the trace routes across them
 //!   kernels      — print kernel-dispatch info and run a quick self-check
 //!   ckpt         — MKQC checkpoint tools: `export-random` writes a
 //!                  random-init model file, `inspect` dumps the header +
-//!                  tensor directory, `verify` fully validates (magic /
-//!                  version / dims / CRC), loads the model and runs a
-//!                  forward smoke test
+//!                  tensor directory (format version, per-entry dtype /
+//!                  panel layout, both CRCs), `verify` fully validates,
+//!                  loads the model and runs a forward smoke test,
+//!                  `migrate` rewrites any checkpoint as v2 with
+//!                  prepacked panels (optionally sharded), `bench-load`
+//!                  times cold loads (mmap vs buffered) into
+//!                  BENCH_load.json
 //!
 //! Artifact subcommands (build with `--features xla`, run `make artifacts`):
 //!   train        — teacher finetune + calibration + QAT on one synthetic task
@@ -46,14 +53,30 @@ fn usage() -> ! {
                 CI regression gate; default path BENCH_serve.json)
                 --checkpoint FILE.mkqc  (serve a saved model; the file's
                 dims/bits/scales are authoritative)
+                --model name=PATH  (repeatable: serve several registered
+                checkpoints — files or sharded dirs — behind one server;
+                the trace round-robins across them)
   kernels:      (no options; prints the dispatch table and runs a
                 per-variant self-check)
   ckpt export-random FILE.mkqc  [--bits 8,8,4,4 | --n-int4 N] [--seed N]
-                write a random-init MKQC checkpoint (tiny preset dims)
-  ckpt inspect FILE.mkqc        print header, bit vector, activation
-                scales and the tensor directory
-  ckpt verify FILE.mkqc         full validation (magic/version/dims/CRC),
-                model load + forward smoke test
+                [--format 1|2]  write a random-init MKQC checkpoint
+                (tiny preset dims; default format 2, fp32 masters)
+  ckpt inspect PATH             print format version, header, bit vector,
+                activation scales, both CRCs and the tensor directory
+                (per-entry dtype + panel layout); PATH may be a sharded
+                checkpoint directory
+  ckpt verify PATH              full validation (magic/version/dims/CRCs),
+                model load + forward smoke test; reports prepacked vs
+                quantized-at-load weight sites
+  ckpt migrate SRC DST          rewrite SRC (v1 or v2, file or sharded)
+                as format v2 with prepacked int4/int8 panels replacing
+                the fp32 masters of quantized layers; --shards N writes
+                DST as a sharded directory (manifest + N payload files)
+  ckpt bench-load FILE [FILE..] time cold checkpoint->model loads, mmap
+                vs buffered, into --out BENCH_load.json (BenchResult
+                rows gated by ci/bench_diff.py); --labels a,b names the
+                rows, --iters N samples, --expect-prepacked LABEL fails
+                unless that file loads with zero quantize+pack work
   train|serve|info: artifact path — needs --features xla + make artifacts;
                 also --artifacts DIR; train also takes --ckpt-out FILE.mkqc
                 (export the best-eval QAT state as an MKQC checkpoint)
@@ -61,7 +84,8 @@ fn usage() -> ! {
                   neon|neon-parallel|simd|simd-parallel  (force a kernel;
                   unsupported picks degrade to the scalar blocked kernels)
                 MKQ_THREADS=N    cap the kernel thread pool
-                MKQ_AUTOTUNE=0   skip the load-time kernel autotune"
+                MKQ_AUTOTUNE=0   skip the load-time kernel autotune
+                MKQ_NO_MMAP=1    force buffered checkpoint reads (skip mmap)"
     );
     std::process::exit(2);
 }
@@ -129,7 +153,8 @@ fn kernels_info() -> Result<()> {
     Ok(())
 }
 
-/// MKQC checkpoint tools: export-random / inspect / verify.
+/// MKQC checkpoint tools: export-random / inspect / verify / migrate /
+/// bench-load.
 fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
     use mkq::checkpoint::{self, Checkpoint};
     use mkq::coordinator::{bits_last_n_int4, parse_bits};
@@ -137,9 +162,14 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
     use mkq::runtime::{NativeDims, NativeModel};
 
     let sub = args.positional.get(1).cloned().unwrap_or_default();
+    if sub == "bench-load" {
+        return ckpt_bench_load(args);
+    }
     let path = match args.positional.get(2) {
         Some(p) => std::path::PathBuf::from(p),
-        None => anyhow::bail!("usage: mkq-bert ckpt <export-random|inspect|verify> FILE.mkqc"),
+        None => anyhow::bail!(
+            "usage: mkq-bert ckpt <export-random|inspect|verify|migrate|bench-load> PATH [..]"
+        ),
     };
     match sub.as_str() {
         "export-random" => {
@@ -150,9 +180,11 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
                 bits_last_n_int4(dims.n_layers, args.usize("n-int4", conf.usize("serve.n_int4", 4)))
             };
             let seed = args.usize("seed", 17) as u64;
-            checkpoint::export_random(&path, dims, &bits, seed).map_err(anyhow::Error::new)?;
+            let version = args.usize("format", checkpoint::VERSION as usize) as u32;
+            checkpoint::export_random_with(&path, dims, &bits, seed, version)
+                .map_err(anyhow::Error::new)?;
             println!(
-                "wrote {} (L={} d={} heads={} seq={} bits={bits:?} seed={seed})",
+                "wrote {} (MKQC v{version}, L={} d={} heads={} seq={} bits={bits:?} seed={seed})",
                 path.display(),
                 dims.n_layers,
                 dims.d_model,
@@ -165,7 +197,16 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
             let ck = Checkpoint::read(&path).map_err(anyhow::Error::new)?;
             let h = ck.header();
             let d = &h.dims;
-            println!("{} — MKQC v{}", path.display(), checkpoint::VERSION);
+            println!(
+                "{} — MKQC v{}{}",
+                path.display(),
+                ck.version(),
+                if ck.shard_count() > 1 {
+                    format!(" ({} shards)", ck.shard_count())
+                } else {
+                    String::new()
+                }
+            );
             println!(
                 "dims: vocab={} seq={} L={} d_model={} heads={} d_ff={} classes={}",
                 d.vocab, d.seq, d.n_layers, d.d_model, d.n_heads, d.d_ff, d.n_classes
@@ -177,17 +218,42 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
                     s[0], s[1], s[2], s[3]
                 );
             }
+            match ck.header_crc() {
+                Some(c) => println!("header/directory CRC: {c:#010x}"),
+                None => println!("header/directory CRC: none (v1 checksums the payload only)"),
+            }
+            let crcs: Vec<String> =
+                ck.payload_crcs().iter().map(|c| format!("{c:#010x}")).collect();
+            println!("payload CRC: {}", crcs.join(" "));
             println!("tensors ({}), payload {} bytes:", ck.entries().len(), ck.payload_bytes());
             for e in ck.entries() {
                 let dims_s =
                     e.dims.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x");
-                println!("  {:<12} f32 {:<12} @{:<10} {} bytes", e.name, dims_s, e.offset, e.len);
+                let layout_s = if e.layout != 0 {
+                    format!(" layout={}", e.layout)
+                } else {
+                    String::new()
+                };
+                let shard_s = if ck.shard_count() > 1 {
+                    format!(" shard={}", e.shard)
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  {:<16} {:<9} {:<12} @{:<10} {} bytes{layout_s}{shard_s}",
+                    e.name,
+                    e.dtype_name(),
+                    dims_s,
+                    e.offset,
+                    e.len
+                );
             }
             Ok(())
         }
         "verify" => {
             let ck = Checkpoint::read(&path).map_err(anyhow::Error::new)?;
-            let model = NativeModel::from_checkpoint_data(&ck).map_err(anyhow::Error::new)?;
+            let (model, stats) =
+                NativeModel::from_checkpoint_data_with_stats(&ck).map_err(anyhow::Error::new)?;
             // forward smoke test: one small batch must produce finite logits
             let d = model.dims;
             let disp = Dispatcher::new();
@@ -200,18 +266,181 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
                 "forward smoke test produced non-finite logits"
             );
             println!(
-                "{}: ok — header/directory/CRC valid, {} tensors, model loads (bits {:?}), \
-                 forward smoke test finite",
+                "{}: ok — v{} header/directory/CRC valid, {} tensors ({} shard(s)), model loads \
+                 (bits {:?}, {} prepacked / {} quantized-at-load weight sites, {}), forward \
+                 smoke test finite",
                 path.display(),
+                ck.version(),
                 ck.entries().len(),
-                model.bits
+                ck.shard_count(),
+                model.bits,
+                stats.prepacked_panels,
+                stats.quantized_panels,
+                if stats.mapped { "mmap" } else { "buffered read" }
+            );
+            Ok(())
+        }
+        "migrate" => {
+            let dst = match args.positional.get(3) {
+                Some(p) => std::path::PathBuf::from(p),
+                None => anyhow::bail!("usage: mkq-bert ckpt migrate SRC DST [--shards N]"),
+            };
+            let shards = args.usize("shards", 1);
+            let src = Checkpoint::read(&path).map_err(anyhow::Error::new)?;
+            let summary =
+                mkq::modelstore::migrate_checkpoint(&src, &dst, shards).map_err(anyhow::Error::new)?;
+            println!(
+                "migrated {} (v{}) -> {} (v{}): {} tensors, {} weight sites prepacked, {} \
+                 shard(s), {} payload bytes",
+                path.display(),
+                src.version(),
+                dst.display(),
+                checkpoint::VERSION,
+                summary.tensors,
+                summary.packed,
+                summary.shards,
+                summary.payload_bytes
             );
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown ckpt subcommand {other:?} (use export-random|inspect|verify)"
+            "unknown ckpt subcommand {other:?} (use export-random|inspect|verify|migrate|bench-load)"
         ),
     }
+}
+
+/// `ckpt bench-load`: cold checkpoint→model load timings (mmap vs
+/// forced-buffered) per input file, in the `BENCH_kernels.json` schema
+/// so `ci/bench_diff.py` gates them run over run. Load provenance
+/// (prepacked vs quantized-at-load site counts, RSS proxy) is emitted as
+/// ungated metadata — `--expect-prepacked LABEL` turns "v2 skips
+/// quantize+pack" into a hard check.
+fn ckpt_bench_load(args: &Args) -> Result<()> {
+    use mkq::checkpoint::Checkpoint;
+    use mkq::runtime::NativeModel;
+    use mkq::util::benchkit::Bench;
+
+    let files: Vec<&String> = args.positional.iter().skip(2).collect();
+    if files.is_empty() {
+        anyhow::bail!("usage: mkq-bert ckpt bench-load FILE [FILE..] [--labels a,b] [--out PATH]");
+    }
+    let labels: Vec<String> = match args.list("labels") {
+        Some(l) => {
+            anyhow::ensure!(l.len() == files.len(), "--labels needs one label per file");
+            l
+        }
+        None => files
+            .iter()
+            .map(|f| {
+                std::path::Path::new(f)
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| (*f).clone())
+            })
+            .collect(),
+    };
+    // labels become JSON bucket names: enforce a safe charset (no quote
+    // breakage in the hand-built JSON) and uniqueness (bench_diff keys
+    // rows by name — a duplicate would silently shadow the other file)
+    for l in &labels {
+        anyhow::ensure!(
+            !l.is_empty()
+                && l.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'),
+            "label {l:?} must be non-empty [A-Za-z0-9_.-] (set explicit --labels)"
+        );
+    }
+    {
+        let mut sorted = labels.clone();
+        sorted.sort();
+        sorted.dedup();
+        anyhow::ensure!(
+            sorted.len() == labels.len(),
+            "duplicate bench labels {labels:?} — rows would shadow each other; set --labels"
+        );
+    }
+    let iters = args.usize("iters", 5);
+    let out_path = args.str("out", "BENCH_load.json");
+    let bench = Bench::new(1, iters);
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut meta: Vec<String> = Vec::new();
+    for (file, label) in files.iter().zip(&labels) {
+        let path = std::path::PathBuf::from(file);
+        // one stats-bearing load of each flavor outside the timing loop
+        let (_, stats_m) = NativeModel::from_checkpoint_with_stats(&path)
+            .map_err(anyhow::Error::new)?;
+        let (_, stats_b) = {
+            let ck = Checkpoint::read_buffered(&path).map_err(anyhow::Error::new)?;
+            NativeModel::from_checkpoint_data_with_stats(&ck).map_err(anyhow::Error::new)?
+        };
+        let r_buf = bench.run(|| {
+            let ck = Checkpoint::read_buffered(&path).expect("bench buffered read");
+            let m = NativeModel::from_checkpoint_data(&ck).expect("bench buffered load");
+            std::hint::black_box(&m);
+        });
+        // emit the mmap row only when the default open actually mapped
+        // (MKQ_NO_MMAP=1, non-unix, or an mmap failure would otherwise
+        // put buffered timings under the load_*_mmap bucket name and
+        // corrupt the cross-run regression gate; an absent row is a
+        // bench_diff warning, not a gate)
+        if stats_m.mapped {
+            let r_mmap = bench.run(|| {
+                let m = NativeModel::from_checkpoint(&path).expect("bench mmap load");
+                std::hint::black_box(&m);
+            });
+            println!("{label}: mmap {r_mmap}");
+            rows.push(r_mmap.json_row(&format!("load_{label}_mmap")));
+        } else {
+            println!("{label}: mmap unavailable (buffered fallback) — mmap row not emitted");
+        }
+        println!(
+            "{label}: buffered {r_buf}\n{label}: {} prepacked / {} \
+             quantized-at-load sites, mapped={}, rss proxy {} bytes (mmap) / {} (buffered)",
+            stats_m.prepacked_panels,
+            stats_m.quantized_panels,
+            stats_m.mapped,
+            stats_m.rss_proxy_bytes(),
+            stats_b.rss_proxy_bytes()
+        );
+        rows.push(r_buf.json_row(&format!("load_{label}_buffered")));
+        meta.push(format!(
+            "\"{label}\": {{\"prepacked_panels\": {}, \"quantized_panels\": {}, \"mapped\": {}, \
+             \"rss_proxy_bytes_mmap\": {}, \"rss_proxy_bytes_buffered\": {}, \
+             \"model_heap_bytes\": {}}}",
+            stats_m.prepacked_panels,
+            stats_m.quantized_panels,
+            stats_m.mapped,
+            stats_m.rss_proxy_bytes(),
+            stats_b.rss_proxy_bytes(),
+            stats_m.model_heap_bytes
+        ));
+        if args.get("expect-prepacked") == Some(label.as_str()) {
+            anyhow::ensure!(
+                stats_m.quantized_panels == 0 && stats_m.prepacked_panels > 0,
+                "{label}: expected a fully prepacked load, got {} prepacked / {} quantized",
+                stats_m.prepacked_panels,
+                stats_m.quantized_panels
+            );
+            println!("{label}: prepacked load confirmed — quantize+pack skipped entirely");
+        }
+    }
+    if let Some(want) = args.get("expect-prepacked") {
+        anyhow::ensure!(
+            labels.iter().any(|l| l == want),
+            "--expect-prepacked {want:?} names no benched label {labels:?}"
+        );
+    }
+    let mut out = String::from("{\n  \"kernels\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("    {row}{}\n", if i + 1 == rows.len() { "" } else { "," }));
+    }
+    out.push_str("  ],\n  \"ungated\": {");
+    out.push_str(&meta.join(", "));
+    out.push_str("}\n}\n");
+    std::fs::write(&out_path, out)
+        .map_err(|e| anyhow::anyhow!("failed to write {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    Ok(())
 }
 
 /// Default seq-length bucket ceilings: quarters of the model seq (the
@@ -223,17 +452,52 @@ fn default_seq_buckets(seq: usize) -> Vec<usize> {
 }
 
 fn serve_native(args: &Args, conf: &Config) -> Result<()> {
-    use mkq::coordinator::{bits_last_n_int4, parse_bits, Server, ServerConfig, TraceGen, TraceKind};
-    use mkq::data::{Suite, TaskKind};
+    use mkq::coordinator::{bits_last_n_int4, parse_bits};
+    use mkq::modelstore::Registry;
     use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+
+    let model_specs = args.get_all("model");
+    if !model_specs.is_empty() {
+        // multi-model registry: one server over N named checkpoints
+        if args.get("checkpoint").is_some() {
+            anyhow::bail!("--checkpoint and --model are mutually exclusive (use --model only)");
+        }
+        let mut reg = Registry::new();
+        for spec in model_specs {
+            let (name, path) = spec
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--model expects name=PATH, got {spec:?}"))?;
+            let idx = reg.load(name, std::path::Path::new(path))?;
+            let m = reg.get(idx).expect("just loaded");
+            println!(
+                "registered model {name:?} from {path}: L={} d={} seq={} bits={:?} ({} \
+                 prepacked / {} quantized-at-load sites, {})",
+                m.model.dims.n_layers,
+                m.model.dims.d_model,
+                m.model.dims.seq,
+                m.model.bits,
+                m.stats.prepacked_panels,
+                m.stats.quantized_panels,
+                if m.stats.mapped { "mmap" } else { "buffered read" }
+            );
+        }
+        reg.autotune();
+        println!("{}", reg.disp.describe());
+        return run_serve_trace(&reg, args, conf);
+    }
 
     let model = if let Some(ck_path) = args.get("checkpoint") {
         if args.get("bits").is_some() || args.get("n-int4").is_some() {
             eprintln!("note: --bits/--n-int4 ignored — the checkpoint's bit vector is authoritative");
         }
-        let m = NativeModel::from_checkpoint(std::path::Path::new(ck_path))
+        let (m, stats) = NativeModel::from_checkpoint_with_stats(std::path::Path::new(ck_path))
             .map_err(anyhow::Error::new)?;
-        println!("loaded checkpoint {ck_path}");
+        println!(
+            "loaded checkpoint {ck_path} ({} prepacked / {} quantized-at-load sites, {})",
+            stats.prepacked_panels,
+            stats.quantized_panels,
+            if stats.mapped { "mmap" } else { "buffered read" }
+        );
         m
     } else {
         let dims = NativeDims::tiny();
@@ -252,6 +516,20 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     );
     let backend = NativeBackend::with_model(model);
     println!("{}", backend.disp.describe());
+    run_serve_trace(&backend, args, conf)
+}
+
+/// The Poisson trace replay, generic over single- and multi-model
+/// backends: per-model tokenized traffic (each model's own vocab/seq),
+/// requests round-robined across registered models, one shared server.
+fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Config) -> Result<()> {
+    use mkq::coordinator::{Server, ServerConfig, TraceGen, TraceKind};
+    use mkq::data::{Suite, TaskKind};
+
+    let n_models = backend.n_models();
+    let dims_per: Vec<mkq::runtime::ServeDims> =
+        (0..n_models).map(|m| backend.serve_dims_for(m)).collect::<Result<_>>()?;
+    let max_seq = dims_per.iter().map(|d| d.seq).max().expect("at least one model");
 
     let parse_usize_list = |key: &str| -> Result<Option<Vec<usize>>> {
         match args.list(key) {
@@ -266,19 +544,19 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     };
     let batch_buckets = parse_usize_list("buckets")?.unwrap_or_else(|| vec![1, 8, 16]);
     let seq_buckets =
-        parse_usize_list("seq-buckets")?.unwrap_or_else(|| default_seq_buckets(dims.seq));
+        parse_usize_list("seq-buckets")?.unwrap_or_else(|| default_seq_buckets(max_seq));
     let trace_kind = {
         let s = args.str("trace", &conf.str("serve.trace", "mixed"));
         TraceKind::parse(&s).ok_or_else(|| anyhow::anyhow!("--trace expects mixed|full, got {s:?}"))?
     };
     let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
     println!(
-        "batch buckets {batch_buckets:?}, seq buckets {seq_buckets:?} (+{}), trace {}",
-        dims.seq,
+        "batch buckets {batch_buckets:?}, seq buckets {seq_buckets:?} (+ each model's seq), \
+         trace {}",
         trace_kind.name()
     );
     let mut server = Server::new(
-        &backend,
+        backend,
         ServerConfig {
             batch_buckets,
             seq_buckets,
@@ -286,12 +564,19 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
         },
     )?;
 
-    let suite = Suite::new(42, dims.vocab, dims.seq);
-    let task = suite.task(TaskKind::Sst2, 1);
+    // per-model traffic: the synthetic task is tokenized against that
+    // model's vocab/seq, so requests are always admissible where routed
+    let tasks: Vec<mkq::data::TaskData> = dims_per
+        .iter()
+        .enumerate()
+        .map(|(m, d)| Suite::new(42, d.vocab, d.seq).task(TaskKind::Sst2, 1 + m as u64))
+        .collect();
+    let mut gens: Vec<TraceGen> =
+        tasks.iter().map(|t| TraceGen::new(&t.dev, trace_kind, 99)).collect();
+
     let rate = args.f64("rate", conf.f64("serve.rate", 500.0));
     let n_req = args.usize("requests", conf.usize("serve.requests", 400));
     println!("replaying Poisson trace: {n_req} requests at {rate} rps, window {window_us}us");
-    let mut tracegen = TraceGen::new(&task.dev, trace_kind, 99);
     let mut arrivals = mkq::util::rng::Rng::new(99);
     let mut sent = 0usize;
     let replay_start = std::time::Instant::now();
@@ -299,8 +584,9 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
     while sent < n_req || server.pending() > 0 {
         let now = std::time::Instant::now();
         if sent < n_req && now >= next_arrival {
-            let (ids, mask) = tracegen.next_request();
-            server.submit(ids, mask)?;
+            let m = sent % n_models;
+            let (ids, mask) = gens[m].next_request();
+            server.submit_to(m, ids, mask)?;
             sent += 1;
             next_arrival = now + std::time::Duration::from_secs_f64(arrivals.exp(rate));
         }

@@ -1,0 +1,218 @@
+//! Read-only file bytes: mmap'd when the platform allows, buffered
+//! otherwise — the zero-copy substrate under checkpoint loads.
+//!
+//! [`FileBytes::open`] maps the file `PROT_READ`/`MAP_PRIVATE` via direct
+//! `extern "C"` declarations of `mmap`/`munmap` (no new crates — the
+//! build stays hermetic) and falls back to an ordinary buffered read on
+//! non-unix targets, on any mmap failure, on empty files (zero-length
+//! mappings are an `EINVAL`), and under `MKQ_NO_MMAP=1` (the knob the
+//! mmap-vs-buffered equivalence tests flip). Either way the result
+//! derefs to `&[u8]`, so the checkpoint reader is agnostic to where the
+//! bytes live.
+//!
+//! A mapped region is page-aligned by construction, which is what makes
+//! the v2 format's 16-byte-aligned payload start yield properly aligned
+//! in-place `&[f32]` views (see `checkpoint::reader`). The mapping is
+//! private and never written through, so no `msync` story is needed;
+//! `munmap` runs on drop.
+
+use std::io::Read;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        // off_t is 64-bit on every unix target this repo builds for
+        // (linux x86_64 / aarch64, macOS); the offset passed is always 0
+        // so a 32-bit off_t target would still read the right bytes.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// An owned read-only memory mapping of a whole file.
+#[cfg(unix)]
+pub struct Mapped {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// The mapping is private, read-only and exclusively owned: sharing
+// &[u8] views across threads is as safe as sharing a Vec<u8>.
+#[cfg(unix)]
+unsafe impl Send for Mapped {}
+#[cfg(unix)]
+unsafe impl Sync for Mapped {}
+
+#[cfg(unix)]
+impl Mapped {
+    /// Map a file read-only; `None` on any failure (caller falls back to
+    /// a buffered read).
+    fn map(file: &std::fs::File, len: usize) -> Option<Self> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return None; // zero-length mmap is EINVAL
+        }
+        // SAFETY: requesting a fresh private read-only mapping of `len`
+        // bytes backed by an open fd; the kernel picks the address. The
+        // only observable states are MAP_FAILED or a valid mapping that
+        // stays live until munmap in Drop.
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return None;
+        }
+        Some(Mapped { ptr: std::ptr::NonNull::new(ptr as *mut u8)?, len })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: the mapping covers exactly `len` readable bytes and
+        // lives as long as `self`.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mapped {
+    fn drop(&mut self) {
+        // SAFETY: undoing exactly the mapping made in `map`.
+        unsafe {
+            sys::munmap(self.ptr.as_ptr() as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+/// File contents, either mapped in place or read into an owned buffer.
+pub enum FileBytes {
+    Owned(Vec<u8>),
+    #[cfg(unix)]
+    Mapped(Mapped),
+}
+
+impl FileBytes {
+    /// Prefer a zero-copy mapping; fall back to a buffered read wherever
+    /// mapping is unavailable (non-unix, empty file, mmap failure) or
+    /// disabled via `MKQ_NO_MMAP=1`.
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        #[cfg(unix)]
+        {
+            let no_mmap = std::env::var("MKQ_NO_MMAP").map(|v| v == "1").unwrap_or(false);
+            if !no_mmap {
+                if let Ok(file) = std::fs::File::open(path) {
+                    let len = file.metadata()?.len();
+                    if let Ok(len) = usize::try_from(len) {
+                        if let Some(m) = Mapped::map(&file, len) {
+                            return Ok(FileBytes::Mapped(m));
+                        }
+                    }
+                }
+            }
+        }
+        Self::read_buffered(path)
+    }
+
+    /// Always read into an owned buffer (the fallback path, kept
+    /// callable directly so tests can compare it against the mapped path
+    /// bit for bit).
+    pub fn read_buffered(path: &Path) -> std::io::Result<Self> {
+        let mut f = std::fs::File::open(path)?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Ok(FileBytes::Owned(buf))
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            FileBytes::Owned(_) => false,
+            #[cfg(unix)]
+            FileBytes::Mapped(_) => true,
+        }
+    }
+
+    /// Heap bytes this image holds resident by itself — the RSS-proxy
+    /// term for the load bench (a mapping's pages are reclaimable and
+    /// shared, an owned buffer is not).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            FileBytes::Owned(v) => v.len(),
+            #[cfg(unix)]
+            FileBytes::Mapped(_) => 0,
+        }
+    }
+}
+
+impl std::ops::Deref for FileBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            FileBytes::Owned(v) => v,
+            #[cfg(unix)]
+            FileBytes::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+impl From<Vec<u8>> for FileBytes {
+    fn from(v: Vec<u8>) -> Self {
+        FileBytes::Owned(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("mkq_mapped_{}_{name}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_and_buffered_agree() {
+        let data: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmp("agree.bin", &data);
+        let mapped = FileBytes::open(&p).unwrap();
+        let buffered = FileBytes::read_buffered(&p).unwrap();
+        assert_eq!(&mapped[..], &data[..]);
+        assert_eq!(&buffered[..], &data[..]);
+        assert!(!buffered.is_mapped());
+        #[cfg(unix)]
+        assert!(mapped.is_mapped(), "unix open() should map");
+        assert_eq!(buffered.heap_bytes(), data.len());
+        if mapped.is_mapped() {
+            assert_eq!(mapped.heap_bytes(), 0);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let p = tmp("empty.bin", &[]);
+        let fb = FileBytes::open(&p).unwrap();
+        assert!(!fb.is_mapped(), "zero-length files cannot be mapped");
+        assert!(fb.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let p = std::env::temp_dir().join("mkq_mapped_definitely_missing.bin");
+        assert!(FileBytes::open(&p).is_err());
+        assert!(FileBytes::read_buffered(&p).is_err());
+    }
+}

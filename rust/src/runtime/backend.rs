@@ -25,6 +25,7 @@ use super::workspace::Workspace;
 /// Serving-facing model dimensions.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeDims {
+    pub vocab: usize,
     pub seq: usize,
     pub n_classes: usize,
 }
@@ -57,15 +58,46 @@ impl Precision {
     }
 }
 
+/// Execution backend behind the serving coordinator and benches.
+///
+/// A backend hosts one model by default; multi-model backends (the
+/// model-store [`Registry`](crate::modelstore::Registry)) report
+/// `n_models() > 1` and route through the `*_for` variants, which take a
+/// model index `0..n_models()`. The index-free methods are the
+/// single-model surface every existing backend keeps implementing — the
+/// defaulted `*_for` twins delegate to them at index 0 and reject any
+/// other index, so single-model backends need no changes.
 pub trait Backend {
     fn name(&self) -> String;
+
+    /// How many models this backend can route to (1 unless overridden).
+    fn n_models(&self) -> usize {
+        1
+    }
+
+    /// Display label for one model (the registry's registered name).
+    fn model_label(&self, model: usize) -> String {
+        let _ = model;
+        self.name()
+    }
 
     /// Serving dims; `Err` when no serving model is configured.
     fn serve_dims(&self) -> Result<ServeDims>;
 
+    /// Per-model serving dims.
+    fn serve_dims_for(&self, model: usize) -> Result<ServeDims> {
+        self.only_model(model)?;
+        self.serve_dims()
+    }
+
     /// Fail fast if a batch bucket cannot be served (missing artifact /
     /// no model).
     fn check_bucket(&self, bucket: usize) -> Result<()>;
+
+    fn check_bucket_for(&self, model: usize, bucket: usize) -> Result<()> {
+        self.only_model(model)?;
+        self.check_bucket(bucket)
+    }
 
     /// Fail fast if a sequence-length bucket cannot be served. The
     /// default accepts only the full model `seq` — the fixed-shape
@@ -79,12 +111,41 @@ pub trait Backend {
         }
     }
 
+    fn check_seq_bucket_for(&self, model: usize, t: usize) -> Result<()> {
+        self.only_model(model)?;
+        self.check_seq_bucket(t)
+    }
+
     /// Forward a `(bucket, t)` batch to `(bucket, n_classes)` logits.
     /// `t` is the batch's token length — the seq bucket the dynamic
     /// batcher padded to, not necessarily the model's full `seq`;
     /// backends that validated the bucket via
     /// [`Backend::check_seq_bucket`] receive only values they accepted.
     fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>>;
+
+    /// Per-model [`Backend::serve_forward`] — what the multi-model
+    /// server routes through.
+    fn serve_forward_for(
+        &self,
+        model: usize,
+        bucket: usize,
+        t: usize,
+        ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.only_model(model)?;
+        self.serve_forward(bucket, t, ids, mask)
+    }
+
+    /// Guard for the defaulted `*_for` delegations.
+    #[doc(hidden)]
+    fn only_model(&self, model: usize) -> Result<()> {
+        if model == 0 {
+            Ok(())
+        } else {
+            bail!("backend {} hosts a single model (got model index {model})", self.name())
+        }
+    }
 
     /// One BERT-base encoder layer at the given precision over `(bsz*t, d)`
     /// hidden states (the Table-2 per-layer benchmark surface).
@@ -96,6 +157,35 @@ pub trait Backend {
         h: &[f32],
         mask: &[f32],
     ) -> Result<Vec<f32>>;
+}
+
+/// The one native serve-forward body — request validation + workspace
+/// forward — shared by [`NativeBackend`] and the model-store
+/// [`Registry`](crate::modelstore::Registry), so the two serve paths
+/// cannot drift apart on preconditions. `label` names the model in
+/// error messages.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn native_serve_forward(
+    label: &str,
+    model: &NativeModel,
+    disp: &Dispatcher,
+    ws: &mut Workspace,
+    bucket: usize,
+    t: usize,
+    ids: &[i32],
+    mask: &[f32],
+) -> Result<Vec<f32>> {
+    if t < 1 || t > model.dims.seq {
+        bail!("token length {t} out of range 1..={} for {label}", model.dims.seq);
+    }
+    let vocab = model.dims.vocab;
+    if let Some(&bad) = ids.iter().find(|&&id| id < 0 || id as usize >= vocab) {
+        bail!("token id {bad} out of range for {label} vocab {vocab}");
+    }
+    // The copy-out is the one remaining per-batch allocation (bucket *
+    // n_classes floats); the forward itself is allocation-free at a
+    // steady shape.
+    Ok(model.forward_ws(disp, ws, ids, mask, bucket, t).to_vec())
 }
 
 /// Pure-Rust backend over the native kernels.
@@ -168,7 +258,11 @@ impl Backend for NativeBackend {
 
     fn serve_dims(&self) -> Result<ServeDims> {
         match &self.model {
-            Some(m) => Ok(ServeDims { seq: m.dims.seq, n_classes: m.dims.n_classes }),
+            Some(m) => Ok(ServeDims {
+                vocab: m.dims.vocab,
+                seq: m.dims.seq,
+                n_classes: m.dims.n_classes,
+            }),
             None => bail!("native backend has no serving model configured"),
         }
     }
@@ -195,18 +289,8 @@ impl Backend for NativeBackend {
     fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
         match &self.model {
             Some(m) => {
-                if t < 1 || t > m.dims.seq {
-                    bail!("token length {t} out of range 1..={}", m.dims.seq);
-                }
-                let vocab = m.dims.vocab;
-                if let Some(&bad) = ids.iter().find(|&&id| id < 0 || id as usize >= vocab) {
-                    bail!("token id {bad} out of range for vocab {vocab}");
-                }
                 let mut ws = self.ws.borrow_mut();
-                // The copy-out is the one remaining per-batch allocation
-                // (bucket * n_classes floats); the forward itself is
-                // allocation-free at a steady shape.
-                Ok(m.forward_ws(&self.disp, &mut ws, ids, mask, bucket, t).to_vec())
+                native_serve_forward("the native backend", m, &self.disp, &mut ws, bucket, t, ids, mask)
             }
             None => bail!("native backend has no serving model configured"),
         }
@@ -283,6 +367,7 @@ mod artifact {
 
         pub fn with_serve_model(mut self, model: ServeModel) -> Result<Self> {
             let dims = ServeDims {
+                vocab: self.eng.manifest.cfg("vocab")?,
                 seq: self.eng.manifest.cfg("seq")?,
                 n_classes: self.eng.manifest.cfg("n_classes")?,
             };

@@ -82,6 +82,14 @@ impl Linear {
         Linear { w: LinearW::Quant(PackedWeights::from_f32(w, k, n, bits)), bias, k, n }
     }
 
+    /// Adopt already-packed panels — the v2 prepacked-checkpoint load
+    /// path, which skips quantize+pack entirely.
+    pub fn from_packed(pw: PackedWeights, bias: Vec<f32>) -> Self {
+        assert_eq!(bias.len(), pw.n);
+        let (k, n) = (pw.k, pw.n);
+        Linear { w: LinearW::Quant(pw), bias, k, n }
+    }
+
     pub fn bits(&self) -> u32 {
         match &self.w {
             LinearW::F32(_) => 32,
@@ -566,6 +574,78 @@ pub fn default_act_scales(bits: &[u32]) -> Vec<[f32; 4]> {
         .collect()
 }
 
+/// Heap bytes a `(k, n)` [`PackedF32`] occupies (zero-padded panels).
+fn packed_f32_bytes(k: usize, n: usize) -> usize {
+    let nr = crate::kernels::NR;
+    ((n + nr - 1) / nr) * k * nr * 4
+}
+
+/// Checkpoint-load helper: one owned fp32 vector (embeddings, biases,
+/// LN parameters), counted into the RSS proxy.
+fn load_f32(
+    ck: &crate::checkpoint::Checkpoint,
+    stats: &mut crate::modelstore::LoadStats,
+    name: &str,
+) -> Result<Vec<f32>, crate::checkpoint::CkptError> {
+    let v = ck.f32_view(name)?.into_owned();
+    stats.model_heap_bytes += v.len() * 4;
+    Ok(v)
+}
+
+/// Checkpoint-load helper: one projection site. A v2 prepacked entry
+/// adopts the stored panels directly (no quantize, no pack — just the
+/// one copy into the model-owned buffer); an fp32 master quantizes and
+/// packs exactly as the in-memory constructors do, so both roads end at
+/// byte-identical [`PackedWeights`].
+fn load_linear(
+    ck: &crate::checkpoint::Checkpoint,
+    stats: &mut crate::modelstore::LoadStats,
+    wname: &str,
+    bname: &str,
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> Result<Linear, crate::checkpoint::CkptError> {
+    use crate::checkpoint::{CkptError, DTYPE_F32, DTYPE_I8_PANELS};
+    let bias = load_f32(ck, stats, bname)?;
+    let e = ck.entry(wname).expect("spec-checked above");
+    if e.dtype == DTYPE_F32 {
+        let w = ck.f32_view(wname)?;
+        return Ok(if bits == 32 {
+            stats.model_heap_bytes += packed_f32_bytes(k, n);
+            Linear::f32(&w[..], k, n, bias)
+        } else {
+            stats.quantized_panels += 1;
+            stats.model_heap_bytes +=
+                PackedWeights::packed_len(bits, k, n).unwrap_or(0) + n * 4;
+            Linear::quant(&w[..], k, n, bias, bits)
+        });
+    }
+    // prepacked panels: the stored width must agree with the layer's bits
+    let have_bits = if e.dtype == DTYPE_I8_PANELS { 8 } else { 4 };
+    if bits == 32 {
+        return Err(CkptError::DimsMismatch(format!(
+            "{wname}: layer is fp32 but the checkpoint stores {have_bits}-bit panels"
+        )));
+    }
+    if have_bits != bits {
+        return Err(CkptError::BadDirectory(format!(
+            "{wname}: {have_bits}-bit panels stored for a {bits}-bit layer"
+        )));
+    }
+    let (sdims, scales) = ck.f32_tensor(&format!("{wname}.scales"))?;
+    if sdims != [n] {
+        return Err(CkptError::DimsMismatch(format!(
+            "{wname}.scales: stored dims {sdims:?} != [{n}]"
+        )));
+    }
+    let pw = PackedWeights::from_panels(bits, k, n, scales, ck.panel_bytes(wname)?)
+        .map_err(CkptError::BadDirectory)?;
+    stats.prepacked_panels += 1;
+    stats.model_heap_bytes += pw.packed_bytes() + n * 4;
+    Ok(Linear::from_packed(pw, bias))
+}
+
 /// The full deployed encoder.
 pub struct NativeModel {
     pub dims: NativeDims,
@@ -634,15 +714,27 @@ impl NativeModel {
         }
     }
 
-    /// Load a deployed model from an MKQC checkpoint file: read +
-    /// validate ([`crate::checkpoint::Checkpoint::read`]), check every
-    /// spec tensor's presence and shape against the header dims, then
-    /// prepack the int4/int8 column panels from the stored fp32 master
-    /// weights. Every failure is a typed
-    /// [`CkptError`](crate::checkpoint::CkptError).
+    /// Load a deployed model from an MKQC checkpoint (single file or
+    /// sharded directory): read + validate
+    /// ([`crate::checkpoint::Checkpoint::read`], mmap-backed where the
+    /// platform allows), check every spec tensor's presence and shape
+    /// against the header dims, then build the serving weights — v2
+    /// prepacked panels memcpy straight into
+    /// [`PackedWeights`], fp32 masters quantize+pack
+    /// exactly as the in-memory constructors do. Every failure is a
+    /// typed [`CkptError`](crate::checkpoint::CkptError).
     pub fn from_checkpoint(path: &std::path::Path) -> Result<Self, crate::checkpoint::CkptError> {
+        Self::from_checkpoint_with_stats(path).map(|(m, _)| m)
+    }
+
+    /// [`NativeModel::from_checkpoint`] plus what the load actually did
+    /// (prepacked vs quantized sites, mmap vs buffered, RSS proxy) —
+    /// the observability surface behind `ckpt bench-load`.
+    pub fn from_checkpoint_with_stats(
+        path: &std::path::Path,
+    ) -> Result<(Self, crate::modelstore::LoadStats), crate::checkpoint::CkptError> {
         let ck = crate::checkpoint::Checkpoint::read(path)?;
-        Self::from_checkpoint_data(&ck)
+        Self::from_checkpoint_data_with_stats(&ck)
     }
 
     /// [`NativeModel::from_checkpoint`] over an already-parsed
@@ -650,17 +742,30 @@ impl NativeModel {
     pub fn from_checkpoint_data(
         ck: &crate::checkpoint::Checkpoint,
     ) -> Result<Self, crate::checkpoint::CkptError> {
+        Self::from_checkpoint_data_with_stats(ck).map(|(m, _)| m)
+    }
+
+    /// The real checkpoint→model builder. Tensor payloads are consumed
+    /// through borrowed views ([`Checkpoint::f32_view`]
+    /// (crate::checkpoint::Checkpoint::f32_view) / `panel_bytes`) — each
+    /// tensor's bytes are copied at most once, into the buffer the model
+    /// actually owns, never into an intermediate decoded tensor list; on
+    /// a mapped v2 file the fp32 payload is read in place.
+    pub fn from_checkpoint_data_with_stats(
+        ck: &crate::checkpoint::Checkpoint,
+    ) -> Result<(Self, crate::modelstore::LoadStats), crate::checkpoint::CkptError> {
         use crate::checkpoint::CkptError;
         let h = ck.header();
+        let mut stats = crate::modelstore::LoadStats {
+            mapped: ck.is_mapped(),
+            file_heap_bytes: ck.file_heap_bytes(),
+            ..Default::default()
+        };
         // dims come straight from the directory — no payload decode needed
-        // for the spec check (each tensor's bytes are decoded exactly once,
-        // in named_tensors below).
+        // for the spec check (stored dims are the logical shape for every
+        // dtype, so this is dtype-agnostic).
         for (name, dims) in crate::checkpoint::param_specs(&h.dims) {
-            let e = ck
-                .entries()
-                .iter()
-                .find(|e| e.name == name)
-                .ok_or_else(|| CkptError::MissingTensor(name.clone()))?;
+            let e = ck.entry(&name).ok_or_else(|| CkptError::MissingTensor(name.clone()))?;
             if e.dims != dims {
                 return Err(CkptError::DimsMismatch(format!(
                     "{name}: stored dims {:?} != header-implied {dims:?}",
@@ -668,8 +773,49 @@ impl NativeModel {
                 )));
             }
         }
-        let tensors = ck.named_tensors();
-        Ok(Self::from_named_tensors(h.dims, &h.bits, &h.act_scales, &tensors))
+        let (d, dff) = (h.dims.d_model, h.dims.d_ff);
+        let mut layers = Vec::with_capacity(h.dims.n_layers);
+        for l in 0..h.dims.n_layers {
+            let bits_l = h.bits[l];
+            let p = |s: &str| format!("l{l}_{s}");
+            layers.push(NativeLayer {
+                d,
+                dff,
+                heads: h.dims.n_heads,
+                bits: bits_l,
+                wq: load_linear(ck, &mut stats, &p("wq"), &p("bq"), d, d, bits_l)?,
+                wk: load_linear(ck, &mut stats, &p("wk"), &p("bk"), d, d, bits_l)?,
+                wv: load_linear(ck, &mut stats, &p("wv"), &p("bv"), d, d, bits_l)?,
+                wo: load_linear(ck, &mut stats, &p("wo"), &p("bo"), d, d, bits_l)?,
+                w1: load_linear(ck, &mut stats, &p("w1"), &p("b1"), d, dff, bits_l)?,
+                w2: load_linear(ck, &mut stats, &p("w2"), &p("b2"), dff, d, bits_l)?,
+                ln1_g: load_f32(ck, &mut stats, &p("ln1_g"))?,
+                ln1_b: load_f32(ck, &mut stats, &p("ln1_b"))?,
+                ln2_g: load_f32(ck, &mut stats, &p("ln2_g"))?,
+                ln2_b: load_f32(ck, &mut stats, &p("ln2_b"))?,
+                act_scales: h.act_scales[l],
+            });
+        }
+        let pool_w = ck.f32_view("pool_w")?;
+        let cls_w = ck.f32_view("cls_w")?;
+        stats.model_heap_bytes += packed_f32_bytes(d, d) + packed_f32_bytes(d, h.dims.n_classes);
+        let model = NativeModel {
+            dims: h.dims,
+            bits: h.bits.clone(),
+            emb_word: load_f32(ck, &mut stats, "emb_word")?,
+            emb_pos: load_f32(ck, &mut stats, "emb_pos")?,
+            emb_ln_g: load_f32(ck, &mut stats, "emb_ln_g")?,
+            emb_ln_b: load_f32(ck, &mut stats, "emb_ln_b")?,
+            layers,
+            pool: Linear::f32(&pool_w[..], d, d, load_f32(ck, &mut stats, "pool_b")?),
+            cls: Linear::f32(
+                &cls_w[..],
+                d,
+                h.dims.n_classes,
+                load_f32(ck, &mut stats, "cls_b")?,
+            ),
+        };
+        Ok((model, stats))
     }
 
     /// Forward a `(bsz, t)` batch to `(bsz, n_classes)` logits, for any

@@ -1,15 +1,18 @@
 //! Minimal CLI argument parser (clap is not in the vendored crate set).
 //!
-//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments. Every binary in this workspace parses through here so help
-//! text and error behaviour stay uniform.
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated
+//! flags (`--model a=x --model b=y`, read back via [`Args::get_all`]),
+//! and positional arguments. Every binary in this workspace parses
+//! through here so help text and error behaviour stay uniform.
 
 use std::collections::HashMap;
 
 #[derive(Debug, Default)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: HashMap<String, String>,
+    /// Every value a key was given, in argv order; single-value accessors
+    /// read the last one (last-wins, the usual CLI override convention).
+    flags: HashMap<String, Vec<String>>,
     order: Vec<String>,
 }
 
@@ -42,11 +45,17 @@ impl Args {
         if !self.flags.contains_key(&k) {
             self.order.push(k.clone());
         }
-        self.flags.insert(k, v);
+        self.flags.entry(k).or_default().push(v);
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in argv order (empty when
+    /// the flag was never given) — e.g. `--model a=x --model b=y`.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
     }
 
     pub fn str(&self, key: &str, default: &str) -> String {
@@ -107,6 +116,14 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--dry-run");
         assert!(a.bool("dry-run"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins() {
+        let a = parse("--model a=x.mkqc --model b=y.mkqc --rate 10 --rate 20");
+        assert_eq!(a.get_all("model"), vec!["a=x.mkqc", "b=y.mkqc"]);
+        assert_eq!(a.f64("rate", 0.0), 20.0, "single-value accessors read the last value");
+        assert!(a.get_all("absent").is_empty());
     }
 
     #[test]

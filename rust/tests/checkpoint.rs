@@ -62,13 +62,17 @@ fn export_is_deterministic() {
     std::fs::remove_file(&p2).ok();
 }
 
-fn valid_bytes() -> Vec<u8> {
+fn valid_bytes_with(version: u32) -> Vec<u8> {
     let dims = small_dims();
-    let path = tmp_path("corrupt_src.mkqc");
-    checkpoint::export_random(&path, dims, &[8, 4], 9).unwrap();
+    let path = tmp_path(&format!("corrupt_src_v{version}.mkqc"));
+    checkpoint::export_random_with(&path, dims, &[8, 4], 9, version).unwrap();
     let bytes = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).ok();
     bytes
+}
+
+fn valid_bytes() -> Vec<u8> {
+    valid_bytes_with(checkpoint::VERSION)
 }
 
 #[test]
@@ -102,7 +106,10 @@ fn corrupt_magic_version_crc_truncation() {
 
 #[test]
 fn corrupt_header_dims_is_typed_dims_mismatch() {
-    let good = valid_bytes();
+    // v1 has no header CRC, so a *plausible* header patch parses and the
+    // typed structural/spec checks are the only net — exactly what this
+    // test pins down.
+    let good = valid_bytes_with(1);
     // d_model lives at byte offset 8 + 3*4 = 20 (vocab, seq, n_layers
     // precede it). Halving it keeps the header self-consistent (still
     // divisible by n_heads, still even) but contradicts every stored
@@ -129,16 +136,44 @@ fn corrupt_header_dims_is_typed_dims_mismatch() {
 }
 
 #[test]
+fn v2_header_patches_fail_header_crc() {
+    // the same plausible patches on a v2 file are caught *before* any
+    // semantic check by the header/directory CRC — the bit-flip class v1
+    // could not see (e.g. an activation-scale mantissa flip) included.
+    let good = valid_bytes_with(2);
+    for (lo, patch) in [
+        (20usize, 16u32.to_le_bytes()), // d_model halved (plausible)
+        (24, 7u32.to_le_bytes()),       // n_heads = 7 (inconsistent)
+    ] {
+        let mut bad = good.clone();
+        bad[lo..lo + 4].copy_from_slice(&patch);
+        assert!(
+            matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadHeaderCrc { .. })),
+            "patch at {lo} must fail the header CRC"
+        );
+    }
+    // act-scale flip: bits vector is 2×u32 at 40, scales start at 48
+    let mut bad = good;
+    bad[49] ^= 0x10;
+    assert!(matches!(
+        Checkpoint::from_bytes(bad),
+        Err(CkptError::BadHeaderCrc { .. })
+    ));
+}
+
+#[test]
 fn overlapping_directory_entries_rejected() {
-    // hand-build a 2-tensor file, then patch the second entry's offset to
-    // alias the first tensor's bytes
+    // hand-build a 2-tensor v1 file, then patch the second entry's offset
+    // to alias the first tensor's bytes (on v2 any directory patch trips
+    // the header CRC first, so the overlap check is pinned via v1 — the
+    // check itself runs for both versions).
     let dims = NativeDims { vocab: 8, seq: 4, n_layers: 1, d_model: 4, n_heads: 2, d_ff: 8, n_classes: 2 };
     let header = CkptHeader { dims, bits: vec![8], act_scales: vec![[0.1; 4]] };
-    let mut w = Writer::new(header).unwrap();
+    let mut w = Writer::v1(header).unwrap();
     w.add_f32("a", &[2], &[1.0, 2.0]).unwrap();
     w.add_f32("b", &[2], &[3.0, 4.0]).unwrap();
     let mut bytes = w.to_bytes();
-    // fixed header: 40 + 4*1 + 16*1 = 60 bytes. entry "a" = 25 bytes
+    // fixed header: 40 + 4*1 + 16*1 = 60 bytes. v1 entry "a" = 25 bytes
     // (2 name_len + 1 name + 1 dtype + 1 rank + 4 dims + 8 offset + 8 len),
     // entry "b"'s offset field starts at 60 + 25 + 9 = 94.
     assert_eq!(&bytes[85 + 2..85 + 3], b"b", "layout drifted — fix the patch offset");

@@ -1,0 +1,285 @@
+//! Model-store subsystem acceptance tests.
+//!
+//! Contracts pinned here (the ISSUE's acceptance criteria):
+//!   * v1 → `migrate` → v2-prepacked and direct export-v2 round-trips
+//!     are **bit-for-bit** with the in-memory model, across every
+//!     dispatchable kernel variant;
+//!   * the mmap load path and the buffered-read fallback produce
+//!     bit-for-bit identical models;
+//!   * sharded (manifest + N payload files) checkpoints load identically
+//!     to the single-file form;
+//!   * corruption classes are typed: bad panel dtype, bad header /
+//!     directory CRC, a manifest referencing a missing shard;
+//!   * one server over ≥2 registered models routes per-model outputs
+//!     bit-for-bit (covered at the unit level in `coordinator::server`;
+//!     re-checked here end to end through checkpoint-loaded models).
+
+use std::path::PathBuf;
+
+use mkq::checkpoint::{self, Checkpoint, CkptError, DTYPE_F32};
+use mkq::coordinator::{Server, ServerConfig};
+use mkq::kernels::{Dispatcher, KernelKind};
+use mkq::modelstore::{migrate_checkpoint, Registry};
+use mkq::runtime::{NativeDims, NativeModel};
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mkq_store_{}_{name}", std::process::id()))
+}
+
+fn small_dims() -> NativeDims {
+    NativeDims { vocab: 64, seq: 8, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 }
+}
+
+/// Logits of `model` on a fixed probe batch under one dispatcher.
+fn probe(model: &NativeModel, disp: &Dispatcher) -> Vec<f32> {
+    let d = model.dims;
+    let bsz = 3usize;
+    let ids: Vec<i32> = (0..bsz * d.seq).map(|i| ((i * 7) % d.vocab) as i32).collect();
+    let mut mask = vec![1.0f32; bsz * d.seq];
+    for m in mask[2 * d.seq..].iter_mut() {
+        *m = 0.0; // one fully padded row rides along
+    }
+    model.forward(disp, &ids, &mask, bsz, d.seq)
+}
+
+#[test]
+fn v1_migrate_v2_and_shards_are_bit_for_bit_across_kernels() {
+    let dims = small_dims();
+    for (seed, bits) in [(31u64, vec![8u32, 4]), (32, vec![4, 4]), (33, vec![32, 4])] {
+        let v1 = tmp_path(&format!("mig_{seed}_v1.mkqc"));
+        let v2 = tmp_path(&format!("mig_{seed}_v2.mkqc"));
+        let sharded = tmp_path(&format!("mig_{seed}_shards"));
+        let in_mem = NativeModel::random(dims, &bits, seed);
+
+        checkpoint::export_random_with(&v1, dims, &bits, seed, 1).unwrap();
+        let src = Checkpoint::read(&v1).unwrap();
+        assert_eq!(src.version(), 1);
+        let summary = migrate_checkpoint(&src, &v2, 1).unwrap();
+        let quantized_layers = bits.iter().filter(|&&b| b != 32).count();
+        assert_eq!(summary.packed, 6 * quantized_layers, "six weight sites per quantized layer");
+        assert_eq!(summary.shards, 1);
+        let sh = migrate_checkpoint(&src, &sharded, 3).unwrap();
+        assert_eq!(sh.shards, 3);
+
+        // the migrated file really is v2-prepacked: quantized-layer
+        // weights carry a packed dtype + scales sibling, and loading does
+        // zero quantize+pack work
+        let ck2 = Checkpoint::read(&v2).unwrap();
+        assert_eq!(ck2.version(), 2);
+        assert!(ck2.header_crc().is_some());
+        if quantized_layers > 0 {
+            let packed = ck2.entries().iter().find(|e| e.dtype != DTYPE_F32).expect("packed entry");
+            assert!(ck2.entry(&format!("{}.scales", packed.name)).is_some());
+        }
+        let (m2, stats2) = NativeModel::from_checkpoint_with_stats(&v2).unwrap();
+        assert_eq!(stats2.prepacked_panels, 6 * quantized_layers);
+        assert_eq!(stats2.quantized_panels, 0, "v2 load must skip quantize+pack");
+
+        let m1 = NativeModel::from_checkpoint(&v1).unwrap();
+        let msh = NativeModel::from_checkpoint(&sharded).unwrap();
+        for kind in KernelKind::ALL {
+            for threads in [1usize, 3] {
+                let disp = Dispatcher::forced(threads, kind);
+                let want = probe(&in_mem, &disp);
+                assert!(want.iter().all(|x| x.is_finite()));
+                for (label, m) in [("v1", &m1), ("v2-prepacked", &m2), ("sharded", &msh)] {
+                    assert_eq!(
+                        probe(m, &disp),
+                        want,
+                        "{label} logits diverge: bits={bits:?} kernel={} threads={threads}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+        std::fs::remove_file(&v1).ok();
+        std::fs::remove_file(&v2).ok();
+        std::fs::remove_dir_all(&sharded).ok();
+    }
+}
+
+#[test]
+fn mmap_and_buffered_loads_agree_bit_for_bit() {
+    let dims = small_dims();
+    let v1 = tmp_path("mm_v1.mkqc");
+    let v2 = tmp_path("mm_v2.mkqc");
+    checkpoint::export_random_with(&v1, dims, &[8, 4], 41, 1).unwrap();
+    migrate_checkpoint(&Checkpoint::read(&v1).unwrap(), &v2, 1).unwrap();
+    let disp = Dispatcher::with_threads(2);
+    for path in [&v1, &v2] {
+        let mapped = Checkpoint::read(path).unwrap();
+        let buffered = Checkpoint::read_buffered(path).unwrap();
+        assert!(!buffered.is_mapped());
+        #[cfg(unix)]
+        assert!(mapped.is_mapped(), "unix reads should mmap");
+        let (mm, sm) = {
+            let (m, s) = NativeModel::from_checkpoint_data_with_stats(&mapped).unwrap();
+            (probe(&m, &disp), s)
+        };
+        let (mb, sb) = {
+            let (m, s) = NativeModel::from_checkpoint_data_with_stats(&buffered).unwrap();
+            (probe(&m, &disp), s)
+        };
+        assert_eq!(mm, mb, "mmap vs buffered logits diverge for {}", path.display());
+        assert_eq!(sm.prepacked_panels, sb.prepacked_panels);
+        // the buffered image pins the file on the heap; the mapping does not
+        assert!(buffered.file_heap_bytes() > 0);
+        if mapped.is_mapped() {
+            assert_eq!(mapped.file_heap_bytes(), 0);
+            assert!(sm.rss_proxy_bytes() < sb.rss_proxy_bytes());
+        }
+    }
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_file(&v2).ok();
+}
+
+#[test]
+fn corrupt_panel_dtype_and_header_crc_are_typed() {
+    let dims = small_dims();
+    let v1 = tmp_path("cor_v1.mkqc");
+    let v2 = tmp_path("cor_v2.mkqc");
+    checkpoint::export_random_with(&v1, dims, &[8, 4], 43, 1).unwrap();
+    migrate_checkpoint(&Checkpoint::read(&v1).unwrap(), &v2, 1).unwrap();
+    let good = std::fs::read(&v2).unwrap();
+
+    // locate the first packed entry's dtype byte: directory entries start
+    // at the fixed header end (40 + 4L + 16L); each is
+    // 2 + name + dtype + layout + rank + 4*rank + 16 bytes.
+    let dir_start = 40 + 4 * dims.n_layers + 16 * dims.n_layers;
+    let ck = Checkpoint::read(&v2).unwrap();
+    let mut pos = dir_start;
+    let mut dtype_pos = None;
+    for e in ck.entries() {
+        let this = pos + 2 + e.name.len();
+        if e.dtype != DTYPE_F32 {
+            dtype_pos = Some(this);
+            break;
+        }
+        pos = this + 1 + 1 + 1 + 4 * e.dims.len() + 16;
+    }
+    let dtype_pos = dtype_pos.expect("a migrated int-layer checkpoint has packed entries");
+
+    // corrupt panel dtype → typed BadDirectory (directory structure is
+    // validated while parsing, before the CRC is even reachable)
+    let mut bad = good.clone();
+    assert!(matches!(bad[dtype_pos], 1 | 2), "dtype byte location drifted");
+    bad[dtype_pos] = 9;
+    match Checkpoint::from_bytes(bad) {
+        Err(CkptError::BadDirectory(m)) => assert!(m.contains("dtype"), "got {m:?}"),
+        other => panic!("want BadDirectory for a corrupt panel dtype, got {:?}", other.err()),
+    }
+
+    // unsupported panel-layout byte — same class, its own message
+    let mut bad = good.clone();
+    bad[dtype_pos + 1] = 7; // layout byte follows dtype
+    match Checkpoint::from_bytes(bad) {
+        Err(CkptError::BadDirectory(m)) => assert!(m.contains("panel layout"), "got {m:?}"),
+        other => panic!("want BadDirectory for a bad panel layout, got {:?}", other.err()),
+    }
+
+    // plain header flip → BadHeaderCrc
+    let mut bad = good;
+    bad[45] ^= 0x04; // inside the bit vector
+    assert!(matches!(Checkpoint::from_bytes(bad), Err(CkptError::BadHeaderCrc { .. })));
+
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_file(&v2).ok();
+}
+
+#[test]
+fn sharded_manifest_errors_are_typed() {
+    let dims = small_dims();
+    let v1 = tmp_path("shard_v1.mkqc");
+    let dir = tmp_path("shard_dir");
+    checkpoint::export_random_with(&v1, dims, &[8, 4], 47, 1).unwrap();
+    migrate_checkpoint(&Checkpoint::read(&v1).unwrap(), &dir, 2).unwrap();
+    assert!(Checkpoint::read(&dir).is_ok());
+
+    // manifest referencing a shard that does not exist → ShardMissing
+    let manifest = dir.join(checkpoint::MANIFEST_NAME);
+    let orig = std::fs::read_to_string(&manifest).unwrap();
+    std::fs::write(&manifest, format!("{orig}shard_99.mkqc\n")).unwrap();
+    match Checkpoint::read(&dir) {
+        Err(CkptError::ShardMissing { shard, .. }) => assert_eq!(shard, "shard_99.mkqc"),
+        other => panic!("want ShardMissing, got {:?}", other.err()),
+    }
+
+    // bad manifest tag → BadHeader
+    std::fs::write(&manifest, format!("BOGUS\n{orig}")).unwrap();
+    assert!(matches!(Checkpoint::read(&dir), Err(CkptError::BadHeader(_))));
+
+    // directory without a manifest at all → BadHeader
+    std::fs::remove_file(&manifest).unwrap();
+    assert!(matches!(Checkpoint::read(&dir), Err(CkptError::BadHeader(_))));
+
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn one_server_two_checkpoint_models_bit_for_bit() {
+    // end to end: two different checkpoints (one v1, one migrated
+    // v2-prepacked) registered in one server; routed responses must equal
+    // each model's direct forward bit for bit.
+    let dims_a = small_dims();
+    let dims_b = NativeDims {
+        vocab: 48, seq: 6, n_layers: 1, d_model: 16, n_heads: 2, d_ff: 32, n_classes: 3,
+    };
+    let pa = tmp_path("srv_a.mkqc");
+    let pb1 = tmp_path("srv_b_v1.mkqc");
+    let pb = tmp_path("srv_b_v2.mkqc");
+    checkpoint::export_random_with(&pa, dims_a, &[8, 4], 51, 1).unwrap();
+    checkpoint::export_random_with(&pb1, dims_b, &[4], 52, 1).unwrap();
+    migrate_checkpoint(&Checkpoint::read(&pb1).unwrap(), &pb, 1).unwrap();
+
+    let mut reg = Registry::new();
+    assert_eq!(reg.load("alpha", &pa).unwrap(), 0);
+    assert_eq!(reg.load("beta", &pb).unwrap(), 1);
+    assert!(reg.load("alpha", &pa).is_err(), "duplicate names rejected");
+
+    let mut server = Server::new(
+        &reg,
+        ServerConfig {
+            batch_buckets: vec![1, 2],
+            seq_buckets: vec![4],
+            batch_window: std::time::Duration::ZERO,
+        },
+    )
+    .unwrap();
+    let reqs: Vec<(usize, Vec<i32>)> = vec![
+        (0, vec![1, 2, 3, 4, 5]),
+        (1, vec![6, 7]),
+        (0, vec![8; 8]),
+        (1, vec![9; 6]),
+        (1, vec![1]),
+    ];
+    for (m, ids) in &reqs {
+        server.submit_to(*m, ids.clone(), vec![1.0; ids.len()]).unwrap();
+    }
+    let mut out = server.drain().unwrap();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), reqs.len());
+    let summary = server.summary();
+    assert_eq!(summary.per_model[0], ("alpha".to_string(), 2));
+    assert_eq!(summary.per_model[1], ("beta".to_string(), 3));
+
+    // reference: each model forwarded directly at the bucket shapes the
+    // server used (padding to the bucket ceiling, batch of 1)
+    for (r, (m, ids)) in out.iter().zip(&reqs) {
+        assert_eq!(r.model, *m);
+        let model = &reg.get(*m).unwrap().model;
+        let t = r.seq_bucket;
+        let mut pids = vec![0i32; r.batch_size * t];
+        let mut pmask = vec![0.0f32; r.batch_size * t];
+        pids[..ids.len()].copy_from_slice(ids);
+        for v in pmask[..ids.len()].iter_mut() {
+            *v = 1.0;
+        }
+        let want = model.forward(&reg.disp, &pids, &pmask, r.batch_size, t);
+        let nc = model.dims.n_classes;
+        assert_eq!(r.logits, want[..nc], "request {} routed output diverges", r.id);
+    }
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb1).ok();
+    std::fs::remove_file(&pb).ok();
+}
