@@ -24,6 +24,7 @@ found, 2 malformed current input.
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -32,6 +33,17 @@ def load_buckets(path):
     with open(path) as f:
         doc = json.load(f)
     return {row["name"]: row for row in doc.get("kernels", [])}
+
+
+def usable(v):
+    """A timing value the gate can divide by: a finite number > 0.
+
+    NaN (a bench that recorded no samples), 0 (a clock that never ticked)
+    and non-numeric junk would otherwise either crash the ratio or —
+    worse, for NaN — make every comparison silently false and wave a real
+    regression through.
+    """
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v) and v > 0
 
 
 def main():
@@ -80,7 +92,13 @@ def main():
     print(f"bench-diff: {len(shared)} shared buckets "
           f"(gate: >{args.max_regress:.0%} on min_us, noise floor {args.min_us}us)")
     for name in shared:
-        b, c = base[name]["min_us"], cur[name]["min_us"]
+        b, c = base[name].get("min_us"), cur[name].get("min_us")
+        if not usable(b):
+            print(f"bench-diff: WARNING bucket {name!r} baseline min_us={b!r} unusable — not gated")
+            continue
+        if not usable(c):
+            print(f"bench-diff: WARNING bucket {name!r} current min_us={c!r} unusable — not gated")
+            continue
         if b < args.min_us:
             continue
         ratio = c / b - 1.0

@@ -112,6 +112,7 @@ fn main() {
                     batch_buckets: vec![1, 8, 16],
                     seq_buckets,
                     batch_window: std::time::Duration::ZERO,
+                    ..Default::default()
                 },
             )
             .unwrap();

@@ -1,0 +1,239 @@
+//! Fault injection for the serving stack — compiled in, inert by default.
+//!
+//! Production serving is defined as much by what happens under partial
+//! failure as by p50 latency, and none of it is testable without a way to
+//! *cause* failure on demand. This module is that switch: a [`Faults`]
+//! hook threaded through the native backends
+//! ([`NativeBackend`](crate::runtime::NativeBackend) and the model-store
+//! [`Registry`](crate::modelstore::Registry)), consulted once per
+//! `serve_forward`, costing one relaxed atomic load when no plan is
+//! armed.
+//!
+//! A [`FaultPlan`] can:
+//!   * **fail** the Nth forward (or every Nth) with a typed
+//!     [`InjectedFault`] error — exercises per-batch error fan-out;
+//!   * **panic** on the Nth forward (fires once) — exercises
+//!     `catch_unwind` isolation in the server's `pump()`;
+//!   * **delay** every forward by a fixed duration — a stalled backend,
+//!     for deadline-shedding tests.
+//!
+//! Plans come from the environment at backend construction
+//! (`MKQ_FAULT_FAIL_FORWARD=N|every:N`, `MKQ_FAULT_PANIC_FORWARD=N`,
+//! `MKQ_FAULT_DELAY_US=N` — the chaos CI job drives the release binary
+//! this way) or programmatically via `set_faults` (the `tests/chaos.rs`
+//! suite; per-instance state, so parallel test threads never share a
+//! counter).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Which forwards of the sequence 1, 2, 3, … fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailForward {
+    /// Exactly the Nth forward fails (1-based), once.
+    Nth(u64),
+    /// Every Nth forward fails (N, 2N, 3N, …).
+    Every(u64),
+}
+
+/// A declarative fault plan. `Default` is fully inert.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub fail_forward: Option<FailForward>,
+    /// Panic on this (1-based) forward — fires at most once.
+    pub panic_forward: Option<u64>,
+    /// Added latency before every forward (a stalled backend).
+    pub delay: Duration,
+}
+
+impl FaultPlan {
+    pub fn is_inert(&self) -> bool {
+        self.fail_forward.is_none() && self.panic_forward.is_none() && self.delay.is_zero()
+    }
+
+    /// Parse the `MKQ_FAULT_*` environment knobs (unset ⇒ inert; an
+    /// unparsable value is reported and ignored rather than silently
+    /// arming or disarming a fault).
+    pub fn from_env() -> Self {
+        let mut plan = FaultPlan::default();
+        if let Ok(v) = std::env::var("MKQ_FAULT_FAIL_FORWARD") {
+            match parse_fail_spec(&v) {
+                Some(spec) => plan.fail_forward = Some(spec),
+                None => eprintln!("MKQ_FAULT_FAIL_FORWARD={v:?} is not N or every:N — ignored"),
+            }
+        }
+        if let Ok(v) = std::env::var("MKQ_FAULT_PANIC_FORWARD") {
+            match v.parse::<u64>() {
+                Ok(n) if n > 0 => plan.panic_forward = Some(n),
+                _ => eprintln!("MKQ_FAULT_PANIC_FORWARD={v:?} is not a positive integer — ignored"),
+            }
+        }
+        if let Ok(v) = std::env::var("MKQ_FAULT_DELAY_US") {
+            match v.parse::<u64>() {
+                Ok(us) => plan.delay = Duration::from_micros(us),
+                _ => eprintln!("MKQ_FAULT_DELAY_US={v:?} is not an integer — ignored"),
+            }
+        }
+        plan
+    }
+
+    pub fn fail_nth(n: u64) -> Self {
+        FaultPlan { fail_forward: Some(FailForward::Nth(n)), ..Default::default() }
+    }
+
+    pub fn fail_every(n: u64) -> Self {
+        FaultPlan { fail_forward: Some(FailForward::Every(n)), ..Default::default() }
+    }
+
+    pub fn panic_nth(n: u64) -> Self {
+        FaultPlan { panic_forward: Some(n), ..Default::default() }
+    }
+
+    pub fn delay_us(us: u64) -> Self {
+        FaultPlan { delay: Duration::from_micros(us), ..Default::default() }
+    }
+}
+
+fn parse_fail_spec(v: &str) -> Option<FailForward> {
+    if let Some(rest) = v.strip_prefix("every:") {
+        rest.parse().ok().filter(|&n| n > 0).map(FailForward::Every)
+    } else {
+        v.parse().ok().filter(|&n| n > 0).map(FailForward::Nth)
+    }
+}
+
+/// The typed error an armed fail-forward plan injects — implements
+/// `std::error::Error`, so it converts into `anyhow::Error` via `?` and
+/// stays recognizable in chaos-test assertions by message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// 1-based index of the forward that failed.
+    pub forward: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault: serve_forward #{} failed", self.forward)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Per-backend fault state: a plan plus the forward counter. Interior
+/// mutability via an atomic because `Backend::serve_forward` takes
+/// `&self`.
+#[derive(Debug)]
+pub struct Faults {
+    plan: FaultPlan,
+    forwards: AtomicU64,
+}
+
+impl Default for Faults {
+    fn default() -> Self {
+        Self::inert()
+    }
+}
+
+impl Faults {
+    pub fn inert() -> Self {
+        Self::with_plan(FaultPlan::default())
+    }
+
+    pub fn from_env() -> Self {
+        Self::with_plan(FaultPlan::from_env())
+    }
+
+    pub fn with_plan(plan: FaultPlan) -> Self {
+        Faults { plan, forwards: AtomicU64::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn is_active(&self) -> bool {
+        !self.plan.is_inert()
+    }
+
+    /// Forwards attempted so far (only counted while a plan is armed).
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    /// The per-forward hook: sleeps, panics, or fails according to the
+    /// plan. A no-op (and no counter increment) when inert, so the
+    /// serving hot path pays one relaxed load.
+    pub fn before_forward(&self) -> Result<(), InjectedFault> {
+        if !self.is_active() {
+            return Ok(());
+        }
+        let n = self.forwards.fetch_add(1, Ordering::SeqCst) + 1;
+        if !self.plan.delay.is_zero() {
+            std::thread::sleep(self.plan.delay);
+        }
+        if self.plan.panic_forward == Some(n) {
+            panic!("injected fault: panicking serve_forward #{n}");
+        }
+        match self.plan.fail_forward {
+            Some(FailForward::Nth(k)) if n == k => Err(InjectedFault { forward: n }),
+            Some(FailForward::Every(k)) if n % k == 0 => Err(InjectedFault { forward: n }),
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_plan_never_fires_or_counts() {
+        let f = Faults::inert();
+        assert!(!f.is_active());
+        for _ in 0..100 {
+            assert!(f.before_forward().is_ok());
+        }
+        assert_eq!(f.forwards(), 0, "inert hook must not pay the counter");
+    }
+
+    #[test]
+    fn nth_fails_exactly_once() {
+        let f = Faults::with_plan(FaultPlan::fail_nth(3));
+        let results: Vec<bool> = (0..6).map(|_| f.before_forward().is_ok()).collect();
+        assert_eq!(results, vec![true, true, false, true, true, true]);
+        assert_eq!(f.forwards(), 6);
+    }
+
+    #[test]
+    fn every_fails_periodically() {
+        let f = Faults::with_plan(FaultPlan::fail_every(2));
+        let results: Vec<bool> = (0..6).map(|_| f.before_forward().is_ok()).collect();
+        assert_eq!(results, vec![true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn panic_fires_on_exactly_the_nth() {
+        let f = Faults::with_plan(FaultPlan::panic_nth(2));
+        assert!(f.before_forward().is_ok());
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_forward()));
+        assert!(p.is_err(), "second forward must panic");
+        assert!(f.before_forward().is_ok(), "panic-once: third forward is clean");
+    }
+
+    #[test]
+    fn fail_spec_parsing() {
+        assert_eq!(parse_fail_spec("3"), Some(FailForward::Nth(3)));
+        assert_eq!(parse_fail_spec("every:4"), Some(FailForward::Every(4)));
+        assert_eq!(parse_fail_spec("0"), None);
+        assert_eq!(parse_fail_spec("every:0"), None);
+        assert_eq!(parse_fail_spec("bogus"), None);
+    }
+
+    #[test]
+    fn injected_fault_is_a_std_error() {
+        let e = InjectedFault { forward: 7 };
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any}").contains("serve_forward #7"));
+    }
+}

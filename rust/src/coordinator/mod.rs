@@ -4,11 +4,21 @@
 //!                  artifact-path only (feature `xla`).
 //! * [`server`]   — request router + 2-D (batch × seq-length) dynamic
 //!                  batcher + executor over any
-//!                  [`crate::runtime::Backend`] (Table 2, §5.4).
+//!                  [`crate::runtime::Backend`] (Table 2, §5.4), with
+//!                  admission control, deadlines, and per-batch fault
+//!                  isolation.
+//! * [`net`]      — the socket front door: length-prefixed wire protocol
+//!                  over nonblocking `std::net` TCP, plus client-side
+//!                  framing helpers for the load generator.
+//! * [`faults`]   — env/config-driven fault injection (fail-Nth-forward,
+//!                  added latency, panic-once), inert by default; what
+//!                  the chaos suite drives.
 //! * [`trace`]    — mixed-length request-trace generation for the
 //!                  serving demo and benches.
 //! * [`scheduler`]— the paper's warmup/decay lr schedule (§5.2).
 
+pub mod faults;
+pub mod net;
 pub mod scheduler;
 pub mod server;
 pub mod trace;
@@ -16,8 +26,12 @@ pub mod trace;
 pub mod trainer;
 
 pub use crate::quant::{bits_last_n_int4, parse_bits};
+pub use faults::{FaultPlan, Faults, InjectedFault};
+pub use net::{ClientReply, FrontDoor, NetStats, RejectCode, RunOpts, WireModelInfo};
 pub use scheduler::LrSchedule;
-pub use server::{Request, Response, Server, ServerConfig, ServerSummary};
+pub use server::{
+    ModelInfo, Rejected, Request, Response, ResponseBody, Server, ServerConfig, ServerSummary,
+};
 pub use trace::{TraceGen, TraceKind};
 
 #[cfg(feature = "xla")]

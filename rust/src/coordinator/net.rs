@@ -1,0 +1,886 @@
+//! Socket front door: a length-prefixed binary protocol over
+//! nonblocking `std::net` TCP (no new crates), feeding the in-process
+//! [`Server`] batcher.
+//!
+//! # Wire protocol (version 1, all integers little-endian)
+//!
+//! Every message is one frame: a `u32` byte length, then the body. Body
+//! byte 0 is the protocol version, byte 1 the message kind:
+//!
+//! | kind   | code | layout after the 2-byte header                         |
+//! |--------|------|--------------------------------------------------------|
+//! | REQUEST| 0x01 | tag `u64`, model `u16`, deadline_us `u32` (0 = none), n `u16`, n×`i32` ids, n×`f32` mask |
+//! | INFO   | 0x02 | (empty)                                                |
+//! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits      |
+//! | REJECT | 0x82 | tag `u64`, code `u8` ([`RejectCode`]), UTF-8 message   |
+//! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, label_len `u8`, label bytes |
+//!
+//! `tag` is an opaque client-chosen correlation id echoed back verbatim
+//! — replies are **not** ordered across in-flight requests on one
+//! connection, because the dynamic batcher reorders freely (aging,
+//! seq-buckets). Every REQUEST gets exactly one OK or REJECT.
+//!
+//! # Failure semantics
+//!
+//! * Unknown version or undecodable length ⇒ one BadFrame REJECT, then
+//!   the read side closes (the stream offset is unrecoverable).
+//! * A well-framed but unknown kind ⇒ BadFrame REJECT, connection keeps
+//!   going (framing is intact).
+//! * Admission rejects ([`Rejected`]) map to typed [`RejectCode`]s and
+//!   are sent immediately; deadline sheds and backend failures arrive
+//!   asynchronously as REJECTs carrying the same tag.
+//! * A client that disconnects with requests in flight just has its
+//!   responses dropped (`dropped_responses`); the server never blocks on
+//!   a dead peer — writes are nonblocking with per-connection buffers.
+//!
+//! The event loop stays single-threaded (batcher + sockets in one
+//! thread): [`FrontDoor::poll`] is one turn — accept, read, admit, pump,
+//! dispatch, flush, reap — and [`FrontDoor::run`] wraps it with
+//! wall-clock/idle exits plus a graceful wind-down that drains the
+//! batcher and flushes every reply before closing.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::server::{ModelInfo, Rejected, Response, ResponseBody, Server};
+use crate::runtime::Backend;
+
+pub const PROTO_VERSION: u8 = 1;
+/// Largest accepted frame body; anything longer is protocol-fatal.
+pub const MAX_FRAME: usize = 1 << 20;
+
+pub const MSG_REQUEST: u8 = 0x01;
+pub const MSG_INFO: u8 = 0x02;
+pub const MSG_OK: u8 = 0x81;
+pub const MSG_REJECT: u8 = 0x82;
+pub const MSG_INFO_RESP: u8 = 0x83;
+
+/// Typed reject reasons on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    QueueFull = 1,
+    DeadlineExceeded = 2,
+    InvalidRequest = 3,
+    /// The request's batch failed or panicked in the backend.
+    BackendFailed = 4,
+    /// Undecodable or protocol-violating frame.
+    BadFrame = 5,
+    /// Connection limit reached; retry later.
+    ServerBusy = 6,
+}
+
+impl RejectCode {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(RejectCode::QueueFull),
+            2 => Some(RejectCode::DeadlineExceeded),
+            3 => Some(RejectCode::InvalidRequest),
+            4 => Some(RejectCode::BackendFailed),
+            5 => Some(RejectCode::BadFrame),
+            6 => Some(RejectCode::ServerBusy),
+            _ => None,
+        }
+    }
+}
+
+fn code_of(rej: &Rejected) -> RejectCode {
+    match rej {
+        Rejected::QueueFull { .. } => RejectCode::QueueFull,
+        Rejected::DeadlineExceeded { .. } => RejectCode::DeadlineExceeded,
+        Rejected::InvalidRequest(_) => RejectCode::InvalidRequest,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame bodies (length prefix is added at send time)
+// ---------------------------------------------------------------------
+
+/// Encode a REQUEST body. `deadline_us == 0` means no deadline.
+pub fn encode_request(tag: u64, model: u16, deadline_us: u32, ids: &[i32], mask: &[f32]) -> Vec<u8> {
+    assert_eq!(ids.len(), mask.len(), "ids/mask length mismatch");
+    assert!(ids.len() <= u16::MAX as usize, "request too long for the wire (n is u16)");
+    let mut b = Vec::with_capacity(18 + 8 * ids.len());
+    b.push(PROTO_VERSION);
+    b.push(MSG_REQUEST);
+    b.extend_from_slice(&tag.to_le_bytes());
+    b.extend_from_slice(&model.to_le_bytes());
+    b.extend_from_slice(&deadline_us.to_le_bytes());
+    b.extend_from_slice(&(ids.len() as u16).to_le_bytes());
+    for &id in ids {
+        b.extend_from_slice(&id.to_le_bytes());
+    }
+    for &m in mask {
+        b.extend_from_slice(&m.to_le_bytes());
+    }
+    b
+}
+
+pub fn encode_info_request() -> Vec<u8> {
+    vec![PROTO_VERSION, MSG_INFO]
+}
+
+fn encode_ok(tag: u64, model: u16, logits: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(14 + 4 * logits.len());
+    b.push(PROTO_VERSION);
+    b.push(MSG_OK);
+    b.extend_from_slice(&tag.to_le_bytes());
+    b.extend_from_slice(&model.to_le_bytes());
+    b.extend_from_slice(&(logits.len() as u16).to_le_bytes());
+    for &l in logits {
+        b.extend_from_slice(&l.to_le_bytes());
+    }
+    b
+}
+
+fn encode_reject(tag: u64, code: RejectCode, msg: &str) -> Vec<u8> {
+    let msg = msg.as_bytes();
+    let take = msg.len().min(512); // bound reject payloads
+    let mut b = Vec::with_capacity(11 + take);
+    b.push(PROTO_VERSION);
+    b.push(MSG_REJECT);
+    b.extend_from_slice(&tag.to_le_bytes());
+    b.push(code.as_u8());
+    b.extend_from_slice(&msg[..take]);
+    b
+}
+
+fn encode_info_resp(models: &[ModelInfo]) -> Vec<u8> {
+    let mut b = vec![PROTO_VERSION, MSG_INFO_RESP];
+    b.extend_from_slice(&(models.len() as u16).to_le_bytes());
+    for m in models {
+        b.extend_from_slice(&(m.vocab as u32).to_le_bytes());
+        b.extend_from_slice(&(m.seq as u16).to_le_bytes());
+        b.extend_from_slice(&(m.n_classes as u16).to_le_bytes());
+        let label = m.label.as_bytes();
+        let take = label.len().min(u8::MAX as usize);
+        b.push(take as u8);
+        b.extend_from_slice(&label[..take]);
+    }
+    b
+}
+
+struct WireRequest {
+    tag: u64,
+    model: u16,
+    deadline_us: u32,
+    ids: Vec<i32>,
+    mask: Vec<f32>,
+}
+
+fn decode_request(body: &[u8]) -> std::result::Result<WireRequest, String> {
+    if body.len() < 18 {
+        return Err(format!("request frame too short ({} bytes)", body.len()));
+    }
+    let tag = u64::from_le_bytes(body[2..10].try_into().unwrap());
+    let model = u16::from_le_bytes(body[10..12].try_into().unwrap());
+    let deadline_us = u32::from_le_bytes(body[12..16].try_into().unwrap());
+    let n = u16::from_le_bytes(body[16..18].try_into().unwrap()) as usize;
+    if body.len() != 18 + 8 * n {
+        return Err(format!("request frame length {} != {} for n={n}", body.len(), 18 + 8 * n));
+    }
+    let mut ids = Vec::with_capacity(n);
+    let mut mask = Vec::with_capacity(n);
+    let ids_off = 18;
+    let mask_off = 18 + 4 * n;
+    for i in 0..n {
+        let o = ids_off + 4 * i;
+        ids.push(i32::from_le_bytes(body[o..o + 4].try_into().unwrap()));
+        let o = mask_off + 4 * i;
+        mask.push(f32::from_le_bytes(body[o..o + 4].try_into().unwrap()));
+    }
+    Ok(WireRequest { tag, model, deadline_us, ids, mask })
+}
+
+/// One registered model as advertised by INFO_RESP.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireModelInfo {
+    pub label: String,
+    pub vocab: u32,
+    pub seq: u16,
+    pub n_classes: u16,
+}
+
+/// A decoded server→client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientReply {
+    Ok { tag: u64, model: u16, logits: Vec<f32> },
+    Reject { tag: u64, code: RejectCode, msg: String },
+    Info { models: Vec<WireModelInfo> },
+}
+
+fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
+    if body.len() < 2 {
+        return Err("reply frame too short".into());
+    }
+    if body[0] != PROTO_VERSION {
+        return Err(format!("unsupported protocol version {}", body[0]));
+    }
+    match body[1] {
+        MSG_OK => {
+            if body.len() < 14 {
+                return Err("OK frame too short".into());
+            }
+            let tag = u64::from_le_bytes(body[2..10].try_into().unwrap());
+            let model = u16::from_le_bytes(body[10..12].try_into().unwrap());
+            let nc = u16::from_le_bytes(body[12..14].try_into().unwrap()) as usize;
+            if body.len() != 14 + 4 * nc {
+                return Err(format!("OK frame length {} != {}", body.len(), 14 + 4 * nc));
+            }
+            let logits = (0..nc)
+                .map(|i| {
+                    let o = 14 + 4 * i;
+                    f32::from_le_bytes(body[o..o + 4].try_into().unwrap())
+                })
+                .collect();
+            Ok(ClientReply::Ok { tag, model, logits })
+        }
+        MSG_REJECT => {
+            if body.len() < 11 {
+                return Err("REJECT frame too short".into());
+            }
+            let tag = u64::from_le_bytes(body[2..10].try_into().unwrap());
+            let code = RejectCode::from_u8(body[10])
+                .ok_or_else(|| format!("unknown reject code {}", body[10]))?;
+            let msg = String::from_utf8_lossy(&body[11..]).into_owned();
+            Ok(ClientReply::Reject { tag, code, msg })
+        }
+        MSG_INFO_RESP => {
+            if body.len() < 4 {
+                return Err("INFO_RESP frame too short".into());
+            }
+            let n = u16::from_le_bytes(body[2..4].try_into().unwrap()) as usize;
+            let mut models = Vec::with_capacity(n);
+            let mut off = 4;
+            for _ in 0..n {
+                if body.len() < off + 9 {
+                    return Err("INFO_RESP truncated".into());
+                }
+                let vocab = u32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                let seq = u16::from_le_bytes(body[off + 4..off + 6].try_into().unwrap());
+                let n_classes = u16::from_le_bytes(body[off + 6..off + 8].try_into().unwrap());
+                let label_len = body[off + 8] as usize;
+                off += 9;
+                if body.len() < off + label_len {
+                    return Err("INFO_RESP label truncated".into());
+                }
+                let label = String::from_utf8_lossy(&body[off..off + label_len]).into_owned();
+                off += label_len;
+                models.push(WireModelInfo { label, vocab, seq, n_classes });
+            }
+            Ok(ClientReply::Info { models })
+        }
+        other => Err(format!("unexpected server message kind {other:#04x}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client helpers (blocking; what `mkq-bert loadgen` and tests use)
+// ---------------------------------------------------------------------
+
+/// Write one frame (length prefix + body) to a blocking stream.
+pub fn send_frame(stream: &mut TcpStream, body: &[u8]) -> io::Result<()> {
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(body)
+}
+
+/// Read one server reply from a blocking stream.
+pub fn read_reply(stream: &mut TcpStream) -> io::Result<ClientReply> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad frame length {len}")));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    decode_reply(&body).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+// ---------------------------------------------------------------------
+// Server side
+// ---------------------------------------------------------------------
+
+/// Front-door counters (socket-layer view; the batcher's own accounting
+/// lives in [`crate::coordinator::ServerSummary`]).
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    pub accepted: u64,
+    /// Connections turned away at the limit (ServerBusy).
+    pub rejected_conns: u64,
+    pub disconnects: u64,
+    pub frames_in: u64,
+    pub bad_frames: u64,
+    pub ok_out: u64,
+    pub reject_out: u64,
+    /// Responses whose connection died before dispatch.
+    pub dropped_responses: u64,
+}
+
+impl std::fmt::Display for NetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "net: accepted={} rejected_conns={} disconnects={} frames_in={} bad_frames={} ok_out={} reject_out={} dropped={}",
+            self.accepted,
+            self.rejected_conns,
+            self.disconnects,
+            self.frames_in,
+            self.bad_frames,
+            self.ok_out,
+            self.reject_out,
+            self.dropped_responses,
+        )
+    }
+}
+
+/// One live connection. Two-flag lifecycle: `read_closed` (EOF or
+/// protocol-fatal input — stop reading, still flush pending replies),
+/// `broken` (write side failed — drop immediately).
+struct Conn {
+    stream: TcpStream,
+    /// Generation counter: slots are reused, so in-flight responses
+    /// routed to (slot, gen) can never reach a *different* client that
+    /// later landed in the same slot.
+    gen: u64,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    read_closed: bool,
+    broken: bool,
+}
+
+/// Exit conditions for [`FrontDoor::run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOpts {
+    /// Stop after this much wall clock (`None` = run until `stop`).
+    pub for_secs: Option<f64>,
+    /// Stop after this long with no connections, no pending work, and no
+    /// socket activity — but only once at least one frame was seen
+    /// (smoke tests: "serve one burst, then exit").
+    pub idle_exit_secs: Option<f64>,
+}
+
+/// The nonblocking TCP front door over one [`Server`].
+pub struct FrontDoor {
+    listener: TcpListener,
+    conns: Vec<Option<Conn>>,
+    next_gen: u64,
+    /// server request id -> (conn slot, conn generation, client tag)
+    routes: HashMap<u64, (usize, u64, u64)>,
+    stats: NetStats,
+    max_conns: usize,
+}
+
+impl FrontDoor {
+    pub fn bind<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(FrontDoor {
+            listener,
+            conns: Vec::new(),
+            next_gen: 0,
+            routes: HashMap::new(),
+            stats: NetStats::default(),
+            max_conns: 256,
+        })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    pub fn set_max_conns(&mut self, n: usize) {
+        self.max_conns = n.max(1);
+    }
+
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    pub fn live_conns(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// One event-loop turn: accept, read, admit, pump, dispatch, flush,
+    /// reap. Returns whether anything happened (callers sleep briefly on
+    /// `false` instead of spinning).
+    pub fn poll<B: Backend>(&mut self, server: &mut Server<'_, B>) -> bool {
+        let mut progress = false;
+
+        // accept
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    progress = true;
+                    self.stats.accepted += 1;
+                    if self.live_conns() >= self.max_conns {
+                        // best-effort busy notice on the still-blocking
+                        // socket, then drop it
+                        let mut s = stream;
+                        let body = encode_reject(0, RejectCode::ServerBusy, "connection limit reached");
+                        let _ = s.write_all(&(body.len() as u32).to_le_bytes());
+                        let _ = s.write_all(&body);
+                        self.stats.rejected_conns += 1;
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        self.stats.rejected_conns += 1;
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let gen = self.next_gen;
+                    self.next_gen += 1;
+                    let conn = Conn {
+                        stream,
+                        gen,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        wpos: 0,
+                        read_closed: false,
+                        broken: false,
+                    };
+                    match self.conns.iter().position(|c| c.is_none()) {
+                        Some(slot) => self.conns[slot] = Some(conn),
+                        None => self.conns.push(Some(conn)),
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // transient accept error; retry next poll
+            }
+        }
+
+        // read complete frames from every connection first (frame
+        // handling needs `&mut server`, reads need `&mut self.conns`)
+        let mut frames: Vec<(usize, u64, Vec<u8>)> = Vec::new();
+        for slot in 0..self.conns.len() {
+            let Some(c) = self.conns[slot].as_mut() else { continue };
+            let gen = c.gen;
+            let (p, fs) = Self::read_conn(c, &mut self.stats);
+            progress |= p;
+            for body in fs {
+                frames.push((slot, gen, body));
+            }
+        }
+
+        // handle
+        for (slot, gen, body) in frames {
+            progress = true;
+            self.stats.frames_in += 1;
+            self.handle_frame(server, slot, gen, &body);
+        }
+
+        // pump the batcher until nothing fires, dispatching as we go
+        loop {
+            match server.pump() {
+                Ok(rs) => {
+                    if rs.is_empty() {
+                        break;
+                    }
+                    progress = true;
+                    for r in rs {
+                        self.dispatch(r);
+                    }
+                }
+                Err(e) => {
+                    // pump() isolates backend faults internally; an error
+                    // here is a server-level bug — report and keep the
+                    // front door alive
+                    eprintln!("serve pump error: {e:#}");
+                    break;
+                }
+            }
+        }
+
+        // flush + reap
+        for slot in 0..self.conns.len() {
+            let Some(c) = self.conns[slot].as_mut() else { continue };
+            progress |= Self::flush_conn(c);
+            let flushed = c.wpos >= c.wbuf.len();
+            if c.broken || (c.read_closed && flushed) {
+                self.conns[slot] = None;
+                self.stats.disconnects += 1;
+                progress = true;
+            }
+        }
+
+        progress
+    }
+
+    /// Drive `poll` until a stop/duration/idle condition, then wind down
+    /// gracefully: drain the batcher so every admitted request is
+    /// answered, and flush all replies.
+    pub fn run<B: Backend>(
+        &mut self,
+        server: &mut Server<'_, B>,
+        opts: RunOpts,
+        stop: Option<&AtomicBool>,
+    ) -> Result<()> {
+        let start = Instant::now();
+        let mut last_activity = Instant::now();
+        let mut had_activity = false;
+        loop {
+            if let Some(flag) = stop {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            if let Some(secs) = opts.for_secs {
+                if start.elapsed().as_secs_f64() >= secs {
+                    break;
+                }
+            }
+            let progress = self.poll(server);
+            if progress {
+                had_activity = true;
+                last_activity = Instant::now();
+            }
+            if let Some(idle) = opts.idle_exit_secs {
+                if had_activity
+                    && last_activity.elapsed().as_secs_f64() >= idle
+                    && server.pending() == 0
+                    && self.live_conns() == 0
+                {
+                    break;
+                }
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+        // graceful wind-down: answer everything still queued, then flush
+        let drained = server.drain()?;
+        for r in drained {
+            self.dispatch(r);
+        }
+        self.flush_all();
+        Ok(())
+    }
+
+    fn read_conn(c: &mut Conn, stats: &mut NetStats) -> (bool, Vec<Vec<u8>>) {
+        let mut progress = false;
+        let mut frames = Vec::new();
+        if c.read_closed || c.broken {
+            return (progress, frames);
+        }
+        let mut buf = [0u8; 4096];
+        loop {
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    c.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    progress = true;
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.broken = true;
+                    break;
+                }
+            }
+        }
+        loop {
+            if c.rbuf.len() < 4 {
+                break;
+            }
+            let len = u32::from_le_bytes(c.rbuf[..4].try_into().unwrap()) as usize;
+            if len == 0 || len > MAX_FRAME {
+                // undecodable stream offset: protocol-fatal
+                stats.bad_frames += 1;
+                c.rbuf.clear();
+                c.read_closed = true;
+                break;
+            }
+            if c.rbuf.len() < 4 + len {
+                break;
+            }
+            frames.push(c.rbuf[4..4 + len].to_vec());
+            c.rbuf.drain(..4 + len);
+        }
+        (progress, frames)
+    }
+
+    fn handle_frame<B: Backend>(
+        &mut self,
+        server: &mut Server<'_, B>,
+        slot: usize,
+        gen: u64,
+        body: &[u8],
+    ) {
+        if body.len() < 2 || body[0] != PROTO_VERSION {
+            // version mismatch is unrecoverable for the connection: the
+            // peer speaks a different framing dialect
+            self.stats.bad_frames += 1;
+            let reply = encode_reject(0, RejectCode::BadFrame, "bad or unsupported protocol header");
+            if self.push_to(slot, gen, &reply) {
+                self.stats.reject_out += 1;
+            }
+            self.close_read(slot, gen);
+            return;
+        }
+        match body[1] {
+            MSG_REQUEST => match decode_request(body) {
+                Ok(w) => {
+                    let deadline = if w.deadline_us == 0 {
+                        None
+                    } else {
+                        Some(Duration::from_micros(w.deadline_us as u64))
+                    };
+                    match server.submit_with(w.model as usize, w.ids, w.mask, deadline) {
+                        Ok(id) => {
+                            self.routes.insert(id, (slot, gen, w.tag));
+                        }
+                        Err(rej) => {
+                            let reply = encode_reject(w.tag, code_of(&rej), &rej.to_string());
+                            if self.push_to(slot, gen, &reply) {
+                                self.stats.reject_out += 1;
+                            }
+                        }
+                    }
+                }
+                Err(msg) => {
+                    self.stats.bad_frames += 1;
+                    let tag = if body.len() >= 10 {
+                        u64::from_le_bytes(body[2..10].try_into().unwrap())
+                    } else {
+                        0
+                    };
+                    let reply = encode_reject(tag, RejectCode::BadFrame, &msg);
+                    if self.push_to(slot, gen, &reply) {
+                        self.stats.reject_out += 1;
+                    }
+                }
+            },
+            MSG_INFO => {
+                let reply = encode_info_resp(&server.model_infos());
+                self.push_to(slot, gen, &reply);
+            }
+            other => {
+                // framing is intact: reject this message, keep the conn
+                self.stats.bad_frames += 1;
+                let reply =
+                    encode_reject(0, RejectCode::BadFrame, &format!("unknown message kind {other:#04x}"));
+                if self.push_to(slot, gen, &reply) {
+                    self.stats.reject_out += 1;
+                }
+            }
+        }
+    }
+
+    /// Route one batcher response back to its connection.
+    fn dispatch(&mut self, r: Response) {
+        let Some((slot, gen, tag)) = self.routes.remove(&r.id) else {
+            // not a socket request (locally-submitted trace traffic)
+            return;
+        };
+        let is_ok = r.is_ok();
+        let reply = match &r.body {
+            ResponseBody::Logits(l) => encode_ok(tag, r.model as u16, l),
+            ResponseBody::Shed(rej) => encode_reject(tag, code_of(rej), &rej.to_string()),
+            ResponseBody::Failed(msg) => encode_reject(tag, RejectCode::BackendFailed, msg),
+        };
+        if self.push_to(slot, gen, &reply) {
+            if is_ok {
+                self.stats.ok_out += 1;
+            } else {
+                self.stats.reject_out += 1;
+            }
+        } else {
+            self.stats.dropped_responses += 1;
+        }
+    }
+
+    /// Append one frame to a connection's write buffer if it is still
+    /// the same connection and writable.
+    fn push_to(&mut self, slot: usize, gen: u64, body: &[u8]) -> bool {
+        match self.conns.get_mut(slot).and_then(|c| c.as_mut()) {
+            Some(c) if c.gen == gen && !c.broken => {
+                c.wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                c.wbuf.extend_from_slice(body);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn close_read(&mut self, slot: usize, gen: u64) {
+        if let Some(c) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) {
+            if c.gen == gen {
+                c.read_closed = true;
+            }
+        }
+    }
+
+    fn flush_conn(c: &mut Conn) -> bool {
+        let mut progress = false;
+        if c.broken {
+            return progress;
+        }
+        while c.wpos < c.wbuf.len() {
+            match c.stream.write(&c.wbuf[c.wpos..]) {
+                Ok(0) => {
+                    c.broken = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.wpos += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.broken = true;
+                    break;
+                }
+            }
+        }
+        if c.wpos > 0 && c.wpos >= c.wbuf.len() {
+            c.wbuf.clear();
+            c.wpos = 0;
+        }
+        progress
+    }
+
+    /// Bounded best-effort flush of every connection (wind-down path).
+    fn flush_all(&mut self) {
+        let deadline = Instant::now() + Duration::from_millis(250);
+        loop {
+            let mut pending = false;
+            let mut progress = false;
+            for slot in 0..self.conns.len() {
+                if let Some(c) = self.conns[slot].as_mut() {
+                    progress |= Self::flush_conn(c);
+                    if !c.broken && c.wpos < c.wbuf.len() {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let ids = vec![3i32, 1, 4, 1, 5];
+        let mask = vec![1.0f32, 1.0, 1.0, 0.5, 0.0];
+        let body = encode_request(0xdead_beef_cafe, 2, 1500, &ids, &mask);
+        assert_eq!(body.len(), 18 + 8 * ids.len());
+        assert_eq!((body[0], body[1]), (PROTO_VERSION, MSG_REQUEST));
+        let w = decode_request(&body).unwrap();
+        assert_eq!(w.tag, 0xdead_beef_cafe);
+        assert_eq!(w.model, 2);
+        assert_eq!(w.deadline_us, 1500);
+        assert_eq!(w.ids, ids);
+        assert_eq!(w.mask, mask);
+    }
+
+    #[test]
+    fn request_decode_rejects_bad_lengths() {
+        assert!(decode_request(&[PROTO_VERSION, MSG_REQUEST]).is_err(), "short header");
+        let mut body = encode_request(1, 0, 0, &[1, 2, 3], &[1.0, 1.0, 1.0]);
+        body.pop();
+        assert!(decode_request(&body).is_err(), "truncated payload");
+        let mut body = encode_request(1, 0, 0, &[1, 2, 3], &[1.0, 1.0, 1.0]);
+        body.push(0);
+        assert!(decode_request(&body).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn ok_reply_round_trips() {
+        let body = encode_ok(77, 1, &[0.25, -1.5]);
+        match decode_reply(&body).unwrap() {
+            ClientReply::Ok { tag, model, logits } => {
+                assert_eq!((tag, model), (77, 1));
+                assert_eq!(logits, vec![0.25, -1.5]);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reject_reply_round_trips_with_code() {
+        let rej = Rejected::QueueFull { pending: 8, max_pending: 8 };
+        let body = encode_reject(9, code_of(&rej), &rej.to_string());
+        match decode_reply(&body).unwrap() {
+            ClientReply::Reject { tag, code, msg } => {
+                assert_eq!(tag, 9);
+                assert_eq!(code, RejectCode::QueueFull);
+                assert!(msg.contains("queue full"));
+            }
+            other => panic!("expected Reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn info_resp_round_trips() {
+        let models = vec![
+            ModelInfo { label: "sst2".into(), vocab: 30522, seq: 128, n_classes: 2 },
+            ModelInfo { label: "mnli".into(), vocab: 30522, seq: 64, n_classes: 3 },
+        ];
+        let body = encode_info_resp(&models);
+        match decode_reply(&body).unwrap() {
+            ClientReply::Info { models: got } => {
+                assert_eq!(got.len(), 2);
+                assert_eq!(got[0].label, "sst2");
+                assert_eq!((got[0].vocab, got[0].seq, got[0].n_classes), (30522, 128, 2));
+                assert_eq!(got[1].label, "mnli");
+                assert_eq!(got[1].seq, 64);
+            }
+            other => panic!("expected Info, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reply_decode_rejects_garbage() {
+        assert!(decode_reply(&[]).is_err());
+        assert!(decode_reply(&[9, MSG_OK]).is_err(), "wrong version");
+        assert!(decode_reply(&[PROTO_VERSION, 0x7f]).is_err(), "unknown kind");
+        assert!(decode_reply(&[PROTO_VERSION, MSG_REJECT, 0, 0]).is_err(), "short reject");
+    }
+
+    #[test]
+    fn reject_codes_round_trip() {
+        for code in [
+            RejectCode::QueueFull,
+            RejectCode::DeadlineExceeded,
+            RejectCode::InvalidRequest,
+            RejectCode::BackendFailed,
+            RejectCode::BadFrame,
+            RejectCode::ServerBusy,
+        ] {
+            assert_eq!(RejectCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(RejectCode::from_u8(0), None);
+        assert_eq!(RejectCode::from_u8(200), None);
+    }
+
+    #[test]
+    fn long_reject_messages_are_bounded() {
+        let long = "x".repeat(10_000);
+        let body = encode_reject(1, RejectCode::InvalidRequest, &long);
+        assert!(body.len() <= 11 + 512);
+        assert!(decode_reply(&body).is_ok());
+    }
+}

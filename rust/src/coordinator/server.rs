@@ -30,6 +30,27 @@
 //! bucket; configured ceilings above a model's `seq` don't apply to it),
 //! and [`ServerSummary::per_model`] reports routed counts.
 //!
+//! **Overload and failure semantics** (what makes this servable from a
+//! socket, not just from a trace generator):
+//!
+//!   * *Admission control* — requests are fully validated at `submit`
+//!     time (shape, token ids against the target model's vocab, mask
+//!     finiteness) and each (model × seq-bucket) queue is bounded by
+//!     [`ServerConfig::max_pending`]; a violation returns a typed
+//!     [`Rejected`] immediately instead of poisoning a batch later or
+//!     growing queues without bound.
+//!   * *Deadlines* — a request may carry a deadline
+//!     ([`Server::submit_with`] or [`ServerConfig::default_deadline`]);
+//!     `pump()` sheds expired requests with
+//!     [`Rejected::DeadlineExceeded`] *before* staging a batch, so a
+//!     doomed request never wastes a batch slot.
+//!   * *Fault isolation* — a failing **or panicking** backend forward
+//!     (caught via `catch_unwind`) converts into per-request
+//!     [`ResponseBody::Failed`] responses for that one batch; the server
+//!     keeps serving and [`Server::drain`] is total: every admitted
+//!     request receives exactly one [`Response`], so
+//!     `admitted == ok + shed + failed` always reconciles.
+//!
 //! Single-threaded event loop by design: both backends already
 //! parallelize one execution across cores (the native path via the kernel
 //! dispatcher's row-block fan-out), so concurrent executes only thrash;
@@ -45,6 +66,7 @@
 //! inside the native forward.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -52,12 +74,57 @@ use anyhow::{bail, Result};
 use crate::runtime::Backend;
 use crate::util::stats::{LatencyRecorder, LatencySummary};
 
+/// Typed admission/shed verdicts. `InvalidRequest` and `QueueFull` are
+/// returned synchronously from `submit*`; `DeadlineExceeded` arrives
+/// asynchronously as a [`ResponseBody::Shed`]. Implements
+/// `std::error::Error`, so `?` in `anyhow` contexts keeps working.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Rejected {
+    /// The target (model × seq-bucket) queue is at `max_pending`.
+    QueueFull { pending: usize, max_pending: usize },
+    /// The request's deadline passed before a batch slot reached it.
+    DeadlineExceeded { waited_us: u64 },
+    /// The request can never execute (bad model index, shape mismatch,
+    /// out-of-vocab token ids, non-finite mask values).
+    InvalidRequest(String),
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { pending, max_pending } => {
+                write!(f, "queue full ({pending} pending, max_pending {max_pending})")
+            }
+            Rejected::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}us in queue")
+            }
+            Rejected::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub ids: Vec<i32>,
     pub mask: Vec<f32>,
     pub enqueued: Instant,
+    /// Absolute shed deadline; `None` waits indefinitely.
+    pub deadline: Option<Instant>,
+}
+
+/// What one admitted request got back: exactly one of these per
+/// admission, always — the total-drain contract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseBody {
+    Logits(Vec<f32>),
+    /// Shed before execution (today always `DeadlineExceeded`).
+    Shed(Rejected),
+    /// The request's batch failed or panicked in the backend; the
+    /// message is the rendered error chain.
+    Failed(String),
 }
 
 #[derive(Debug, Clone)]
@@ -66,12 +133,43 @@ pub struct Response {
     /// Model index this request was routed to (0 on single-model
     /// backends).
     pub model: usize,
-    pub logits: Vec<f32>,
+    pub body: ResponseBody,
     pub queue_us: f64,
     pub exec_us: f64,
+    /// Batch bucket this request executed in (0 when shed unexecuted).
     pub batch_size: usize,
     /// Seq-bucket ceiling this request's batch was padded to.
     pub seq_bucket: usize,
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        matches!(self.body, ResponseBody::Logits(_))
+    }
+
+    pub fn logits(&self) -> Option<&[f32]> {
+        match &self.body {
+            ResponseBody::Logits(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn into_logits(self) -> Option<Vec<f32>> {
+        match self.body {
+            ResponseBody::Logits(l) => Some(l),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-facing description of one registered model — what the socket
+/// front door's INFO reply advertises so clients can size requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub label: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_classes: usize,
 }
 
 /// One (model × seq-bucket) FIFO.
@@ -94,6 +192,14 @@ pub struct ServerConfig {
     pub seq_buckets: Vec<usize>,
     /// Max time a request may wait for batchmates.
     pub batch_window: Duration,
+    /// Per-(model × seq-bucket) queue bound; `submit*` returns
+    /// [`Rejected::QueueFull`] at the bound. 0 disables (unbounded — the
+    /// pre-admission-control behavior, for offline trace replay).
+    pub max_pending: usize,
+    /// Deadline applied to requests submitted without an explicit one
+    /// ([`Server::submit_with`] overrides per request). `None` waits
+    /// indefinitely.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +208,8 @@ impl Default for ServerConfig {
             batch_buckets: vec![1, 8, 16],
             seq_buckets: vec![],
             batch_window: Duration::from_micros(500),
+            max_pending: 1024,
+            default_deadline: None,
         }
     }
 }
@@ -110,6 +218,9 @@ pub struct Server<'b, B: Backend> {
     backend: &'b B,
     /// Per-model full sequence length (index = model).
     seqs: Vec<usize>,
+    /// Per-model vocab size — admission rejects out-of-vocab ids before
+    /// they can poison a whole batch in the backend.
+    vocabs: Vec<usize>,
     /// Per-model logits width.
     n_classes: Vec<usize>,
     /// Per-model display labels (the registry names).
@@ -133,8 +244,23 @@ pub struct Server<'b, B: Backend> {
     /// the serving bench gates.
     pub batch_exec_lat: LatencyRecorder,
     pub total_lat: LatencyRecorder,
+    /// Requests accepted past admission. Reconciliation invariant:
+    /// `admitted == served + shed_deadline + failed + pending()`.
+    pub admitted: u64,
     pub served: u64,
+    /// Successfully executed batches (failed batches count separately).
     pub batches: u64,
+    /// Requests shed with [`Rejected::DeadlineExceeded`] before staging.
+    pub shed_deadline: u64,
+    /// Requests answered [`ResponseBody::Failed`] (backend error/panic).
+    pub failed: u64,
+    /// Batches whose forward failed or panicked.
+    pub failed_batches: u64,
+    /// Synchronous [`Rejected::QueueFull`] rejections (never admitted).
+    pub rejected_full: u64,
+    /// Synchronous [`Rejected::InvalidRequest`] rejections (never
+    /// admitted).
+    pub rejected_invalid: u64,
     /// Empty batch slots executed (bucket minus actual requests).
     pub padded_slots: u64,
     /// Padded tokens executed: `bucket * ceiling - valid tokens`, summed
@@ -168,6 +294,7 @@ impl<'b, B: Backend> Server<'b, B> {
         }
 
         let mut seqs = Vec::with_capacity(n_models);
+        let mut vocabs = Vec::with_capacity(n_models);
         let mut n_classes = Vec::with_capacity(n_models);
         let mut labels = Vec::with_capacity(n_models);
         let mut slots: Vec<Slot> = Vec::new();
@@ -191,6 +318,7 @@ impl<'b, B: Backend> Server<'b, B> {
                 slots.push(Slot { model: m, tcap: t, q: VecDeque::new() });
             }
             seqs.push(dims.seq);
+            vocabs.push(dims.vocab);
             n_classes.push(dims.n_classes);
             labels.push(backend.model_label(m));
         }
@@ -204,6 +332,7 @@ impl<'b, B: Backend> Server<'b, B> {
         Ok(Server {
             backend,
             seqs,
+            vocabs,
             n_classes,
             labels,
             // the stored config carries the *resolved* batch buckets —
@@ -221,8 +350,14 @@ impl<'b, B: Backend> Server<'b, B> {
             exec_lat: LatencyRecorder::new(),
             batch_exec_lat: LatencyRecorder::new(),
             total_lat: LatencyRecorder::new(),
+            admitted: 0,
             served: 0,
             batches: 0,
+            shed_deadline: 0,
+            failed: 0,
+            failed_batches: 0,
+            rejected_full: 0,
+            rejected_invalid: 0,
             padded_slots: 0,
             padded_tokens: 0,
             total_tokens: 0,
@@ -234,26 +369,80 @@ impl<'b, B: Backend> Server<'b, B> {
     /// may be any `1..=seq` tokens long (full-`seq` padded submissions
     /// keep working and land in the full-length bucket). Routes to model
     /// 0; multi-model callers use [`Server::submit_to`]. Returns its id.
-    pub fn submit(&mut self, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
-        self.submit_to(0, ids, mask)
+    pub fn submit(&mut self, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64, Rejected> {
+        self.submit_with(0, ids, mask, None)
     }
 
     /// Enqueue a request for one registered model (index from
     /// [`Server::find_model`] or the registry). Returns its id.
-    pub fn submit_to(&mut self, model: usize, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64> {
+    pub fn submit_to(&mut self, model: usize, ids: Vec<i32>, mask: Vec<f32>) -> Result<u64, Rejected> {
+        self.submit_with(model, ids, mask, None)
+    }
+
+    /// Full-control admission: route to `model` with an optional
+    /// per-request deadline (overrides
+    /// [`ServerConfig::default_deadline`]). Validates everything the
+    /// backend would otherwise trip on mid-batch — shape, token ids
+    /// against the model's vocab, mask finiteness — and enforces the
+    /// per-slot queue bound, so an accepted id is guaranteed exactly one
+    /// eventual [`Response`].
+    pub fn submit_with(
+        &mut self,
+        model: usize,
+        ids: Vec<i32>,
+        mask: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<u64, Rejected> {
+        let res = self.admit(model, ids, mask, deadline);
+        match &res {
+            Ok(_) => self.admitted += 1,
+            Err(Rejected::QueueFull { .. }) => self.rejected_full += 1,
+            Err(_) => self.rejected_invalid += 1,
+        }
+        res
+    }
+
+    fn admit(
+        &mut self,
+        model: usize,
+        ids: Vec<i32>,
+        mask: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<u64, Rejected> {
         if model >= self.seqs.len() {
-            bail!("model index {model} out of range ({} registered)", self.seqs.len());
+            return Err(Rejected::InvalidRequest(format!(
+                "model index {model} out of range ({} registered)",
+                self.seqs.len()
+            )));
         }
         if ids.len() != mask.len() {
-            bail!("ids/mask length mismatch ({} vs {})", ids.len(), mask.len());
+            return Err(Rejected::InvalidRequest(format!(
+                "ids/mask length mismatch ({} vs {})",
+                ids.len(),
+                mask.len()
+            )));
         }
         let len = ids.len();
         if len == 0 || len > self.seqs[model] {
-            bail!(
+            return Err(Rejected::InvalidRequest(format!(
                 "request length {len} out of range 1..={} for model {}",
-                self.seqs[model],
+                self.seqs[model], self.labels[model]
+            )));
+        }
+        // mask finiteness: a NaN/Inf mask row would otherwise surface as
+        // a NaN-scale fallback deep in the quantized GEMM path — reject
+        // it here, where the caller can be told which request was bad
+        if let Some(&bad) = mask.iter().find(|&&m| !m.is_finite()) {
+            return Err(Rejected::InvalidRequest(format!(
+                "mask contains non-finite value {bad}"
+            )));
+        }
+        let vocab = self.vocabs[model];
+        if let Some(&bad) = ids.iter().find(|&&id| id < 0 || id as usize >= vocab) {
+            return Err(Rejected::InvalidRequest(format!(
+                "token id {bad} out of range for model {} vocab {vocab}",
                 self.labels[model]
-            );
+            )));
         }
         // smallest seq bucket of this model that fits (its last bucket ==
         // its seq, so always found)
@@ -262,9 +451,15 @@ impl<'b, B: Backend> Server<'b, B> {
             .iter()
             .position(|s| s.model == model && s.tcap >= len)
             .expect("every model ends with a full-seq slot");
+        let max_pending = self.cfg.max_pending;
+        if max_pending > 0 && self.slots[si].q.len() >= max_pending {
+            return Err(Rejected::QueueFull { pending: self.slots[si].q.len(), max_pending });
+        }
+        let now = Instant::now();
+        let deadline = deadline.or(self.cfg.default_deadline).map(|d| now + d);
         let id = self.next_id;
         self.next_id += 1;
-        self.slots[si].q.push_back(Request { id, ids, mask, enqueued: Instant::now() });
+        self.slots[si].q.push_back(Request { id, ids, mask, enqueued: now, deadline });
         Ok(id)
     }
 
@@ -273,8 +468,53 @@ impl<'b, B: Backend> Server<'b, B> {
         self.labels.iter().position(|l| l == label)
     }
 
+    /// Serving description of every registered model (what the socket
+    /// front door advertises on INFO).
+    pub fn model_infos(&self) -> Vec<ModelInfo> {
+        (0..self.labels.len())
+            .map(|m| ModelInfo {
+                label: self.labels[m].clone(),
+                vocab: self.vocabs[m],
+                seq: self.seqs[m],
+                n_classes: self.n_classes[m],
+            })
+            .collect()
+    }
+
     pub fn pending(&self) -> usize {
         self.slots.iter().map(|s| s.q.len()).sum()
+    }
+
+    /// Shed every queued request whose deadline has passed — *before*
+    /// batching, so an expired request never occupies a batch slot. Each
+    /// shed request still gets its one `Response`
+    /// ([`ResponseBody::Shed`]).
+    fn shed_expired(&mut self, now: Instant, out: &mut Vec<Response>) {
+        for s in &mut self.slots {
+            if !s.q.iter().any(|r| r.deadline.map_or(false, |d| d <= now)) {
+                continue;
+            }
+            let q = std::mem::take(&mut s.q);
+            for r in q {
+                match r.deadline {
+                    Some(d) if d <= now => {
+                        let waited_us =
+                            now.saturating_duration_since(r.enqueued).as_micros() as u64;
+                        self.shed_deadline += 1;
+                        out.push(Response {
+                            id: r.id,
+                            model: s.model,
+                            body: ResponseBody::Shed(Rejected::DeadlineExceeded { waited_us }),
+                            queue_us: waited_us as f64,
+                            exec_us: 0.0,
+                            batch_size: 0,
+                            seq_bucket: s.tcap,
+                        });
+                    }
+                    _ => s.q.push_back(r),
+                }
+            }
+        }
     }
 
     /// Batching policy over the (model × seq) bucket grid. Fires, in
@@ -326,16 +566,21 @@ impl<'b, B: Backend> Server<'b, B> {
         full.map(|(si, _)| (si, largest))
     }
 
-    /// One event-loop turn: batch + execute if the policy fires.
+    /// One event-loop turn: shed expired requests, then batch + execute
+    /// if the policy fires. A backend error **or panic** is isolated to
+    /// the one staged batch — its requests get [`ResponseBody::Failed`]
+    /// responses and the server keeps serving — so `pump` only errors on
+    /// conditions that poison the server itself (currently none).
     pub fn pump(&mut self) -> Result<Vec<Response>> {
+        let mut responses = Vec::new();
+        self.shed_expired(Instant::now(), &mut responses);
         let Some((si, bucket)) = self.pick() else {
-            return Ok(vec![]);
+            return Ok(responses);
         };
         let (model, tcap) = (self.slots[si].model, self.slots[si].tcap);
         let take = bucket.min(self.slots[si].q.len());
         let reqs: Vec<Request> =
             (0..take).map(|_| self.slots[si].q.pop_front().unwrap()).collect();
-        self.padded_slots += (bucket - take) as u64;
 
         let stage = bucket * tcap;
         self.ids_stage[..stage].fill(0);
@@ -347,67 +592,114 @@ impl<'b, B: Backend> Server<'b, B> {
             self.mask_stage[i * tcap..i * tcap + len].copy_from_slice(&r.mask);
             valid_tokens += r.mask.iter().filter(|&&m| m == 1.0).count() as u64;
         }
-        self.total_tokens += stage as u64;
-        self.padded_tokens += stage as u64 - valid_tokens;
 
         let exec_start = Instant::now();
-        let logits = self.backend.serve_forward_for(
-            model,
-            bucket,
-            tcap,
-            &self.ids_stage[..stage],
-            &self.mask_stage[..stage],
-        )?;
+        let backend = self.backend;
+        let ids = &self.ids_stage[..stage];
+        let mask = &self.mask_stage[..stage];
+        // AssertUnwindSafe: on unwind the only shared state a forward can
+        // leave behind is scratch content in the backend's workspace
+        // arena, which every forward fully overwrites for its shape — no
+        // logical invariant spans the catch boundary.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            backend.serve_forward_for(model, bucket, tcap, ids, mask)
+        }));
         let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
-        self.exec_us_total += exec_us;
-        self.batch_exec_lat.record(exec_us);
 
-        self.batches += 1;
-        let nc = self.n_classes[model];
-        let mut responses = Vec::with_capacity(take);
-        for (i, r) in reqs.into_iter().enumerate() {
+        match result {
+            Ok(Ok(logits)) => {
+                self.exec_us_total += exec_us;
+                self.batch_exec_lat.record(exec_us);
+                self.batches += 1;
+                self.padded_slots += (bucket - take) as u64;
+                self.total_tokens += stage as u64;
+                self.padded_tokens += stage as u64 - valid_tokens;
+                let nc = self.n_classes[model];
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+                    let queue_us = (total_us - exec_us).max(0.0);
+                    self.queue_lat.record(queue_us);
+                    self.exec_lat.record(exec_us);
+                    self.total_lat.record(total_us);
+                    self.served += 1;
+                    self.served_by_model[model] += 1;
+                    responses.push(Response {
+                        id: r.id,
+                        model,
+                        body: ResponseBody::Logits(logits[i * nc..(i + 1) * nc].to_vec()),
+                        queue_us,
+                        exec_us,
+                        batch_size: bucket,
+                        seq_bucket: tcap,
+                    });
+                }
+            }
+            Ok(Err(e)) => {
+                self.fail_batch(&mut responses, reqs, model, bucket, tcap, exec_us, format!("{e:#}"));
+            }
+            Err(payload) => {
+                self.fail_batch(
+                    &mut responses,
+                    reqs,
+                    model,
+                    bucket,
+                    tcap,
+                    exec_us,
+                    format!("backend panicked: {}", panic_message(payload)),
+                );
+            }
+        }
+        Ok(responses)
+    }
+
+    /// Fan a failed/panicked batch out as per-request error responses —
+    /// the batch dies, the server does not.
+    #[allow(clippy::too_many_arguments)]
+    fn fail_batch(
+        &mut self,
+        out: &mut Vec<Response>,
+        reqs: Vec<Request>,
+        model: usize,
+        bucket: usize,
+        tcap: usize,
+        exec_us: f64,
+        msg: String,
+    ) {
+        self.failed_batches += 1;
+        for r in reqs {
             let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
-            let queue_us = (total_us - exec_us).max(0.0);
-            self.queue_lat.record(queue_us);
-            self.exec_lat.record(exec_us);
-            self.total_lat.record(total_us);
-            self.served += 1;
-            self.served_by_model[model] += 1;
-            responses.push(Response {
+            self.failed += 1;
+            out.push(Response {
                 id: r.id,
                 model,
-                logits: logits[i * nc..(i + 1) * nc].to_vec(),
-                queue_us,
+                body: ResponseBody::Failed(msg.clone()),
+                queue_us: (total_us - exec_us).max(0.0),
                 exec_us,
                 batch_size: bucket,
                 seq_bucket: tcap,
             });
         }
-        Ok(responses)
     }
 
-    /// Drain the queues fully (end of trace). The batching window is
-    /// forced open for the duration and restored afterwards **even if an
-    /// inner `pump()` fails** — a failed drain must not leave the server
-    /// batching with a permanently-zero window.
+    /// Drain the queues fully (end of trace). **Total**: every pending
+    /// request gets exactly one response — ok, shed, or failed — because
+    /// backend faults are isolated per batch inside `pump()`. The
+    /// batching window is forced open for the duration and restored
+    /// afterwards even if a pump errors.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let win = std::mem::replace(&mut self.cfg.batch_window, Duration::ZERO);
         let mut all = vec![];
-        let mut failed = None;
         while self.pending() > 0 {
             match self.pump() {
                 Ok(rs) => all.extend(rs),
                 Err(e) => {
-                    failed = Some(e);
-                    break;
+                    self.cfg.batch_window = win;
+                    return Err(e);
                 }
             }
         }
         self.cfg.batch_window = win;
-        match failed {
-            Some(e) => Err(e),
-            None => Ok(all),
-        }
+        Ok(all)
     }
 
     pub fn summary(&self) -> ServerSummary {
@@ -419,8 +711,14 @@ impl<'b, B: Backend> Server<'b, B> {
                 .cloned()
                 .zip(self.served_by_model.iter().copied())
                 .collect(),
+            admitted: self.admitted,
             served: self.served,
             batches: self.batches,
+            shed_deadline: self.shed_deadline,
+            failed: self.failed,
+            failed_batches: self.failed_batches,
+            rejected_full: self.rejected_full,
+            rejected_invalid: self.rejected_invalid,
             padded_slots: self.padded_slots,
             padded_tokens: self.padded_tokens,
             total_tokens: self.total_tokens,
@@ -433,14 +731,31 @@ impl<'b, B: Backend> Server<'b, B> {
     }
 }
 
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServerSummary {
     pub model: String,
     /// (label, requests served) per registered model — one entry on
     /// single-model backends.
     pub per_model: Vec<(String, u64)>,
+    pub admitted: u64,
     pub served: u64,
     pub batches: u64,
+    pub shed_deadline: u64,
+    pub failed: u64,
+    pub failed_batches: u64,
+    pub rejected_full: u64,
+    pub rejected_invalid: u64,
     pub padded_slots: u64,
     pub padded_tokens: u64,
     pub total_tokens: u64,
@@ -482,6 +797,20 @@ impl std::fmt::Display for ServerSummary {
             self.total_tokens,
             100.0 * self.padded_token_fraction(),
         )?;
+        if self.shed_deadline + self.failed + self.rejected_full + self.rejected_invalid > 0
+            || self.admitted != self.served
+        {
+            writeln!(
+                f,
+                "  robust: admitted={} shed_deadline={} failed={} failed_batches={} rejected_full={} rejected_invalid={}",
+                self.admitted,
+                self.shed_deadline,
+                self.failed,
+                self.failed_batches,
+                self.rejected_full,
+                self.rejected_invalid,
+            )?;
+        }
         if self.per_model.len() > 1 {
             let routed: Vec<String> =
                 self.per_model.iter().map(|(l, n)| format!("{l}={n}")).collect();
@@ -496,6 +825,7 @@ impl std::fmt::Display for ServerSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::FaultPlan;
     use crate::runtime::{NativeBackend, NativeDims, NativeModel};
 
     fn tiny_backend() -> NativeBackend {
@@ -514,7 +844,12 @@ mod tests {
     fn mk_server(backend: &NativeBackend, batch_buckets: Vec<usize>, window: Duration) -> Server<'_, NativeBackend> {
         Server::new(
             backend,
-            ServerConfig { batch_buckets, seq_buckets: vec![], batch_window: window },
+            ServerConfig {
+                batch_buckets,
+                seq_buckets: vec![],
+                batch_window: window,
+                ..Default::default()
+            },
         )
         .unwrap()
     }
@@ -541,7 +876,9 @@ mod tests {
         assert_eq!(summary.batch_exec.count, 1);
         assert!(summary.exec_us_per_ktok() > 0.0);
         assert!(out.iter().all(|r| r.batch_size == 8 && r.seq_bucket == 8));
-        assert!(out.iter().all(|r| r.logits.len() == 2 && r.logits.iter().all(|x| x.is_finite())));
+        assert!(out.iter().all(|r| {
+            r.logits().map_or(false, |l| l.len() == 2 && l.iter().all(|x| x.is_finite()))
+        }));
     }
 
     #[test]
@@ -575,6 +912,7 @@ mod tests {
                 batch_buckets: vec![2],
                 seq_buckets: vec![4, 8],
                 batch_window: Duration::from_secs(60),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -606,6 +944,7 @@ mod tests {
                 batch_buckets: vec![1, 2],
                 seq_buckets: vec![4, 8],
                 batch_window: Duration::from_millis(40),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -643,6 +982,7 @@ mod tests {
         submit_n(&mut s, 6);
         let out = s.drain().unwrap();
         assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|r| r.is_ok()));
         assert_eq!(s.pending(), 0);
         assert_eq!(s.served, 6);
         // distinct request ids fan back out
@@ -652,15 +992,45 @@ mod tests {
     }
 
     #[test]
-    fn failed_drain_restores_batch_window() {
-        let be = tiny_backend();
+    fn failed_drain_is_total_and_restores_batch_window() {
+        // one poisoned batch must not wedge the drain: every admitted
+        // request still gets exactly one response, pending reaches 0, and
+        // the batch window comes back.
+        let mut be = tiny_backend();
+        be.set_faults(FaultPlan::fail_nth(1));
         let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
-        s.submit(vec![-1; 8], vec![1.0; 8]).unwrap(); // out-of-vocab: exec fails
-        assert!(s.drain().is_err());
+        submit_n(&mut s, 2);
+        let out = s.drain().unwrap();
+        assert_eq!(out.len(), 2, "drain is total: one response per admitted request");
+        assert_eq!(s.pending(), 0);
+        let failed: Vec<&Response> = out.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(failed.len(), 1, "exactly the first (faulted) batch fails");
+        assert!(matches!(&failed[0].body, ResponseBody::Failed(m) if m.contains("injected fault")));
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.admitted, s.served + s.failed);
         // the window must be back to 60s: a short queue may not fire
         submit_n(&mut s, 3);
         assert!(s.pump().unwrap().is_empty(), "drain failure leaked batch_window = ZERO");
         assert_eq!(s.pending(), 3);
+    }
+
+    #[test]
+    fn panicking_backend_is_isolated_to_its_batch() {
+        let mut be = tiny_backend();
+        be.set_faults(FaultPlan::panic_nth(1));
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        submit_n(&mut s, 2);
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(&out[0].body, ResponseBody::Failed(m) if m.contains("backend panicked")));
+        // the server survives and the next batch serves normally
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_ok(), "pump after a panic must serve");
+        assert_eq!(s.pending(), 0);
+        assert_eq!((s.served, s.failed, s.failed_batches), (1, 1, 1));
     }
 
     #[test]
@@ -677,8 +1047,26 @@ mod tests {
         assert!(s.submit(vec![], vec![]).is_err(), "empty request");
         assert!(s.submit(vec![0; 9], vec![1.0; 9]).is_err(), "longer than model seq");
         assert!(s.submit(vec![0; 5], vec![1.0; 4]).is_err(), "ids/mask mismatch");
+        assert_eq!(s.rejected_invalid, 3);
+        assert_eq!(s.admitted, 0);
         // true-length submission is legal now
         assert!(s.submit(vec![0; 5], vec![1.0; 5]).is_ok());
+        assert_eq!(s.admitted, 1);
+    }
+
+    #[test]
+    fn rejects_non_finite_mask_at_admission() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let r = s.submit(vec![1, 2, 3], vec![1.0, bad, 1.0]);
+            assert!(
+                matches!(r, Err(Rejected::InvalidRequest(ref m)) if m.contains("non-finite")),
+                "mask value {bad} must be rejected, got {r:?}"
+            );
+        }
+        assert_eq!(s.rejected_invalid, 3);
+        assert_eq!(s.pending(), 0, "rejected requests must not enqueue");
     }
 
     #[test]
@@ -691,6 +1079,7 @@ mod tests {
                     batch_buckets: vec![1],
                     seq_buckets: bad.clone(),
                     batch_window: Duration::ZERO,
+                    ..Default::default()
                 },
             );
             assert!(r.is_err(), "seq_buckets {bad:?} must be rejected");
@@ -698,11 +1087,95 @@ mod tests {
     }
 
     #[test]
-    fn rejects_out_of_vocab_ids() {
+    fn rejects_out_of_vocab_ids_at_admission() {
+        // vocab violations are an admission-time typed reject now — they
+        // never reach (and can never poison) a staged batch.
         let be = tiny_backend();
         let mut s = mk_server(&be, vec![1], Duration::ZERO);
-        s.submit(vec![-1; 8], vec![1.0; 8]).unwrap();
-        assert!(s.pump().is_err(), "negative token ids must not serve silently");
+        for ids in [vec![-1; 8], vec![64; 8]] {
+            let r = s.submit(ids, vec![1.0; 8]);
+            assert!(matches!(r, Err(Rejected::InvalidRequest(ref m)) if m.contains("out of range")));
+        }
+        assert_eq!(s.pending(), 0);
+        assert!(s.pump().unwrap().is_empty());
+    }
+
+    #[test]
+    fn queue_full_sheds_at_admission() {
+        let be = tiny_backend();
+        let mut s = Server::new(
+            &be,
+            ServerConfig {
+                batch_buckets: vec![8],
+                seq_buckets: vec![],
+                batch_window: Duration::from_secs(60),
+                max_pending: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        submit_n(&mut s, 2);
+        let r = s.submit(vec![1; 8], vec![1.0; 8]);
+        assert_eq!(r, Err(Rejected::QueueFull { pending: 2, max_pending: 2 }));
+        assert_eq!((s.admitted, s.rejected_full), (2, 1));
+        assert_eq!(s.pending(), 2, "the bound holds");
+        // draining frees the queue: admission works again
+        assert_eq!(s.drain().unwrap().len(), 2);
+        assert!(s.submit(vec![1; 8], vec![1.0; 8]).is_ok());
+    }
+
+    #[test]
+    fn expired_deadline_sheds_before_execution() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        s.submit_with(0, vec![1; 8], vec![1.0; 8], Some(Duration::ZERO)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(
+            matches!(out[0].body, ResponseBody::Shed(Rejected::DeadlineExceeded { .. })),
+            "expired request must shed, got {:?}",
+            out[0].body
+        );
+        assert_eq!(out[0].batch_size, 0, "a shed request must not occupy a batch slot");
+        assert_eq!((s.served, s.shed_deadline), (0, 1));
+        assert_eq!(s.batches, 0, "no batch may execute for a fully-shed queue");
+        // a fresh deadline-free request still serves
+        s.submit(vec![1; 8], vec![1.0; 8]).unwrap();
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_ok());
+        assert_eq!(s.admitted, s.served + s.shed_deadline);
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submit() {
+        let be = tiny_backend();
+        let mut s = Server::new(
+            &be,
+            ServerConfig {
+                batch_buckets: vec![1],
+                seq_buckets: vec![],
+                batch_window: Duration::ZERO,
+                default_deadline: Some(Duration::ZERO),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        s.submit(vec![1; 8], vec![1.0; 8]).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0].body, ResponseBody::Shed(_)));
+    }
+
+    #[test]
+    fn model_infos_describe_the_backend() {
+        let be = tiny_backend();
+        let s = mk_server(&be, vec![1], Duration::ZERO);
+        let infos = s.model_infos();
+        assert_eq!(infos.len(), 1);
+        assert_eq!((infos[0].vocab, infos[0].seq, infos[0].n_classes), (64, 8, 2));
     }
 
     #[test]
@@ -725,6 +1198,7 @@ mod tests {
             batch_buckets: vec![1, 2],
             seq_buckets: vec![4],
             batch_window: Duration::ZERO,
+            ..Default::default()
         };
         let mut s = Server::new(&reg, cfg()).unwrap();
         assert_eq!(s.find_model("b"), Some(1));
@@ -760,7 +1234,7 @@ mod tests {
             let mut solo = Server::new(&solo_reg, cfg()).unwrap();
             solo.submit(ids.clone(), vec![1.0; ids.len()]).unwrap();
             let want = solo.drain().unwrap().remove(0);
-            assert_eq!(out[i].logits, want.logits, "request {i}: multi-model logits diverge");
+            assert_eq!(out[i].logits(), want.logits(), "request {i}: multi-model logits diverge");
         }
     }
 
@@ -774,7 +1248,8 @@ mod tests {
         let mut s4 = mk_server(&be, vec![4], Duration::ZERO);
         submit_n(&mut s4, 1);
         let padded = s4.pump().unwrap().remove(0);
-        for (a, b) in alone.logits.iter().zip(padded.logits.iter()) {
+        let (a_l, p_l) = (alone.logits().unwrap(), padded.logits().unwrap());
+        for (a, b) in a_l.iter().zip(p_l.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }

@@ -8,7 +8,13 @@
 //!                  from an MKQC checkpoint instead of random init; with
 //!                  repeated `--model name=PATH` flags one server hosts
 //!                  several named checkpoints behind the model-store
-//!                  registry and the trace routes across them
+//!                  registry and the trace routes across them; with
+//!                  `--listen ADDR` the server takes real traffic over a
+//!                  TCP socket front door (length-prefixed binary
+//!                  protocol) instead of replaying the trace
+//!   loadgen      — socket load generator against a `--listen` server:
+//!                  closed-loop or open-loop (Poisson) TCP traffic with
+//!                  served/shed/p50/p99 reporting into BENCH_serve_net.json
 //!   kernels      — print kernel-dispatch info and run a quick self-check
 //!   ckpt         — MKQC checkpoint tools: `export-random` writes a
 //!                  random-init model file, `inspect` dumps the header +
@@ -41,7 +47,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mkq-bert <serve-native|kernels|ckpt|train|serve|info> [options]
+        "usage: mkq-bert <serve-native|loadgen|kernels|ckpt|train|serve|info> [options]
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
                 --window-us N   --buckets 1,8,16 (batch buckets)
@@ -56,6 +62,21 @@ fn usage() -> ! {
                 --model name=PATH  (repeatable: serve several registered
                 checkpoints — files or sharded dirs — behind one server;
                 the trace round-robins across them)
+                --max-pending N  (per-(model x seq-bucket) queue bound,
+                0 = unbounded; default 1024)  --deadline-us N  (default
+                request deadline, 0 = none)
+                --listen HOST:PORT  (serve over the TCP front door
+                instead of replaying a trace; --serve-secs N caps wall
+                clock, --idle-exit-secs N exits after the last activity)
+  loadgen:      --addr HOST:PORT  --mode closed|open (default closed)
+                --conns N (4)  --requests N total (200)  --rate RPS
+                aggregate for open mode (2000)  --deadline-us N (0)
+                --model-index N (0)  --bench-out [PATH] (loadgen JSON for
+                the CI gate; default BENCH_serve_net.json)
+                --expect-served / --expect-shed  (fail unless >=1 request
+                was served / shed — CI smoke assertions)
+                --allow-lost  (tolerate client-side timeouts; default:
+                any request without a response is an error)
   kernels:      (no options; prints the dispatch table and runs a
                 per-variant self-check)
   ckpt export-random FILE.mkqc  [--bits 8,8,4,4 | --n-int4 N] [--seed N]
@@ -85,7 +106,12 @@ fn usage() -> ! {
                   unsupported picks degrade to the scalar blocked kernels)
                 MKQ_THREADS=N    cap the kernel thread pool
                 MKQ_AUTOTUNE=0   skip the load-time kernel autotune
-                MKQ_NO_MMAP=1    force buffered checkpoint reads (skip mmap)"
+                MKQ_NO_MMAP=1    force buffered checkpoint reads (skip mmap)
+  fault injection (chaos testing; inert unless set):
+                MKQ_FAULT_FAIL_FORWARD=N|every:N  fail the Nth (or every
+                  Nth) backend forward with a typed error
+                MKQ_FAULT_PANIC_FORWARD=N  panic on the Nth forward (once)
+                MKQ_FAULT_DELAY_US=N  add latency to every forward"
     );
     std::process::exit(2);
 }
@@ -101,6 +127,7 @@ fn run() -> Result<()> {
         "" => usage(),
         "kernels" => kernels_info(),
         "serve-native" => serve_native(&args, &conf),
+        "loadgen" => loadgen(&args, &conf),
         "ckpt" => ckpt_cmd(&args, &conf),
         other => artifact::run(other, &args, &conf),
     }
@@ -550,6 +577,13 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         TraceKind::parse(&s).ok_or_else(|| anyhow::anyhow!("--trace expects mixed|full, got {s:?}"))?
     };
     let window_us = args.usize("window-us", conf.usize("serve.window_us", 500));
+    let max_pending = args.usize("max-pending", conf.usize("serve.max_pending", 1024));
+    let deadline_us = args.usize("deadline-us", conf.usize("serve.deadline_us", 0));
+    let default_deadline = if deadline_us == 0 {
+        None
+    } else {
+        Some(std::time::Duration::from_micros(deadline_us as u64))
+    };
     println!(
         "batch buckets {batch_buckets:?}, seq buckets {seq_buckets:?} (+ each model's seq), \
          trace {}",
@@ -561,8 +595,33 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
             batch_buckets,
             seq_buckets,
             batch_window: std::time::Duration::from_micros(window_us as u64),
+            max_pending,
+            default_deadline,
         },
     )?;
+
+    // socket front door: take real traffic over TCP instead of replaying
+    // a synthetic trace (drive it with `mkq-bert loadgen`)
+    if let Some(listen) = args.get("listen") {
+        use mkq::coordinator::net::{FrontDoor, RunOpts, PROTO_VERSION};
+        let mut door = FrontDoor::bind(listen)
+            .map_err(|e| anyhow::anyhow!("failed to bind {listen}: {e}"))?;
+        let local = door.local_addr().map_err(anyhow::Error::new)?;
+        let serve_secs = args.f64("serve-secs", conf.f64("serve.serve_secs", 0.0));
+        let idle_exit = args.f64("idle-exit-secs", conf.f64("serve.idle_exit_secs", 0.0));
+        println!(
+            "listening on {local} (proto v{PROTO_VERSION}, max_pending {max_pending}, \
+             default deadline {deadline_us}us)"
+        );
+        let opts = RunOpts {
+            for_secs: if serve_secs > 0.0 { Some(serve_secs) } else { None },
+            idle_exit_secs: if idle_exit > 0.0 { Some(idle_exit) } else { None },
+        };
+        door.run(&mut server, opts, None)?;
+        println!("{}", door.stats());
+        println!("{}", server.summary());
+        return Ok(());
+    }
 
     // per-model traffic: the synthetic task is tokenized against that
     // model's vocab/seq, so requests are always admissible where routed
@@ -579,6 +638,7 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
     println!("replaying Poisson trace: {n_req} requests at {rate} rps, window {window_us}us");
     let mut arrivals = mkq::util::rng::Rng::new(99);
     let mut sent = 0usize;
+    let mut rejected = 0usize;
     let replay_start = std::time::Instant::now();
     let mut next_arrival = replay_start;
     while sent < n_req || server.pending() > 0 {
@@ -586,7 +646,11 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         if sent < n_req && now >= next_arrival {
             let m = sent % n_models;
             let (ids, mask) = gens[m].next_request();
-            server.submit_to(m, ids, mask)?;
+            // admission rejects (queue full under a saturating trace) are
+            // load shedding, not replay failures — count and keep going
+            if server.submit_to(m, ids, mask).is_err() {
+                rejected += 1;
+            }
             sent += 1;
             next_arrival = now + std::time::Duration::from_secs_f64(arrivals.exp(rate));
         }
@@ -598,6 +662,9 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
     let replay_s = replay_start.elapsed().as_secs_f64();
     let summary = server.summary();
     println!("{summary}");
+    if rejected > 0 {
+        println!("trace replay: {rejected} of {sent} submissions rejected at admission");
+    }
 
     if let Some(out) = args.get("bench-trace") {
         let path = if out == "true" { "BENCH_serve.json" } else { out };
@@ -647,6 +714,337 @@ fn write_bench_serve(path: &str, s: &mkq::coordinator::ServerSummary, replay_s: 
         s.padded_token_fraction()
     ));
     std::fs::write(path, out).map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))
+}
+
+/// Socket load generator against a `serve-native --listen` server.
+///
+/// Closed loop: each connection sends one request and waits for its
+/// reply before the next — concurrency is bounded by `--conns`, so it
+/// measures latency under polite load. Open loop: each connection emits
+/// Poisson arrivals regardless of completions — the overload-honest
+/// mode, where admission control and deadline shedding actually fire.
+fn loadgen(args: &Args, conf: &Config) -> Result<()> {
+    use mkq::coordinator::net::{self, ClientReply};
+    use mkq::util::benchkit::BenchResult;
+    use mkq::util::stats::LatencyRecorder;
+
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => anyhow::bail!("loadgen needs --addr HOST:PORT (see `mkq-bert` usage)"),
+    };
+    let mode = args.str("mode", &conf.str("loadgen.mode", "closed"));
+    anyhow::ensure!(mode == "closed" || mode == "open", "--mode expects closed|open, got {mode:?}");
+    let conns = args.usize("conns", conf.usize("loadgen.conns", 4)).max(1);
+    let total = args.usize("requests", conf.usize("loadgen.requests", 200));
+    let rate = args.f64("rate", conf.f64("loadgen.rate", 2000.0));
+    let deadline_us = args.usize("deadline-us", conf.usize("loadgen.deadline_us", 0)) as u32;
+    let model_index = args.usize("model-index", 0);
+    anyhow::ensure!(model_index <= u16::MAX as usize, "--model-index out of range");
+
+    // INFO probe: self-size requests to the target model's vocab/seq
+    let models = {
+        let mut s = std::net::TcpStream::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+        net::send_frame(&mut s, &net::encode_info_request())?;
+        match net::read_reply(&mut s)? {
+            ClientReply::Info { models } => models,
+            other => anyhow::bail!("INFO probe got unexpected reply: {other:?}"),
+        }
+    };
+    anyhow::ensure!(
+        model_index < models.len(),
+        "--model-index {model_index} out of range ({} models advertised)",
+        models.len()
+    );
+    let m = &models[model_index];
+    println!(
+        "target {addr}: model {model_index} ({}) vocab={} seq={} n_classes={}",
+        m.label, m.vocab, m.seq, m.n_classes
+    );
+    let (vocab, seq) = (m.vocab as usize, m.seq as usize);
+
+    let per_conn = (total + conns - 1) / conns;
+    let rate_per_conn = (rate / conns as f64).max(1.0);
+    println!(
+        "loadgen: mode {mode}, {conns} conns x {per_conn} requests{}",
+        if mode == "open" { format!(", {rate:.0} rps aggregate") } else { String::new() }
+    );
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ci in 0..conns {
+        let addr = addr.clone();
+        let closed = mode == "closed";
+        handles.push(std::thread::spawn(move || {
+            if closed {
+                loadgen_closed_worker(
+                    &addr,
+                    model_index as u16,
+                    deadline_us,
+                    per_conn,
+                    seq,
+                    vocab,
+                    ci as u64,
+                )
+            } else {
+                loadgen_open_worker(
+                    &addr,
+                    model_index as u16,
+                    deadline_us,
+                    per_conn,
+                    rate_per_conn,
+                    seq,
+                    vocab,
+                    ci as u64,
+                )
+            }
+        }));
+    }
+    let mut tally = LoadTally::default();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(t)) => tally.merge(t),
+            Ok(Err(e)) => eprintln!("loadgen connection error: {e}"),
+            Err(_) => eprintln!("loadgen worker panicked"),
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut rec = LatencyRecorder::new();
+    for &us in &tally.lat_ok_us {
+        rec.record(us);
+    }
+    let lat = rec.summary();
+    let answered = tally.ok + tally.shed + tally.full + tally.invalid + tally.failed + tally.other;
+    println!(
+        "sent {} in {:.2}s ({:.0} rps offered), answered {answered}",
+        tally.sent,
+        wall_s,
+        tally.sent as f64 / wall_s
+    );
+    println!(
+        "  served={} shed_deadline={} queue_full={} invalid={} backend_failed={} other={} lost={}",
+        tally.ok, tally.shed, tally.full, tally.invalid, tally.failed, tally.other, tally.lost
+    );
+    if lat.count > 0 {
+        println!("  served latency: {lat}");
+    }
+
+    if let Some(out) = args.get("bench-out") {
+        let path = if out == "true" { "BENCH_serve_net.json" } else { out };
+        let mut s = String::from("{\n  \"kernels\": [\n");
+        // only the served-latency median is gated (tails and shed counts
+        // are schedule-dependent — ungated metadata, same split as the
+        // trace-replay bench)
+        if lat.count > 0 {
+            s.push_str(&format!(
+                "    {}\n",
+                BenchResult::single(lat.p50_us, lat.count).json_row(&format!("net_{mode}_p50"))
+            ));
+        }
+        s.push_str(&format!(
+            "  ],\n  \"ungated\": {{\"mode\": \"{mode}\", \"conns\": {conns}, \"sent\": {}, \
+             \"served\": {}, \"shed_deadline\": {}, \"queue_full\": {}, \"backend_failed\": {}, \
+             \"lost\": {}, \"p99_us\": {:.3}, \"mean_us\": {:.3}, \"wall_s\": {:.3}}}\n}}\n",
+            tally.sent,
+            tally.ok,
+            tally.shed,
+            tally.full,
+            tally.failed,
+            tally.lost,
+            lat.p99_us,
+            lat.mean_us,
+            wall_s
+        ));
+        std::fs::write(path, s).map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+
+    anyhow::ensure!(
+        tally.sent == answered + tally.lost,
+        "loadgen accounting broken: sent {} != answered {answered} + lost {}",
+        tally.sent,
+        tally.lost
+    );
+    if args.bool("expect-served") {
+        anyhow::ensure!(tally.ok > 0, "--expect-served: no request was served");
+    }
+    if args.bool("expect-shed") {
+        anyhow::ensure!(
+            tally.shed + tally.full > 0,
+            "--expect-shed: no request was shed (deadline or queue-full)"
+        );
+    }
+    if !args.bool("allow-lost") {
+        anyhow::ensure!(
+            tally.lost == 0,
+            "{} request(s) got no response — every admitted request must be answered \
+             (--allow-lost tolerates client-side timeouts)",
+            tally.lost
+        );
+    }
+    Ok(())
+}
+
+/// Per-connection load-generator outcome counts, merged across workers.
+#[derive(Default)]
+struct LoadTally {
+    sent: u64,
+    ok: u64,
+    /// DeadlineExceeded rejects.
+    shed: u64,
+    /// QueueFull rejects.
+    full: u64,
+    invalid: u64,
+    /// BackendFailed rejects (the request's batch failed or panicked).
+    failed: u64,
+    other: u64,
+    /// Sent but never answered before timeout/disconnect.
+    lost: u64,
+    lat_ok_us: Vec<f64>,
+}
+
+impl LoadTally {
+    fn absorb_reject(&mut self, code: mkq::coordinator::net::RejectCode) {
+        use mkq::coordinator::net::RejectCode as C;
+        match code {
+            C::DeadlineExceeded => self.shed += 1,
+            C::QueueFull => self.full += 1,
+            C::InvalidRequest => self.invalid += 1,
+            C::BackendFailed => self.failed += 1,
+            C::BadFrame | C::ServerBusy => self.other += 1,
+        }
+    }
+
+    fn merge(&mut self, o: LoadTally) {
+        self.sent += o.sent;
+        self.ok += o.ok;
+        self.shed += o.shed;
+        self.full += o.full;
+        self.invalid += o.invalid;
+        self.failed += o.failed;
+        self.other += o.other;
+        self.lost += o.lost;
+        self.lat_ok_us.extend(o.lat_ok_us);
+    }
+}
+
+fn loadgen_closed_worker(
+    addr: &str,
+    model: u16,
+    deadline_us: u32,
+    n: usize,
+    seq: usize,
+    vocab: usize,
+    ci: u64,
+) -> std::io::Result<LoadTally> {
+    use mkq::coordinator::net::{self, ClientReply};
+
+    let mut t = LoadTally::default();
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+    let mut rng = mkq::util::rng::Rng::new(1000 + ci);
+    for i in 0..n {
+        let len = 1 + rng.below(seq);
+        let ids: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
+        let mask = vec![1.0f32; len];
+        let tag = (ci << 32) | i as u64;
+        let sent_at = std::time::Instant::now();
+        let frame = net::encode_request(tag, model, deadline_us, &ids, &mask);
+        if net::send_frame(&mut stream, &frame).is_err() {
+            break;
+        }
+        t.sent += 1;
+        match net::read_reply(&mut stream) {
+            Ok(ClientReply::Ok { .. }) => {
+                t.ok += 1;
+                t.lat_ok_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(ClientReply::Reject { code, .. }) => t.absorb_reject(code),
+            Ok(ClientReply::Info { .. }) => t.other += 1,
+            Err(_) => {
+                t.lost += 1;
+                break;
+            }
+        }
+    }
+    Ok(t)
+}
+
+fn loadgen_open_worker(
+    addr: &str,
+    model: u16,
+    deadline_us: u32,
+    n: usize,
+    rate: f64,
+    seq: usize,
+    vocab: usize,
+    ci: u64,
+) -> std::io::Result<LoadTally> {
+    use mkq::coordinator::net::{self, ClientReply};
+    use std::sync::{Arc, Mutex};
+
+    let mut t = LoadTally::default();
+    let stream = std::net::TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let mut wstream = stream.try_clone()?;
+    let mut rstream = stream;
+    let _ = rstream.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+
+    // send times by per-connection request index (tag low bits), so the
+    // reader can compute latency for out-of-order completions
+    let starts: Arc<Mutex<Vec<Option<std::time::Instant>>>> = Arc::new(Mutex::new(vec![None; n]));
+    let w_starts = Arc::clone(&starts);
+    let writer = std::thread::spawn(move || -> u64 {
+        let mut rng = mkq::util::rng::Rng::new(2000 + ci);
+        let mut sent = 0u64;
+        let mut next = std::time::Instant::now();
+        for i in 0..n {
+            let now = std::time::Instant::now();
+            if now < next {
+                std::thread::sleep(next - now);
+            }
+            let len = 1 + rng.below(seq);
+            let ids: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
+            let mask = vec![1.0f32; len];
+            let tag = (ci << 32) | i as u64;
+            w_starts.lock().unwrap()[i] = Some(std::time::Instant::now());
+            let frame = net::encode_request(tag, model, deadline_us, &ids, &mask);
+            if net::send_frame(&mut wstream, &frame).is_err() {
+                break;
+            }
+            sent += 1;
+            next += std::time::Duration::from_secs_f64(rng.exp(rate));
+        }
+        sent
+    });
+
+    let mut got = 0usize;
+    while got < n {
+        match net::read_reply(&mut rstream) {
+            Ok(ClientReply::Ok { tag, .. }) => {
+                got += 1;
+                t.ok += 1;
+                let i = (tag & 0xffff_ffff) as usize;
+                if let Some(Some(s)) = starts.lock().unwrap().get(i).copied() {
+                    t.lat_ok_us.push(s.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+            Ok(ClientReply::Reject { code, .. }) => {
+                got += 1;
+                t.absorb_reject(code);
+            }
+            Ok(ClientReply::Info { .. }) => {
+                got += 1;
+                t.other += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    t.sent = writer.join().unwrap_or(0);
+    t.lost = t.sent.saturating_sub(got as u64);
+    Ok(t)
 }
 
 #[cfg(not(feature = "xla"))]
@@ -831,6 +1229,7 @@ mod artifact {
                 batch_buckets: vec![1, 8, 16],
                 seq_buckets: vec![],
                 batch_window: std::time::Duration::from_micros(window_us as u64),
+                ..Default::default()
             },
         )?;
 

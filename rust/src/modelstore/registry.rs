@@ -18,6 +18,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use super::LoadStats;
+use crate::coordinator::faults::{FaultPlan, Faults};
 use crate::kernels::Dispatcher;
 use crate::runtime::{Backend, NativeModel, Precision, ServeDims, Workspace};
 
@@ -34,6 +35,10 @@ pub struct RegisteredModel {
 pub struct Registry {
     pub disp: Dispatcher,
     models: Vec<RegisteredModel>,
+    /// Fault-injection hook (`MKQ_FAULT_*` env or [`Registry::set_faults`]);
+    /// inert by default. One hook for the whole registry — an injected
+    /// fault is a process-level event, not a per-model one.
+    faults: Faults,
 }
 
 impl Default for Registry {
@@ -44,7 +49,14 @@ impl Default for Registry {
 
 impl Registry {
     pub fn new() -> Self {
-        Registry { disp: Dispatcher::new(), models: Vec::new() }
+        Registry { disp: Dispatcher::new(), models: Vec::new(), faults: Faults::from_env() }
+    }
+
+    /// Arm (or disarm, with an inert plan) fault injection on this
+    /// registry instance — chaos tests use this instead of the env so
+    /// parallel test threads never share fault state.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = Faults::with_plan(plan);
     }
 
     /// Load a checkpoint (file or sharded directory) and register it
@@ -181,6 +193,7 @@ impl Backend for Registry {
         mask: &[f32],
     ) -> Result<Vec<f32>> {
         let entry = self.model(model)?;
+        self.faults.before_forward()?;
         let mut ws = entry.ws.borrow_mut();
         // the label is borrowed, not formatted — no allocation on the
         // per-batch success path (the zero-alloc serving contract)

@@ -17,6 +17,7 @@ use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::faults::{FaultPlan, Faults};
 use crate::kernels::Dispatcher;
 
 use super::native::{NativeLayer, NativeModel};
@@ -198,6 +199,9 @@ pub struct NativeBackend {
     /// calls. `RefCell` because the `Backend` trait takes `&self` and the
     /// serving event loop is single-threaded by design.
     ws: RefCell<Workspace>,
+    /// Fault-injection hook (`MKQ_FAULT_*` env or [`NativeBackend::set_faults`]);
+    /// inert by default.
+    faults: Faults,
 }
 
 impl Default for NativeBackend {
@@ -213,6 +217,7 @@ impl NativeBackend {
             bench_layers: None,
             model: None,
             ws: RefCell::new(Workspace::new()),
+            faults: Faults::from_env(),
         }
     }
 
@@ -239,6 +244,13 @@ impl NativeBackend {
 
     pub fn model(&self) -> Option<&NativeModel> {
         self.model.as_ref()
+    }
+
+    /// Arm (or disarm, with an inert plan) fault injection on this
+    /// backend instance — chaos tests use this instead of the env so
+    /// parallel test threads never share fault state.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = Faults::with_plan(plan);
     }
 
     /// Install the three bench layers (f32 / int8 / int4 over the same
@@ -289,6 +301,7 @@ impl Backend for NativeBackend {
     fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
         match &self.model {
             Some(m) => {
+                self.faults.before_forward()?;
                 let mut ws = self.ws.borrow_mut();
                 native_serve_forward("the native backend", m, &self.disp, &mut ws, bucket, t, ids, mask)
             }

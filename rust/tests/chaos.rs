@@ -1,0 +1,300 @@
+//! Chaos suite: the overload and fault-injection scenarios the serving
+//! stack must survive (ISSUE acceptance: server survives, every admitted
+//! request gets exactly one response, counts reconcile, the socket front
+//! door round-trips over real TCP).
+//!
+//! Faults are armed per backend instance ([`NativeBackend::set_faults`]),
+//! never via the `MKQ_FAULT_*` env — parallel test threads must not
+//! share fault state.
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use mkq::coordinator::net::{self, ClientReply, FrontDoor, RejectCode, RunOpts};
+use mkq::coordinator::{FaultPlan, Rejected, ResponseBody, Server, ServerConfig};
+use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+
+fn tiny_backend(seed: u64) -> NativeBackend {
+    let dims = NativeDims {
+        vocab: 64,
+        seq: 8,
+        n_layers: 1,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_classes: 2,
+    };
+    NativeBackend::with_model(NativeModel::random(dims, &[4], seed))
+}
+
+fn cfg(batch_buckets: Vec<usize>, max_pending: usize) -> ServerConfig {
+    ServerConfig {
+        batch_buckets,
+        seq_buckets: vec![],
+        batch_window: Duration::from_secs(60),
+        max_pending,
+        ..Default::default()
+    }
+}
+
+fn req(i: usize) -> (Vec<i32>, Vec<f32>) {
+    let ids: Vec<i32> = (0..8).map(|j| ((i + j) % 64) as i32).collect();
+    (ids, vec![1.0; 8])
+}
+
+#[test]
+fn overload_flood_sheds_with_typed_queue_full() {
+    let be = tiny_backend(1);
+    let mut s = Server::new(&be, cfg(vec![4], 4)).unwrap();
+    let mut admitted = 0u64;
+    let mut shed_full = 0u64;
+    for i in 0..16 {
+        let (ids, mask) = req(i);
+        match s.submit(ids, mask) {
+            Ok(_) => admitted += 1,
+            Err(Rejected::QueueFull { pending, max_pending }) => {
+                assert_eq!((pending, max_pending), (4, 4));
+                shed_full += 1;
+            }
+            Err(other) => panic!("unexpected rejection {other:?}"),
+        }
+    }
+    assert_eq!((admitted, shed_full), (4, 12));
+    assert_eq!((s.admitted, s.rejected_full), (4, 12));
+    // the admitted prefix is fully served, nothing is stuck
+    let out = s.drain().unwrap();
+    assert_eq!(out.len(), 4);
+    assert!(out.iter().all(|r| r.is_ok()));
+    assert_eq!(s.pending(), 0);
+    // shedding freed capacity: admission works again
+    let (ids, mask) = req(99);
+    assert!(s.submit(ids, mask).is_ok());
+}
+
+#[test]
+fn deadline_shed_under_stalled_backend() {
+    let mut be = tiny_backend(2);
+    // every forward stalls ~15ms — far past the 5ms request deadlines
+    be.set_faults(FaultPlan::delay_us(15_000));
+    let mut s = Server::new(&be, cfg(vec![1], 0)).unwrap();
+    let (ids, mask) = req(0);
+    let head = s.submit(ids, mask).unwrap();
+    for i in 1..=2 {
+        let (ids, mask) = req(i);
+        s.submit_with(0, ids, mask, Some(Duration::from_millis(5))).unwrap();
+    }
+    // the undeadlined head request serves, holding the backend long
+    // enough for the queued deadlines to lapse
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, head);
+    assert!(out[0].is_ok());
+    // expired requests are shed before the next batch is staged — they
+    // never waste a forward
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 2);
+    for r in &out {
+        assert_eq!(r.batch_size, 0, "a shed request must not occupy a batch slot");
+        match &r.body {
+            ResponseBody::Shed(Rejected::DeadlineExceeded { waited_us }) => {
+                assert!(*waited_us >= 5_000, "waited {waited_us}us < its 5ms deadline");
+            }
+            other => panic!("expected a deadline shed, got {other:?}"),
+        }
+    }
+    assert_eq!(s.shed_deadline, 2);
+    assert_eq!(s.pending(), 0);
+    // the stalled (but healthy) backend still serves fresh traffic
+    let (ids, mask) = req(3);
+    let id = s.submit(ids, mask).unwrap();
+    let out = s.drain().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, id);
+    assert!(out[0].is_ok());
+    assert_eq!(s.admitted, s.served + s.shed_deadline);
+}
+
+#[test]
+fn forward_error_isolated_to_batch() {
+    let mut be = tiny_backend(3);
+    be.set_faults(FaultPlan::fail_nth(1));
+    let mut s = Server::new(&be, cfg(vec![2], 0)).unwrap();
+    for i in 0..2 {
+        let (ids, mask) = req(i);
+        s.submit(ids, mask).unwrap();
+    }
+    // forward #1 fails: both requests of that batch get error responses
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 2);
+    for r in &out {
+        match &r.body {
+            ResponseBody::Failed(msg) => assert!(msg.contains("injected fault"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+    assert_eq!((s.failed, s.failed_batches), (2, 1));
+    // the failure is isolated: the next batch serves clean
+    for i in 2..4 {
+        let (ids, mask) = req(i);
+        s.submit(ids, mask).unwrap();
+    }
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 2);
+    assert!(out.iter().all(|r| r.is_ok()));
+    assert_eq!(s.served, 2);
+    assert_eq!(s.admitted, s.served + s.failed);
+}
+
+#[test]
+fn panic_recovery_keeps_serving() {
+    let mut be = tiny_backend(4);
+    be.set_faults(FaultPlan::panic_nth(1));
+    let mut s = Server::new(&be, cfg(vec![1], 0)).unwrap();
+    for i in 0..2 {
+        let (ids, mask) = req(i);
+        s.submit(ids, mask).unwrap();
+    }
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 1);
+    match &out[0].body {
+        ResponseBody::Failed(msg) => {
+            assert!(msg.contains("backend panicked"), "{msg}");
+            assert!(msg.contains("injected fault"), "{msg}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    // the panic was contained to its batch: the server keeps serving
+    let out = s.pump().unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(out[0].is_ok());
+    assert_eq!((s.served, s.failed, s.failed_batches), (1, 1, 1));
+    assert_eq!(s.pending(), 0);
+}
+
+#[test]
+fn accounting_reconciles_under_flood_and_faults() {
+    let mut be = tiny_backend(5);
+    be.set_faults(FaultPlan::fail_every(3));
+    let mut s = Server::new(
+        &be,
+        ServerConfig {
+            batch_buckets: vec![2],
+            seq_buckets: vec![],
+            batch_window: Duration::ZERO,
+            max_pending: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut ids_seen = HashSet::new();
+    let mut responses = 0u64;
+    for i in 0..60 {
+        let (ids, mask) = req(i);
+        let _ = s.submit(ids, mask); // QueueFull rejects are the point
+        if i % 5 == 0 {
+            for r in s.pump().unwrap() {
+                assert!(ids_seen.insert(r.id), "duplicate response for id {}", r.id);
+                responses += 1;
+            }
+        }
+    }
+    for r in s.drain().unwrap() {
+        assert!(ids_seen.insert(r.id), "duplicate response for id {}", r.id);
+        responses += 1;
+    }
+    assert_eq!(s.pending(), 0);
+    assert!(s.rejected_full > 0, "the flood never hit the queue bound");
+    assert!(s.failed > 0, "fault injection never fired");
+    assert!(s.served > 0, "nothing was served");
+    // exactly one response per admitted request, and the books balance
+    assert_eq!(responses, s.admitted);
+    assert_eq!(s.admitted, s.served + s.shed_deadline + s.failed);
+    assert_eq!(s.admitted + s.rejected_full + s.rejected_invalid, 60);
+}
+
+#[test]
+fn socket_roundtrip_survives_kill_and_reconnect() {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || -> (u64, u64, u64) {
+        let be = tiny_backend(7);
+        let mut server = Server::new(&be, cfg(vec![1], 64)).unwrap();
+        let mut door = FrontDoor::bind("127.0.0.1:0").unwrap();
+        addr_tx.send(door.local_addr().unwrap()).unwrap();
+        door.run(&mut server, RunOpts::default(), Some(&stop2)).unwrap();
+        (door.stats().bad_frames, server.served, server.admitted)
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).expect("server thread must bind");
+
+    let connect = || {
+        let s = TcpStream::connect(addr).unwrap();
+        let _ = s.set_nodelay(true);
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    };
+    let ids: Vec<i32> = (0..8).collect();
+    let mask = vec![1.0f32; 8];
+
+    // healthy path: INFO advertises the model, a request round-trips
+    let mut c1 = connect();
+    net::send_frame(&mut c1, &net::encode_info_request()).unwrap();
+    match net::read_reply(&mut c1).unwrap() {
+        ClientReply::Info { models } => {
+            assert_eq!(models.len(), 1);
+            assert_eq!((models[0].vocab, models[0].seq, models[0].n_classes), (64, 8, 2));
+        }
+        other => panic!("expected Info, got {other:?}"),
+    }
+    net::send_frame(&mut c1, &net::encode_request(11, 0, 0, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c1).unwrap() {
+        ClientReply::Ok { tag, logits, .. } => {
+            assert_eq!(tag, 11);
+            assert_eq!(logits.len(), 2);
+            assert!(logits.iter().all(|l| l.is_finite()));
+        }
+        other => panic!("expected Ok, got {other:?}"),
+    }
+
+    // chaos 1: a client dies mid-frame (promises 20 body bytes, sends 5,
+    // disconnects) — the server must reap the half-frame quietly
+    {
+        let mut c2 = connect();
+        c2.write_all(&20u32.to_le_bytes()).unwrap();
+        c2.write_all(&[net::PROTO_VERSION, net::MSG_REQUEST, 0, 0, 0]).unwrap();
+    }
+
+    // chaos 2: a protocol-violating frame (wrong version byte) gets a
+    // typed BadFrame reject and the connection is closed
+    {
+        let mut c3 = connect();
+        let mut body = vec![99u8, net::MSG_REQUEST];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        net::send_frame(&mut c3, &body).unwrap();
+        match net::read_reply(&mut c3).unwrap() {
+            ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::BadFrame),
+            other => panic!("expected BadFrame reject, got {other:?}"),
+        }
+    }
+
+    // the original connection is unaffected by either kill
+    net::send_frame(&mut c1, &net::encode_request(12, 0, 0, &ids, &mask)).unwrap();
+    assert!(matches!(net::read_reply(&mut c1).unwrap(), ClientReply::Ok { tag: 12, .. }));
+
+    // and a fresh connection serves after the chaos
+    let mut c4 = connect();
+    net::send_frame(&mut c4, &net::encode_request(13, 0, 0, &ids, &mask)).unwrap();
+    assert!(matches!(net::read_reply(&mut c4).unwrap(), ClientReply::Ok { tag: 13, .. }));
+
+    drop(c1);
+    drop(c4);
+    stop.store(true, Ordering::SeqCst);
+    let (bad_frames, served, admitted) =
+        handle.join().expect("server thread must survive the chaos");
+    assert_eq!(bad_frames, 1, "exactly the wrong-version frame is a bad frame");
+    assert_eq!((served, admitted), (3, 3), "tags 11/12/13 were served end to end");
+}

@@ -230,6 +230,7 @@ fn serving_stack_end_to_end_native() {
             batch_buckets: vec![2, 4],
             seq_buckets: vec![4, 8],
             batch_window: std::time::Duration::ZERO,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -245,8 +246,9 @@ fn serving_stack_end_to_end_native() {
     assert_eq!(got.len(), 9);
     got.sort_by_key(|r| r.id);
     for r in &got {
-        assert_eq!(r.logits.len(), dims.n_classes);
-        assert!(r.logits.iter().all(|x| x.is_finite()));
+        let logits = r.logits().expect("ok response");
+        assert_eq!(logits.len(), dims.n_classes);
+        assert!(logits.iter().all(|x| x.is_finite()));
     }
     let summary = server.summary();
     assert_eq!(summary.served, 9);

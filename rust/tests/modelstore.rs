@@ -26,6 +26,20 @@ fn tmp_path(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("mkq_store_{}_{name}", std::process::id()))
 }
 
+/// Tests that read or write `MKQ_NO_MMAP` serialize on this lock —
+/// env vars are process-global and the harness runs tests in parallel.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Removes an env var on drop, so a failing assertion can't leak the
+/// override into later (lock-holding) tests.
+struct EnvVarGuard(&'static str);
+
+impl Drop for EnvVarGuard {
+    fn drop(&mut self) {
+        std::env::remove_var(self.0);
+    }
+}
+
 fn small_dims() -> NativeDims {
     NativeDims { vocab: 64, seq: 8, n_layers: 2, d_model: 32, n_heads: 4, d_ff: 64, n_classes: 2 }
 }
@@ -100,6 +114,9 @@ fn v1_migrate_v2_and_shards_are_bit_for_bit_across_kernels() {
 
 #[test]
 fn mmap_and_buffered_loads_agree_bit_for_bit() {
+    // asserts `is_mapped()` on the default open, so the no-mmap env test
+    // must not run concurrently
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let dims = small_dims();
     let v1 = tmp_path("mm_v1.mkqc");
     let v2 = tmp_path("mm_v2.mkqc");
@@ -129,6 +146,44 @@ fn mmap_and_buffered_loads_agree_bit_for_bit() {
             assert!(sm.rss_proxy_bytes() < sb.rss_proxy_bytes());
         }
     }
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_file(&v2).ok();
+}
+
+#[test]
+fn no_mmap_env_forces_buffered_v2_load_bit_for_bit() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dims = small_dims();
+    let v1 = tmp_path("envmm_v1.mkqc");
+    let v2 = tmp_path("envmm_v2.mkqc");
+    checkpoint::export_random_with(&v1, dims, &[8, 4], 53, 1).unwrap();
+    migrate_checkpoint(&Checkpoint::read(&v1).unwrap(), &v2, 1).unwrap();
+    let disp = Dispatcher::with_threads(2);
+
+    // reference load through the default (mmap-preferring) path
+    let mapped = Checkpoint::read(&v2).unwrap();
+    #[cfg(unix)]
+    assert!(mapped.is_mapped(), "unix reads should mmap by default");
+    let (want, want_stats) = {
+        let (m, s) = NativeModel::from_checkpoint_data_with_stats(&mapped).unwrap();
+        (probe(&m, &disp), s)
+    };
+
+    // the same file under MKQ_NO_MMAP=1 must take the buffered fallback
+    // and produce a bit-for-bit identical model
+    std::env::set_var("MKQ_NO_MMAP", "1");
+    let _unset = EnvVarGuard("MKQ_NO_MMAP");
+    let buffered = Checkpoint::read(&v2).unwrap();
+    assert!(!buffered.is_mapped(), "MKQ_NO_MMAP=1 must force the buffered fallback");
+    assert!(buffered.file_heap_bytes() > 0, "a buffered image pins the file on the heap");
+    let (m, stats) = NativeModel::from_checkpoint_data_with_stats(&buffered).unwrap();
+    assert_eq!(
+        stats.prepacked_panels, want_stats.prepacked_panels,
+        "v2 prepacked panels must survive the buffered path"
+    );
+    assert_eq!(stats.quantized_panels, 0, "v2 load must skip quantize+pack either way");
+    assert_eq!(probe(&m, &disp), want, "env-forced buffered load diverges from mmap load");
+
     std::fs::remove_file(&v1).ok();
     std::fs::remove_file(&v2).ok();
 }
@@ -243,6 +298,7 @@ fn one_server_two_checkpoint_models_bit_for_bit() {
             batch_buckets: vec![1, 2],
             seq_buckets: vec![4],
             batch_window: std::time::Duration::ZERO,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -277,7 +333,12 @@ fn one_server_two_checkpoint_models_bit_for_bit() {
         }
         let want = model.forward(&reg.disp, &pids, &pmask, r.batch_size, t);
         let nc = model.dims.n_classes;
-        assert_eq!(r.logits, want[..nc], "request {} routed output diverges", r.id);
+        assert_eq!(
+            r.logits().expect("ok response"),
+            &want[..nc],
+            "request {} routed output diverges",
+            r.id
+        );
     }
     std::fs::remove_file(&pa).ok();
     std::fs::remove_file(&pb1).ok();

@@ -112,6 +112,7 @@ fn server_seq_buckets_match_full_seq_server_bit_for_bit() {
                 batch_buckets: vec![1, 4],
                 seq_buckets,
                 batch_window: std::time::Duration::ZERO,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -120,7 +121,7 @@ fn server_seq_buckets_match_full_seq_server_bit_for_bit() {
         }
         let mut out = server.drain().unwrap();
         out.sort_by_key(|r| r.id);
-        out.into_iter().map(|r| r.logits).collect()
+        out.into_iter().map(|r| r.into_logits().expect("ok response")).collect()
     };
     let bucketed = serve(vec![2, 4, 8]);
     let full = serve(vec![]); // full-seq padding only
@@ -142,6 +143,7 @@ fn padded_token_accounting_shrinks_with_seq_buckets() {
                 batch_buckets: vec![4],
                 seq_buckets,
                 batch_window: std::time::Duration::ZERO,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -24,6 +24,15 @@ impl Error {
         Error { chain: vec![message.to_string()] }
     }
 
+    /// Build an error from a typed std error, preserving its source
+    /// chain (upstream's `Error::new`).
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Self::from(error)
+    }
+
     /// Wrap with an outer context message (innermost cause stays last).
     pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
         self.chain.insert(0, context.to_string());
