@@ -31,7 +31,7 @@ use super::{
     MANIFEST_TAG, MAX_LAYERS, MAX_NAME_LEN, MAX_RANK, MAX_TENSORS, PANEL_LAYOUT, PAYLOAD_ALIGN,
     VERSION, VERSION_V1,
 };
-use crate::kernels::PackedWeights;
+use crate::kernels::{PackedWeights, PanelRef};
 use crate::runtime::native::NativeDims;
 
 /// One parsed directory entry (exposed for `mkq-bert ckpt inspect`).
@@ -62,8 +62,10 @@ impl Entry {
 }
 
 /// One backing file: its bytes plus where the payload lives inside them.
+/// The image is `Arc`-shared so zero-copy loads ([`Checkpoint::panel_ref`])
+/// can hand out [`PanelRef`]s that keep it alive past the `Checkpoint`.
 struct Shard {
-    data: FileBytes,
+    data: std::sync::Arc<FileBytes>,
     payload_start: usize,
     payload_len: usize,
     payload_crc: u32,
@@ -339,7 +341,13 @@ fn parse_one(data: FileBytes) -> Result<(CkptHeader, u32, Vec<Entry>, Shard), Ck
         return Err(CkptError::BadCrc { stored, computed });
     }
 
-    let shard = Shard { data, payload_start, payload_len, payload_crc: stored, header_crc };
+    let shard = Shard {
+        data: std::sync::Arc::new(data),
+        payload_start,
+        payload_len,
+        payload_crc: stored,
+        header_crc,
+    };
     Ok((header, version, entries, shard))
 }
 
@@ -591,6 +599,44 @@ impl Checkpoint {
             )));
         }
         Ok(self.raw_slice(e))
+    }
+
+    /// A shared-ownership view of one entry's payload bytes: the returned
+    /// [`PanelRef`] clones the shard image's `Arc`, so it stays valid
+    /// after this `Checkpoint` is dropped — the zero-copy load contract.
+    fn entry_ref(&self, e: &Entry) -> PanelRef {
+        let s = &self.shards[e.shard];
+        let owner: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync> = s.data.clone();
+        PanelRef::new(owner, s.payload_start + e.offset, e.len)
+    }
+
+    /// Zero-copy variant of [`Checkpoint::panel_bytes`]: borrow the panel
+    /// bytes of a prepacked (v2) weight entry without tying the borrow to
+    /// this checkpoint's lifetime.
+    pub fn panel_ref(&self, name: &str) -> Result<PanelRef, CkptError> {
+        let e = self.entry_required(name)?;
+        if e.dtype != DTYPE_I8_PANELS && e.dtype != DTYPE_I4_PANELS {
+            return Err(CkptError::BadDirectory(format!(
+                "{name} is stored as {} — not prepacked panels",
+                e.dtype_name()
+            )));
+        }
+        Ok(self.entry_ref(e))
+    }
+
+    /// Zero-copy raw bytes of an fp32 entry (LE f32 encoding), plus its
+    /// dims — the scales side of a zero-copy weight load. Callers decide
+    /// whether an in-place view is legal (see `kernels::ScaleVec`).
+    pub fn f32_ref(&self, name: &str) -> Result<(&[usize], PanelRef), CkptError> {
+        let e = self.entry_required(name)?;
+        if e.dtype != DTYPE_F32 {
+            return Err(CkptError::BadDirectory(format!(
+                "{} is stored as {} — not an fp32 tensor",
+                e.name,
+                e.dtype_name()
+            )));
+        }
+        Ok((&e.dims, self.entry_ref(e)))
     }
 
     /// An fp32 master for `name`, dequantizing a prepacked entry through

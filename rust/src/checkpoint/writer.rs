@@ -334,6 +334,6 @@ mod tests {
         assert_eq!(back.unpack_codes(), codes);
         let (sdims, sdata) = ck.f32_tensor("w.scales").unwrap();
         assert_eq!(sdims, &[n]);
-        assert_eq!(sdata, back.scales);
+        assert_eq!(&sdata[..], &back.scales[..]);
     }
 }

@@ -18,7 +18,7 @@
 //!     for deadline-shedding tests.
 //!
 //! Plans come from the environment at backend construction
-//! (`MKQ_FAULT_FAIL_FORWARD=N|every:N`, `MKQ_FAULT_PANIC_FORWARD=N`,
+//! (`MKQ_FAULT_FAIL_FORWARD=N|every:N|first:N`, `MKQ_FAULT_PANIC_FORWARD=N`,
 //! `MKQ_FAULT_DELAY_US=N` — the chaos CI job drives the release binary
 //! this way) or programmatically via `set_faults` (the `tests/chaos.rs`
 //! suite; per-instance state, so parallel test threads never share a
@@ -35,6 +35,10 @@ pub enum FailForward {
     Nth(u64),
     /// Every Nth forward fails (N, 2N, 3N, …).
     Every(u64),
+    /// The first N forwards fail, then every later one succeeds — a
+    /// bounded outage (drives a model into quarantine, after which
+    /// siblings and reloads serve clean).
+    FirstN(u64),
 }
 
 /// A declarative fault plan. `Default` is fully inert.
@@ -60,7 +64,9 @@ impl FaultPlan {
         if let Ok(v) = std::env::var("MKQ_FAULT_FAIL_FORWARD") {
             match parse_fail_spec(&v) {
                 Some(spec) => plan.fail_forward = Some(spec),
-                None => eprintln!("MKQ_FAULT_FAIL_FORWARD={v:?} is not N or every:N — ignored"),
+                None => {
+                    eprintln!("MKQ_FAULT_FAIL_FORWARD={v:?} is not N, every:N, or first:N — ignored")
+                }
             }
         }
         if let Ok(v) = std::env::var("MKQ_FAULT_PANIC_FORWARD") {
@@ -86,6 +92,10 @@ impl FaultPlan {
         FaultPlan { fail_forward: Some(FailForward::Every(n)), ..Default::default() }
     }
 
+    pub fn fail_first(n: u64) -> Self {
+        FaultPlan { fail_forward: Some(FailForward::FirstN(n)), ..Default::default() }
+    }
+
     pub fn panic_nth(n: u64) -> Self {
         FaultPlan { panic_forward: Some(n), ..Default::default() }
     }
@@ -98,6 +108,8 @@ impl FaultPlan {
 fn parse_fail_spec(v: &str) -> Option<FailForward> {
     if let Some(rest) = v.strip_prefix("every:") {
         rest.parse().ok().filter(|&n| n > 0).map(FailForward::Every)
+    } else if let Some(rest) = v.strip_prefix("first:") {
+        rest.parse().ok().filter(|&n| n > 0).map(FailForward::FirstN)
     } else {
         v.parse().ok().filter(|&n| n > 0).map(FailForward::Nth)
     }
@@ -178,6 +190,7 @@ impl Faults {
         match self.plan.fail_forward {
             Some(FailForward::Nth(k)) if n == k => Err(InjectedFault { forward: n }),
             Some(FailForward::Every(k)) if n % k == 0 => Err(InjectedFault { forward: n }),
+            Some(FailForward::FirstN(k)) if n <= k => Err(InjectedFault { forward: n }),
             _ => Ok(()),
         }
     }
@@ -222,11 +235,20 @@ mod tests {
     }
 
     #[test]
+    fn first_n_fails_exactly_the_prefix() {
+        let f = Faults::with_plan(FaultPlan::fail_first(2));
+        let results: Vec<bool> = (0..5).map(|_| f.before_forward().is_ok()).collect();
+        assert_eq!(results, vec![false, false, true, true, true]);
+    }
+
+    #[test]
     fn fail_spec_parsing() {
         assert_eq!(parse_fail_spec("3"), Some(FailForward::Nth(3)));
         assert_eq!(parse_fail_spec("every:4"), Some(FailForward::Every(4)));
+        assert_eq!(parse_fail_spec("first:5"), Some(FailForward::FirstN(5)));
         assert_eq!(parse_fail_spec("0"), None);
         assert_eq!(parse_fail_spec("every:0"), None);
+        assert_eq!(parse_fail_spec("first:0"), None);
         assert_eq!(parse_fail_spec("bogus"), None);
     }
 

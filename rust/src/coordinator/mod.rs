@@ -27,10 +27,13 @@ pub mod trainer;
 
 pub use crate::quant::{bits_last_n_int4, parse_bits};
 pub use faults::{FaultPlan, Faults, InjectedFault};
-pub use net::{ClientReply, FrontDoor, NetStats, RejectCode, RunOpts, WireModelInfo};
+pub use net::{
+    AdminOp, AdminReply, ClientReply, FrontDoor, NetStats, RejectCode, RunOpts, WireModelInfo,
+};
 pub use scheduler::LrSchedule;
 pub use server::{
-    ModelInfo, Rejected, Request, Response, ResponseBody, Server, ServerConfig, ServerSummary,
+    ModelInfo, PerModelSummary, Rejected, Request, Response, ResponseBody, Server, ServerConfig,
+    ServerSummary,
 };
 pub use trace::{TraceGen, TraceKind};
 

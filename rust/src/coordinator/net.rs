@@ -9,16 +9,24 @@
 //!
 //! | kind   | code | layout after the 2-byte header                         |
 //! |--------|------|--------------------------------------------------------|
-//! | REQUEST| 0x01 | tag `u64`, model `u16`, deadline_us `u32` (0 = none), n `u16`, n×`i32` ids, n×`f32` mask |
+//! | REQUEST| 0x01 | tag `u64`, model `u16`, deadline_us `u32` (0 = none), n `u16`, n×`i32` ids, n×`f32` mask, optional version pin `u64` (absent or 0 = unpinned) |
 //! | INFO   | 0x02 | (empty)                                                |
+//! | ADMIN  | 0x03 | op `u8` ([`AdminOp`]), model `u16`                     |
 //! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits      |
 //! | REJECT | 0x82 | tag `u64`, code `u8` ([`RejectCode`]), UTF-8 message   |
-//! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, label_len `u8`, label bytes |
+//! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, version `u64`, health `u8`, consec_failures `u32`, label_len `u8`, label bytes |
+//! | ADMIN_RESP | 0x84 | op `u8`, ok `u8`, model `u16`, then op-specific payload (see [`AdminReply`]) |
 //!
 //! `tag` is an opaque client-chosen correlation id echoed back verbatim
 //! — replies are **not** ordered across in-flight requests on one
 //! connection, because the dynamic batcher reorders freely (aging,
 //! seq-buckets). Every REQUEST gets exactly one OK or REJECT.
+//!
+//! ADMIN frames drive the model-fleet lifecycle over the same socket:
+//! `RELOAD` and `EVICT` first **drain** the batcher (every admitted
+//! request is answered — no batch ever straddles a version swap), then
+//! call into the backend's lifecycle surface; `STATUS` is a cheap
+//! point-read of one model's version/health/failure counters.
 //!
 //! # Failure semantics
 //!
@@ -56,9 +64,11 @@ pub const MAX_FRAME: usize = 1 << 20;
 
 pub const MSG_REQUEST: u8 = 0x01;
 pub const MSG_INFO: u8 = 0x02;
+pub const MSG_ADMIN: u8 = 0x03;
 pub const MSG_OK: u8 = 0x81;
 pub const MSG_REJECT: u8 = 0x82;
 pub const MSG_INFO_RESP: u8 = 0x83;
+pub const MSG_ADMIN_RESP: u8 = 0x84;
 
 /// Typed reject reasons on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +82,14 @@ pub enum RejectCode {
     BadFrame = 5,
     /// Connection limit reached; retry later.
     ServerBusy = 6,
+    /// Server is draining for shutdown; no new admissions.
+    ShuttingDown = 7,
+    /// The pinned model version was swapped out by a reload.
+    VersionGone = 8,
+    /// Target model is quarantined after repeated forward failures.
+    Quarantined = 9,
+    /// Target model was evicted; reload to restore it.
+    Evicted = 10,
 }
 
 impl RejectCode {
@@ -87,6 +105,10 @@ impl RejectCode {
             4 => Some(RejectCode::BackendFailed),
             5 => Some(RejectCode::BadFrame),
             6 => Some(RejectCode::ServerBusy),
+            7 => Some(RejectCode::ShuttingDown),
+            8 => Some(RejectCode::VersionGone),
+            9 => Some(RejectCode::Quarantined),
+            10 => Some(RejectCode::Evicted),
             _ => None,
         }
     }
@@ -97,6 +119,38 @@ fn code_of(rej: &Rejected) -> RejectCode {
         Rejected::QueueFull { .. } => RejectCode::QueueFull,
         Rejected::DeadlineExceeded { .. } => RejectCode::DeadlineExceeded,
         Rejected::InvalidRequest(_) => RejectCode::InvalidRequest,
+        Rejected::ShuttingDown => RejectCode::ShuttingDown,
+        Rejected::VersionGone { .. } => RejectCode::VersionGone,
+        Rejected::Quarantined { .. } => RejectCode::Quarantined,
+        Rejected::Evicted { .. } => RejectCode::Evicted,
+    }
+}
+
+/// Lifecycle operations carried by ADMIN frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminOp {
+    /// Drain, then reload the model from its checkpoint source and swap
+    /// the new version in.
+    Reload = 1,
+    /// Drain, then drop the model's loaded weights (name stays
+    /// registered; requests shed typed until a reload).
+    Evict = 2,
+    /// Read one model's version/health/failure counters.
+    Status = 3,
+}
+
+impl AdminOp {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(AdminOp::Reload),
+            2 => Some(AdminOp::Evict),
+            3 => Some(AdminOp::Status),
+            _ => None,
+        }
     }
 }
 
@@ -124,8 +178,48 @@ pub fn encode_request(tag: u64, model: u16, deadline_us: u32, ids: &[i32], mask:
     b
 }
 
+/// [`encode_request`] with a trailing **version pin**: admit only while
+/// the target model's lifecycle version is still `pin` (a reload makes
+/// it reject with [`RejectCode::VersionGone`]). `pin == 0` is unpinned.
+pub fn encode_request_pinned(
+    tag: u64,
+    model: u16,
+    deadline_us: u32,
+    pin: u64,
+    ids: &[i32],
+    mask: &[f32],
+) -> Vec<u8> {
+    let mut b = encode_request(tag, model, deadline_us, ids, mask);
+    b.extend_from_slice(&pin.to_le_bytes());
+    b
+}
+
 pub fn encode_info_request() -> Vec<u8> {
     vec![PROTO_VERSION, MSG_INFO]
+}
+
+/// Encode an ADMIN body targeting one model index.
+pub fn encode_admin(op: AdminOp, model: u16) -> Vec<u8> {
+    let mut b = vec![PROTO_VERSION, MSG_ADMIN, op.as_u8()];
+    b.extend_from_slice(&model.to_le_bytes());
+    b
+}
+
+fn encode_admin_ok(op: AdminOp, model: u16, payload: &[u8]) -> Vec<u8> {
+    let mut b = vec![PROTO_VERSION, MSG_ADMIN_RESP, op.as_u8(), 1];
+    b.extend_from_slice(&model.to_le_bytes());
+    b.extend_from_slice(payload);
+    b
+}
+
+fn encode_admin_err(op: u8, model: u16, msg: &str) -> Vec<u8> {
+    let msg = msg.as_bytes();
+    let take = msg.len().min(512); // bound error payloads like rejects
+    let mut b = vec![PROTO_VERSION, MSG_ADMIN_RESP, op, 0];
+    b.extend_from_slice(&model.to_le_bytes());
+    b.extend_from_slice(&(take as u16).to_le_bytes());
+    b.extend_from_slice(&msg[..take]);
+    b
 }
 
 fn encode_ok(tag: u64, model: u16, logits: &[f32]) -> Vec<u8> {
@@ -160,6 +254,9 @@ fn encode_info_resp(models: &[ModelInfo]) -> Vec<u8> {
         b.extend_from_slice(&(m.vocab as u32).to_le_bytes());
         b.extend_from_slice(&(m.seq as u16).to_le_bytes());
         b.extend_from_slice(&(m.n_classes as u16).to_le_bytes());
+        b.extend_from_slice(&m.version.to_le_bytes());
+        b.push(m.health.as_u8());
+        b.extend_from_slice(&m.consec_failures.to_le_bytes());
         let label = m.label.as_bytes();
         let take = label.len().min(u8::MAX as usize);
         b.push(take as u8);
@@ -172,6 +269,8 @@ struct WireRequest {
     tag: u64,
     model: u16,
     deadline_us: u32,
+    /// Admission-time version pin (`None` = unpinned).
+    pin: Option<u64>,
     ids: Vec<i32>,
     mask: Vec<f32>,
 }
@@ -184,9 +283,24 @@ fn decode_request(body: &[u8]) -> std::result::Result<WireRequest, String> {
     let model = u16::from_le_bytes(body[10..12].try_into().unwrap());
     let deadline_us = u32::from_le_bytes(body[12..16].try_into().unwrap());
     let n = u16::from_le_bytes(body[16..18].try_into().unwrap()) as usize;
-    if body.len() != 18 + 8 * n {
-        return Err(format!("request frame length {} != {} for n={n}", body.len(), 18 + 8 * n));
-    }
+    // two accepted layouts: the v1 body, or v1 plus a trailing 8-byte
+    // version pin (0 = unpinned) — old clients keep working unchanged
+    let pin = match body.len() {
+        l if l == 18 + 8 * n => None,
+        l if l == 18 + 8 * n + 8 => {
+            let off = 18 + 8 * n;
+            match u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) {
+                0 => None,
+                v => Some(v),
+            }
+        }
+        l => {
+            return Err(format!(
+                "request frame length {l} != {} (or +8 with a version pin) for n={n}",
+                18 + 8 * n
+            ))
+        }
+    };
     let mut ids = Vec::with_capacity(n);
     let mut mask = Vec::with_capacity(n);
     let ids_off = 18;
@@ -197,7 +311,7 @@ fn decode_request(body: &[u8]) -> std::result::Result<WireRequest, String> {
         let o = mask_off + 4 * i;
         mask.push(f32::from_le_bytes(body[o..o + 4].try_into().unwrap()));
     }
-    Ok(WireRequest { tag, model, deadline_us, ids, mask })
+    Ok(WireRequest { tag, model, deadline_us, pin, ids, mask })
 }
 
 /// One registered model as advertised by INFO_RESP.
@@ -207,6 +321,21 @@ pub struct WireModelInfo {
     pub vocab: u32,
     pub seq: u16,
     pub n_classes: u16,
+    /// Lifecycle version (bumps on reload).
+    pub version: u64,
+    /// [`crate::runtime::ModelHealth`] as its wire byte.
+    pub health: u8,
+    pub consec_failures: u32,
+}
+
+/// Decoded ADMIN_RESP payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdminReply {
+    Reloaded { old_version: u64, new_version: u64 },
+    Evicted { version: u64, freed_bytes: u64 },
+    Status { version: u64, health: u8, consec_failures: u32, resident_bytes: u64 },
+    /// The operation failed; `msg` is the rendered error chain.
+    Err { msg: String },
 }
 
 /// A decoded server→client message.
@@ -215,6 +344,7 @@ pub enum ClientReply {
     Ok { tag: u64, model: u16, logits: Vec<f32> },
     Reject { tag: u64, code: RejectCode, msg: String },
     Info { models: Vec<WireModelInfo> },
+    Admin { model: u16, reply: AdminReply },
 }
 
 fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
@@ -261,22 +391,77 @@ fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
             let mut models = Vec::with_capacity(n);
             let mut off = 4;
             for _ in 0..n {
-                if body.len() < off + 9 {
+                if body.len() < off + 22 {
                     return Err("INFO_RESP truncated".into());
                 }
                 let vocab = u32::from_le_bytes(body[off..off + 4].try_into().unwrap());
                 let seq = u16::from_le_bytes(body[off + 4..off + 6].try_into().unwrap());
                 let n_classes = u16::from_le_bytes(body[off + 6..off + 8].try_into().unwrap());
-                let label_len = body[off + 8] as usize;
-                off += 9;
+                let version = u64::from_le_bytes(body[off + 8..off + 16].try_into().unwrap());
+                let health = body[off + 16];
+                let consec_failures =
+                    u32::from_le_bytes(body[off + 17..off + 21].try_into().unwrap());
+                let label_len = body[off + 21] as usize;
+                off += 22;
                 if body.len() < off + label_len {
                     return Err("INFO_RESP label truncated".into());
                 }
                 let label = String::from_utf8_lossy(&body[off..off + label_len]).into_owned();
                 off += label_len;
-                models.push(WireModelInfo { label, vocab, seq, n_classes });
+                models.push(WireModelInfo {
+                    label,
+                    vocab,
+                    seq,
+                    n_classes,
+                    version,
+                    health,
+                    consec_failures,
+                });
             }
             Ok(ClientReply::Info { models })
+        }
+        MSG_ADMIN_RESP => {
+            if body.len() < 6 {
+                return Err("ADMIN_RESP frame too short".into());
+            }
+            let op = body[2];
+            let ok = body[3] != 0;
+            let model = u16::from_le_bytes(body[4..6].try_into().unwrap());
+            let p = &body[6..];
+            let reply = if !ok {
+                if p.len() < 2 {
+                    return Err("ADMIN_RESP error payload truncated".into());
+                }
+                let take = u16::from_le_bytes(p[..2].try_into().unwrap()) as usize;
+                if p.len() != 2 + take {
+                    return Err("ADMIN_RESP error message truncated".into());
+                }
+                AdminReply::Err { msg: String::from_utf8_lossy(&p[2..]).into_owned() }
+            } else {
+                match AdminOp::from_u8(op) {
+                    Some(AdminOp::Reload) if p.len() == 16 => AdminReply::Reloaded {
+                        old_version: u64::from_le_bytes(p[..8].try_into().unwrap()),
+                        new_version: u64::from_le_bytes(p[8..16].try_into().unwrap()),
+                    },
+                    Some(AdminOp::Evict) if p.len() == 16 => AdminReply::Evicted {
+                        version: u64::from_le_bytes(p[..8].try_into().unwrap()),
+                        freed_bytes: u64::from_le_bytes(p[8..16].try_into().unwrap()),
+                    },
+                    Some(AdminOp::Status) if p.len() == 21 => AdminReply::Status {
+                        version: u64::from_le_bytes(p[..8].try_into().unwrap()),
+                        health: p[8],
+                        consec_failures: u32::from_le_bytes(p[9..13].try_into().unwrap()),
+                        resident_bytes: u64::from_le_bytes(p[13..21].try_into().unwrap()),
+                    },
+                    _ => {
+                        return Err(format!(
+                            "ADMIN_RESP op {op} with bad payload length {}",
+                            p.len()
+                        ))
+                    }
+                }
+            };
+            Ok(ClientReply::Admin { model, reply })
         }
         other => Err(format!("unexpected server message kind {other:#04x}")),
     }
@@ -378,6 +563,10 @@ pub struct FrontDoor {
     routes: HashMap<u64, (usize, u64, u64)>,
     stats: NetStats,
     max_conns: usize,
+    /// Cleared when a graceful stop begins: existing connections keep
+    /// being read (late requests get typed ShuttingDown rejects) but no
+    /// new connections are accepted.
+    accepting: bool,
 }
 
 impl FrontDoor {
@@ -391,6 +580,7 @@ impl FrontDoor {
             routes: HashMap::new(),
             stats: NetStats::default(),
             max_conns: 256,
+            accepting: true,
         })
     }
 
@@ -417,7 +607,7 @@ impl FrontDoor {
         let mut progress = false;
 
         // accept
-        loop {
+        while self.accepting {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     progress = true;
@@ -517,47 +707,72 @@ impl FrontDoor {
     }
 
     /// Drive `poll` until a stop/duration/idle condition, then wind down
-    /// gracefully: drain the batcher so every admitted request is
-    /// answered, and flush all replies.
+    /// **gracefully**: stop accepting connections, drain the batcher so
+    /// every admitted request is answered, keep reading briefly so
+    /// on-the-wire requests get a typed ShuttingDown reject instead of a
+    /// silently-closed socket, and flush every reply.
     pub fn run<B: Backend>(
         &mut self,
         server: &mut Server<'_, B>,
         opts: RunOpts,
         stop: Option<&AtomicBool>,
     ) -> Result<()> {
+        // grace window: late frames are answered with typed rejects
+        const STOP_GRACE: Duration = Duration::from_millis(200);
+        // hard cap on the whole stopping phase (a peer that never reads
+        // its replies must not hold shutdown hostage)
+        const STOP_DEADLINE: Duration = Duration::from_secs(5);
         let start = Instant::now();
         let mut last_activity = Instant::now();
         let mut had_activity = false;
+        let mut stopping_since: Option<Instant> = None;
         loop {
-            if let Some(flag) = stop {
-                if flag.load(Ordering::SeqCst) {
-                    break;
-                }
-            }
-            if let Some(secs) = opts.for_secs {
-                if start.elapsed().as_secs_f64() >= secs {
-                    break;
-                }
+            let want_stop = stop.map_or(false, |f| f.load(Ordering::SeqCst))
+                || opts.for_secs.map_or(false, |secs| start.elapsed().as_secs_f64() >= secs);
+            if want_stop && stopping_since.is_none() {
+                stopping_since = Some(Instant::now());
+                self.accepting = false;
+                server.begin_shutdown();
+                // answer everything already admitted; anything arriving
+                // past this point rejects with ShuttingDown
+                self.drain_through(server);
             }
             let progress = self.poll(server);
             if progress {
                 had_activity = true;
                 last_activity = Instant::now();
             }
-            if let Some(idle) = opts.idle_exit_secs {
-                if had_activity
-                    && last_activity.elapsed().as_secs_f64() >= idle
-                    && server.pending() == 0
-                    && self.live_conns() == 0
-                {
-                    break;
+            match stopping_since {
+                Some(t0) => {
+                    let flushed = self
+                        .conns
+                        .iter()
+                        .flatten()
+                        .all(|c| c.broken || c.wpos >= c.wbuf.len());
+                    if (t0.elapsed() >= STOP_GRACE && server.pending() == 0 && flushed)
+                        || t0.elapsed() >= STOP_DEADLINE
+                    {
+                        break;
+                    }
+                }
+                None => {
+                    if let Some(idle) = opts.idle_exit_secs {
+                        if had_activity
+                            && last_activity.elapsed().as_secs_f64() >= idle
+                            && server.pending() == 0
+                            && self.live_conns() == 0
+                        {
+                            break;
+                        }
+                    }
                 }
             }
             if !progress {
                 std::thread::sleep(Duration::from_micros(100));
             }
         }
-        // graceful wind-down: answer everything still queued, then flush
+        // wind-down: answer everything still queued, then flush (a no-op
+        // after the stopping phase already drained)
         let drained = server.drain()?;
         for r in drained {
             self.dispatch(r);
@@ -638,7 +853,8 @@ impl FrontDoor {
                     } else {
                         Some(Duration::from_micros(w.deadline_us as u64))
                     };
-                    match server.submit_with(w.model as usize, w.ids, w.mask, deadline) {
+                    match server.submit_pinned_to(w.model as usize, w.pin, w.ids, w.mask, deadline)
+                    {
                         Ok(id) => {
                             self.routes.insert(id, (slot, gen, w.tag));
                         }
@@ -667,6 +883,7 @@ impl FrontDoor {
                 let reply = encode_info_resp(&server.model_infos());
                 self.push_to(slot, gen, &reply);
             }
+            MSG_ADMIN => self.handle_admin(server, slot, gen, body),
             other => {
                 // framing is intact: reject this message, keep the conn
                 self.stats.bad_frames += 1;
@@ -676,6 +893,83 @@ impl FrontDoor {
                     self.stats.reject_out += 1;
                 }
             }
+        }
+    }
+
+    /// One ADMIN frame: the model-fleet lifecycle over the socket.
+    /// RELOAD and EVICT **drain first** — every admitted request is
+    /// answered under the version it was admitted against before the
+    /// swap/drop happens, so in-flight work is never lost and no batch
+    /// straddles versions.
+    fn handle_admin<B: Backend>(
+        &mut self,
+        server: &mut Server<'_, B>,
+        slot: usize,
+        gen: u64,
+        body: &[u8],
+    ) {
+        if body.len() != 5 {
+            self.stats.bad_frames += 1;
+            let reply = encode_reject(0, RejectCode::BadFrame, "ADMIN frame must be 5 bytes");
+            if self.push_to(slot, gen, &reply) {
+                self.stats.reject_out += 1;
+            }
+            return;
+        }
+        let op = body[2];
+        let model = u16::from_le_bytes(body[3..5].try_into().unwrap());
+        let m = model as usize;
+        let reply = match AdminOp::from_u8(op) {
+            None => encode_admin_err(op, model, &format!("unknown admin op {op}")),
+            Some(AdminOp::Status) => match server.backend().model_status(m) {
+                Ok(st) => {
+                    let mut p = Vec::with_capacity(21);
+                    p.extend_from_slice(&st.version.to_le_bytes());
+                    p.push(st.health.as_u8());
+                    p.extend_from_slice(&st.consec_failures.to_le_bytes());
+                    p.extend_from_slice(&(st.resident_bytes as u64).to_le_bytes());
+                    encode_admin_ok(AdminOp::Status, model, &p)
+                }
+                Err(e) => encode_admin_err(op, model, &format!("{e:#}")),
+            },
+            Some(aop) => {
+                // Reload/Evict: in-flight barrier first
+                self.drain_through(server);
+                let res: Result<[u64; 2]> = match aop {
+                    AdminOp::Reload => {
+                        server.backend().reload_model(m).map(|(old, new)| [old, new])
+                    }
+                    AdminOp::Evict => {
+                        server.backend().evict_model(m).map(|(v, freed)| [v, freed as u64])
+                    }
+                    AdminOp::Status => unreachable!("handled above"),
+                };
+                match res {
+                    Ok([a, b]) => {
+                        let mut p = Vec::with_capacity(16);
+                        p.extend_from_slice(&a.to_le_bytes());
+                        p.extend_from_slice(&b.to_le_bytes());
+                        encode_admin_ok(aop, model, &p)
+                    }
+                    Err(e) => encode_admin_err(op, model, &format!("{e:#}")),
+                }
+            }
+        };
+        self.push_to(slot, gen, &reply);
+    }
+
+    /// Drain the batcher and dispatch every response to its connection —
+    /// the in-flight-work barrier lifecycle operations run behind.
+    fn drain_through<B: Backend>(&mut self, server: &mut Server<'_, B>) {
+        match server.drain() {
+            Ok(rs) => {
+                for r in rs {
+                    self.dispatch(r);
+                }
+            }
+            // drain() only errors on server-level bugs; admitted work was
+            // still answered per-batch, so report and continue
+            Err(e) => eprintln!("admin drain error: {e:#}"),
         }
     }
 
@@ -780,6 +1074,7 @@ impl FrontDoor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::ModelHealth;
 
     #[test]
     fn request_round_trips() {
@@ -792,8 +1087,27 @@ mod tests {
         assert_eq!(w.tag, 0xdead_beef_cafe);
         assert_eq!(w.model, 2);
         assert_eq!(w.deadline_us, 1500);
+        assert_eq!(w.pin, None);
         assert_eq!(w.ids, ids);
         assert_eq!(w.mask, mask);
+    }
+
+    #[test]
+    fn pinned_request_round_trips_and_zero_pin_is_unpinned() {
+        let ids = vec![1i32, 2];
+        let mask = vec![1.0f32, 1.0];
+        let body = encode_request_pinned(5, 0, 0, 3, &ids, &mask);
+        assert_eq!(body.len(), 18 + 8 * ids.len() + 8);
+        let w = decode_request(&body).unwrap();
+        assert_eq!(w.pin, Some(3));
+        assert_eq!(w.ids, ids);
+        // pin 0 decodes as unpinned — old-client semantics
+        let body = encode_request_pinned(5, 0, 0, 0, &ids, &mask);
+        assert_eq!(decode_request(&body).unwrap().pin, None);
+        // a half-written pin is a framing error
+        let mut body = encode_request_pinned(5, 0, 0, 3, &ids, &mask);
+        body.pop();
+        assert!(decode_request(&body).is_err());
     }
 
     #[test]
@@ -836,8 +1150,24 @@ mod tests {
     #[test]
     fn info_resp_round_trips() {
         let models = vec![
-            ModelInfo { label: "sst2".into(), vocab: 30522, seq: 128, n_classes: 2 },
-            ModelInfo { label: "mnli".into(), vocab: 30522, seq: 64, n_classes: 3 },
+            ModelInfo {
+                label: "sst2".into(),
+                vocab: 30522,
+                seq: 128,
+                n_classes: 2,
+                version: 3,
+                health: ModelHealth::Serving,
+                consec_failures: 0,
+            },
+            ModelInfo {
+                label: "mnli".into(),
+                vocab: 30522,
+                seq: 64,
+                n_classes: 3,
+                version: 1,
+                health: ModelHealth::Quarantined,
+                consec_failures: 5,
+            },
         ];
         let body = encode_info_resp(&models);
         match decode_reply(&body).unwrap() {
@@ -845,11 +1175,85 @@ mod tests {
                 assert_eq!(got.len(), 2);
                 assert_eq!(got[0].label, "sst2");
                 assert_eq!((got[0].vocab, got[0].seq, got[0].n_classes), (30522, 128, 2));
+                assert_eq!(got[0].version, 3);
+                assert_eq!(got[0].health, ModelHealth::Serving.as_u8());
                 assert_eq!(got[1].label, "mnli");
                 assert_eq!(got[1].seq, 64);
+                assert_eq!(got[1].health, ModelHealth::Quarantined.as_u8());
+                assert_eq!(got[1].consec_failures, 5);
             }
             other => panic!("expected Info, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn admin_frames_round_trip() {
+        let body = encode_admin(AdminOp::Reload, 2);
+        assert_eq!(body.len(), 5);
+        assert_eq!((body[0], body[1], body[2]), (PROTO_VERSION, MSG_ADMIN, 1));
+        assert_eq!(u16::from_le_bytes(body[3..5].try_into().unwrap()), 2);
+
+        let ok = encode_admin_ok(AdminOp::Reload, 2, &{
+            let mut p = Vec::new();
+            p.extend_from_slice(&4u64.to_le_bytes());
+            p.extend_from_slice(&5u64.to_le_bytes());
+            p
+        });
+        assert_eq!(
+            decode_reply(&ok).unwrap(),
+            ClientReply::Admin {
+                model: 2,
+                reply: AdminReply::Reloaded { old_version: 4, new_version: 5 }
+            }
+        );
+
+        let ok = encode_admin_ok(AdminOp::Evict, 0, &{
+            let mut p = Vec::new();
+            p.extend_from_slice(&7u64.to_le_bytes());
+            p.extend_from_slice(&123_456u64.to_le_bytes());
+            p
+        });
+        assert_eq!(
+            decode_reply(&ok).unwrap(),
+            ClientReply::Admin {
+                model: 0,
+                reply: AdminReply::Evicted { version: 7, freed_bytes: 123_456 }
+            }
+        );
+
+        let ok = encode_admin_ok(AdminOp::Status, 1, &{
+            let mut p = Vec::new();
+            p.extend_from_slice(&2u64.to_le_bytes());
+            p.push(ModelHealth::Degraded.as_u8());
+            p.extend_from_slice(&3u32.to_le_bytes());
+            p.extend_from_slice(&9_000u64.to_le_bytes());
+            p
+        });
+        assert_eq!(
+            decode_reply(&ok).unwrap(),
+            ClientReply::Admin {
+                model: 1,
+                reply: AdminReply::Status {
+                    version: 2,
+                    health: ModelHealth::Degraded.as_u8(),
+                    consec_failures: 3,
+                    resident_bytes: 9_000,
+                }
+            }
+        );
+
+        let err = encode_admin_err(AdminOp::Reload.as_u8(), 3, "no checkpoint source");
+        match decode_reply(&err).unwrap() {
+            ClientReply::Admin { model: 3, reply: AdminReply::Err { msg } } => {
+                assert!(msg.contains("no checkpoint source"));
+            }
+            other => panic!("expected Admin Err, got {other:?}"),
+        }
+
+        // truncated payloads are decode errors, not garbage replies
+        let mut bad = encode_admin_ok(AdminOp::Reload, 2, &[0u8; 16]);
+        bad.pop();
+        assert!(decode_reply(&bad).is_err());
     }
 
     #[test]
@@ -869,6 +1273,10 @@ mod tests {
             RejectCode::BackendFailed,
             RejectCode::BadFrame,
             RejectCode::ServerBusy,
+            RejectCode::ShuttingDown,
+            RejectCode::VersionGone,
+            RejectCode::Quarantined,
+            RejectCode::Evicted,
         ] {
             assert_eq!(RejectCode::from_u8(code.as_u8()), Some(code));
         }

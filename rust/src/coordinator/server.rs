@@ -71,7 +71,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Backend;
+use crate::runtime::{Backend, ModelHealth};
 use crate::util::stats::{LatencyRecorder, LatencySummary};
 
 /// Typed admission/shed verdicts. `InvalidRequest` and `QueueFull` are
@@ -87,6 +87,18 @@ pub enum Rejected {
     /// The request can never execute (bad model index, shape mismatch,
     /// out-of-vocab token ids, non-finite mask values).
     InvalidRequest(String),
+    /// The server is draining for shutdown: queued work still completes,
+    /// but no new admissions.
+    ShuttingDown,
+    /// The request pinned a model version that is no longer current
+    /// (a reload swapped it out). Retrying unpinned routes to `current`.
+    VersionGone { pinned: u64, current: u64 },
+    /// The target model is quarantined after repeated forward failures;
+    /// sibling models keep serving.
+    Quarantined { model: String },
+    /// The target model was evicted (operator action or memory budget);
+    /// reload it to restore serving.
+    Evicted { model: String },
 }
 
 impl std::fmt::Display for Rejected {
@@ -99,6 +111,14 @@ impl std::fmt::Display for Rejected {
                 write!(f, "deadline exceeded after {waited_us}us in queue")
             }
             Rejected::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            Rejected::ShuttingDown => write!(f, "server is shutting down"),
+            Rejected::VersionGone { pinned, current } => {
+                write!(f, "pinned model version {pinned} is gone (current {current})")
+            }
+            Rejected::Quarantined { model } => {
+                write!(f, "model {model} is quarantined")
+            }
+            Rejected::Evicted { model } => write!(f, "model {model} is evicted"),
         }
     }
 }
@@ -170,6 +190,11 @@ pub struct ModelInfo {
     pub vocab: usize,
     pub seq: usize,
     pub n_classes: usize,
+    /// Current lifecycle version (bumps on reload; 1 on backends without
+    /// a lifecycle).
+    pub version: u64,
+    pub health: ModelHealth,
+    pub consec_failures: u32,
 }
 
 /// One (model × seq-bucket) FIFO.
@@ -261,6 +286,17 @@ pub struct Server<'b, B: Backend> {
     /// Synchronous [`Rejected::InvalidRequest`] rejections (never
     /// admitted).
     pub rejected_invalid: u64,
+    /// Synchronous [`Rejected::ShuttingDown`] rejections (never
+    /// admitted) — arrivals during the drain phase of a graceful stop.
+    pub rejected_shutdown: u64,
+    /// Synchronous model-unavailability rejections
+    /// ([`Rejected::Quarantined`] / [`Rejected::Evicted`] /
+    /// [`Rejected::VersionGone`]) — the target exists but cannot serve
+    /// this request right now.
+    pub rejected_unavailable: u64,
+    /// When set, `submit*` rejects everything with
+    /// [`Rejected::ShuttingDown`]; queued work still drains.
+    draining: bool,
     /// Empty batch slots executed (bucket minus actual requests).
     pub padded_slots: u64,
     /// Padded tokens executed: `bucket * ceiling - valid tokens`, summed
@@ -358,6 +394,9 @@ impl<'b, B: Backend> Server<'b, B> {
             failed_batches: 0,
             rejected_full: 0,
             rejected_invalid: 0,
+            rejected_shutdown: 0,
+            rejected_unavailable: 0,
+            draining: false,
             padded_slots: 0,
             padded_tokens: 0,
             total_tokens: 0,
@@ -393,10 +432,33 @@ impl<'b, B: Backend> Server<'b, B> {
         mask: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<u64, Rejected> {
-        let res = self.admit(model, ids, mask, deadline);
+        self.submit_pinned_to(model, None, ids, mask, deadline)
+    }
+
+    /// [`Server::submit_with`] plus an optional **version pin**: the
+    /// request is admitted only while `pin` is the model's current
+    /// lifecycle version, otherwise it rejects with
+    /// [`Rejected::VersionGone`]. Valid at admission time only — the
+    /// ADMIN reload handler drains the server before swapping versions,
+    /// so an admitted pin can never execute against a different version.
+    pub fn submit_pinned_to(
+        &mut self,
+        model: usize,
+        pin: Option<u64>,
+        ids: Vec<i32>,
+        mask: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<u64, Rejected> {
+        let res = self.admit(model, pin, ids, mask, deadline);
         match &res {
             Ok(_) => self.admitted += 1,
             Err(Rejected::QueueFull { .. }) => self.rejected_full += 1,
+            Err(Rejected::ShuttingDown) => self.rejected_shutdown += 1,
+            Err(
+                Rejected::Quarantined { .. }
+                | Rejected::Evicted { .. }
+                | Rejected::VersionGone { .. },
+            ) => self.rejected_unavailable += 1,
             Err(_) => self.rejected_invalid += 1,
         }
         res
@@ -405,15 +467,38 @@ impl<'b, B: Backend> Server<'b, B> {
     fn admit(
         &mut self,
         model: usize,
+        pin: Option<u64>,
         ids: Vec<i32>,
         mask: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<u64, Rejected> {
+        if self.draining {
+            return Err(Rejected::ShuttingDown);
+        }
         if model >= self.seqs.len() {
             return Err(Rejected::InvalidRequest(format!(
                 "model index {model} out of range ({} registered)",
                 self.seqs.len()
             )));
+        }
+        // lifecycle gate: shed quarantined/evicted targets (and stale
+        // version pins) here, where the caller gets a typed verdict,
+        // instead of admitting work the backend will only fail later
+        if let Ok(st) = self.backend.model_status(model) {
+            match st.health {
+                ModelHealth::Quarantined => {
+                    return Err(Rejected::Quarantined { model: self.labels[model].clone() })
+                }
+                ModelHealth::Evicted => {
+                    return Err(Rejected::Evicted { model: self.labels[model].clone() })
+                }
+                _ => {}
+            }
+            if let Some(pinned) = pin {
+                if pinned != st.version {
+                    return Err(Rejected::VersionGone { pinned, current: st.version });
+                }
+            }
         }
         if ids.len() != mask.len() {
             return Err(Rejected::InvalidRequest(format!(
@@ -472,13 +557,38 @@ impl<'b, B: Backend> Server<'b, B> {
     /// front door advertises on INFO).
     pub fn model_infos(&self) -> Vec<ModelInfo> {
         (0..self.labels.len())
-            .map(|m| ModelInfo {
-                label: self.labels[m].clone(),
-                vocab: self.vocabs[m],
-                seq: self.seqs[m],
-                n_classes: self.n_classes[m],
+            .map(|m| {
+                let st = self.backend.model_status(m).ok();
+                ModelInfo {
+                    label: self.labels[m].clone(),
+                    vocab: self.vocabs[m],
+                    seq: self.seqs[m],
+                    n_classes: self.n_classes[m],
+                    version: st.as_ref().map_or(0, |s| s.version),
+                    health: st.as_ref().map_or(ModelHealth::Serving, |s| s.health),
+                    consec_failures: st.as_ref().map_or(0, |s| s.consec_failures),
+                }
             })
             .collect()
+    }
+
+    /// The backend this server routes to — the lifecycle surface (ADMIN
+    /// frame handlers call `reload_model`/`evict_model` through this,
+    /// after draining).
+    pub fn backend(&self) -> &'b B {
+        self.backend
+    }
+
+    /// Enter the drain phase of a graceful stop: every subsequent
+    /// `submit*` rejects with [`Rejected::ShuttingDown`], while already-
+    /// admitted work keeps batching and executing. Irreversible for this
+    /// server instance.
+    pub fn begin_shutdown(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
     }
 
     pub fn pending(&self) -> usize {
@@ -638,6 +748,10 @@ impl<'b, B: Backend> Server<'b, B> {
                 self.fail_batch(&mut responses, reqs, model, bucket, tcap, exec_us, format!("{e:#}"));
             }
             Err(payload) => {
+                // errors returned by the forward already count inside the
+                // backend; a caught panic bypasses it, so feed the health
+                // machine here
+                self.backend.record_forward_panic(model);
                 self.fail_batch(
                     &mut responses,
                     reqs,
@@ -705,11 +819,17 @@ impl<'b, B: Backend> Server<'b, B> {
     pub fn summary(&self) -> ServerSummary {
         ServerSummary {
             model: self.backend.name(),
-            per_model: self
-                .labels
-                .iter()
-                .cloned()
-                .zip(self.served_by_model.iter().copied())
+            per_model: (0..self.labels.len())
+                .map(|m| {
+                    let st = self.backend.model_status(m).ok();
+                    PerModelSummary {
+                        label: self.labels[m].clone(),
+                        served: self.served_by_model[m],
+                        version: st.as_ref().map_or(0, |s| s.version),
+                        health: st.as_ref().map_or(ModelHealth::Serving, |s| s.health),
+                        consec_failures: st.as_ref().map_or(0, |s| s.consec_failures),
+                    }
+                })
                 .collect(),
             admitted: self.admitted,
             served: self.served,
@@ -719,6 +839,8 @@ impl<'b, B: Backend> Server<'b, B> {
             failed_batches: self.failed_batches,
             rejected_full: self.rejected_full,
             rejected_invalid: self.rejected_invalid,
+            rejected_shutdown: self.rejected_shutdown,
+            rejected_unavailable: self.rejected_unavailable,
             padded_slots: self.padded_slots,
             padded_tokens: self.padded_tokens,
             total_tokens: self.total_tokens,
@@ -742,12 +864,24 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Per-model routing + lifecycle snapshot inside a [`ServerSummary`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PerModelSummary {
+    pub label: String,
+    /// Requests served through this model.
+    pub served: u64,
+    /// Current lifecycle version (0 if the backend can't report one).
+    pub version: u64,
+    pub health: ModelHealth,
+    pub consec_failures: u32,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServerSummary {
     pub model: String,
-    /// (label, requests served) per registered model — one entry on
+    /// Routing + health per registered model — one entry on
     /// single-model backends.
-    pub per_model: Vec<(String, u64)>,
+    pub per_model: Vec<PerModelSummary>,
     pub admitted: u64,
     pub served: u64,
     pub batches: u64,
@@ -756,6 +890,8 @@ pub struct ServerSummary {
     pub failed_batches: u64,
     pub rejected_full: u64,
     pub rejected_invalid: u64,
+    pub rejected_shutdown: u64,
+    pub rejected_unavailable: u64,
     pub padded_slots: u64,
     pub padded_tokens: u64,
     pub total_tokens: u64,
@@ -797,23 +933,34 @@ impl std::fmt::Display for ServerSummary {
             self.total_tokens,
             100.0 * self.padded_token_fraction(),
         )?;
-        if self.shed_deadline + self.failed + self.rejected_full + self.rejected_invalid > 0
+        if self.shed_deadline
+            + self.failed
+            + self.rejected_full
+            + self.rejected_invalid
+            + self.rejected_shutdown
+            + self.rejected_unavailable
+            > 0
             || self.admitted != self.served
         {
             writeln!(
                 f,
-                "  robust: admitted={} shed_deadline={} failed={} failed_batches={} rejected_full={} rejected_invalid={}",
+                "  robust: admitted={} shed_deadline={} failed={} failed_batches={} rejected_full={} rejected_invalid={} rejected_shutdown={} rejected_unavailable={}",
                 self.admitted,
                 self.shed_deadline,
                 self.failed,
                 self.failed_batches,
                 self.rejected_full,
                 self.rejected_invalid,
+                self.rejected_shutdown,
+                self.rejected_unavailable,
             )?;
         }
         if self.per_model.len() > 1 {
-            let routed: Vec<String> =
-                self.per_model.iter().map(|(l, n)| format!("{l}={n}")).collect();
+            let routed: Vec<String> = self
+                .per_model
+                .iter()
+                .map(|pm| format!("{}={} (v{} {})", pm.label, pm.served, pm.version, pm.health.name()))
+                .collect();
             writeln!(f, "  routed: {}", routed.join(" "))?;
         }
         writeln!(f, "  queue : {}", self.queue)?;
@@ -1176,6 +1323,45 @@ mod tests {
         let infos = s.model_infos();
         assert_eq!(infos.len(), 1);
         assert_eq!((infos[0].vocab, infos[0].seq, infos[0].n_classes), (64, 8, 2));
+        // lifecycle fields come from the backend's status surface: the
+        // plain NativeBackend reports a static version-1 Serving model
+        assert_eq!(infos[0].version, 1);
+        assert_eq!(infos[0].health, ModelHealth::Serving);
+        assert_eq!(infos[0].consec_failures, 0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_but_drains_queued() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s, 3);
+        s.begin_shutdown();
+        assert!(s.is_draining());
+        let r = s.submit(vec![1; 8], vec![1.0; 8]);
+        assert_eq!(r, Err(Rejected::ShuttingDown));
+        assert_eq!(s.rejected_shutdown, 1);
+        // already-admitted work still completes — the never-drop contract
+        let out = s.drain().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.is_ok()));
+        assert_eq!(s.admitted, s.served);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn version_pins_reject_on_mismatch_only() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        // NativeBackend's lifecycle version is always 1: a matching pin
+        // admits, a stale pin is a typed VersionGone
+        assert!(s.submit_pinned_to(0, Some(1), vec![1; 8], vec![1.0; 8], None).is_ok());
+        let r = s.submit_pinned_to(0, Some(7), vec![1; 8], vec![1.0; 8], None);
+        assert_eq!(r, Err(Rejected::VersionGone { pinned: 7, current: 1 }));
+        assert_eq!(s.rejected_unavailable, 1);
+        assert_eq!(s.admitted, 1);
+        let out = s.drain().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_ok());
     }
 
     #[test]
@@ -1219,7 +1405,13 @@ mod tests {
         out.sort_by_key(|r| r.id);
         assert_eq!(out.len(), 4);
         let summary = s.summary();
-        assert_eq!(summary.per_model, vec![("a".into(), 2u64), ("b".into(), 2u64)]);
+        let routed: Vec<(&str, u64)> =
+            summary.per_model.iter().map(|pm| (pm.label.as_str(), pm.served)).collect();
+        assert_eq!(routed, vec![("a", 2u64), ("b", 2u64)]);
+        assert!(summary
+            .per_model
+            .iter()
+            .all(|pm| pm.version == 1 && pm.health == ModelHealth::Serving));
 
         for (i, (m, ids)) in reqs.iter().enumerate() {
             assert_eq!(out[i].model, *m, "response {i} routed to the wrong model");

@@ -179,8 +179,10 @@ pub fn gemm_serial(
     while ic < m {
         let mc = MC.min(m - ic);
         match &pw.data {
-            PackedData::I8(_) => block_i8(qx, ic, mc, k, pw, sx, out),
-            PackedData::I4(_) => block_i4(qx, rowsums, ic, mc, k, pw, sx, out),
+            PackedData::I8(_) | PackedData::I8Borrowed(_) => block_i8(qx, ic, mc, k, pw, sx, out),
+            PackedData::I4(_) | PackedData::I4Borrowed(_) => {
+                block_i4(qx, rowsums, ic, mc, k, pw, sx, out)
+            }
         }
         ic += mc;
     }

@@ -56,4 +56,4 @@ pub mod pack;
 pub mod simd;
 
 pub use dispatch::{Dispatcher, KernelKind, Tuning};
-pub use pack::{PackedF32, PackedWeights, MR, NR};
+pub use pack::{PackedF32, PackedWeights, PanelRef, ScaleVec, MR, NR};

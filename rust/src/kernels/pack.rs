@@ -33,10 +33,123 @@ pub const NR: usize = 8;
 /// Microkernel register-block height (rows of the activation matrix).
 pub const MR: usize = 4;
 
+/// A byte range borrowed out of shared backing storage — typically an
+/// mmap'd MKQC checkpoint shard. The `Arc` owner keeps the mapping (or
+/// buffered file image) alive for as long as any borrower exists, so a
+/// model built on `PanelRef`s can outlive the `Checkpoint` it was loaded
+/// from without copying a single panel byte.
+#[derive(Clone)]
+pub struct PanelRef {
+    owner: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync>,
+    offset: usize,
+    len: usize,
+}
+
+impl PanelRef {
+    /// `offset..offset+len` must lie inside the owner's byte slice for
+    /// the owner's whole lifetime (true for file images, whose length
+    /// never changes after open).
+    pub fn new(owner: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync>, offset: usize, len: usize) -> Self {
+        let total = (*owner).as_ref().len();
+        let end = offset.checked_add(len).expect("panel range overflows");
+        assert!(end <= total, "panel range {offset}+{len} out of bounds for a {total}-byte owner");
+        PanelRef { owner, offset, len }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &(*self.owner).as_ref()[self.offset..self.offset + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for PanelRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PanelRef").field("offset", &self.offset).field("len", &self.len).finish()
+    }
+}
+
+/// Borrowed panel bytes viewed as int8 codes: same width, two's
+/// complement on both sides — the inverse of the `raw_bytes` cast.
+fn as_i8(bytes: &[u8]) -> &[i8] {
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+}
+
+/// Per-output-channel scale storage: owned, or a zero-copy f32 view of a
+/// checkpoint image (requires 4-byte alignment — callers fall back to
+/// [`ScaleVec::Owned`] when the stored bytes don't qualify).
+#[derive(Clone)]
+pub enum ScaleVec {
+    Owned(Vec<f32>),
+    Borrowed(PanelRef),
+}
+
+impl ScaleVec {
+    /// Borrow `r` as in-place f32s when legal on this target (little
+    /// endian, 4-aligned, whole f32s); decode a copy otherwise.
+    pub fn from_ref(r: PanelRef) -> Self {
+        let ok = {
+            let b = r.bytes();
+            cfg!(target_endian = "little") && b.len() % 4 == 0 && (b.as_ptr() as usize) % 4 == 0
+        };
+        if ok {
+            ScaleVec::Borrowed(r)
+        } else {
+            let b = r.bytes();
+            ScaleVec::Owned(
+                b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            )
+        }
+    }
+
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, ScaleVec::Borrowed(_))
+    }
+
+    /// Heap bytes resident beyond the (page-cache-backed) owner.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            ScaleVec::Owned(v) => v.len() * 4,
+            ScaleVec::Borrowed(_) => 0,
+        }
+    }
+}
+
+impl std::ops::Deref for ScaleVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match self {
+            ScaleVec::Owned(v) => v,
+            // alignment/endianness validated in from_ref
+            ScaleVec::Borrowed(r) => {
+                let b = r.bytes();
+                unsafe { std::slice::from_raw_parts(b.as_ptr() as *const f32, b.len() / 4) }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ScaleVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", &self[..])
+    }
+}
+
 #[derive(Debug, Clone)]
 pub(crate) enum PackedData {
     I8(Vec<i8>),
     I4(Vec<u8>),
+    /// int8 panels borrowed straight from a checkpoint image (zero-copy).
+    I8Borrowed(PanelRef),
+    /// int4 nibble panels borrowed from a checkpoint image (zero-copy).
+    I4Borrowed(PanelRef),
 }
 
 /// Per-output-channel quantized weights in panel layout, plus scales.
@@ -45,8 +158,8 @@ pub struct PackedWeights {
     pub bits: u32,
     pub k: usize,
     pub n: usize,
-    /// Per-output-channel scales, length `n`.
-    pub scales: Vec<f32>,
+    /// Per-output-channel scales, length `n` (derefs to `[f32]`).
+    pub scales: ScaleVec,
     pub(crate) data: PackedData,
 }
 
@@ -101,7 +214,7 @@ impl PackedWeights {
             }
             b => panic!("unsupported packed bit width {b} (use 4 or 8)"),
         };
-        PackedWeights { bits, k, n, scales, data }
+        PackedWeights { bits, k, n, scales: ScaleVec::Owned(scales), data }
     }
 
     /// Quantize a row-major `(k, n)` fp32 matrix per-channel and pack it —
@@ -137,22 +250,49 @@ impl PackedWeights {
         scales: Vec<f32>,
         bytes: &[u8],
     ) -> Result<Self, String> {
-        if scales.len() != n {
-            return Err(format!("panel scales: {} entries for n={n}", scales.len()));
-        }
-        let want = Self::packed_len(bits, k, n)
-            .ok_or_else(|| format!("unsupported panel geometry: bits={bits} k={k} n={n}"))?;
-        if bytes.len() != want {
-            return Err(format!(
-                "panel bytes: {} for bits={bits} k={k} n={n} (want {want})",
-                bytes.len()
-            ));
-        }
+        Self::check_panel_geometry(bits, k, n, scales.len(), bytes.len())?;
         let data = match bits {
             8 => PackedData::I8(bytes.iter().map(|&b| b as i8).collect()),
             _ => PackedData::I4(bytes.to_vec()),
         };
+        Ok(PackedWeights { bits, k, n, scales: ScaleVec::Owned(scales), data })
+    }
+
+    /// Zero-copy variant of [`PackedWeights::from_panels`]: the panels
+    /// (and optionally the scales) stay borrowed from the checkpoint
+    /// image behind `PanelRef`s, so building the model copies nothing and
+    /// the weights' resident cost is the page cache backing the mapping.
+    pub fn from_panel_ref(
+        bits: u32,
+        k: usize,
+        n: usize,
+        scales: ScaleVec,
+        panels: PanelRef,
+    ) -> Result<Self, String> {
+        Self::check_panel_geometry(bits, k, n, scales.len(), panels.len())?;
+        let data = match bits {
+            8 => PackedData::I8Borrowed(panels),
+            _ => PackedData::I4Borrowed(panels),
+        };
         Ok(PackedWeights { bits, k, n, scales, data })
+    }
+
+    fn check_panel_geometry(
+        bits: u32,
+        k: usize,
+        n: usize,
+        n_scales: usize,
+        n_bytes: usize,
+    ) -> Result<(), String> {
+        if n_scales != n {
+            return Err(format!("panel scales: {n_scales} entries for n={n}"));
+        }
+        let want = Self::packed_len(bits, k, n)
+            .ok_or_else(|| format!("unsupported panel geometry: bits={bits} k={k} n={n}"))?;
+        if n_bytes != want {
+            return Err(format!("panel bytes: {n_bytes} for bits={bits} k={k} n={n} (want {want})"));
+        }
+        Ok(())
     }
 
     /// The raw packed panel bytes, as persisted by the MKQC v2 writer.
@@ -166,6 +306,7 @@ impl PackedWeights {
                 std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len())
             },
             PackedData::I4(d) => d,
+            PackedData::I8Borrowed(r) | PackedData::I4Borrowed(r) => r.bytes(),
         }
     }
 
@@ -175,17 +316,25 @@ impl PackedWeights {
 
     /// int8 panel `p`: `k * NR` codes, K-major.
     pub(crate) fn panel_i8(&self, p: usize) -> &[i8] {
+        let span = p * self.k * NR..(p + 1) * self.k * NR;
         match &self.data {
-            PackedData::I8(d) => &d[p * self.k * NR..(p + 1) * self.k * NR],
-            PackedData::I4(_) => panic!("int4 weights have no i8 panels"),
+            PackedData::I8(d) => &d[span],
+            PackedData::I8Borrowed(r) => &as_i8(r.bytes())[span],
+            PackedData::I4(_) | PackedData::I4Borrowed(_) => {
+                panic!("int4 weights have no i8 panels")
+            }
         }
     }
 
     /// int4 panel `p`: `(k/2) * NR` offset-nibble bytes, K-major.
     pub(crate) fn panel_i4(&self, p: usize) -> &[u8] {
+        let span = p * (self.k / 2) * NR..(p + 1) * (self.k / 2) * NR;
         match &self.data {
-            PackedData::I4(d) => &d[p * (self.k / 2) * NR..(p + 1) * (self.k / 2) * NR],
-            PackedData::I8(_) => panic!("int8 weights have no i4 panels"),
+            PackedData::I4(d) => &d[span],
+            PackedData::I4Borrowed(r) => &r.bytes()[span],
+            PackedData::I8(_) | PackedData::I8Borrowed(_) => {
+                panic!("int8 weights have no i4 panels")
+            }
         }
     }
 
@@ -195,7 +344,7 @@ impl PackedWeights {
         let (k, n) = (self.k, self.n);
         let mut out = vec![0i8; k * n];
         match &self.data {
-            PackedData::I8(_) => {
+            PackedData::I8(_) | PackedData::I8Borrowed(_) => {
                 for p in 0..self.n_panels() {
                     let panel = self.panel_i8(p);
                     for kk in 0..k {
@@ -208,7 +357,7 @@ impl PackedWeights {
                     }
                 }
             }
-            PackedData::I4(_) => {
+            PackedData::I4(_) | PackedData::I4Borrowed(_) => {
                 let off = quant::INT4_OFFSET;
                 for p in 0..self.n_panels() {
                     let panel = self.panel_i4(p);
@@ -234,7 +383,29 @@ impl PackedWeights {
         match &self.data {
             PackedData::I8(d) => d.len(),
             PackedData::I4(d) => d.len(),
+            PackedData::I8Borrowed(r) | PackedData::I4Borrowed(r) => r.len(),
         }
+    }
+
+    /// Whether the panel bytes are borrowed from a checkpoint image
+    /// rather than owned (the zero-copy load path).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(
+            self.data,
+            PackedData::I8Borrowed(_) | PackedData::I4Borrowed(_)
+        )
+    }
+
+    /// Heap bytes this pack keeps resident beyond shared backing storage:
+    /// owned panel/scale buffers count, borrowed views cost nothing here
+    /// (their bytes live in the checkpoint image, typically page cache).
+    pub fn heap_bytes(&self) -> usize {
+        let panels = match &self.data {
+            PackedData::I8(d) => d.len(),
+            PackedData::I4(d) => d.len(),
+            PackedData::I8Borrowed(_) | PackedData::I4Borrowed(_) => 0,
+        };
+        panels + self.scales.heap_bytes()
     }
 }
 
@@ -359,8 +530,63 @@ mod tests {
             let (codes, scales) = quant::quantize_weight_per_channel(&w, k, n, bits);
             let pw = PackedWeights::from_f32(&w, k, n, bits);
             assert_eq!(pw.unpack_codes(), codes);
-            assert_eq!(pw.scales, scales);
+            assert_eq!(&pw.scales[..], &scales[..]);
         }
+    }
+
+    #[test]
+    fn borrowed_panels_roundtrip_zero_copy() {
+        // from_panel_ref over an Arc-owned image must serve the exact
+        // same codes/bytes as the owned pack while keeping zero heap
+        // bytes resident (the fleet eviction accounting contract).
+        for bits in [4u32, 8] {
+            for &(k, n) in &[(4usize, 7usize), (6, 8), (16, 24)] {
+                let codes = random_codes(k, n, bits, 300 + n as u64);
+                let scales: Vec<f32> = (0..n).map(|i| 0.02 + i as f32 * 0.001).collect();
+                let pw = PackedWeights::from_codes(&codes, k, n, scales.clone(), bits);
+
+                // build one image: [panel bytes][scale bytes], like a shard payload
+                let mut image = pw.raw_bytes().to_vec();
+                let scales_off = image.len();
+                for s in &scales {
+                    image.extend_from_slice(&s.to_le_bytes());
+                }
+                let owner: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync> =
+                    std::sync::Arc::new(image);
+
+                let panels = PanelRef::new(owner.clone(), 0, scales_off);
+                let sref = PanelRef::new(owner.clone(), scales_off, n * 4);
+                let back =
+                    PackedWeights::from_panel_ref(bits, k, n, ScaleVec::from_ref(sref), panels)
+                        .unwrap();
+
+                assert!(back.is_borrowed());
+                assert_eq!(back.heap_bytes(), back.scales.heap_bytes());
+                assert_eq!(back.unpack_codes(), codes, "bits={bits} k={k} n={n}");
+                assert_eq!(back.raw_bytes(), pw.raw_bytes());
+                assert_eq!(back.packed_bytes(), pw.packed_bytes());
+                assert_eq!(&back.scales[..], &scales[..]);
+
+                // geometry violations are rejected just like from_panels
+                let bad = PanelRef::new(owner.clone(), 0, scales_off.saturating_sub(1));
+                assert!(PackedWeights::from_panel_ref(
+                    bits,
+                    k,
+                    n,
+                    ScaleVec::Owned(scales.clone()),
+                    bad
+                )
+                .is_err());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn panel_ref_rejects_out_of_range() {
+        let owner: std::sync::Arc<dyn AsRef<[u8]> + Send + Sync> =
+            std::sync::Arc::new(vec![0u8; 8]);
+        let _ = PanelRef::new(owner, 4, 8);
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //!                  protocol) instead of replaying the trace
 //!   loadgen      — socket load generator against a `--listen` server:
 //!                  closed-loop or open-loop (Poisson) TCP traffic with
-//!                  served/shed/p50/p99 reporting into BENCH_serve_net.json
+//!                  served/shed/p50/p99 reporting into BENCH_serve_net.json;
+//!                  connects (and reconnects mid-run) with bounded
+//!                  exponential backoff
+//!   admin        — drive the model-fleet lifecycle over a serving
+//!                  socket: `reload` / `evict` / `status` ADMIN frames
+//!                  (reload and evict drain in-flight work first)
 //!   kernels      — print kernel-dispatch info and run a quick self-check
 //!   ckpt         — MKQC checkpoint tools: `export-random` writes a
 //!                  random-init model file, `inspect` dumps the header +
@@ -47,7 +52,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mkq-bert <serve-native|loadgen|kernels|ckpt|train|serve|info> [options]
+        "usage: mkq-bert <serve-native|loadgen|admin|kernels|ckpt|train|serve|info> [options]
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
                 --window-us N   --buckets 1,8,16 (batch buckets)
@@ -67,7 +72,18 @@ fn usage() -> ! {
                 request deadline, 0 = none)
                 --listen HOST:PORT  (serve over the TCP front door
                 instead of replaying a trace; --serve-secs N caps wall
-                clock, --idle-exit-secs N exits after the last activity)
+                clock, --idle-exit-secs N exits after the last activity;
+                SIGTERM/SIGINT and --serve-secs expiry stop gracefully:
+                accept no new work, drain in-flight, answer late
+                arrivals with a typed shutting-down reject)
+                --mem-budget-mb N  (multi-model only: LRU-evict models
+                when fleet resident bytes exceed the budget)
+  admin:        mkq-bert admin <reload|evict|status> --addr HOST:PORT
+                [--model-index N]  — reload swaps in a freshly loaded
+                version after draining in-flight work (old-version pins
+                then get a typed version-gone reject), evict drains and
+                frees the model, status reports version/health/failure
+                counters/resident bytes
   loadgen:      --addr HOST:PORT  --mode closed|open (default closed)
                 --conns N (4)  --requests N total (200)  --rate RPS
                 aggregate for open mode (2000)  --deadline-us N (0)
@@ -77,6 +93,8 @@ fn usage() -> ! {
                 was served / shed — CI smoke assertions)
                 --allow-lost  (tolerate client-side timeouts; default:
                 any request without a response is an error)
+                connects and reconnects with bounded exponential backoff;
+                retry counts land in the bench JSON as conn_retries
   kernels:      (no options; prints the dispatch table and runs a
                 per-variant self-check)
   ckpt export-random FILE.mkqc  [--bits 8,8,4,4 | --n-int4 N] [--seed N]
@@ -97,7 +115,10 @@ fn usage() -> ! {
                 vs buffered, into --out BENCH_load.json (BenchResult
                 rows gated by ci/bench_diff.py); --labels a,b names the
                 rows, --iters N samples, --expect-prepacked LABEL fails
-                unless that file loads with zero quantize+pack work
+                unless that file loads with zero quantize+pack work,
+                --expect-zero-copy LABEL fails unless that file's panels
+                and scales are borrowed from the checkpoint image with
+                zero panel bytes copied
   train|serve|info: artifact path — needs --features xla + make artifacts;
                 also --artifacts DIR; train also takes --ckpt-out FILE.mkqc
                 (export the best-eval QAT state as an MKQC checkpoint)
@@ -108,8 +129,9 @@ fn usage() -> ! {
                 MKQ_AUTOTUNE=0   skip the load-time kernel autotune
                 MKQ_NO_MMAP=1    force buffered checkpoint reads (skip mmap)
   fault injection (chaos testing; inert unless set):
-                MKQ_FAULT_FAIL_FORWARD=N|every:N  fail the Nth (or every
-                  Nth) backend forward with a typed error
+                MKQ_FAULT_FAIL_FORWARD=N|every:N|first:N  fail the Nth
+                  (or every Nth, or the first N) backend forwards with a
+                  typed error
                 MKQ_FAULT_PANIC_FORWARD=N  panic on the Nth forward (once)
                 MKQ_FAULT_DELAY_US=N  add latency to every forward"
     );
@@ -128,8 +150,120 @@ fn run() -> Result<()> {
         "kernels" => kernels_info(),
         "serve-native" => serve_native(&args, &conf),
         "loadgen" => loadgen(&args, &conf),
+        "admin" => admin_cmd(&args),
         "ckpt" => ckpt_cmd(&args, &conf),
         other => artifact::run(other, &args, &conf),
+    }
+}
+
+/// SIGTERM/SIGINT → graceful-stop flag for `serve-native --listen`,
+/// installed via `signal(2)` through the C ABI (no libc crate in the
+/// dependency tree). The handler does one async-signal-safe atomic
+/// store; the front door polls the flag and runs its drain protocol.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+}
+
+/// Connection retries performed across the process (loadgen workers and
+/// the admin client share it) — surfaced as ungated bench metadata so
+/// chaos runs can see how often clients had to back off.
+static CONN_RETRIES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// TCP connect with bounded exponential backoff: 6 attempts, delays
+/// 50ms · 2^i capped at 1s (~1.85s worst case). Every retry bumps
+/// [`CONN_RETRIES`].
+fn connect_with_backoff(addr: &str) -> std::io::Result<std::net::TcpStream> {
+    let mut delay = std::time::Duration::from_millis(50);
+    let mut last_err: Option<std::io::Error> = None;
+    for attempt in 0..6 {
+        if attempt > 0 {
+            CONN_RETRIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(std::time::Duration::from_secs(1));
+        }
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "connect failed with no attempts")
+    }))
+}
+
+/// `mkq-bert admin`: drive the model-fleet lifecycle over a serving
+/// socket's ADMIN frames (reload / evict / status).
+fn admin_cmd(args: &Args) -> Result<()> {
+    use mkq::coordinator::net::{self, AdminOp, AdminReply, ClientReply};
+    use mkq::runtime::ModelHealth;
+
+    let op_s = args.positional.get(1).cloned().unwrap_or_default();
+    let op = match op_s.as_str() {
+        "reload" => AdminOp::Reload,
+        "evict" => AdminOp::Evict,
+        "status" => AdminOp::Status,
+        other => anyhow::bail!(
+            "usage: mkq-bert admin <reload|evict|status> --addr HOST:PORT [--model-index N] \
+             (got {other:?})"
+        ),
+    };
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => anyhow::bail!("admin needs --addr HOST:PORT"),
+    };
+    let model_index = args.usize("model-index", 0);
+    anyhow::ensure!(model_index <= u16::MAX as usize, "--model-index out of range");
+
+    let mut s = connect_with_backoff(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let _ = s.set_nodelay(true);
+    // reload drains all in-flight batches before answering — give it room
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+    net::send_frame(&mut s, &net::encode_admin(op, model_index as u16))?;
+    match net::read_reply(&mut s)? {
+        ClientReply::Admin { model, reply } => match reply {
+            AdminReply::Reloaded { old_version, new_version } => {
+                println!(
+                    "model {model}: reloaded v{old_version} -> v{new_version} \
+                     (in-flight work drained before the swap)"
+                );
+                Ok(())
+            }
+            AdminReply::Evicted { version, freed_bytes } => {
+                println!("model {model}: evicted v{version}, freed {freed_bytes} resident bytes");
+                Ok(())
+            }
+            AdminReply::Status { version, health, consec_failures, resident_bytes } => {
+                let health_s = ModelHealth::from_u8(health).map_or("unknown", |h| h.name());
+                println!(
+                    "model {model}: v{version} {health_s}, consec_failures={consec_failures}, \
+                     resident_bytes={resident_bytes}"
+                );
+                Ok(())
+            }
+            AdminReply::Err { msg } => anyhow::bail!("admin {op_s} on model {model}: {msg}"),
+        },
+        other => anyhow::bail!("unexpected reply to ADMIN frame: {other:?}"),
     }
 }
 
@@ -345,7 +479,7 @@ fn ckpt_cmd(args: &Args, conf: &Config) -> Result<()> {
 fn ckpt_bench_load(args: &Args) -> Result<()> {
     use mkq::checkpoint::Checkpoint;
     use mkq::runtime::NativeModel;
-    use mkq::util::benchkit::Bench;
+    use mkq::util::benchkit::{Bench, BenchResult};
 
     let files: Vec<&String> = args.positional.iter().skip(2).collect();
     if files.is_empty() {
@@ -430,16 +564,33 @@ fn ckpt_bench_load(args: &Args) -> Result<()> {
             stats_b.rss_proxy_bytes()
         );
         rows.push(r_buf.json_row(&format!("load_{label}_buffered")));
+        // resident-bytes as a gated row: deterministic byte counts, so
+        // the >20% rule only fires if a change actually grows what one
+        // loaded model pins in memory
+        rows.push(
+            BenchResult::single(stats_m.resident_bytes() as f64, 1)
+                .json_row(&format!("load_{label}_resident_bytes")),
+        );
+        println!(
+            "{label}: resident {} bytes ({} panel bytes copied at load, {} borrowed zero-copy)",
+            stats_m.resident_bytes(),
+            stats_m.panel_copy_bytes,
+            stats_m.borrowed_panel_bytes
+        );
         meta.push(format!(
             "\"{label}\": {{\"prepacked_panels\": {}, \"quantized_panels\": {}, \"mapped\": {}, \
              \"rss_proxy_bytes_mmap\": {}, \"rss_proxy_bytes_buffered\": {}, \
-             \"model_heap_bytes\": {}}}",
+             \"model_heap_bytes\": {}, \"panel_copy_bytes\": {}, \"borrowed_panel_bytes\": {}, \
+             \"resident_bytes\": {}}}",
             stats_m.prepacked_panels,
             stats_m.quantized_panels,
             stats_m.mapped,
             stats_m.rss_proxy_bytes(),
             stats_b.rss_proxy_bytes(),
-            stats_m.model_heap_bytes
+            stats_m.model_heap_bytes,
+            stats_m.panel_copy_bytes,
+            stats_m.borrowed_panel_bytes,
+            stats_m.resident_bytes()
         ));
         if args.get("expect-prepacked") == Some(label.as_str()) {
             anyhow::ensure!(
@@ -450,11 +601,34 @@ fn ckpt_bench_load(args: &Args) -> Result<()> {
             );
             println!("{label}: prepacked load confirmed — quantize+pack skipped entirely");
         }
+        if args.get("expect-zero-copy") == Some(label.as_str()) {
+            anyhow::ensure!(
+                stats_m.panel_copy_bytes == 0
+                    && stats_m.prepacked_panels > 0
+                    && stats_m.borrowed_panel_bytes > 0,
+                "{label}: expected a zero-copy load, got {} panel bytes copied \
+                 ({} prepacked sites, {} borrowed bytes)",
+                stats_m.panel_copy_bytes,
+                stats_m.prepacked_panels,
+                stats_m.borrowed_panel_bytes
+            );
+            println!(
+                "{label}: zero-copy load confirmed — panels and scales served straight from \
+                 the checkpoint image ({} borrowed bytes, mapped={})",
+                stats_m.borrowed_panel_bytes, stats_m.mapped
+            );
+        }
     }
     if let Some(want) = args.get("expect-prepacked") {
         anyhow::ensure!(
             labels.iter().any(|l| l == want),
             "--expect-prepacked {want:?} names no benched label {labels:?}"
+        );
+    }
+    if let Some(want) = args.get("expect-zero-copy") {
+        anyhow::ensure!(
+            labels.iter().any(|l| l == want),
+            "--expect-zero-copy {want:?} names no benched label {labels:?}"
         );
     }
     let mut out = String::from("{\n  \"kernels\": [\n");
@@ -498,14 +672,28 @@ fn serve_native(args: &Args, conf: &Config) -> Result<()> {
             let m = reg.get(idx).expect("just loaded");
             println!(
                 "registered model {name:?} from {path}: L={} d={} seq={} bits={:?} ({} \
-                 prepacked / {} quantized-at-load sites, {})",
+                 prepacked / {} quantized-at-load sites, {}, {} panel bytes copied / {} \
+                 borrowed zero-copy, resident {} bytes)",
                 m.model.dims.n_layers,
                 m.model.dims.d_model,
                 m.model.dims.seq,
                 m.model.bits,
                 m.stats.prepacked_panels,
                 m.stats.quantized_panels,
-                if m.stats.mapped { "mmap" } else { "buffered read" }
+                if m.stats.mapped { "mmap" } else { "buffered read" },
+                m.stats.panel_copy_bytes,
+                m.stats.borrowed_panel_bytes,
+                m.stats.resident_bytes()
+            );
+        }
+        let budget_mb = args.usize("mem-budget-mb", conf.usize("serve.mem_budget_mb", 0));
+        if budget_mb > 0 {
+            reg.set_mem_budget(Some(budget_mb * 1024 * 1024));
+            println!(
+                "fleet memory budget: {budget_mb} MiB (LRU eviction above it), resident now {} \
+                 bytes across {} model(s)",
+                reg.resident_bytes(),
+                reg.len()
             );
         }
         reg.autotune();
@@ -617,7 +805,18 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
             for_secs: if serve_secs > 0.0 { Some(serve_secs) } else { None },
             idle_exit_secs: if idle_exit > 0.0 { Some(idle_exit) } else { None },
         };
-        door.run(&mut server, opts, None)?;
+        // SIGTERM/SIGINT trip the same graceful-stop path as --serve-secs
+        // expiry: stop accepting, drain in-flight work, answer late
+        // arrivals with a typed shutting-down reject — never a silent drop
+        #[cfg(unix)]
+        let stop: Option<&std::sync::atomic::AtomicBool> = {
+            sig::install();
+            println!("graceful stop armed: SIGTERM/SIGINT drain in-flight work before exit");
+            Some(&sig::STOP)
+        };
+        #[cfg(not(unix))]
+        let stop: Option<&std::sync::atomic::AtomicBool> = None;
+        door.run(&mut server, opts, stop)?;
         println!("{}", door.stats());
         println!("{}", server.summary());
         return Ok(());
@@ -742,9 +941,11 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
     anyhow::ensure!(model_index <= u16::MAX as usize, "--model-index out of range");
 
     // INFO probe: self-size requests to the target model's vocab/seq
+    // (backoff-connected, so loadgen can be launched before the server
+    // finishes binding — the chaos scripts rely on this)
     let models = {
-        let mut s = std::net::TcpStream::connect(&addr)
-            .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let mut s =
+            connect_with_backoff(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
         let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(5)));
         net::send_frame(&mut s, &net::encode_info_request())?;
         match net::read_reply(&mut s)? {
@@ -815,16 +1016,33 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
         rec.record(us);
     }
     let lat = rec.summary();
-    let answered = tally.ok + tally.shed + tally.full + tally.invalid + tally.failed + tally.other;
+    let answered = tally.ok
+        + tally.shed
+        + tally.full
+        + tally.invalid
+        + tally.failed
+        + tally.unavailable
+        + tally.other;
+    let conn_retries = CONN_RETRIES.load(std::sync::atomic::Ordering::Relaxed);
     println!(
-        "sent {} in {:.2}s ({:.0} rps offered), answered {answered}",
+        "sent {} in {:.2}s ({:.0} rps offered), answered {answered}, {conn_retries} connect \
+         retr{}",
         tally.sent,
         wall_s,
-        tally.sent as f64 / wall_s
+        tally.sent as f64 / wall_s,
+        if conn_retries == 1 { "y" } else { "ies" }
     );
     println!(
-        "  served={} shed_deadline={} queue_full={} invalid={} backend_failed={} other={} lost={}",
-        tally.ok, tally.shed, tally.full, tally.invalid, tally.failed, tally.other, tally.lost
+        "  served={} shed_deadline={} queue_full={} invalid={} backend_failed={} unavailable={} \
+         other={} lost={}",
+        tally.ok,
+        tally.shed,
+        tally.full,
+        tally.invalid,
+        tally.failed,
+        tally.unavailable,
+        tally.other,
+        tally.lost
     );
     if lat.count > 0 {
         println!("  served latency: {lat}");
@@ -845,12 +1063,14 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
         s.push_str(&format!(
             "  ],\n  \"ungated\": {{\"mode\": \"{mode}\", \"conns\": {conns}, \"sent\": {}, \
              \"served\": {}, \"shed_deadline\": {}, \"queue_full\": {}, \"backend_failed\": {}, \
-             \"lost\": {}, \"p99_us\": {:.3}, \"mean_us\": {:.3}, \"wall_s\": {:.3}}}\n}}\n",
+             \"unavailable\": {}, \"lost\": {}, \"conn_retries\": {conn_retries}, \
+             \"p99_us\": {:.3}, \"mean_us\": {:.3}, \"wall_s\": {:.3}}}\n}}\n",
             tally.sent,
             tally.ok,
             tally.shed,
             tally.full,
             tally.failed,
+            tally.unavailable,
             tally.lost,
             lat.p99_us,
             lat.mean_us,
@@ -898,6 +1118,9 @@ struct LoadTally {
     invalid: u64,
     /// BackendFailed rejects (the request's batch failed or panicked).
     failed: u64,
+    /// Lifecycle rejects: shutting-down, version-gone, quarantined,
+    /// evicted — typed sheds, not lost work.
+    unavailable: u64,
     other: u64,
     /// Sent but never answered before timeout/disconnect.
     lost: u64,
@@ -912,6 +1135,9 @@ impl LoadTally {
             C::QueueFull => self.full += 1,
             C::InvalidRequest => self.invalid += 1,
             C::BackendFailed => self.failed += 1,
+            C::ShuttingDown | C::VersionGone | C::Quarantined | C::Evicted => {
+                self.unavailable += 1
+            }
             C::BadFrame | C::ServerBusy => self.other += 1,
         }
     }
@@ -923,6 +1149,7 @@ impl LoadTally {
         self.full += o.full;
         self.invalid += o.invalid;
         self.failed += o.failed;
+        self.unavailable += o.unavailable;
         self.other += o.other;
         self.lost += o.lost;
         self.lat_ok_us.extend(o.lat_ok_us);
@@ -941,7 +1168,7 @@ fn loadgen_closed_worker(
     use mkq::coordinator::net::{self, ClientReply};
 
     let mut t = LoadTally::default();
-    let mut stream = std::net::TcpStream::connect(addr)?;
+    let mut stream = connect_with_backoff(addr)?;
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
     let mut rng = mkq::util::rng::Rng::new(1000 + ci);
@@ -953,7 +1180,19 @@ fn loadgen_closed_worker(
         let sent_at = std::time::Instant::now();
         let frame = net::encode_request(tag, model, deadline_us, &ids, &mask);
         if net::send_frame(&mut stream, &frame).is_err() {
-            break;
+            // the server may be restarting — reconnect with backoff and
+            // resend this request; give up only when backoff is exhausted
+            match connect_with_backoff(addr) {
+                Ok(s) => {
+                    stream = s;
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+                    if net::send_frame(&mut stream, &frame).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
         }
         t.sent += 1;
         match net::read_reply(&mut stream) {
@@ -962,10 +1201,21 @@ fn loadgen_closed_worker(
                 t.lat_ok_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
             }
             Ok(ClientReply::Reject { code, .. }) => t.absorb_reject(code),
-            Ok(ClientReply::Info { .. }) => t.other += 1,
+            Ok(ClientReply::Info { .. }) | Ok(ClientReply::Admin { .. }) => t.other += 1,
             Err(_) => {
+                // the in-flight request is lost; reconnect with backoff so
+                // the remaining requests still run (a mid-run server swap
+                // must not silently end the worker)
                 t.lost += 1;
-                break;
+                match connect_with_backoff(addr) {
+                    Ok(s) => {
+                        stream = s;
+                        let _ = stream.set_nodelay(true);
+                        let _ =
+                            stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+                    }
+                    Err(_) => break,
+                }
             }
         }
     }
@@ -986,7 +1236,7 @@ fn loadgen_open_worker(
     use std::sync::{Arc, Mutex};
 
     let mut t = LoadTally::default();
-    let stream = std::net::TcpStream::connect(addr)?;
+    let stream = connect_with_backoff(addr)?;
     let _ = stream.set_nodelay(true);
     let mut wstream = stream.try_clone()?;
     let mut rstream = stream;
@@ -1035,7 +1285,7 @@ fn loadgen_open_worker(
                 got += 1;
                 t.absorb_reject(code);
             }
-            Ok(ClientReply::Info { .. }) => {
+            Ok(ClientReply::Info { .. }) | Ok(ClientReply::Admin { .. }) => {
                 got += 1;
                 t.other += 1;
             }

@@ -172,6 +172,15 @@ impl From<Vec<u8>> for FileBytes {
     }
 }
 
+// The impl `kernels::pack::PanelRef` borrows through: an
+// `Arc<FileBytes>` owner hands out stable `&[u8]` views of the image
+// for as long as any borrowed panel keeps the Arc alive.
+impl AsRef<[u8]> for FileBytes {
+    fn as_ref(&self) -> &[u8] {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

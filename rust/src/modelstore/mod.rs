@@ -31,7 +31,9 @@ use std::path::Path;
 use crate::checkpoint::{Checkpoint, CkptError, CkptHeader, Writer, MANIFEST_NAME, MANIFEST_TAG};
 use crate::kernels::PackedWeights;
 
-pub use registry::Registry;
+pub use registry::{
+    ModelVersion, Registry, DEGRADE_AFTER_FAILURES, QUARANTINE_AFTER_FAILURES,
+};
 
 /// What a model load actually did — the observability behind the
 /// `BENCH_load.json` rows and the "v2 skips quantize+pack" acceptance
@@ -47,8 +49,16 @@ pub struct LoadStats {
     /// Heap bytes held by the file image itself (0 when mapped).
     pub file_heap_bytes: usize,
     /// Approximate heap bytes owned by the constructed model (packed
-    /// panels, scales, embeddings, biases, LN vectors).
+    /// panels, scales, embeddings, biases, LN vectors). Borrowed
+    /// (zero-copy) panels and scales contribute nothing here.
     pub model_heap_bytes: usize,
+    /// Panel bytes memcpy'd out of the checkpoint into model-owned
+    /// buffers at load. A fully zero-copy v2 load reports 0 — the
+    /// number `ckpt bench-load --expect-zero-copy` gates on.
+    pub panel_copy_bytes: usize,
+    /// Panel + scale bytes served directly out of the checkpoint image
+    /// (they pin the image, so eviction accounting must include it).
+    pub borrowed_panel_bytes: usize,
 }
 
 impl LoadStats {
@@ -57,6 +67,16 @@ impl LoadStats {
     /// the I/O term entirely — the pages are reclaimable and shared.
     pub fn rss_proxy_bytes(&self) -> usize {
         self.file_heap_bytes + self.model_heap_bytes
+    }
+
+    /// Bytes actually freed by evicting this model: its owned heap, plus
+    /// the file image when borrowed panels pin a *buffered* (non-mapped)
+    /// image. A mapped image's pages are reclaimable page cache, so they
+    /// cost ~nothing while resident and free ~nothing on evict.
+    pub fn resident_bytes(&self) -> usize {
+        let pinned_image =
+            if self.borrowed_panel_bytes > 0 && !self.mapped { self.file_heap_bytes } else { 0 };
+        self.model_heap_bytes + pinned_image
     }
 }
 

@@ -1,5 +1,5 @@
-//! Multi-model serving registry: N named checkpoints behind one
-//! [`Backend`].
+//! Multi-model serving registry: a fault-tolerant fleet of named
+//! checkpoints behind one [`Backend`].
 //!
 //! One server process loads any number of MKQC checkpoints (single files
 //! or sharded directories), each registered under a caller-chosen name.
@@ -9,36 +9,97 @@
 //! through [`Backend::serve_forward_for`]. The kernel [`Dispatcher`]
 //! (thread pool + autotuned thresholds) is shared across models; each
 //! model keeps its own [`Workspace`] arena so steady-state forwards stay
-//! zero-allocation regardless of interleaving — models have different
-//! shapes, and sharing one arena would re-grow it on every model switch.
+//! zero-allocation regardless of interleaving.
+//!
+//! On top of routing, each slot carries a *lifecycle*:
+//!
+//!   * **Versioned handles** — the loaded weights live in an
+//!     `Arc<ModelVersion>` with a monotonic per-slot version.
+//!     [`Registry::reload_model_idx`] loads the new version first, then
+//!     swaps the handle atomically (single-threaded event loop, one
+//!     assignment); the server drains in-flight batches before asking,
+//!     so no batch ever straddles versions, and requests pinned to the
+//!     old version shed with a typed `VersionGone`.
+//!   * **Health state machine** — `Loading → Serving → Degraded →
+//!     Quarantined`, driven by consecutive forward failures (errors and
+//!     caught panics both count; any success resets). A quarantined
+//!     model sheds every request with a typed reject while sibling
+//!     models keep serving; a reload recovers it.
+//!   * **Eviction under a memory budget** — [`Registry::set_mem_budget`]
+//!     caps the fleet's summed [`LoadStats::resident_bytes`] (real
+//!     numbers thanks to zero-copy panel borrowing: a mapped v2 model
+//!     costs ~page-cache only); least-recently-used slots are evicted
+//!     until the fleet fits.
 
-use std::cell::RefCell;
-use std::path::Path;
+use std::cell::{Cell, RefCell};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::LoadStats;
 use crate::coordinator::faults::{FaultPlan, Faults};
 use crate::kernels::Dispatcher;
-use crate::runtime::{Backend, NativeModel, Precision, ServeDims, Workspace};
+use crate::runtime::native::NativeDims;
+use crate::runtime::{
+    Backend, ModelHealth, ModelStatus, NativeModel, Precision, ServeDims, Workspace,
+};
 
-/// One registered model: name, deployed weights, its load provenance,
-/// and a private forward arena.
-pub struct RegisteredModel {
-    pub name: String,
+/// Consecutive forward failures before a model is flagged `Degraded`.
+pub const DEGRADE_AFTER_FAILURES: u32 = 3;
+/// Consecutive forward failures before a model is `Quarantined` (sheds
+/// every request until reloaded).
+pub const QUARANTINE_AFTER_FAILURES: u32 = 5;
+
+/// One immutable loaded generation of a model. Held by `Arc` so a
+/// version can outlive its slot (in-flight observers, `get`): swapping
+/// in a reload never invalidates anyone still holding the old handle.
+pub struct ModelVersion {
+    /// Monotonic per-slot version (1 on first load, +1 per reload).
+    pub version: u64,
     pub model: NativeModel,
     pub stats: LoadStats,
-    ws: RefCell<Workspace>,
 }
 
-/// Named-model registry; implements [`Backend`] with per-model routing.
+/// One registry slot: a stable (name, index) identity whose loaded
+/// weights come and go across reloads and evictions.
+struct ModelSlot {
+    name: String,
+    /// Checkpoint source — `None` for models registered in-memory
+    /// (those cannot be reloaded).
+    path: Option<PathBuf>,
+    /// Dims captured at first load: admission checks and bucket
+    /// bookkeeping stay answerable while the slot is evicted, and a
+    /// reload is required to keep them (batches in the queues were
+    /// validated against these shapes).
+    dims: NativeDims,
+    cur: Option<Arc<ModelVersion>>,
+    /// Per-slot forward arena (models have different shapes; sharing
+    /// one arena would re-grow it on every model switch).
+    ws: RefCell<Workspace>,
+    version: Cell<u64>,
+    health: Cell<ModelHealth>,
+    consec_failures: Cell<u32>,
+    /// Logical timestamp of the last forward (LRU eviction key).
+    last_used: Cell<u64>,
+}
+
+/// Named-model registry; implements [`Backend`] with per-model routing
+/// and the load/reload/evict/quarantine lifecycle.
 pub struct Registry {
     pub disp: Dispatcher,
-    models: Vec<RegisteredModel>,
+    /// Interior mutability: the `Backend` trait is `&self` and the
+    /// serving event loop is single-threaded by design, so lifecycle
+    /// operations (reload/evict) arrive through `&self` too.
+    slots: RefCell<Vec<ModelSlot>>,
     /// Fault-injection hook (`MKQ_FAULT_*` env or [`Registry::set_faults`]);
     /// inert by default. One hook for the whole registry — an injected
     /// fault is a process-level event, not a per-model one.
     faults: Faults,
+    /// Fleet-wide resident-byte cap (see [`Registry::set_mem_budget`]).
+    mem_budget: Cell<Option<usize>>,
+    /// Logical clock feeding each slot's `last_used`.
+    use_clock: Cell<u64>,
 }
 
 impl Default for Registry {
@@ -49,7 +110,13 @@ impl Default for Registry {
 
 impl Registry {
     pub fn new() -> Self {
-        Registry { disp: Dispatcher::new(), models: Vec::new(), faults: Faults::from_env() }
+        Registry {
+            disp: Dispatcher::new(),
+            slots: RefCell::new(Vec::new()),
+            faults: Faults::from_env(),
+            mem_budget: Cell::new(None),
+            use_clock: Cell::new(0),
+        }
     }
 
     /// Arm (or disarm, with an inert plan) fault injection on this
@@ -57,6 +124,29 @@ impl Registry {
     /// parallel test threads never share fault state.
     pub fn set_faults(&mut self, plan: FaultPlan) {
         self.faults = Faults::with_plan(plan);
+    }
+
+    /// Cap the fleet's summed resident bytes; setting (or lowering) the
+    /// budget evicts least-recently-used models immediately until the
+    /// fleet fits. `None` removes the cap.
+    pub fn set_mem_budget(&self, budget: Option<usize>) {
+        self.mem_budget.set(budget);
+        self.enforce_budget(None);
+    }
+
+    pub fn mem_budget(&self) -> Option<usize> {
+        self.mem_budget.get()
+    }
+
+    /// Summed resident bytes across loaded models — what
+    /// [`Registry::set_mem_budget`] caps.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .borrow()
+            .iter()
+            .filter_map(|s| s.cur.as_ref())
+            .map(|c| c.stats.resident_bytes())
+            .sum()
     }
 
     /// Load a checkpoint (file or sharded directory) and register it
@@ -70,27 +160,140 @@ impl Registry {
         }
         let (model, stats) = NativeModel::from_checkpoint_with_stats(path)
             .map_err(|e| anyhow::anyhow!("loading {name:?} from {}: {e}", path.display()))?;
-        self.models.push(RegisteredModel {
-            name: name.to_string(),
-            model,
-            stats,
-            ws: RefCell::new(Workspace::new()),
-        });
-        Ok(self.models.len() - 1)
+        let idx = self.push_slot(name, Some(path.to_path_buf()), model, stats);
+        self.enforce_budget(Some(idx));
+        Ok(idx)
     }
 
     /// Register an already-constructed model (tests, random-init demos).
+    /// In-memory models have no checkpoint source, so they can be
+    /// evicted but never reloaded.
     pub fn register(&mut self, name: &str, model: NativeModel) -> Result<usize> {
         if name.is_empty() || self.find(name).is_some() {
             bail!("model name {name:?} is empty or already registered");
         }
-        self.models.push(RegisteredModel {
+        Ok(self.push_slot(name, None, model, LoadStats::default()))
+    }
+
+    fn push_slot(
+        &self,
+        name: &str,
+        path: Option<PathBuf>,
+        model: NativeModel,
+        stats: LoadStats,
+    ) -> usize {
+        let mut slots = self.slots.borrow_mut();
+        let dims = model.dims;
+        slots.push(ModelSlot {
             name: name.to_string(),
-            model,
-            stats: LoadStats::default(),
+            path,
+            dims,
+            cur: Some(Arc::new(ModelVersion { version: 1, model, stats })),
             ws: RefCell::new(Workspace::new()),
+            version: Cell::new(1),
+            health: Cell::new(ModelHealth::Serving),
+            consec_failures: Cell::new(0),
+            last_used: Cell::new(0),
         });
-        Ok(self.models.len() - 1)
+        slots.len() - 1
+    }
+
+    /// Reload one slot from its checkpoint source and atomically swap
+    /// the new version in, returning `(old_version, new_version)`. The
+    /// slot recovers to `Serving` whatever its prior health (this is the
+    /// quarantine escape hatch). Callers running a server must drain
+    /// in-flight batches first so nothing straddles the swap — the ADMIN
+    /// frame handler does.
+    pub fn reload_model_idx(&self, idx: usize) -> Result<(u64, u64)> {
+        let path = {
+            let slots = self.slots.borrow();
+            let s = match slots.get(idx) {
+                Some(s) => s,
+                None => bail!("model index {idx} out of range ({} registered)", slots.len()),
+            };
+            match &s.path {
+                Some(p) => p.clone(),
+                None => bail!(
+                    "model {:?} was registered in-memory — no checkpoint source to reload from",
+                    s.name
+                ),
+            }
+        };
+        // load the new generation fully (and fallibly) before touching
+        // the slot: a bad checkpoint leaves the old version serving
+        let (model, stats) = NativeModel::from_checkpoint_with_stats(&path).map_err(|e| {
+            anyhow::anyhow!("reloading model {idx} from {}: {e}", path.display())
+        })?;
+        {
+            let mut slots = self.slots.borrow_mut();
+            let s = &mut slots[idx];
+            if model.dims != s.dims {
+                bail!(
+                    "reload of {:?} changed dims — queued work was admitted against the old \
+                     shapes; evict and load under a new name instead",
+                    s.name
+                );
+            }
+            let old = s.version.get();
+            let new = old + 1;
+            s.version.set(new);
+            s.cur = Some(Arc::new(ModelVersion { version: new, model, stats }));
+            s.health.set(ModelHealth::Serving);
+            s.consec_failures.set(0);
+        }
+        self.enforce_budget(Some(idx));
+        let slots = self.slots.borrow();
+        let new = slots[idx].version.get();
+        Ok((new - 1, new))
+    }
+
+    /// Drop one slot's loaded weights, returning `(version,
+    /// freed_bytes)`. The name/index stay registered; requests shed with
+    /// a typed reject until a reload restores it.
+    pub fn evict_model_idx(&self, idx: usize) -> Result<(u64, usize)> {
+        let mut slots = self.slots.borrow_mut();
+        let s = match slots.get_mut(idx) {
+            Some(s) => s,
+            None => bail!("model index {idx} out of range ({} registered)", slots.len()),
+        };
+        let cur = match s.cur.take() {
+            Some(c) => c,
+            None => bail!("model {:?} is already evicted", s.name),
+        };
+        s.health.set(ModelHealth::Evicted);
+        s.consec_failures.set(0);
+        Ok((cur.version, cur.stats.resident_bytes()))
+    }
+
+    /// Evict least-recently-used slots (never `keep`) until the fleet
+    /// fits the budget. No-op without a budget.
+    fn enforce_budget(&self, keep: Option<usize>) {
+        let Some(budget) = self.mem_budget.get() else { return };
+        loop {
+            let victim = {
+                let slots = self.slots.borrow();
+                let total: usize = slots
+                    .iter()
+                    .filter_map(|s| s.cur.as_ref())
+                    .map(|c| c.stats.resident_bytes())
+                    .sum();
+                if total <= budget {
+                    return;
+                }
+                slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, s)| s.cur.is_some() && Some(*i) != keep)
+                    .min_by_key(|(_, s)| s.last_used.get())
+                    .map(|(i, _)| i)
+            };
+            match victim {
+                Some(i) => {
+                    let _ = self.evict_model_idx(i);
+                }
+                None => return, // nothing evictable (only `keep` remains)
+            }
+        }
     }
 
     /// One-shot kernel autotune, shared by every model (run once after
@@ -100,46 +303,60 @@ impl Registry {
     }
 
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.slots.borrow().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.slots.borrow().is_empty()
     }
 
     /// Model index for a registered name.
     pub fn find(&self, name: &str) -> Option<usize> {
-        self.models.iter().position(|m| m.name == name)
+        self.slots.borrow().iter().position(|s| s.name == name)
     }
 
-    pub fn get(&self, model: usize) -> Option<&RegisteredModel> {
-        self.models.get(model)
+    /// The current loaded generation of one slot (`None` for unknown
+    /// indices and evicted slots). The handle keeps that version's
+    /// weights alive across subsequent reloads/evictions.
+    pub fn get(&self, model: usize) -> Option<Arc<ModelVersion>> {
+        self.slots.borrow().get(model).and_then(|s| s.cur.clone())
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &RegisteredModel> {
-        self.models.iter()
-    }
-
-    fn model(&self, idx: usize) -> Result<&RegisteredModel> {
-        match self.models.get(idx) {
-            Some(m) => Ok(m),
-            None => bail!("model index {idx} out of range ({} registered)", self.models.len()),
+    /// Record one forward failure; crossing the thresholds drives
+    /// `Serving → Degraded → Quarantined`.
+    fn note_failure(&self, s: &ModelSlot) {
+        let n = s.consec_failures.get() + 1;
+        s.consec_failures.set(n);
+        match s.health.get() {
+            ModelHealth::Quarantined | ModelHealth::Evicted => {}
+            _ => {
+                if n >= QUARANTINE_AFTER_FAILURES {
+                    s.health.set(ModelHealth::Quarantined);
+                } else if n >= DEGRADE_AFTER_FAILURES {
+                    s.health.set(ModelHealth::Degraded);
+                }
+            }
         }
     }
 }
 
 impl Backend for Registry {
     fn name(&self) -> String {
-        let names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+        let slots = self.slots.borrow();
+        let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
         format!("registry(threads={}, models=[{}])", self.disp.threads(), names.join(","))
     }
 
     fn n_models(&self) -> usize {
-        self.models.len()
+        self.len()
     }
 
     fn model_label(&self, model: usize) -> String {
-        self.models.get(model).map(|m| m.name.clone()).unwrap_or_else(|| format!("#{model}"))
+        self.slots
+            .borrow()
+            .get(model)
+            .map(|s| s.name.clone())
+            .unwrap_or_else(|| format!("#{model}"))
     }
 
     fn serve_dims(&self) -> Result<ServeDims> {
@@ -147,12 +364,15 @@ impl Backend for Registry {
     }
 
     fn serve_dims_for(&self, model: usize) -> Result<ServeDims> {
-        let m = self.model(model)?;
-        Ok(ServeDims {
-            vocab: m.model.dims.vocab,
-            seq: m.model.dims.seq,
-            n_classes: m.model.dims.n_classes,
-        })
+        let slots = self.slots.borrow();
+        match slots.get(model) {
+            Some(s) => Ok(ServeDims {
+                vocab: s.dims.vocab,
+                seq: s.dims.seq,
+                n_classes: s.dims.n_classes,
+            }),
+            None => bail!("model index {model} out of range ({} registered)", slots.len()),
+        }
     }
 
     fn check_bucket(&self, bucket: usize) -> Result<()> {
@@ -160,7 +380,7 @@ impl Backend for Registry {
     }
 
     fn check_bucket_for(&self, model: usize, bucket: usize) -> Result<()> {
-        self.model(model)?;
+        self.serve_dims_for(model)?;
         if bucket == 0 {
             bail!("bucket size 0");
         }
@@ -180,6 +400,34 @@ impl Backend for Registry {
         }
     }
 
+    fn model_status(&self, model: usize) -> Result<ModelStatus> {
+        let slots = self.slots.borrow();
+        match slots.get(model) {
+            Some(s) => Ok(ModelStatus {
+                version: s.version.get(),
+                health: s.health.get(),
+                consec_failures: s.consec_failures.get(),
+                resident_bytes: s.cur.as_ref().map(|c| c.stats.resident_bytes()).unwrap_or(0),
+            }),
+            None => bail!("model index {model} out of range ({} registered)", slots.len()),
+        }
+    }
+
+    fn reload_model(&self, model: usize) -> Result<(u64, u64)> {
+        self.reload_model_idx(model)
+    }
+
+    fn evict_model(&self, model: usize) -> Result<(u64, usize)> {
+        self.evict_model_idx(model)
+    }
+
+    fn record_forward_panic(&self, model: usize) {
+        let slots = self.slots.borrow();
+        if let Some(s) = slots.get(model) {
+            self.note_failure(s);
+        }
+    }
+
     fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
         self.serve_forward_for(0, bucket, t, ids, mask)
     }
@@ -192,21 +440,49 @@ impl Backend for Registry {
         ids: &[i32],
         mask: &[f32],
     ) -> Result<Vec<f32>> {
-        let entry = self.model(model)?;
-        self.faults.before_forward()?;
-        let mut ws = entry.ws.borrow_mut();
-        // the label is borrowed, not formatted — no allocation on the
-        // per-batch success path (the zero-alloc serving contract)
-        crate::runtime::backend::native_serve_forward(
-            &entry.name,
-            &entry.model,
-            &self.disp,
-            &mut ws,
-            bucket,
-            t,
-            ids,
-            mask,
-        )
+        let slots = self.slots.borrow();
+        let s = match slots.get(model) {
+            Some(s) => s,
+            None => bail!("model index {model} out of range ({} registered)", slots.len()),
+        };
+        // shed without touching failure counters: a quarantined model's
+        // refusals are policy, not new evidence against it
+        match s.health.get() {
+            ModelHealth::Quarantined => bail!(
+                "model {:?} is quarantined ({} consecutive forward failures) — reload to recover",
+                s.name,
+                s.consec_failures.get()
+            ),
+            ModelHealth::Evicted => bail!("model {:?} is evicted — reload to restore it", s.name),
+            _ => {}
+        }
+        let cur = match &s.cur {
+            Some(c) => c,
+            None => bail!("model {:?} has no loaded weights", s.name),
+        };
+        let now = self.use_clock.get() + 1;
+        self.use_clock.set(now);
+        s.last_used.set(now);
+        // the label is borrowed, not formatted, and the version handle is
+        // borrowed, not cloned — no allocation on the per-batch success
+        // path (the zero-alloc serving contract)
+        let r = (|| {
+            self.faults.before_forward()?;
+            let mut ws = s.ws.borrow_mut();
+            crate::runtime::backend::native_serve_forward(
+                &s.name, &cur.model, &self.disp, &mut ws, bucket, t, ids, mask,
+            )
+        })();
+        match &r {
+            Ok(_) => {
+                s.consec_failures.set(0);
+                if matches!(s.health.get(), ModelHealth::Degraded | ModelHealth::Loading) {
+                    s.health.set(ModelHealth::Serving);
+                }
+            }
+            Err(_) => self.note_failure(s),
+        }
+        r
     }
 
     fn layer_forward(
@@ -276,5 +552,116 @@ mod tests {
         assert!(reg.check_seq_bucket(7).is_err());
         assert!(reg.check_bucket(4).is_ok());
         assert!(reg.check_bucket(0).is_err());
+    }
+
+    #[test]
+    fn health_machine_degrades_quarantines_and_recovers_on_success() {
+        let mut reg = Registry::new();
+        reg.register("m", tiny(3, 2)).unwrap();
+        let ids: Vec<i32> = (0..6).collect();
+        let mask = vec![1.0f32; 6];
+
+        // every forward fails -> Degraded at 3, Quarantined at 5
+        reg.set_faults(FaultPlan::fail_every(1));
+        for i in 1..=4u32 {
+            assert!(reg.serve_forward_for(0, 1, 6, &ids, &mask).is_err());
+            let st = reg.model_status(0).unwrap();
+            assert_eq!(st.consec_failures, i);
+            let want = if i >= DEGRADE_AFTER_FAILURES {
+                ModelHealth::Degraded
+            } else {
+                ModelHealth::Serving
+            };
+            assert_eq!(st.health, want, "after {i} failures");
+        }
+        assert!(reg.serve_forward_for(0, 1, 6, &ids, &mask).is_err());
+        assert_eq!(reg.model_status(0).unwrap().health, ModelHealth::Quarantined);
+
+        // quarantined: sheds even with faults disarmed, message is typed
+        reg.set_faults(FaultPlan::default());
+        let err = reg.serve_forward_for(0, 1, 6, &ids, &mask).unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        // shedding is policy, not evidence: the counter froze at 5
+        assert_eq!(reg.model_status(0).unwrap().consec_failures, QUARANTINE_AFTER_FAILURES);
+
+        // a Degraded model heals itself on the next success
+        let mut reg2 = Registry::new();
+        reg2.register("m", tiny(3, 2)).unwrap();
+        reg2.set_faults(FaultPlan::fail_every(1));
+        for _ in 0..DEGRADE_AFTER_FAILURES {
+            assert!(reg2.serve_forward_for(0, 1, 6, &ids, &mask).is_err());
+        }
+        assert_eq!(reg2.model_status(0).unwrap().health, ModelHealth::Degraded);
+        reg2.set_faults(FaultPlan::default());
+        assert!(reg2.serve_forward_for(0, 1, 6, &ids, &mask).is_ok());
+        let st = reg2.model_status(0).unwrap();
+        assert_eq!(st.health, ModelHealth::Serving);
+        assert_eq!(st.consec_failures, 0);
+    }
+
+    #[test]
+    fn quarantine_is_per_slot_siblings_keep_serving() {
+        let mut reg = Registry::new();
+        reg.register("sick", tiny(1, 2)).unwrap();
+        reg.register("healthy", tiny(2, 3)).unwrap();
+        let ids: Vec<i32> = (0..6).collect();
+        let mask = vec![1.0f32; 6];
+
+        reg.set_faults(FaultPlan::fail_every(1));
+        for _ in 0..QUARANTINE_AFTER_FAILURES {
+            assert!(reg.serve_forward_for(0, 1, 6, &ids, &mask).is_err());
+        }
+        reg.set_faults(FaultPlan::default());
+        assert_eq!(reg.model_status(0).unwrap().health, ModelHealth::Quarantined);
+        assert_eq!(reg.model_status(1).unwrap().health, ModelHealth::Serving);
+        assert!(reg.serve_forward_for(0, 1, 6, &ids, &mask).is_err());
+        assert_eq!(reg.serve_forward_for(1, 1, 6, &ids, &mask).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn record_forward_panic_counts_like_a_failure() {
+        let mut reg = Registry::new();
+        reg.register("m", tiny(9, 2)).unwrap();
+        for _ in 0..QUARANTINE_AFTER_FAILURES {
+            reg.record_forward_panic(0);
+        }
+        assert_eq!(reg.model_status(0).unwrap().health, ModelHealth::Quarantined);
+    }
+
+    #[test]
+    fn evict_sheds_typed_and_in_memory_models_cannot_reload() {
+        let mut reg = Registry::new();
+        reg.register("m", tiny(4, 2)).unwrap();
+        let ids: Vec<i32> = (0..6).collect();
+        let mask = vec![1.0f32; 6];
+        assert!(reg.serve_forward_for(0, 1, 6, &ids, &mask).is_ok());
+
+        let (version, _freed) = reg.evict_model_idx(0).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(reg.model_status(0).unwrap().health, ModelHealth::Evicted);
+        assert!(reg.get(0).is_none());
+        let err = reg.serve_forward_for(0, 1, 6, &ids, &mask).unwrap_err();
+        assert!(err.to_string().contains("evicted"), "{err}");
+        // dims stay answerable for bucket bookkeeping while evicted
+        assert_eq!(reg.serve_dims_for(0).unwrap().seq, 6);
+        assert!(reg.evict_model_idx(0).is_err(), "double evict is typed");
+        // no checkpoint source -> reload is a typed error, not a panic
+        let err = reg.reload_model_idx(0).unwrap_err();
+        assert!(err.to_string().contains("in-memory"), "{err}");
+        assert!(reg.reload_model_idx(7).is_err(), "bad index");
+    }
+
+    #[test]
+    fn version_handles_survive_eviction() {
+        let mut reg = Registry::new();
+        reg.register("m", tiny(6, 2)).unwrap();
+        let handle = reg.get(0).unwrap();
+        assert_eq!(handle.version, 1);
+        reg.evict_model_idx(0).unwrap();
+        // the held handle still serves its weights (Arc keeps them alive)
+        let ids: Vec<i32> = (0..6).collect();
+        let mask = vec![1.0f32; 6];
+        let logits = handle.model.forward(&reg.disp, &ids, &mask, 1, 6);
+        assert_eq!(logits.len(), 2);
     }
 }

@@ -59,6 +59,66 @@ impl Precision {
     }
 }
 
+/// Per-model health, driven by consecutive forward-failure counts (see
+/// [`Registry`](crate::modelstore::Registry)): `Serving` models admit
+/// normally, `Degraded` models admit but are flagged in status surfaces,
+/// `Quarantined`/`Evicted` models shed every request with a typed reject
+/// while sibling models keep serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelHealth {
+    Loading,
+    Serving,
+    Degraded,
+    Quarantined,
+    Evicted,
+}
+
+impl ModelHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelHealth::Loading => "loading",
+            ModelHealth::Serving => "serving",
+            ModelHealth::Degraded => "degraded",
+            ModelHealth::Quarantined => "quarantined",
+            ModelHealth::Evicted => "evicted",
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ModelHealth::Loading => 0,
+            ModelHealth::Serving => 1,
+            ModelHealth::Degraded => 2,
+            ModelHealth::Quarantined => 3,
+            ModelHealth::Evicted => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => ModelHealth::Loading,
+            1 => ModelHealth::Serving,
+            2 => ModelHealth::Degraded,
+            3 => ModelHealth::Quarantined,
+            4 => ModelHealth::Evicted,
+            _ => return None,
+        })
+    }
+}
+
+/// One model's lifecycle snapshot, as surfaced over `INFO_RESP`/ADMIN
+/// `STATUS` and in [`ServerSummary`](crate::coordinator::ServerSummary).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelStatus {
+    /// Monotonic per-slot version, bumped on every (re)load.
+    pub version: u64,
+    pub health: ModelHealth,
+    /// Consecutive forward failures since the last success.
+    pub consec_failures: u32,
+    /// Bytes an eviction of this model would free (zero-copy accounting).
+    pub resident_bytes: usize,
+}
+
 /// Execution backend behind the serving coordinator and benches.
 ///
 /// A backend hosts one model by default; multi-model backends (the
@@ -136,6 +196,43 @@ pub trait Backend {
     ) -> Result<Vec<f32>> {
         self.only_model(model)?;
         self.serve_forward(bucket, t, ids, mask)
+    }
+
+    /// One model's lifecycle snapshot. The default reports a permanently
+    /// healthy version-1 model — right for backends without a lifecycle
+    /// (a fixed in-memory model is never reloaded or evicted).
+    fn model_status(&self, model: usize) -> Result<ModelStatus> {
+        self.serve_dims_for(model)?;
+        Ok(ModelStatus {
+            version: 1,
+            health: ModelHealth::Serving,
+            consec_failures: 0,
+            resident_bytes: 0,
+        })
+    }
+
+    /// Atomically replace one model with a fresh load from its source,
+    /// returning `(old_version, new_version)`. Callers must drain
+    /// in-flight batches first (the server does) so nothing straddles
+    /// the swap.
+    fn reload_model(&self, model: usize) -> Result<(u64, u64)> {
+        let _ = model;
+        bail!("backend {} does not support model reload", self.name())
+    }
+
+    /// Drop one model's weights, returning `(version, freed_bytes)`.
+    /// Subsequent requests for it shed with a typed reject until a
+    /// reload brings it back.
+    fn evict_model(&self, model: usize) -> Result<(u64, usize)> {
+        let _ = model;
+        bail!("backend {} does not support model eviction", self.name())
+    }
+
+    /// Observe a forward *panic* (caught by the server's isolation
+    /// boundary, so the backend's own failure accounting never sees it
+    /// return). Lifecycle backends count it like a forward error.
+    fn record_forward_panic(&self, model: usize) {
+        let _ = model;
     }
 
     /// Guard for the defaulted `*_for` delegations.

@@ -19,7 +19,7 @@ pub mod native;
 pub mod tensor;
 pub mod workspace;
 
-pub use backend::{Backend, NativeBackend, Precision, ServeDims};
+pub use backend::{Backend, ModelHealth, ModelStatus, NativeBackend, Precision, ServeDims};
 #[cfg(feature = "xla")]
 pub use backend::{ArtifactBackend, ServeModel};
 #[cfg(feature = "xla")]

@@ -592,11 +592,13 @@ fn load_f32(
     Ok(v)
 }
 
-/// Checkpoint-load helper: one projection site. A v2 prepacked entry
-/// adopts the stored panels directly (no quantize, no pack — just the
-/// one copy into the model-owned buffer); an fp32 master quantizes and
-/// packs exactly as the in-memory constructors do, so both roads end at
-/// byte-identical [`PackedWeights`].
+/// Checkpoint-load helper: one projection site. A v2 prepacked entry is
+/// *borrowed in place* — the panels (and, alignment permitting, the
+/// `.scales`) are [`crate::kernels::PanelRef`] views into the checkpoint
+/// image, kept alive by the shard's `Arc`, so the load copies zero panel
+/// bytes; an fp32 master quantizes and packs exactly as the in-memory
+/// constructors do. Both roads end at bit-identical [`PackedWeights`]
+/// outputs.
 fn load_linear(
     ck: &crate::checkpoint::Checkpoint,
     stats: &mut crate::modelstore::LoadStats,
@@ -616,8 +618,9 @@ fn load_linear(
             Linear::f32(&w[..], k, n, bias)
         } else {
             stats.quantized_panels += 1;
-            stats.model_heap_bytes +=
-                PackedWeights::packed_len(bits, k, n).unwrap_or(0) + n * 4;
+            let panel_bytes = PackedWeights::packed_len(bits, k, n).unwrap_or(0);
+            stats.panel_copy_bytes += panel_bytes;
+            stats.model_heap_bytes += panel_bytes + n * 4;
             Linear::quant(&w[..], k, n, bias, bits)
         });
     }
@@ -633,16 +636,19 @@ fn load_linear(
             "{wname}: {have_bits}-bit panels stored for a {bits}-bit layer"
         )));
     }
-    let (sdims, scales) = ck.f32_tensor(&format!("{wname}.scales"))?;
+    let sname = format!("{wname}.scales");
+    let (sdims, sref) = ck.f32_ref(&sname)?;
     if sdims != [n] {
         return Err(CkptError::DimsMismatch(format!(
             "{wname}.scales: stored dims {sdims:?} != [{n}]"
         )));
     }
-    let pw = PackedWeights::from_panels(bits, k, n, scales, ck.panel_bytes(wname)?)
+    let scales = crate::kernels::ScaleVec::from_ref(sref);
+    let pw = PackedWeights::from_panel_ref(bits, k, n, scales, ck.panel_ref(wname)?)
         .map_err(CkptError::BadDirectory)?;
     stats.prepacked_panels += 1;
-    stats.model_heap_bytes += pw.packed_bytes() + n * 4;
+    stats.borrowed_panel_bytes += pw.packed_bytes() + (n * 4 - pw.scales.heap_bytes());
+    stats.model_heap_bytes += pw.heap_bytes();
     Ok(Linear::from_packed(pw, bias))
 }
 
@@ -719,10 +725,10 @@ impl NativeModel {
     /// ([`crate::checkpoint::Checkpoint::read`], mmap-backed where the
     /// platform allows), check every spec tensor's presence and shape
     /// against the header dims, then build the serving weights — v2
-    /// prepacked panels memcpy straight into
-    /// [`PackedWeights`], fp32 masters quantize+pack
-    /// exactly as the in-memory constructors do. Every failure is a
-    /// typed [`CkptError`](crate::checkpoint::CkptError).
+    /// prepacked panels are borrowed zero-copy out of the checkpoint
+    /// image into [`PackedWeights`], fp32 masters quantize+pack exactly
+    /// as the in-memory constructors do. Every failure is a typed
+    /// [`CkptError`](crate::checkpoint::CkptError).
     pub fn from_checkpoint(path: &std::path::Path) -> Result<Self, crate::checkpoint::CkptError> {
         Self::from_checkpoint_with_stats(path).map(|(m, _)| m)
     }

@@ -14,12 +14,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
-use mkq::coordinator::net::{self, ClientReply, FrontDoor, RejectCode, RunOpts};
+use mkq::coordinator::net::{self, AdminOp, AdminReply, ClientReply, FrontDoor, RejectCode, RunOpts};
 use mkq::coordinator::{FaultPlan, Rejected, ResponseBody, Server, ServerConfig};
-use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+use mkq::kernels::Dispatcher;
+use mkq::modelstore::{Registry, QUARANTINE_AFTER_FAILURES};
+use mkq::runtime::{ModelHealth, NativeBackend, NativeDims, NativeModel};
 
-fn tiny_backend(seed: u64) -> NativeBackend {
-    let dims = NativeDims {
+fn tiny_dims() -> NativeDims {
+    NativeDims {
         vocab: 64,
         seq: 8,
         n_layers: 1,
@@ -27,8 +29,15 @@ fn tiny_backend(seed: u64) -> NativeBackend {
         n_heads: 2,
         d_ff: 32,
         n_classes: 2,
-    };
-    NativeBackend::with_model(NativeModel::random(dims, &[4], seed))
+    }
+}
+
+fn tiny_backend(seed: u64) -> NativeBackend {
+    NativeBackend::with_model(NativeModel::random(tiny_dims(), &[4], seed))
+}
+
+fn chaos_tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mkq_chaos_{}_{name}", std::process::id()))
 }
 
 fn cfg(batch_buckets: Vec<usize>, max_pending: usize) -> ServerConfig {
@@ -297,4 +306,287 @@ fn socket_roundtrip_survives_kill_and_reconnect() {
         handle.join().expect("server thread must survive the chaos");
     assert_eq!(bad_frames, 1, "exactly the wrong-version frame is a bad frame");
     assert_eq!((served, admitted), (3, 3), "tags 11/12/13 were served end to end");
+}
+
+#[test]
+fn admin_reload_under_load_swaps_versions_bit_for_bit() {
+    let dims = tiny_dims();
+    let path = chaos_tmp("reload.mkqc");
+    let staged = chaos_tmp("reload_staged.mkqc");
+    mkq::checkpoint::export_random_with(&path, dims, &[4], 71, 2).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let path2 = path.clone();
+    let handle = std::thread::spawn(move || -> (u64, u64, u64, u64) {
+        let mut reg = Registry::new();
+        reg.load("m", &path2).unwrap();
+        let mut server = Server::new(&reg, cfg(vec![1], 64)).unwrap();
+        let mut door = FrontDoor::bind("127.0.0.1:0").unwrap();
+        addr_tx.send(door.local_addr().unwrap()).unwrap();
+        door.run(&mut server, RunOpts::default(), Some(&stop2)).unwrap();
+        (server.admitted, server.served, server.failed, server.rejected_unavailable)
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).expect("server thread must bind");
+    let mut c = TcpStream::connect(addr).unwrap();
+    let _ = c.set_nodelay(true);
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // reference logits per version: the export is deterministic, so a
+    // locally-built model with the same seed is the bit-for-bit oracle
+    let disp = Dispatcher::new();
+    let ids: Vec<i32> = (0..8).collect();
+    let mask = vec![1.0f32; 8];
+    let want_a = NativeModel::random(dims, &[4], 71).forward(&disp, &ids, &mask, 1, 8);
+    let want_b = NativeModel::random(dims, &[4], 72).forward(&disp, &ids, &mask, 1, 8);
+    assert_ne!(want_a, want_b, "the two seeds must be distinguishable");
+
+    // pre-reload traffic serves version 1's weights bit for bit
+    for i in 0..4u64 {
+        net::send_frame(&mut c, &net::encode_request(i, 0, 0, &ids, &mask)).unwrap();
+        match net::read_reply(&mut c).unwrap() {
+            ClientReply::Ok { tag, logits, .. } => {
+                assert_eq!(tag, i);
+                assert_eq!(logits, want_a, "v1 logits must be bit-for-bit");
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    // stage the new weights and swing them in with an atomic rename (the
+    // live mapping of the old inode stays valid for in-flight work), then
+    // RELOAD over the socket — the handler drains before swapping
+    mkq::checkpoint::export_random_with(&staged, dims, &[4], 72, 2).unwrap();
+    std::fs::rename(&staged, &path).unwrap();
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Reload, 0)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin { model: 0, reply: AdminReply::Reloaded { old_version, new_version } } => {
+            assert_eq!((old_version, new_version), (1, 2));
+        }
+        other => panic!("expected Reloaded, got {other:?}"),
+    }
+
+    // a request pinned to the gone version sheds typed; the current
+    // version's pin serves
+    net::send_frame(&mut c, &net::encode_request_pinned(100, 0, 0, 1, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::VersionGone),
+        other => panic!("expected a VersionGone reject, got {other:?}"),
+    }
+    net::send_frame(&mut c, &net::encode_request_pinned(101, 0, 0, 2, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Ok { tag, logits, .. } => {
+            assert_eq!(tag, 101);
+            assert_eq!(logits, want_b);
+        }
+        other => panic!("expected Ok, got {other:?}"),
+    }
+
+    // post-reload traffic serves version 2's weights bit for bit
+    for i in 10..14u64 {
+        net::send_frame(&mut c, &net::encode_request(i, 0, 0, &ids, &mask)).unwrap();
+        match net::read_reply(&mut c).unwrap() {
+            ClientReply::Ok { tag, logits, .. } => {
+                assert_eq!(tag, i);
+                assert_eq!(logits, want_b, "v2 logits must be bit-for-bit");
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    // STATUS reports the swapped-in version serving clean
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Status, 0)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin {
+            reply: AdminReply::Status { version, health, consec_failures, .. },
+            ..
+        } => {
+            assert_eq!(version, 2);
+            assert_eq!(health, ModelHealth::Serving.as_u8());
+            assert_eq!(consec_failures, 0);
+        }
+        other => panic!("expected Status, got {other:?}"),
+    }
+
+    drop(c);
+    stop.store(true, Ordering::SeqCst);
+    let (admitted, served, failed, rejected_unavailable) = handle.join().unwrap();
+    assert_eq!((admitted, served, failed), (9, 9, 0), "every admitted request was served");
+    assert_eq!(rejected_unavailable, 1, "exactly the stale pin shed VersionGone");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn quarantine_sheds_typed_while_sibling_serves_and_reload_recovers() {
+    let dims = tiny_dims();
+    let pa = chaos_tmp("quar_a.mkqc");
+    let pb = chaos_tmp("quar_b.mkqc");
+    mkq::checkpoint::export_random_with(&pa, dims, &[4], 81, 2).unwrap();
+    mkq::checkpoint::export_random_with(&pb, dims, &[4], 82, 2).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let (pa2, pb2) = (pa.clone(), pb.clone());
+    let handle = std::thread::spawn(move || -> (u64, u64, u64, u64) {
+        let mut reg = Registry::new();
+        reg.load("sick", &pa2).unwrap();
+        reg.load("healthy", &pb2).unwrap();
+        // a bounded outage: exactly the first QUARANTINE_AFTER_FAILURES
+        // forwards fail, then the backend is healthy again — the model
+        // that absorbed them stays quarantined until reloaded
+        reg.set_faults(FaultPlan::fail_first(u64::from(QUARANTINE_AFTER_FAILURES)));
+        let mut server = Server::new(&reg, cfg(vec![1], 64)).unwrap();
+        let mut door = FrontDoor::bind("127.0.0.1:0").unwrap();
+        addr_tx.send(door.local_addr().unwrap()).unwrap();
+        door.run(&mut server, RunOpts::default(), Some(&stop2)).unwrap();
+        (server.admitted, server.served, server.failed, server.rejected_unavailable)
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).expect("server thread must bind");
+    let mut c = TcpStream::connect(addr).unwrap();
+    let _ = c.set_nodelay(true);
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let ids: Vec<i32> = (0..8).collect();
+    let mask = vec![1.0f32; 8];
+
+    // the outage: every admitted request is still answered, typed
+    for i in 0..u64::from(QUARANTINE_AFTER_FAILURES) {
+        net::send_frame(&mut c, &net::encode_request(i, 0, 0, &ids, &mask)).unwrap();
+        match net::read_reply(&mut c).unwrap() {
+            ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::BackendFailed),
+            other => panic!("expected BackendFailed, got {other:?}"),
+        }
+    }
+    // now quarantined: admission sheds typed without consuming a forward
+    net::send_frame(&mut c, &net::encode_request(50, 0, 0, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::Quarantined),
+        other => panic!("expected a Quarantined reject, got {other:?}"),
+    }
+    // the sibling model keeps serving
+    net::send_frame(&mut c, &net::encode_request(51, 1, 0, &ids, &mask)).unwrap();
+    assert!(matches!(net::read_reply(&mut c).unwrap(), ClientReply::Ok { tag: 51, .. }));
+
+    // INFO surfaces per-model lifecycle state
+    net::send_frame(&mut c, &net::encode_info_request()).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Info { models } => {
+            assert_eq!(models.len(), 2);
+            assert_eq!(models[0].health, ModelHealth::Quarantined.as_u8());
+            assert_eq!(models[0].consec_failures, QUARANTINE_AFTER_FAILURES);
+            assert_eq!(models[1].health, ModelHealth::Serving.as_u8());
+            assert_eq!(models[1].consec_failures, 0);
+        }
+        other => panic!("expected Info, got {other:?}"),
+    }
+
+    // RELOAD is the quarantine escape hatch
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Reload, 0)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin { model: 0, reply: AdminReply::Reloaded { old_version, new_version } } => {
+            assert_eq!((old_version, new_version), (1, 2));
+        }
+        other => panic!("expected Reloaded, got {other:?}"),
+    }
+    net::send_frame(&mut c, &net::encode_request(52, 0, 0, &ids, &mask)).unwrap();
+    assert!(matches!(net::read_reply(&mut c).unwrap(), ClientReply::Ok { tag: 52, .. }));
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Status, 0)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin {
+            reply: AdminReply::Status { version, health, consec_failures, .. },
+            ..
+        } => {
+            assert_eq!(version, 2);
+            assert_eq!(health, ModelHealth::Serving.as_u8());
+            assert_eq!(consec_failures, 0);
+        }
+        other => panic!("expected Status, got {other:?}"),
+    }
+
+    // EVICT frees the sibling; its requests then shed typed
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Evict, 1)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin { model: 1, reply: AdminReply::Evicted { version, freed_bytes } } => {
+            assert_eq!(version, 1);
+            assert!(freed_bytes > 0, "evicting a loaded model frees resident bytes");
+        }
+        other => panic!("expected Evicted, got {other:?}"),
+    }
+    net::send_frame(&mut c, &net::encode_request(53, 1, 0, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::Evicted),
+        other => panic!("expected an Evicted reject, got {other:?}"),
+    }
+
+    // lifecycle ops on an unknown index are typed errors, not crashes
+    net::send_frame(&mut c, &net::encode_admin(AdminOp::Status, 7)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Admin { model: 7, reply: AdminReply::Err { msg } } => {
+            assert!(msg.contains("out of range"), "{msg}");
+        }
+        other => panic!("expected Err, got {other:?}"),
+    }
+
+    drop(c);
+    stop.store(true, Ordering::SeqCst);
+    let (admitted, served, failed, rejected_unavailable) = handle.join().unwrap();
+    // 5 failed + tags 51/52 served; tags 50/53 shed at admission, typed
+    assert_eq!(admitted, served + failed, "every admitted request was answered");
+    assert_eq!((served, failed), (2, u64::from(QUARANTINE_AFTER_FAILURES)));
+    assert_eq!(rejected_unavailable, 2, "the quarantined and evicted sheds are typed");
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn graceful_stop_answers_late_arrivals_with_typed_rejects() {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || -> (u64, u64, u64) {
+        let be = tiny_backend(9);
+        let mut server = Server::new(&be, cfg(vec![1], 64)).unwrap();
+        let mut door = FrontDoor::bind("127.0.0.1:0").unwrap();
+        addr_tx.send(door.local_addr().unwrap()).unwrap();
+        door.run(&mut server, RunOpts::default(), Some(&stop2)).unwrap();
+        (server.admitted, server.served, server.rejected_shutdown)
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).expect("server thread must bind");
+    let mut c = TcpStream::connect(addr).unwrap();
+    let _ = c.set_nodelay(true);
+    c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let ids: Vec<i32> = (0..8).collect();
+    let mask = vec![1.0f32; 8];
+
+    // healthy request, then trip the stop flag and keep knocking: inside
+    // the grace window every frame is still answered — with a typed
+    // shutting-down reject once draining has begun, never silence
+    net::send_frame(&mut c, &net::encode_request(1, 0, 0, &ids, &mask)).unwrap();
+    assert!(matches!(net::read_reply(&mut c).unwrap(), ClientReply::Ok { tag: 1, .. }));
+    stop.store(true, Ordering::SeqCst);
+    let mut saw_shutdown = false;
+    for i in 0..40u64 {
+        if net::send_frame(&mut c, &net::encode_request(100 + i, 0, 0, &ids, &mask)).is_err() {
+            break;
+        }
+        match net::read_reply(&mut c) {
+            // admitted before the flag was observed — still answered
+            Ok(ClientReply::Ok { .. }) => {}
+            Ok(ClientReply::Reject { code, .. }) => {
+                assert_eq!(code, RejectCode::ShuttingDown);
+                saw_shutdown = true;
+                break;
+            }
+            Ok(other) => panic!("unexpected reply during shutdown: {other:?}"),
+            Err(e) => panic!("a sent request went unanswered during graceful stop: {e}"),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saw_shutdown, "no request observed the typed shutting-down reject");
+
+    drop(c);
+    let (admitted, served, rejected_shutdown) = handle.join().unwrap();
+    assert_eq!(admitted, served, "graceful stop drained every admitted request");
+    assert!(rejected_shutdown >= 1, "the late arrival was counted as a typed shutdown reject");
 }

@@ -20,7 +20,7 @@ use mkq::checkpoint::{self, Checkpoint, CkptError, DTYPE_F32};
 use mkq::coordinator::{Server, ServerConfig};
 use mkq::kernels::{Dispatcher, KernelKind};
 use mkq::modelstore::{migrate_checkpoint, Registry};
-use mkq::runtime::{NativeDims, NativeModel};
+use mkq::runtime::{Backend, ModelHealth, NativeDims, NativeModel};
 
 fn tmp_path(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("mkq_store_{}_{name}", std::process::id()))
@@ -316,14 +316,22 @@ fn one_server_two_checkpoint_models_bit_for_bit() {
     out.sort_by_key(|r| r.id);
     assert_eq!(out.len(), reqs.len());
     let summary = server.summary();
-    assert_eq!(summary.per_model[0], ("alpha".to_string(), 2));
-    assert_eq!(summary.per_model[1], ("beta".to_string(), 3));
+    assert_eq!(summary.per_model[0].label, "alpha");
+    assert_eq!(summary.per_model[0].served, 2);
+    assert_eq!(summary.per_model[1].label, "beta");
+    assert_eq!(summary.per_model[1].served, 3);
+    for pm in &summary.per_model {
+        assert_eq!(pm.version, 1);
+        assert_eq!(pm.health, ModelHealth::Serving);
+        assert_eq!(pm.consec_failures, 0);
+    }
 
     // reference: each model forwarded directly at the bucket shapes the
     // server used (padding to the bucket ceiling, batch of 1)
     for (r, (m, ids)) in out.iter().zip(&reqs) {
         assert_eq!(r.model, *m);
-        let model = &reg.get(*m).unwrap().model;
+        let mv = reg.get(*m).unwrap();
+        let model = &mv.model;
         let t = r.seq_bucket;
         let mut pids = vec![0i32; r.batch_size * t];
         let mut pmask = vec![0.0f32; r.batch_size * t];
@@ -343,4 +351,65 @@ fn one_server_two_checkpoint_models_bit_for_bit() {
     std::fs::remove_file(&pa).ok();
     std::fs::remove_file(&pb1).ok();
     std::fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn v2_loads_zero_copy_and_mem_budget_evicts_lru() {
+    let dims = small_dims();
+    let v1 = tmp_path("zc_v1.mkqc");
+    let v2a = tmp_path("zc_v2a.mkqc");
+    let v2b = tmp_path("zc_v2b.mkqc");
+    checkpoint::export_random_with(&v1, dims, &[8, 4], 61, 1).unwrap();
+    let src = Checkpoint::read(&v1).unwrap();
+    migrate_checkpoint(&src, &v2a, 1).unwrap();
+    migrate_checkpoint(&src, &v2b, 1).unwrap();
+
+    // v2 panels and `.scales` are borrowed straight out of the checkpoint
+    // image: zero panel bytes copied at load
+    let (_, s2) = NativeModel::from_checkpoint_with_stats(&v2a).unwrap();
+    assert_eq!(s2.panel_copy_bytes, 0, "v2 load must not copy panel bytes");
+    assert!(s2.borrowed_panel_bytes > 0, "v2 panels must be borrowed");
+    assert!(s2.prepacked_panels > 0);
+    // a v1 load quantizes+packs into model-owned buffers: nothing borrowed,
+    // and its owned heap is strictly larger than the zero-copy load's
+    let (_, s1) = NativeModel::from_checkpoint_with_stats(&v1).unwrap();
+    assert_eq!(s1.borrowed_panel_bytes, 0);
+    assert!(
+        s1.model_heap_bytes > s2.model_heap_bytes,
+        "owned panels ({}) should out-heap borrowed ones ({})",
+        s1.model_heap_bytes,
+        s2.model_heap_bytes
+    );
+
+    let mut reg = Registry::new();
+    let a = reg.load("a", &v2a).unwrap();
+    let b = reg.load("b", &v2b).unwrap();
+    let one = reg.get(a).unwrap().stats.resident_bytes();
+    assert!(one > 0, "fp32 tensors (embeddings, biases, LN) are always owned");
+    assert!(reg.resident_bytes() > one);
+
+    // make `a` the LRU slot, then set a budget that only fits one model:
+    // `a` must be evicted, `b` must keep serving, and the fleet must fit
+    let ids: Vec<i32> = (0..dims.seq).map(|i| i as i32).collect();
+    let mask = vec![1.0f32; dims.seq];
+    reg.serve_forward_for(a, 1, dims.seq, &ids, &mask).unwrap();
+    reg.serve_forward_for(b, 1, dims.seq, &ids, &mask).unwrap();
+    let budget = one + one / 2;
+    reg.set_mem_budget(Some(budget));
+    assert_eq!(reg.model_status(a).unwrap().health, ModelHealth::Evicted, "LRU slot evicted");
+    assert_eq!(reg.model_status(b).unwrap().health, ModelHealth::Serving);
+    assert!(reg.get(a).is_none(), "eviction frees the model");
+    assert!(reg.resident_bytes() <= budget);
+    assert!(reg.serve_forward_for(a, 1, dims.seq, &ids, &mask).is_err());
+    assert!(reg.serve_forward_for(b, 1, dims.seq, &ids, &mask).is_ok());
+
+    // a reload restores the evicted slot at the next version
+    let (old_v, new_v) = reg.reload_model_idx(a).unwrap();
+    assert_eq!((old_v, new_v), (1, 2));
+    assert_eq!(reg.model_status(a).unwrap().health, ModelHealth::Serving);
+    assert!(reg.serve_forward_for(a, 1, dims.seq, &ids, &mask).is_ok());
+
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_file(&v2a).ok();
+    std::fs::remove_file(&v2b).ok();
 }
