@@ -12,10 +12,12 @@
 //! | REQUEST| 0x01 | tag `u64`, model `u16`, deadline_us `u32` (0 = none), n `u16`, n×`i32` ids, n×`f32` mask, optional version pin `u64` (absent or 0 = unpinned) |
 //! | INFO   | 0x02 | (empty)                                                |
 //! | ADMIN  | 0x03 | op `u8` ([`AdminOp`]), model `u16`                     |
+//! | METRICS| 0x04 | format `u8` (0 = Prometheus text, 1 = JSON)            |
 //! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits      |
 //! | REJECT | 0x82 | tag `u64`, code `u8` ([`RejectCode`]), UTF-8 message   |
 //! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, version `u64`, health `u8`, consec_failures `u32`, label_len `u8`, label bytes |
 //! | ADMIN_RESP | 0x84 | op `u8`, ok `u8`, model `u16`, then op-specific payload (see [`AdminReply`]) |
+//! | METRICS_RESP | 0x85 | format `u8`, len `u32`, len UTF-8 payload bytes  |
 //!
 //! `tag` is an opaque client-chosen correlation id echoed back verbatim
 //! — replies are **not** ordered across in-flight requests on one
@@ -65,10 +67,17 @@ pub const MAX_FRAME: usize = 1 << 20;
 pub const MSG_REQUEST: u8 = 0x01;
 pub const MSG_INFO: u8 = 0x02;
 pub const MSG_ADMIN: u8 = 0x03;
+pub const MSG_METRICS: u8 = 0x04;
 pub const MSG_OK: u8 = 0x81;
 pub const MSG_REJECT: u8 = 0x82;
 pub const MSG_INFO_RESP: u8 = 0x83;
 pub const MSG_ADMIN_RESP: u8 = 0x84;
+pub const MSG_METRICS_RESP: u8 = 0x85;
+
+/// METRICS format byte: Prometheus text exposition.
+pub const METRICS_FMT_TEXT: u8 = 0;
+/// METRICS format byte: flat JSON (machine-mergeable; see [`crate::obs`]).
+pub const METRICS_FMT_JSON: u8 = 1;
 
 /// Typed reject reasons on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +120,13 @@ impl RejectCode {
             10 => Some(RejectCode::Evicted),
             _ => None,
         }
+    }
+}
+
+/// Mirror one outgoing reject into the per-code metrics series.
+fn note_reject(code: RejectCode) {
+    if let Some(o) = crate::obs::metrics() {
+        o.net_rejects[code.as_u8() as usize].inc();
     }
 }
 
@@ -202,6 +218,26 @@ pub fn encode_info_request() -> Vec<u8> {
 pub fn encode_admin(op: AdminOp, model: u16) -> Vec<u8> {
     let mut b = vec![PROTO_VERSION, MSG_ADMIN, op.as_u8()];
     b.extend_from_slice(&model.to_le_bytes());
+    b
+}
+
+/// Encode a METRICS scrape request ([`METRICS_FMT_TEXT`] or
+/// [`METRICS_FMT_JSON`]).
+pub fn encode_metrics_request(format: u8) -> Vec<u8> {
+    vec![PROTO_VERSION, MSG_METRICS, format]
+}
+
+fn encode_metrics_resp(format: u8, payload: &str) -> Vec<u8> {
+    let p = payload.as_bytes();
+    // MAX_FRAME bounds the reply; a registry render is a few KiB, so a
+    // truncation here would mean a protocol-level regression
+    let take = p.len().min(MAX_FRAME - 7);
+    let mut b = Vec::with_capacity(7 + take);
+    b.push(PROTO_VERSION);
+    b.push(MSG_METRICS_RESP);
+    b.push(format);
+    b.extend_from_slice(&(take as u32).to_le_bytes());
+    b.extend_from_slice(&p[..take]);
     b
 }
 
@@ -345,6 +381,8 @@ pub enum ClientReply {
     Reject { tag: u64, code: RejectCode, msg: String },
     Info { models: Vec<WireModelInfo> },
     Admin { model: u16, reply: AdminReply },
+    /// A METRICS_RESP scrape payload (Prometheus text or JSON).
+    Metrics { format: u8, payload: String },
 }
 
 fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
@@ -463,6 +501,18 @@ fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
             };
             Ok(ClientReply::Admin { model, reply })
         }
+        MSG_METRICS_RESP => {
+            if body.len() < 7 {
+                return Err("METRICS_RESP frame too short".into());
+            }
+            let format = body[2];
+            let len = u32::from_le_bytes(body[3..7].try_into().unwrap()) as usize;
+            if body.len() != 7 + len {
+                return Err(format!("METRICS_RESP length {} != {}", body.len(), 7 + len));
+            }
+            let payload = String::from_utf8_lossy(&body[7..]).into_owned();
+            Ok(ClientReply::Metrics { format, payload })
+        }
         other => Err(format!("unexpected server message kind {other:#04x}")),
     }
 }
@@ -552,6 +602,9 @@ pub struct RunOpts {
     /// socket activity — but only once at least one frame was seen
     /// (smoke tests: "serve one burst, then exit").
     pub idle_exit_secs: Option<f64>,
+    /// Print one [`crate::obs::render_statusline`] line to stderr every
+    /// this many seconds (`None` = quiet).
+    pub stats_every_secs: Option<f64>,
 }
 
 /// The nonblocking TCP front door over one [`Server`].
@@ -559,8 +612,9 @@ pub struct FrontDoor {
     listener: TcpListener,
     conns: Vec<Option<Conn>>,
     next_gen: u64,
-    /// server request id -> (conn slot, conn generation, client tag)
-    routes: HashMap<u64, (usize, u64, u64)>,
+    /// server request id -> (conn slot, conn generation, client tag,
+    /// frame-handled instant — the wire-path `stage_total_us` anchor)
+    routes: HashMap<u64, (usize, u64, u64, Instant)>,
     stats: NetStats,
     max_conns: usize,
     /// Cleared when a graceful stop begins: existing connections keep
@@ -612,6 +666,9 @@ impl FrontDoor {
                 Ok((stream, _peer)) => {
                     progress = true;
                     self.stats.accepted += 1;
+                    if let Some(o) = crate::obs::metrics() {
+                        o.net_accepted_conns.inc();
+                    }
                     if self.live_conns() >= self.max_conns {
                         // best-effort busy notice on the still-blocking
                         // socket, then drop it
@@ -620,10 +677,17 @@ impl FrontDoor {
                         let _ = s.write_all(&(body.len() as u32).to_le_bytes());
                         let _ = s.write_all(&body);
                         self.stats.rejected_conns += 1;
+                        if let Some(o) = crate::obs::metrics() {
+                            o.net_rejected_conns.inc();
+                        }
+                        note_reject(RejectCode::ServerBusy);
                         continue;
                     }
                     if stream.set_nonblocking(true).is_err() {
                         self.stats.rejected_conns += 1;
+                        if let Some(o) = crate::obs::metrics() {
+                            o.net_rejected_conns.inc();
+                        }
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
@@ -666,6 +730,9 @@ impl FrontDoor {
         for (slot, gen, body) in frames {
             progress = true;
             self.stats.frames_in += 1;
+            if let Some(o) = crate::obs::metrics() {
+                o.net_frames_in.inc();
+            }
             self.handle_frame(server, slot, gen, &body);
         }
 
@@ -685,7 +752,7 @@ impl FrontDoor {
                     // pump() isolates backend faults internally; an error
                     // here is a server-level bug — report and keep the
                     // front door alive
-                    eprintln!("serve pump error: {e:#}");
+                    crate::log_error!("serve pump error: {e:#}");
                     break;
                 }
             }
@@ -699,6 +766,9 @@ impl FrontDoor {
             if c.broken || (c.read_closed && flushed) {
                 self.conns[slot] = None;
                 self.stats.disconnects += 1;
+                if let Some(o) = crate::obs::metrics() {
+                    o.net_disconnects.inc();
+                }
                 progress = true;
             }
         }
@@ -726,7 +796,14 @@ impl FrontDoor {
         let mut last_activity = Instant::now();
         let mut had_activity = false;
         let mut stopping_since: Option<Instant> = None;
+        let mut last_statusline = Instant::now();
         loop {
+            if let Some(every) = opts.stats_every_secs {
+                if last_statusline.elapsed().as_secs_f64() >= every.max(0.01) {
+                    eprintln!("{}", crate::obs::render_statusline());
+                    last_statusline = Instant::now();
+                }
+            }
             let want_stop = stop.map_or(false, |f| f.load(Ordering::SeqCst))
                 || opts.for_secs.map_or(false, |secs| start.elapsed().as_secs_f64() >= secs);
             if want_stop && stopping_since.is_none() {
@@ -796,6 +873,9 @@ impl FrontDoor {
                 }
                 Ok(n) => {
                     progress = true;
+                    if let Some(o) = crate::obs::metrics() {
+                        o.net_bytes_in.add(n as u64);
+                    }
                     c.rbuf.extend_from_slice(&buf[..n]);
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -814,6 +894,9 @@ impl FrontDoor {
             if len == 0 || len > MAX_FRAME {
                 // undecodable stream offset: protocol-fatal
                 stats.bad_frames += 1;
+                if let Some(o) = crate::obs::metrics() {
+                    o.net_bad_frames.inc();
+                }
                 c.rbuf.clear();
                 c.read_closed = true;
                 break;
@@ -838,9 +921,13 @@ impl FrontDoor {
             // version mismatch is unrecoverable for the connection: the
             // peer speaks a different framing dialect
             self.stats.bad_frames += 1;
+            if let Some(o) = crate::obs::metrics() {
+                o.net_bad_frames.inc();
+            }
             let reply = encode_reject(0, RejectCode::BadFrame, "bad or unsupported protocol header");
             if self.push_to(slot, gen, &reply) {
                 self.stats.reject_out += 1;
+                note_reject(RejectCode::BadFrame);
             }
             self.close_read(slot, gen);
             return;
@@ -856,18 +943,23 @@ impl FrontDoor {
                     match server.submit_pinned_to(w.model as usize, w.pin, w.ids, w.mask, deadline)
                     {
                         Ok(id) => {
-                            self.routes.insert(id, (slot, gen, w.tag));
+                            self.routes.insert(id, (slot, gen, w.tag, Instant::now()));
                         }
                         Err(rej) => {
-                            let reply = encode_reject(w.tag, code_of(&rej), &rej.to_string());
+                            let code = code_of(&rej);
+                            let reply = encode_reject(w.tag, code, &rej.to_string());
                             if self.push_to(slot, gen, &reply) {
                                 self.stats.reject_out += 1;
+                                note_reject(code);
                             }
                         }
                     }
                 }
                 Err(msg) => {
                     self.stats.bad_frames += 1;
+                    if let Some(o) = crate::obs::metrics() {
+                        o.net_bad_frames.inc();
+                    }
                     let tag = if body.len() >= 10 {
                         u64::from_le_bytes(body[2..10].try_into().unwrap())
                     } else {
@@ -876,6 +968,7 @@ impl FrontDoor {
                     let reply = encode_reject(tag, RejectCode::BadFrame, &msg);
                     if self.push_to(slot, gen, &reply) {
                         self.stats.reject_out += 1;
+                        note_reject(RejectCode::BadFrame);
                     }
                 }
             },
@@ -884,13 +977,29 @@ impl FrontDoor {
                 self.push_to(slot, gen, &reply);
             }
             MSG_ADMIN => self.handle_admin(server, slot, gen, body),
+            MSG_METRICS => {
+                // scrape: render from the process-wide registry (gating
+                // only silences *recording* — a scrape always answers)
+                let format = if body.len() >= 3 { body[2] } else { METRICS_FMT_TEXT };
+                let payload = if format == METRICS_FMT_JSON {
+                    crate::obs::render_json()
+                } else {
+                    crate::obs::render_prometheus()
+                };
+                let reply = encode_metrics_resp(format, &payload);
+                self.push_to(slot, gen, &reply);
+            }
             other => {
                 // framing is intact: reject this message, keep the conn
                 self.stats.bad_frames += 1;
+                if let Some(o) = crate::obs::metrics() {
+                    o.net_bad_frames.inc();
+                }
                 let reply =
                     encode_reject(0, RejectCode::BadFrame, &format!("unknown message kind {other:#04x}"));
                 if self.push_to(slot, gen, &reply) {
                     self.stats.reject_out += 1;
+                    note_reject(RejectCode::BadFrame);
                 }
             }
         }
@@ -910,9 +1019,13 @@ impl FrontDoor {
     ) {
         if body.len() != 5 {
             self.stats.bad_frames += 1;
+            if let Some(o) = crate::obs::metrics() {
+                o.net_bad_frames.inc();
+            }
             let reply = encode_reject(0, RejectCode::BadFrame, "ADMIN frame must be 5 bytes");
             if self.push_to(slot, gen, &reply) {
                 self.stats.reject_out += 1;
+                note_reject(RejectCode::BadFrame);
             }
             return;
         }
@@ -969,27 +1082,42 @@ impl FrontDoor {
             }
             // drain() only errors on server-level bugs; admitted work was
             // still answered per-batch, so report and continue
-            Err(e) => eprintln!("admin drain error: {e:#}"),
+            Err(e) => crate::log_error!("admin drain error: {e:#}"),
         }
     }
 
     /// Route one batcher response back to its connection.
     fn dispatch(&mut self, r: Response) {
-        let Some((slot, gen, tag)) = self.routes.remove(&r.id) else {
+        let Some((slot, gen, tag, t0)) = self.routes.remove(&r.id) else {
             // not a socket request (locally-submitted trace traffic)
             return;
         };
+        if let Some(o) = crate::obs::metrics() {
+            // frame-handled → reply-queued: the wire-path total latency
+            o.stage_total_us.record(t0.elapsed().as_micros() as u64);
+        }
         let is_ok = r.is_ok();
+        let mut reject_code = None;
         let reply = match &r.body {
             ResponseBody::Logits(l) => encode_ok(tag, r.model as u16, l),
-            ResponseBody::Shed(rej) => encode_reject(tag, code_of(rej), &rej.to_string()),
-            ResponseBody::Failed(msg) => encode_reject(tag, RejectCode::BackendFailed, msg),
+            ResponseBody::Shed(rej) => {
+                let code = code_of(rej);
+                reject_code = Some(code);
+                encode_reject(tag, code, &rej.to_string())
+            }
+            ResponseBody::Failed(msg) => {
+                reject_code = Some(RejectCode::BackendFailed);
+                encode_reject(tag, RejectCode::BackendFailed, msg)
+            }
         };
         if self.push_to(slot, gen, &reply) {
             if is_ok {
                 self.stats.ok_out += 1;
             } else {
                 self.stats.reject_out += 1;
+                if let Some(code) = reject_code {
+                    note_reject(code);
+                }
             }
         } else {
             self.stats.dropped_responses += 1;
@@ -1003,6 +1131,10 @@ impl FrontDoor {
             Some(c) if c.gen == gen && !c.broken => {
                 c.wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
                 c.wbuf.extend_from_slice(body);
+                if let Some(o) = crate::obs::metrics() {
+                    o.net_frames_out.inc();
+                    o.net_bytes_out.add(4 + body.len() as u64);
+                }
                 true
             }
             _ => false,
@@ -1282,6 +1414,36 @@ mod tests {
         }
         assert_eq!(RejectCode::from_u8(0), None);
         assert_eq!(RejectCode::from_u8(200), None);
+    }
+
+    #[test]
+    fn metrics_frames_round_trip() {
+        let req = encode_metrics_request(METRICS_FMT_JSON);
+        assert_eq!(req, vec![PROTO_VERSION, MSG_METRICS, METRICS_FMT_JSON]);
+
+        let body = encode_metrics_resp(METRICS_FMT_TEXT, "mkq_serve_served 0\n");
+        match decode_reply(&body).unwrap() {
+            ClientReply::Metrics { format, payload } => {
+                assert_eq!(format, METRICS_FMT_TEXT);
+                assert_eq!(payload, "mkq_serve_served 0\n");
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+
+        let body = encode_metrics_resp(METRICS_FMT_JSON, "{\"serve_served\": 3}");
+        match decode_reply(&body).unwrap() {
+            ClientReply::Metrics { format, payload } => {
+                assert_eq!(format, METRICS_FMT_JSON);
+                assert_eq!(crate::obs::json_u64_field(&payload, "serve_served"), Some(3));
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+
+        // truncated payloads are decode errors
+        let mut bad = encode_metrics_resp(METRICS_FMT_TEXT, "abc");
+        bad.pop();
+        assert!(decode_reply(&bad).is_err());
+        assert!(decode_reply(&[PROTO_VERSION, MSG_METRICS_RESP, 0]).is_err(), "short header");
     }
 
     #[test]

@@ -450,16 +450,42 @@ impl<'b, B: Backend> Server<'b, B> {
         deadline: Option<Duration>,
     ) -> Result<u64, Rejected> {
         let res = self.admit(model, pin, ids, mask, deadline);
+        let obs = crate::obs::metrics();
         match &res {
-            Ok(_) => self.admitted += 1,
-            Err(Rejected::QueueFull { .. }) => self.rejected_full += 1,
-            Err(Rejected::ShuttingDown) => self.rejected_shutdown += 1,
+            Ok(_) => {
+                self.admitted += 1;
+                if let Some(o) = obs {
+                    o.serve_admitted.inc();
+                }
+            }
+            Err(Rejected::QueueFull { .. }) => {
+                self.rejected_full += 1;
+                if let Some(o) = obs {
+                    o.serve_rejected_full.inc();
+                }
+            }
+            Err(Rejected::ShuttingDown) => {
+                self.rejected_shutdown += 1;
+                if let Some(o) = obs {
+                    o.serve_rejected_shutdown.inc();
+                }
+            }
             Err(
                 Rejected::Quarantined { .. }
                 | Rejected::Evicted { .. }
                 | Rejected::VersionGone { .. },
-            ) => self.rejected_unavailable += 1,
-            Err(_) => self.rejected_invalid += 1,
+            ) => {
+                self.rejected_unavailable += 1;
+                if let Some(o) = obs {
+                    o.serve_rejected_unavailable.inc();
+                }
+            }
+            Err(_) => {
+                self.rejected_invalid += 1;
+                if let Some(o) = obs {
+                    o.serve_rejected_invalid.inc();
+                }
+            }
         }
         res
     }
@@ -611,6 +637,9 @@ impl<'b, B: Backend> Server<'b, B> {
                         let waited_us =
                             now.saturating_duration_since(r.enqueued).as_micros() as u64;
                         self.shed_deadline += 1;
+                        if let Some(o) = crate::obs::metrics() {
+                            o.serve_shed_deadline.inc();
+                        }
                         out.push(Response {
                             id: r.id,
                             model: s.model,
@@ -685,6 +714,9 @@ impl<'b, B: Backend> Server<'b, B> {
         let mut responses = Vec::new();
         self.shed_expired(Instant::now(), &mut responses);
         let Some((si, bucket)) = self.pick() else {
+            if let Some(o) = crate::obs::metrics() {
+                o.serve_queue_depth.set(self.pending() as u64);
+            }
             return Ok(responses);
         };
         let (model, tcap) = (self.slots[si].model, self.slots[si].tcap);
@@ -724,6 +756,15 @@ impl<'b, B: Backend> Server<'b, B> {
                 self.padded_slots += (bucket - take) as u64;
                 self.total_tokens += stage as u64;
                 self.padded_tokens += stage as u64 - valid_tokens;
+                let obs = crate::obs::metrics();
+                if let Some(o) = obs {
+                    o.serve_batches.inc();
+                    o.serve_total_tokens.add(stage as u64);
+                    o.serve_padded_tokens.add(stage as u64 - valid_tokens);
+                    o.serve_batch_fill_pct.record((take * 100 / bucket) as u64);
+                    o.serve_batch_exec_us.record(exec_us as u64);
+                    o.serve_queue_depth.set(self.pending() as u64);
+                }
                 let nc = self.n_classes[model];
                 for (i, r) in reqs.into_iter().enumerate() {
                     let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -733,6 +774,20 @@ impl<'b, B: Backend> Server<'b, B> {
                     self.total_lat.record(total_us);
                     self.served += 1;
                     self.served_by_model[model] += 1;
+                    if let Some(o) = obs {
+                        o.serve_served.inc();
+                        o.stage_queue_us.record(queue_us as u64);
+                        o.stage_exec_us.record(exec_us as u64);
+                        o.slow_traces.offer(crate::obs::TraceEntry {
+                            id: r.id.max(1), // 0 marks an empty ring slot
+                            model: model as u16,
+                            seq_bucket: tcap as u16,
+                            batch_size: bucket as u16,
+                            queue_us: queue_us as u64,
+                            exec_us: exec_us as u64,
+                            total_us: total_us as u64,
+                        });
+                    }
                     responses.push(Response {
                         id: r.id,
                         model,
@@ -783,6 +838,9 @@ impl<'b, B: Backend> Server<'b, B> {
         for r in reqs {
             let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
             self.failed += 1;
+            if let Some(o) = crate::obs::metrics() {
+                o.serve_failed.inc();
+            }
             out.push(Response {
                 id: r.id,
                 model,

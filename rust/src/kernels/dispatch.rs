@@ -38,6 +38,37 @@ use super::simd;
 /// load-time [`Dispatcher::autotune`] re-measures it per machine).
 pub const PARALLEL_MACS_THRESHOLD: usize = 1 << 20;
 
+/// Metric slot names for `mkq_kernel_{calls,macs}_total{kind=...}`:
+/// the 7 [`KernelKind`] variants in [`KernelKind::ALL`] order plus the
+/// packed-f32 GEMM ([`Dispatcher::matmul_f32_into`]).
+pub const KERNEL_SLOT_NAMES: [&str; crate::obs::N_KERNEL_SLOTS] = [
+    "reference",
+    "blocked",
+    "blocked-parallel",
+    "avx2",
+    "avx2-parallel",
+    "neon",
+    "neon-parallel",
+    "f32",
+];
+
+/// Metric slot of the packed-f32 GEMM.
+pub const F32_KERNEL_SLOT: usize = 7;
+
+/// Metric slot of a quantized kernel kind (index into
+/// [`KERNEL_SLOT_NAMES`] / the registry's `kernel_*` arrays).
+pub fn kernel_slot(kind: KernelKind) -> usize {
+    match kind {
+        KernelKind::Reference => 0,
+        KernelKind::Blocked => 1,
+        KernelKind::BlockedParallel => 2,
+        KernelKind::Avx2 => 3,
+        KernelKind::Avx2Parallel => 4,
+        KernelKind::Neon => 5,
+        KernelKind::NeonParallel => 6,
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelKind {
     Reference,
@@ -174,7 +205,7 @@ impl Dispatcher {
             Ok(s) => match s.parse::<usize>() {
                 Ok(t) if t >= 1 => Some(t),
                 _ => {
-                    eprintln!("warning: ignoring MKQ_THREADS={s:?} (want an integer >= 1)");
+                    crate::log_warn!("ignoring MKQ_THREADS={s:?} (want an integer >= 1)");
                     None
                 }
             },
@@ -185,15 +216,15 @@ impl Dispatcher {
             Ok(s) => match KernelKind::parse(&s) {
                 Some(k) => Some(k),
                 None if s == "simd" || s == "simd-parallel" => {
-                    eprintln!(
-                        "warning: MKQ_KERNEL={s} but no SIMD kernel is available on this \
+                    crate::log_warn!(
+                        "MKQ_KERNEL={s} but no SIMD kernel is available on this \
                          machine; auto-selecting"
                     );
                     None
                 }
                 None => {
-                    eprintln!(
-                        "warning: ignoring MKQ_KERNEL={s:?} (want reference|blocked|parallel|\
+                    crate::log_warn!(
+                        "ignoring MKQ_KERNEL={s:?} (want reference|blocked|parallel|\
                          avx2|avx2-parallel|neon|neon-parallel|simd|simd-parallel)"
                     );
                     None
@@ -225,8 +256,8 @@ impl Dispatcher {
                 f
             } else {
                 let fb = if f.is_parallel() { KernelKind::BlockedParallel } else { KernelKind::Blocked };
-                eprintln!(
-                    "warning: kernel {} is not supported on this machine; using {}",
+                crate::log_warn!(
+                    "kernel {} is not supported on this machine; using {}",
                     f.name(),
                     fb.name()
                 );
@@ -416,6 +447,11 @@ impl Dispatcher {
     ) {
         assert_eq!(out.len(), m * pw.n);
         let kind = self.select(m, k, pw.n);
+        if let Some(obs) = crate::obs::metrics() {
+            let slot = kernel_slot(kind);
+            obs.kernel_calls[slot].inc();
+            obs.kernel_macs[slot].add((m * k * pw.n) as u64);
+        }
         match kind {
             KernelKind::Reference => {
                 let codes = pw.unpack_codes();
@@ -457,6 +493,10 @@ impl Dispatcher {
     /// zero-allocation serving path.
     pub fn matmul_f32_into(&self, x: &[f32], m: usize, k: usize, pf: &PackedF32, out: &mut [f32]) {
         assert_eq!(out.len(), m * pf.n);
+        if let Some(obs) = crate::obs::metrics() {
+            obs.kernel_calls[F32_KERNEL_SLOT].inc();
+            obs.kernel_macs[F32_KERNEL_SLOT].add((m * k * pf.n) as u64);
+        }
         if self.select(m, k, pf.n).is_parallel() {
             let pool = self.pool.as_ref().expect("parallel kernel without pool");
             gemm::sgemm_parallel(x, m, k, pf, out, pool, self.threads);

@@ -22,8 +22,12 @@
 //!   * [`coordinator`] — the paper's system contribution at L3: QAT
 //!     trainer (calibration → QAT → eval; Tables 1 & 3) and the serving
 //!     stack (router, valid-token dynamic batcher, executor; Table 2).
+//!   * [`obs`] — first-class observability: a process-wide zero-alloc
+//!     metrics registry (counters/gauges/log-linear histograms),
+//!     slowest-trace ring, and the Prometheus/JSON scrape surfaces.
 //!   * [`util`] — substrates the vendored crate set lacks (PRNG, CLI,
-//!     config, thread pool, property testing, stats, bench harness).
+//!     config, thread pool, property testing, stats, bench harness,
+//!     leveled logging).
 
 pub mod bench_support;
 pub mod checkpoint;
@@ -31,6 +35,7 @@ pub mod coordinator;
 pub mod data;
 pub mod kernels;
 pub mod modelstore;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tokenizer;

@@ -52,7 +52,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mkq-bert <serve-native|loadgen|admin|kernels|ckpt|train|serve|info> [options]
+        "usage: mkq-bert <serve-native|loadgen|admin|obs-overhead|kernels|ckpt|train|serve|info> [options]
   common:       --config FILE   --seed N   --verbose
   serve-native: --bits 8,8,4,4 | --n-int4 N   --rate RPS --requests N
                 --window-us N   --buckets 1,8,16 (batch buckets)
@@ -78,12 +78,16 @@ fn usage() -> ! {
                 arrivals with a typed shutting-down reject)
                 --mem-budget-mb N  (multi-model only: LRU-evict models
                 when fleet resident bytes exceed the budget)
-  admin:        mkq-bert admin <reload|evict|status> --addr HOST:PORT
-                [--model-index N]  — reload swaps in a freshly loaded
-                version after draining in-flight work (old-version pins
-                then get a typed version-gone reject), evict drains and
-                frees the model, status reports version/health/failure
-                counters/resident bytes
+                --stats-every-secs N  (--listen only: print a one-line
+                [obs] summary to stderr every N seconds)
+  admin:        mkq-bert admin <reload|evict|status|metrics> --addr
+                HOST:PORT [--model-index N]  — reload swaps in a freshly
+                loaded version after draining in-flight work (old-version
+                pins then get a typed version-gone reject), evict drains
+                and frees the model, status reports version/health/failure
+                counters/resident bytes; metrics scrapes the server's
+                metrics registry over a METRICS frame (Prometheus text;
+                --json for the flat JSON rendering)
   loadgen:      --addr HOST:PORT  --mode closed|open (default closed)
                 --conns N (4)  --requests N total (200)  --rate RPS
                 aggregate for open mode (2000)  --deadline-us N (0)
@@ -93,8 +97,19 @@ fn usage() -> ! {
                 was served / shed — CI smoke assertions)
                 --allow-lost  (tolerate client-side timeouts; default:
                 any request without a response is an error)
+                --expect-reconcile  (scrape the server's metrics after the
+                run and fail unless server-side served/shed/failed counts
+                match this client's tally exactly — requires loadgen to be
+                the only traffic source since server start)
                 connects and reconnects with bounded exponential backoff;
-                retry counts land in the bench JSON as conn_retries
+                retry counts land in the bench JSON as conn_retries;
+                client latency reports p50/p90/p99/p999 from a log-linear
+                histogram, and the post-run server metrics scrape lands in
+                the bench JSON as srv_* metadata
+  obs-overhead: in-process serving replay with metrics recording on vs
+                off (MKQ_METRICS=0 equivalent); asserts the on/off p50
+                delta stays under --max-overhead (default 0.05) and
+                writes --out BENCH_obs.json (--iters N, --requests N)
   kernels:      (no options; prints the dispatch table and runs a
                 per-variant self-check)
   ckpt export-random FILE.mkqc  [--bits 8,8,4,4 | --n-int4 N] [--seed N]
@@ -128,6 +143,10 @@ fn usage() -> ! {
                 MKQ_THREADS=N    cap the kernel thread pool
                 MKQ_AUTOTUNE=0   skip the load-time kernel autotune
                 MKQ_NO_MMAP=1    force buffered checkpoint reads (skip mmap)
+                MKQ_METRICS=0    disable metrics recording (scrapes still
+                  answer, with frozen values)
+                MKQ_LOG=error|warn|info|debug  stderr log threshold
+                  (default info; debug lines are off by default)
   fault injection (chaos testing; inert unless set):
                 MKQ_FAULT_FAIL_FORWARD=N|every:N|first:N  fail the Nth
                   (or every Nth, or the first N) backend forwards with a
@@ -151,6 +170,7 @@ fn run() -> Result<()> {
         "serve-native" => serve_native(&args, &conf),
         "loadgen" => loadgen(&args, &conf),
         "admin" => admin_cmd(&args),
+        "obs-overhead" => obs_overhead(&args),
         "ckpt" => ckpt_cmd(&args, &conf),
         other => artifact::run(other, &args, &conf),
     }
@@ -212,6 +232,21 @@ fn connect_with_backoff(addr: &str) -> std::io::Result<std::net::TcpStream> {
     }))
 }
 
+/// Scrape a serving socket's flat-JSON metrics over a METRICS frame.
+/// `None` when the server is gone or unreachable — callers decide
+/// whether that is fatal (`--expect-reconcile`) or informational.
+fn scrape_server_metrics(addr: &str) -> Option<String> {
+    use mkq::coordinator::net::{self, ClientReply, METRICS_FMT_JSON};
+    let mut s = connect_with_backoff(addr).ok()?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+    net::send_frame(&mut s, &net::encode_metrics_request(METRICS_FMT_JSON)).ok()?;
+    match net::read_reply(&mut s) {
+        Ok(ClientReply::Metrics { payload, .. }) => Some(payload),
+        _ => None,
+    }
+}
+
 /// `mkq-bert admin`: drive the model-fleet lifecycle over a serving
 /// socket's ADMIN frames (reload / evict / status).
 fn admin_cmd(args: &Args) -> Result<()> {
@@ -219,13 +254,16 @@ fn admin_cmd(args: &Args) -> Result<()> {
     use mkq::runtime::ModelHealth;
 
     let op_s = args.positional.get(1).cloned().unwrap_or_default();
+    if op_s == "metrics" {
+        return admin_metrics(args);
+    }
     let op = match op_s.as_str() {
         "reload" => AdminOp::Reload,
         "evict" => AdminOp::Evict,
         "status" => AdminOp::Status,
         other => anyhow::bail!(
-            "usage: mkq-bert admin <reload|evict|status> --addr HOST:PORT [--model-index N] \
-             (got {other:?})"
+            "usage: mkq-bert admin <reload|evict|status|metrics> --addr HOST:PORT \
+             [--model-index N] (got {other:?})"
         ),
     };
     let addr = match args.get("addr") {
@@ -265,6 +303,118 @@ fn admin_cmd(args: &Args) -> Result<()> {
         },
         other => anyhow::bail!("unexpected reply to ADMIN frame: {other:?}"),
     }
+}
+
+/// `mkq-bert admin metrics`: scrape the server's metrics registry over a
+/// METRICS frame and print the payload (Prometheus text, or `--json`).
+fn admin_metrics(args: &Args) -> Result<()> {
+    use mkq::coordinator::net::{self, ClientReply, METRICS_FMT_JSON, METRICS_FMT_TEXT};
+
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => anyhow::bail!("admin metrics needs --addr HOST:PORT"),
+    };
+    let format = if args.bool("json") { METRICS_FMT_JSON } else { METRICS_FMT_TEXT };
+    let mut s = connect_with_backoff(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+    net::send_frame(&mut s, &net::encode_metrics_request(format))?;
+    match net::read_reply(&mut s)? {
+        ClientReply::Metrics { payload, .. } => {
+            print!("{payload}");
+            if !payload.ends_with('\n') {
+                println!();
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unexpected reply to METRICS frame: {other:?}"),
+    }
+}
+
+/// `mkq-bert obs-overhead`: prove the metrics hot path is cheap. Runs
+/// the same in-process serving replay with recording enabled and with
+/// the `MKQ_METRICS=0` equivalent (runtime gate), and fails if the
+/// enabled replay is more than `--max-overhead` (default 5%) slower on
+/// its median-of-`--iters` time. Emits both replays as gated rows in
+/// `BENCH_obs.json` so absolute serving perf is regression-gated too.
+fn obs_overhead(args: &Args) -> Result<()> {
+    use mkq::coordinator::{bits_last_n_int4, Server, ServerConfig};
+    use mkq::runtime::{NativeBackend, NativeDims, NativeModel};
+    use mkq::util::benchkit::Bench;
+
+    let iters = args.usize("iters", 5);
+    let requests = args.usize("requests", 256);
+    let max_overhead = args.f64("max-overhead", 0.05);
+    let out_path = args.str("out", "BENCH_obs.json");
+
+    let dims = NativeDims::tiny();
+    let bits = bits_last_n_int4(dims.n_layers, 4);
+    let model = NativeModel::random(dims, &bits, 17);
+    let backend = NativeBackend::with_model(model);
+    let (seq, vocab) = (dims.seq, dims.vocab);
+
+    let mut replay = || {
+        let mut server = Server::new(
+            &backend,
+            ServerConfig {
+                batch_buckets: vec![1, 8, 16],
+                seq_buckets: default_seq_buckets(seq),
+                batch_window: std::time::Duration::from_micros(200),
+                max_pending: 0, // unbounded: every request runs in both modes
+                default_deadline: None,
+            },
+        )
+        .expect("obs-overhead server");
+        let mut rng = mkq::util::rng::Rng::new(7);
+        for _ in 0..requests {
+            let len = 1 + rng.below(seq);
+            let ids: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
+            let mask = vec![1.0f32; len];
+            server.submit(ids, mask).expect("unbounded queue admits");
+            let _ = server.pump().expect("obs-overhead pump");
+        }
+        let _ = server.drain().expect("obs-overhead drain");
+    };
+
+    let was_enabled = mkq::obs::metrics_enabled();
+    let bench = Bench::new(1, iters);
+    mkq::obs::set_metrics_enabled(true);
+    let r_on = bench.run(&mut replay);
+    mkq::obs::set_metrics_enabled(false);
+    let r_off = bench.run(&mut replay);
+    mkq::obs::set_metrics_enabled(was_enabled);
+
+    // p50 vs p50 (the ISSUE-8 acceptance statistic): the median replay
+    // shrugs off one slow scheduler-preempted iteration on shared runners
+    let overhead = (r_on.p50_us - r_off.p50_us) / r_off.p50_us.max(1e-9);
+    println!("obs-overhead: {requests} requests/replay, {iters} iters each mode");
+    println!("  metrics on : {r_on}");
+    println!("  metrics off: {r_off}");
+    println!("  overhead (p50 vs p50): {:.2}%", overhead * 100.0);
+
+    let mut out = String::from("{\n  \"kernels\": [\n");
+    out.push_str(&format!("    {},\n", r_on.json_row("obs_replay_on")));
+    out.push_str(&format!("    {}\n", r_off.json_row("obs_replay_off")));
+    out.push_str(&format!(
+        "  ],\n  \"ungated\": {{\"requests\": {requests}, \"iters\": {iters}, \
+         \"overhead_frac\": {overhead:.6}, \"max_overhead\": {max_overhead}}}\n}}\n"
+    ));
+    std::fs::write(&out_path, out)
+        .map_err(|e| anyhow::anyhow!("failed to write {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+
+    anyhow::ensure!(
+        overhead <= max_overhead,
+        "metrics recording costs {:.2}% on the serve replay — over the {:.1}% budget",
+        overhead * 100.0,
+        max_overhead * 100.0
+    );
+    println!(
+        "metrics overhead within budget ({:.2}% <= {:.1}%)",
+        overhead * 100.0,
+        max_overhead * 100.0
+    );
+    Ok(())
 }
 
 fn kernels_info() -> Result<()> {
@@ -797,6 +947,7 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         let local = door.local_addr().map_err(anyhow::Error::new)?;
         let serve_secs = args.f64("serve-secs", conf.f64("serve.serve_secs", 0.0));
         let idle_exit = args.f64("idle-exit-secs", conf.f64("serve.idle_exit_secs", 0.0));
+        let stats_every = args.f64("stats-every-secs", conf.f64("serve.stats_every_secs", 0.0));
         println!(
             "listening on {local} (proto v{PROTO_VERSION}, max_pending {max_pending}, \
              default deadline {deadline_us}us)"
@@ -804,6 +955,7 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         let opts = RunOpts {
             for_secs: if serve_secs > 0.0 { Some(serve_secs) } else { None },
             idle_exit_secs: if idle_exit > 0.0 { Some(idle_exit) } else { None },
+            stats_every_secs: if stats_every > 0.0 { Some(stats_every) } else { None },
         };
         // SIGTERM/SIGINT trip the same graceful-stop path as --serve-secs
         // expiry: stop accepting, drain in-flight work, answer late
@@ -925,7 +1077,6 @@ fn write_bench_serve(path: &str, s: &mkq::coordinator::ServerSummary, replay_s: 
 fn loadgen(args: &Args, conf: &Config) -> Result<()> {
     use mkq::coordinator::net::{self, ClientReply};
     use mkq::util::benchkit::BenchResult;
-    use mkq::util::stats::LatencyRecorder;
 
     let addr = match args.get("addr") {
         Some(a) => a.to_string(),
@@ -1011,11 +1162,7 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
     }
     let wall_s = start.elapsed().as_secs_f64().max(1e-9);
 
-    let mut rec = LatencyRecorder::new();
-    for &us in &tally.lat_ok_us {
-        rec.record(us);
-    }
-    let lat = rec.summary();
+    let lat = &tally.lat_ok_us;
     let answered = tally.ok
         + tally.shed
         + tally.full
@@ -1044,8 +1191,38 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
         tally.other,
         tally.lost
     );
-    if lat.count > 0 {
-        println!("  served latency: {lat}");
+    if lat.count() > 0 {
+        println!(
+            "  served latency: n={} mean {:.1}us p50 {:.1}us p90 {:.1}us p99 {:.1}us \
+             p999 {:.1}us max {}us",
+            lat.count(),
+            lat.mean(),
+            lat.quantile(0.5),
+            lat.quantile(0.9),
+            lat.quantile(0.99),
+            lat.quantile(0.999),
+            lat.max()
+        );
+    }
+
+    // post-run server-side scrape: the same run seen from the other end
+    // of the socket, so client and server accounting can reconcile
+    let srv = scrape_server_metrics(&addr);
+    match &srv {
+        Some(p) => {
+            let g = |n: &str| mkq::obs::json_u64_field(p, n).unwrap_or(0);
+            println!(
+                "  server view: admitted={} served={} shed_deadline={} failed={} batches={} \
+                 frames_in={}",
+                g("serve_admitted"),
+                g("serve_served"),
+                g("serve_shed_deadline"),
+                g("serve_failed"),
+                g("serve_batches"),
+                g("net_frames_in")
+            );
+        }
+        None => println!("  server metrics scrape unavailable (server gone or unreachable)"),
     }
 
     if let Some(out) = args.get("bench-out") {
@@ -1054,17 +1231,37 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
         // only the served-latency median is gated (tails and shed counts
         // are schedule-dependent — ungated metadata, same split as the
         // trace-replay bench)
-        if lat.count > 0 {
+        if lat.count() > 0 {
             s.push_str(&format!(
                 "    {}\n",
-                BenchResult::single(lat.p50_us, lat.count).json_row(&format!("net_{mode}_p50"))
+                BenchResult::single(lat.quantile(0.5), lat.count() as usize)
+                    .json_row(&format!("net_{mode}_p50"))
             ));
         }
+        let srv_meta = match &srv {
+            Some(p) => {
+                let g = |n: &str| mkq::obs::json_u64_field(p, n).unwrap_or(0);
+                format!(
+                    ", \"srv_admitted\": {}, \"srv_served\": {}, \"srv_shed_deadline\": {}, \
+                     \"srv_failed\": {}, \"srv_batches\": {}, \"srv_frames_in\": {}, \
+                     \"srv_frames_out\": {}",
+                    g("serve_admitted"),
+                    g("serve_served"),
+                    g("serve_shed_deadline"),
+                    g("serve_failed"),
+                    g("serve_batches"),
+                    g("net_frames_in"),
+                    g("net_frames_out")
+                )
+            }
+            None => String::new(),
+        };
         s.push_str(&format!(
             "  ],\n  \"ungated\": {{\"mode\": \"{mode}\", \"conns\": {conns}, \"sent\": {}, \
              \"served\": {}, \"shed_deadline\": {}, \"queue_full\": {}, \"backend_failed\": {}, \
              \"unavailable\": {}, \"lost\": {}, \"conn_retries\": {conn_retries}, \
-             \"p99_us\": {:.3}, \"mean_us\": {:.3}, \"wall_s\": {:.3}}}\n}}\n",
+             \"p90_us\": {:.3}, \"p99_us\": {:.3}, \"p999_us\": {:.3}, \"mean_us\": {:.3}, \
+             \"wall_s\": {:.3}{srv_meta}}}\n}}\n",
             tally.sent,
             tally.ok,
             tally.shed,
@@ -1072,12 +1269,56 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
             tally.failed,
             tally.unavailable,
             tally.lost,
-            lat.p99_us,
-            lat.mean_us,
+            lat.quantile(0.9),
+            lat.quantile(0.99),
+            lat.quantile(0.999),
+            lat.mean(),
             wall_s
         ));
         std::fs::write(path, s).map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))?;
         println!("wrote {path}");
+    }
+
+    if args.bool("expect-reconcile") {
+        let p = srv.as_deref().ok_or_else(|| {
+            anyhow::anyhow!("--expect-reconcile: server metrics scrape failed (server unreachable)")
+        })?;
+        let g = |n: &str| -> Result<u64> {
+            mkq::obs::json_u64_field(p, n).ok_or_else(|| {
+                anyhow::anyhow!("--expect-reconcile: field {n:?} missing from server metrics")
+            })
+        };
+        anyhow::ensure!(
+            tally.lost == 0,
+            "--expect-reconcile: {} lost request(s) make exact reconciliation impossible",
+            tally.lost
+        );
+        let (admitted, served) = (g("serve_admitted")?, g("serve_served")?);
+        let (shed, failed) = (g("serve_shed_deadline")?, g("serve_failed")?);
+        anyhow::ensure!(
+            served == tally.ok,
+            "--expect-reconcile: server served {served} != client ok {}",
+            tally.ok
+        );
+        anyhow::ensure!(
+            shed == tally.shed,
+            "--expect-reconcile: server shed_deadline {shed} != client shed {}",
+            tally.shed
+        );
+        anyhow::ensure!(
+            failed == tally.failed,
+            "--expect-reconcile: server failed {failed} != client backend_failed {}",
+            tally.failed
+        );
+        anyhow::ensure!(
+            admitted == served + shed + failed,
+            "--expect-reconcile: server admitted {admitted} != served {served} + shed {shed} \
+             + failed {failed}"
+        );
+        println!(
+            "reconcile ok: server and client agree — admitted {admitted} == served {served} \
+             + shed {shed} + failed {failed}"
+        );
     }
 
     anyhow::ensure!(
@@ -1107,7 +1348,6 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
 }
 
 /// Per-connection load-generator outcome counts, merged across workers.
-#[derive(Default)]
 struct LoadTally {
     sent: u64,
     ok: u64,
@@ -1124,7 +1364,27 @@ struct LoadTally {
     other: u64,
     /// Sent but never answered before timeout/disconnect.
     lost: u64,
-    lat_ok_us: Vec<f64>,
+    /// Served-request latency in µs — the same log-linear histogram the
+    /// server uses, so p50/p90/p99/p999 come from bucket walks instead
+    /// of a sorted Vec (mergeable across workers, O(1) per record).
+    lat_ok_us: mkq::obs::Histogram,
+}
+
+impl Default for LoadTally {
+    fn default() -> Self {
+        LoadTally {
+            sent: 0,
+            ok: 0,
+            shed: 0,
+            full: 0,
+            invalid: 0,
+            failed: 0,
+            unavailable: 0,
+            other: 0,
+            lost: 0,
+            lat_ok_us: mkq::obs::Histogram::new(),
+        }
+    }
 }
 
 impl LoadTally {
@@ -1152,7 +1412,7 @@ impl LoadTally {
         self.unavailable += o.unavailable;
         self.other += o.other;
         self.lost += o.lost;
-        self.lat_ok_us.extend(o.lat_ok_us);
+        self.lat_ok_us.merge_from(&o.lat_ok_us);
     }
 }
 
@@ -1198,7 +1458,7 @@ fn loadgen_closed_worker(
         match net::read_reply(&mut stream) {
             Ok(ClientReply::Ok { .. }) => {
                 t.ok += 1;
-                t.lat_ok_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                t.lat_ok_us.record_us(sent_at.elapsed());
             }
             Ok(ClientReply::Reject { code, .. }) => t.absorb_reject(code),
             Ok(ClientReply::Info { .. }) | Ok(ClientReply::Admin { .. }) => t.other += 1,
@@ -1278,7 +1538,7 @@ fn loadgen_open_worker(
                 t.ok += 1;
                 let i = (tag & 0xffff_ffff) as usize;
                 if let Some(Some(s)) = starts.lock().unwrap().get(i).copied() {
-                    t.lat_ok_us.push(s.elapsed().as_secs_f64() * 1e6);
+                    t.lat_ok_us.record_us(s.elapsed());
                 }
             }
             Ok(ClientReply::Reject { code, .. }) => {

@@ -184,6 +184,7 @@ impl Registry {
     ) -> usize {
         let mut slots = self.slots.borrow_mut();
         let dims = model.dims;
+        let resident = stats.resident_bytes() as u64;
         slots.push(ModelSlot {
             name: name.to_string(),
             path,
@@ -195,7 +196,16 @@ impl Registry {
             consec_failures: Cell::new(0),
             last_used: Cell::new(0),
         });
-        slots.len() - 1
+        let idx = slots.len() - 1;
+        crate::obs::register_model_label(idx, name);
+        if idx < crate::obs::MAX_MODEL_SLOTS {
+            if let Some(o) = crate::obs::metrics() {
+                o.model_version[idx].set(1);
+                o.model_health[idx].set(ModelHealth::Serving.as_u8() as u64);
+                o.model_resident_bytes[idx].set(resident);
+            }
+        }
+        idx
     }
 
     /// Reload one slot from its checkpoint source and atomically swap
@@ -236,10 +246,24 @@ impl Registry {
             }
             let old = s.version.get();
             let new = old + 1;
+            let prev_health = s.health.get();
+            let resident = stats.resident_bytes() as u64;
             s.version.set(new);
             s.cur = Some(Arc::new(ModelVersion { version: new, model, stats }));
             s.health.set(ModelHealth::Serving);
             s.consec_failures.set(0);
+            crate::log_info!("model {:?} reloaded: v{old} -> v{new}", s.name);
+            if idx < crate::obs::MAX_MODEL_SLOTS {
+                if let Some(o) = crate::obs::metrics() {
+                    o.model_reloads[idx].inc();
+                    o.model_version[idx].set(new);
+                    o.model_resident_bytes[idx].set(resident);
+                    o.model_health[idx].set(ModelHealth::Serving.as_u8() as u64);
+                    if prev_health != ModelHealth::Serving {
+                        o.model_health_transitions[idx].inc();
+                    }
+                }
+            }
         }
         self.enforce_budget(Some(idx));
         let slots = self.slots.borrow();
@@ -262,6 +286,20 @@ impl Registry {
         };
         s.health.set(ModelHealth::Evicted);
         s.consec_failures.set(0);
+        crate::log_info!(
+            "model {:?} evicted: v{} freed {} bytes",
+            s.name,
+            cur.version,
+            cur.stats.resident_bytes()
+        );
+        if idx < crate::obs::MAX_MODEL_SLOTS {
+            if let Some(o) = crate::obs::metrics() {
+                o.model_evicts[idx].inc();
+                o.model_health_transitions[idx].inc();
+                o.model_health[idx].set(ModelHealth::Evicted.as_u8() as u64);
+                o.model_resident_bytes[idx].set(0);
+            }
+        }
         Ok((cur.version, cur.stats.resident_bytes()))
     }
 
@@ -324,16 +362,35 @@ impl Registry {
 
     /// Record one forward failure; crossing the thresholds drives
     /// `Serving → Degraded → Quarantined`.
-    fn note_failure(&self, s: &ModelSlot) {
+    fn note_failure(&self, idx: usize, s: &ModelSlot) {
         let n = s.consec_failures.get() + 1;
         s.consec_failures.set(n);
-        match s.health.get() {
+        let prev = s.health.get();
+        match prev {
             ModelHealth::Quarantined | ModelHealth::Evicted => {}
             _ => {
                 if n >= QUARANTINE_AFTER_FAILURES {
                     s.health.set(ModelHealth::Quarantined);
                 } else if n >= DEGRADE_AFTER_FAILURES {
                     s.health.set(ModelHealth::Degraded);
+                }
+            }
+        }
+        let now = s.health.get();
+        if now != prev {
+            crate::log_warn!(
+                "model {:?} health {:?} -> {:?} after {n} consecutive forward failures",
+                s.name,
+                prev,
+                now
+            );
+        }
+        if idx < crate::obs::MAX_MODEL_SLOTS {
+            if let Some(o) = crate::obs::metrics() {
+                o.model_forward_failures[idx].inc();
+                if now != prev {
+                    o.model_health_transitions[idx].inc();
+                    o.model_health[idx].set(now.as_u8() as u64);
                 }
             }
         }
@@ -424,7 +481,7 @@ impl Backend for Registry {
     fn record_forward_panic(&self, model: usize) {
         let slots = self.slots.borrow();
         if let Some(s) = slots.get(model) {
-            self.note_failure(s);
+            self.note_failure(model, s);
         }
     }
 
@@ -478,9 +535,15 @@ impl Backend for Registry {
                 s.consec_failures.set(0);
                 if matches!(s.health.get(), ModelHealth::Degraded | ModelHealth::Loading) {
                     s.health.set(ModelHealth::Serving);
+                    if model < crate::obs::MAX_MODEL_SLOTS {
+                        if let Some(o) = crate::obs::metrics() {
+                            o.model_health_transitions[model].inc();
+                            o.model_health[model].set(ModelHealth::Serving.as_u8() as u64);
+                        }
+                    }
                 }
             }
-            Err(_) => self.note_failure(s),
+            Err(_) => self.note_failure(model, s),
         }
         r
     }

@@ -1,0 +1,223 @@
+//! Lock-free log-linear histogram (HDR-lite).
+//!
+//! Fixed bucket layout over the `u64` value domain: values below 32 get
+//! exact unit-width buckets; every power-of-two octave above that is
+//! split into 16 linear sub-buckets, so the relative quantile error from
+//! binning is bounded by 1/16 (~6%) plus in-bucket interpolation.
+//! Recording is a handful of relaxed atomic RMWs — no locks, no heap —
+//! so it is safe on the zero-alloc serve hot path (enforced by
+//! `tests/workspace_alloc.rs`). Histograms are mergeable bucket-wise and
+//! the running sum saturates instead of wrapping.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Sub-bucket resolution: 2^4 = 16 linear slices per octave.
+const SUB_BITS: u32 = 4;
+const SUB: u64 = 1 << SUB_BITS;
+/// Linear region: values `0..2*SUB` map to their own unit bucket.
+const LINEAR: u64 = 2 * SUB;
+/// 32 linear buckets + 16 per octave for octaves 5..=63.
+pub const N_BUCKETS: usize = (LINEAR as usize) + ((63 - SUB_BITS as usize) * SUB as usize);
+
+/// Saturating atomic add (CAS loop; never wraps past `u64::MAX`).
+fn sat_add(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match cell.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: [const { AtomicU64::new(0) }; N_BUCKETS],
+        }
+    }
+
+    /// Bucket index for a value. Total order preserving: monotone in `v`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v < LINEAR {
+            v as usize
+        } else {
+            let o = 63 - v.leading_zeros(); // floor(log2 v), >= 5 here
+            let sub = (v >> (o - SUB_BITS)) & (SUB - 1);
+            LINEAR as usize + ((o - SUB_BITS - 1) as usize) * SUB as usize + sub as usize
+        }
+    }
+
+    /// Inclusive value range `[lo, hi]` covered by bucket `idx`.
+    fn bucket_bounds(idx: usize) -> (u64, u64) {
+        if (idx as u64) < LINEAR {
+            (idx as u64, idx as u64)
+        } else {
+            let rel = idx - LINEAR as usize;
+            let o = SUB_BITS + 1 + (rel / SUB as usize) as u32;
+            let sub = (rel % SUB as usize) as u64;
+            let width = 1u64 << (o - SUB_BITS);
+            let lo = (1u64 << o) + sub * width;
+            (lo, lo + width - 1)
+        }
+    }
+
+    /// Record one observation. Lock-free, allocation-free, saturating.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        sat_add(&self.sum, v);
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    #[inline]
+    pub fn record_us(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Relaxed);
+        if m == u64::MAX { 0 } else { m }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() as f64 / n as f64 }
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`): nearest-rank bucket walk
+    /// with linear interpolation inside the landing bucket, clamped to
+    /// the observed min/max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Nearest-rank: the k-th smallest observation, 1-based.
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let (lo, hi) = Self::bucket_bounds(i);
+                let into = (rank - seen) as f64 / c as f64; // (0, 1]
+                let est = lo as f64 + (hi - lo) as f64 * into;
+                return est.clamp(self.min() as f64, self.max() as f64);
+            }
+            seen += c;
+        }
+        self.max() as f64
+    }
+
+    /// Bucket-wise accumulate `other` into `self` (both keep recording).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            sat_add(a, b.load(Relaxed));
+        }
+        sat_add(&self.count, other.count.load(Relaxed));
+        sat_add(&self.sum, other.sum.load(Relaxed));
+        self.min.fetch_min(other.min.load(Relaxed), Relaxed);
+        self.max.fetch_max(other.max.load(Relaxed), Relaxed);
+    }
+
+    /// Reset every cell to the empty state (not atomic as a whole; callers
+    /// must quiesce writers first — used by benches and tests).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Relaxed);
+        }
+        self.count.store(0, Relaxed);
+        self.sum.store(0, Relaxed);
+        self.min.store(u64::MAX, Relaxed);
+        self.max.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotone_and_bounds_consistent() {
+        let probes = [
+            0u64,
+            1,
+            2,
+            15,
+            16,
+            31,
+            32,
+            33,
+            47,
+            48,
+            63,
+            64,
+            100,
+            1000,
+            4096,
+            65535,
+            1 << 20,
+            (1 << 40) + 12345,
+            u64::MAX,
+        ];
+        let mut last = 0usize;
+        for (n, &v) in probes.iter().enumerate() {
+            let i = Histogram::bucket_of(v);
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} idx={i} lo={lo} hi={hi}");
+            if n > 0 {
+                assert!(i >= last, "bucket index not monotone at v={v}");
+            }
+            last = i;
+        }
+        assert!(Histogram::bucket_of(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn every_bucket_round_trips() {
+        // lo and hi of every bucket must map back to that bucket.
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert_eq!(Histogram::bucket_of(lo), i, "lo of bucket {i}");
+            assert_eq!(Histogram::bucket_of(hi), i, "hi of bucket {i}");
+        }
+    }
+}

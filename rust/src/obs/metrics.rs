@@ -1,0 +1,557 @@
+//! Process-wide metrics registry: lock-free counters/gauges plus the
+//! log-linear histograms from [`super::hist`], all const-initialized in
+//! one static so hot-path recording is a relaxed atomic RMW — zero heap
+//! allocation, no locks (enforced by `tests/workspace_alloc.rs`).
+//!
+//! The whole layer is killable: `MKQ_METRICS=0` (read once, overridable
+//! at runtime via [`set_metrics_enabled`] for the overhead bench) makes
+//! [`metrics()`] return `None`, so every instrumentation site reduces to
+//! one relaxed load and a branch. Rendering ([`render_prometheus`],
+//! [`render_json`]) always works off the same registry regardless of the
+//! gate, so a scrape after a disabled run shows zeros rather than
+//! erroring.
+//!
+//! The full series table (name, type, meaning) is documented in the
+//! README "Observability" section; CI greps a scrape for every row.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, Once};
+
+use super::hist::Histogram;
+use super::trace::SlowTraces;
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Reject codes 1..=10 (see `coordinator::net::RejectCode`); slot 0 is
+/// unused so the wire code indexes directly.
+pub const N_REJECT_CODES: usize = 11;
+
+pub(crate) const REJECT_NAMES: [&str; N_REJECT_CODES] = [
+    "unknown",
+    "queue_full",
+    "deadline",
+    "invalid",
+    "backend_failed",
+    "bad_frame",
+    "busy",
+    "shutting_down",
+    "version_gone",
+    "quarantined",
+    "evicted",
+];
+
+/// Fixed per-model metric slots; the fleet registry registers a label
+/// per loaded model (registration is cold-path and may allocate).
+pub const MAX_MODEL_SLOTS: usize = 32;
+
+/// Kernel-kind slots: the 7 `KernelKind` variants plus one for the
+/// packed-f32 GEMM (`kernels::dispatch` owns the index mapping).
+pub const N_KERNEL_SLOTS: usize = 8;
+
+pub struct MetricsRegistry {
+    // -- front door (coordinator/net.rs) --------------------------------
+    pub net_accepted_conns: Counter,
+    pub net_rejected_conns: Counter,
+    pub net_disconnects: Counter,
+    pub net_frames_in: Counter,
+    pub net_frames_out: Counter,
+    pub net_bytes_in: Counter,
+    pub net_bytes_out: Counter,
+    pub net_bad_frames: Counter,
+    pub net_rejects: [Counter; N_REJECT_CODES],
+
+    // -- batching server (coordinator/server.rs) ------------------------
+    pub serve_admitted: Counter,
+    pub serve_served: Counter,
+    pub serve_shed_deadline: Counter,
+    pub serve_failed: Counter,
+    pub serve_rejected_full: Counter,
+    pub serve_rejected_invalid: Counter,
+    pub serve_rejected_shutdown: Counter,
+    pub serve_rejected_unavailable: Counter,
+    pub serve_batches: Counter,
+    pub serve_padded_tokens: Counter,
+    pub serve_total_tokens: Counter,
+    pub serve_queue_depth: Gauge,
+    /// Batch occupancy, percent of the bucket's capacity actually filled.
+    pub serve_batch_fill_pct: Histogram,
+    pub serve_batch_exec_us: Histogram,
+
+    // -- request lifecycle stages ---------------------------------------
+    /// admitted → staged into a batch.
+    pub stage_queue_us: Histogram,
+    /// staged → backend forward complete (per request).
+    pub stage_exec_us: Histogram,
+    /// wire path only: frame read → reply queued for write.
+    pub stage_total_us: Histogram,
+
+    // -- model fleet (modelstore/registry.rs) ---------------------------
+    pub model_version: [Gauge; MAX_MODEL_SLOTS],
+    pub model_health: [Gauge; MAX_MODEL_SLOTS],
+    pub model_resident_bytes: [Gauge; MAX_MODEL_SLOTS],
+    pub model_health_transitions: [Counter; MAX_MODEL_SLOTS],
+    pub model_reloads: [Counter; MAX_MODEL_SLOTS],
+    pub model_evicts: [Counter; MAX_MODEL_SLOTS],
+    pub model_forward_failures: [Counter; MAX_MODEL_SLOTS],
+
+    // -- kernels (kernels/dispatch.rs) ----------------------------------
+    pub kernel_calls: [Counter; N_KERNEL_SLOTS],
+    pub kernel_macs: [Counter; N_KERNEL_SLOTS],
+
+    // -- slowest-trace ring ---------------------------------------------
+    pub slow_traces: SlowTraces,
+
+    /// Registered model labels (index-aligned with the `model_*` arrays).
+    model_labels: Mutex<Vec<String>>,
+}
+
+impl MetricsRegistry {
+    const fn new() -> Self {
+        MetricsRegistry {
+            net_accepted_conns: Counter::new(),
+            net_rejected_conns: Counter::new(),
+            net_disconnects: Counter::new(),
+            net_frames_in: Counter::new(),
+            net_frames_out: Counter::new(),
+            net_bytes_in: Counter::new(),
+            net_bytes_out: Counter::new(),
+            net_bad_frames: Counter::new(),
+            net_rejects: [const { Counter::new() }; N_REJECT_CODES],
+            serve_admitted: Counter::new(),
+            serve_served: Counter::new(),
+            serve_shed_deadline: Counter::new(),
+            serve_failed: Counter::new(),
+            serve_rejected_full: Counter::new(),
+            serve_rejected_invalid: Counter::new(),
+            serve_rejected_shutdown: Counter::new(),
+            serve_rejected_unavailable: Counter::new(),
+            serve_batches: Counter::new(),
+            serve_padded_tokens: Counter::new(),
+            serve_total_tokens: Counter::new(),
+            serve_queue_depth: Gauge::new(),
+            serve_batch_fill_pct: Histogram::new(),
+            serve_batch_exec_us: Histogram::new(),
+            stage_queue_us: Histogram::new(),
+            stage_exec_us: Histogram::new(),
+            stage_total_us: Histogram::new(),
+            model_version: [const { Gauge::new() }; MAX_MODEL_SLOTS],
+            model_health: [const { Gauge::new() }; MAX_MODEL_SLOTS],
+            model_resident_bytes: [const { Gauge::new() }; MAX_MODEL_SLOTS],
+            model_health_transitions: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            model_reloads: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            model_evicts: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            model_forward_failures: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            kernel_calls: [const { Counter::new() }; N_KERNEL_SLOTS],
+            kernel_macs: [const { Counter::new() }; N_KERNEL_SLOTS],
+            slow_traces: SlowTraces::new(),
+            model_labels: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register (or re-register) a model label for slot `idx`. Cold path.
+    pub fn register_model_label(&self, idx: usize, label: &str) {
+        if idx >= MAX_MODEL_SLOTS {
+            return;
+        }
+        let mut labels = self.model_labels.lock().unwrap();
+        while labels.len() <= idx {
+            labels.push(String::new());
+        }
+        labels[idx] = label.to_string();
+    }
+
+    fn model_labels_snapshot(&self) -> Vec<String> {
+        self.model_labels.lock().unwrap().clone()
+    }
+}
+
+static REGISTRY: MetricsRegistry = MetricsRegistry::new();
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static ENV_INIT: Once = Once::new();
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("MKQ_METRICS") {
+            let v = v.trim();
+            if v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false") {
+                ENABLED.store(false, Relaxed);
+            }
+        }
+    });
+}
+
+/// The hot-path accessor: `None` when metrics are disabled
+/// (`MKQ_METRICS=0`), so instrumentation sites cost one relaxed load.
+#[inline]
+pub fn metrics() -> Option<&'static MetricsRegistry> {
+    init_from_env();
+    if ENABLED.load(Relaxed) { Some(&REGISTRY) } else { None }
+}
+
+/// Ungated access for rendering, merging, and tests.
+pub fn registry() -> &'static MetricsRegistry {
+    init_from_env();
+    &REGISTRY
+}
+
+/// Runtime override of the `MKQ_METRICS` gate (overhead bench + tests).
+pub fn set_metrics_enabled(on: bool) {
+    init_from_env();
+    ENABLED.store(on, Relaxed);
+}
+
+pub fn metrics_enabled() -> bool {
+    init_from_env();
+    ENABLED.load(Relaxed)
+}
+
+/// Register a model label on the process registry (cold path; applied
+/// even when recording is gated off so scrapes stay labeled).
+pub fn register_model_label(idx: usize, label: &str) {
+    registry().register_model_label(idx, label);
+}
+
+// ---------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------
+
+use std::fmt::Write as _;
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP mkq_{name} {help}");
+    let _ = writeln!(out, "# TYPE mkq_{name} counter");
+    let _ = writeln!(out, "mkq_{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP mkq_{name} {help}");
+    let _ = writeln!(out, "# TYPE mkq_{name} gauge");
+    let _ = writeln!(out, "mkq_{name} {v}");
+}
+
+fn prom_hist(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP mkq_{name} {help}");
+    let _ = writeln!(out, "# TYPE mkq_{name} summary");
+    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+        let _ = writeln!(out, "mkq_{name}{{quantile=\"{label}\"}} {:.1}", h.quantile(q));
+    }
+    let _ = writeln!(out, "mkq_{name}_sum {}", h.sum());
+    let _ = writeln!(out, "mkq_{name}_count {}", h.count());
+}
+
+fn model_label_for(labels: &[String], i: usize) -> String {
+    match labels.get(i) {
+        Some(l) if !l.is_empty() => l.clone(),
+        _ => format!("{i}"),
+    }
+}
+
+/// Prometheus text exposition of every registered series.
+pub fn render_prometheus() -> String {
+    let r = registry();
+    let mut out = String::with_capacity(8192);
+
+    prom_counter(&mut out, "net_accepted_conns", "TCP connections accepted", r.net_accepted_conns.get());
+    prom_counter(&mut out, "net_rejected_conns", "TCP connections refused at the conn cap", r.net_rejected_conns.get());
+    prom_counter(&mut out, "net_disconnects", "client disconnects observed", r.net_disconnects.get());
+    prom_counter(&mut out, "net_frames_in", "wire frames decoded", r.net_frames_in.get());
+    prom_counter(&mut out, "net_frames_out", "wire frames queued for write", r.net_frames_out.get());
+    prom_counter(&mut out, "net_bytes_in", "payload bytes read off sockets", r.net_bytes_in.get());
+    prom_counter(&mut out, "net_bytes_out", "payload bytes written to sockets", r.net_bytes_out.get());
+    prom_counter(&mut out, "net_bad_frames", "frames rejected as malformed", r.net_bad_frames.get());
+
+    let _ = writeln!(out, "# HELP mkq_net_rejects_total wire REJECT frames sent, by code");
+    let _ = writeln!(out, "# TYPE mkq_net_rejects_total counter");
+    for (code, name) in REJECT_NAMES.iter().enumerate().skip(1) {
+        let _ = writeln!(
+            out,
+            "mkq_net_rejects_total{{code=\"{code}\",name=\"{name}\"}} {}",
+            r.net_rejects[code].get()
+        );
+    }
+
+    prom_counter(&mut out, "serve_admitted", "requests admitted into a queue", r.serve_admitted.get());
+    prom_counter(&mut out, "serve_served", "requests answered with logits", r.serve_served.get());
+    prom_counter(&mut out, "serve_shed_deadline", "queued requests shed past deadline", r.serve_shed_deadline.get());
+    prom_counter(&mut out, "serve_failed", "requests failed by backend error/panic", r.serve_failed.get());
+    prom_counter(&mut out, "serve_rejected_full", "admissions rejected: queue full", r.serve_rejected_full.get());
+    prom_counter(&mut out, "serve_rejected_invalid", "admissions rejected: invalid request", r.serve_rejected_invalid.get());
+    prom_counter(&mut out, "serve_rejected_shutdown", "admissions rejected: shutting down", r.serve_rejected_shutdown.get());
+    prom_counter(&mut out, "serve_rejected_unavailable", "admissions rejected: model unavailable", r.serve_rejected_unavailable.get());
+    prom_counter(&mut out, "serve_batches", "batches executed", r.serve_batches.get());
+    prom_counter(&mut out, "serve_padded_tokens", "padding tokens staged into batches", r.serve_padded_tokens.get());
+    prom_counter(&mut out, "serve_total_tokens", "total token slots staged into batches", r.serve_total_tokens.get());
+    prom_gauge(&mut out, "serve_queue_depth", "requests waiting in slot queues", r.serve_queue_depth.get());
+    prom_hist(&mut out, "serve_batch_fill_pct", "batch occupancy percent of bucket capacity", &r.serve_batch_fill_pct);
+    prom_hist(&mut out, "serve_batch_exec_us", "backend forward microseconds per batch", &r.serve_batch_exec_us);
+
+    prom_hist(&mut out, "stage_queue_us", "request stage: admitted to staged", &r.stage_queue_us);
+    prom_hist(&mut out, "stage_exec_us", "request stage: staged to forward complete", &r.stage_exec_us);
+    prom_hist(&mut out, "stage_total_us", "wire path: frame read to reply queued", &r.stage_total_us);
+
+    let labels = r.model_labels_snapshot();
+    if !labels.is_empty() {
+        let _ = writeln!(out, "# HELP mkq_model_version active lifecycle version per model");
+        let _ = writeln!(out, "# TYPE mkq_model_version gauge");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_version{{model=\"{l}\"}} {}", r.model_version[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_health health state (0 loading, 1 serving, 2 degraded, 3 quarantined, 4 evicted)");
+        let _ = writeln!(out, "# TYPE mkq_model_health gauge");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_health{{model=\"{l}\"}} {}", r.model_health[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_resident_bytes resident bytes an eviction would free");
+        let _ = writeln!(out, "# TYPE mkq_model_resident_bytes gauge");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_resident_bytes{{model=\"{l}\"}} {}", r.model_resident_bytes[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_health_transitions_total health state changes");
+        let _ = writeln!(out, "# TYPE mkq_model_health_transitions_total counter");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_health_transitions_total{{model=\"{l}\"}} {}", r.model_health_transitions[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_reloads_total successful hot reloads");
+        let _ = writeln!(out, "# TYPE mkq_model_reloads_total counter");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_reloads_total{{model=\"{l}\"}} {}", r.model_reloads[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_evicts_total evictions (budget or admin)");
+        let _ = writeln!(out, "# TYPE mkq_model_evicts_total counter");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_evicts_total{{model=\"{l}\"}} {}", r.model_evicts[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_forward_failures_total forward errors/panics per model");
+        let _ = writeln!(out, "# TYPE mkq_model_forward_failures_total counter");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_forward_failures_total{{model=\"{l}\"}} {}", r.model_forward_failures[i].get());
+        }
+    }
+
+    let _ = writeln!(out, "# HELP mkq_kernel_calls_total GEMM calls by kernel kind");
+    let _ = writeln!(out, "# TYPE mkq_kernel_calls_total counter");
+    for (i, name) in crate::kernels::dispatch::KERNEL_SLOT_NAMES.iter().enumerate() {
+        let _ = writeln!(out, "mkq_kernel_calls_total{{kind=\"{name}\"}} {}", r.kernel_calls[i].get());
+    }
+    let _ = writeln!(out, "# HELP mkq_kernel_macs_total multiply-accumulates by kernel kind");
+    let _ = writeln!(out, "# TYPE mkq_kernel_macs_total counter");
+    for (i, name) in crate::kernels::dispatch::KERNEL_SLOT_NAMES.iter().enumerate() {
+        let _ = writeln!(out, "mkq_kernel_macs_total{{kind=\"{name}\"}} {}", r.kernel_macs[i].get());
+    }
+
+    out
+}
+
+fn json_hist(out: &mut String, name: &str, h: &Histogram) {
+    let _ = write!(
+        out,
+        "\"{name}\": {{\"count\": {}, \"sum\": {}, \"p50\": {:.1}, \"p90\": {:.1}, \"p99\": {:.1}, \"p999\": {:.1}, \"max\": {}}}",
+        h.count(),
+        h.sum(),
+        h.quantile(0.5),
+        h.quantile(0.9),
+        h.quantile(0.99),
+        h.quantile(0.999),
+        h.max()
+    );
+}
+
+/// JSON snapshot of the same series (flat scalar keys so the loadgen
+/// scrape can extract fields without a JSON parser).
+pub fn render_json() -> String {
+    let r = registry();
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\n");
+    let scalars: &[(&str, u64)] = &[
+        ("net_accepted_conns", r.net_accepted_conns.get()),
+        ("net_rejected_conns", r.net_rejected_conns.get()),
+        ("net_disconnects", r.net_disconnects.get()),
+        ("net_frames_in", r.net_frames_in.get()),
+        ("net_frames_out", r.net_frames_out.get()),
+        ("net_bytes_in", r.net_bytes_in.get()),
+        ("net_bytes_out", r.net_bytes_out.get()),
+        ("net_bad_frames", r.net_bad_frames.get()),
+        ("serve_admitted", r.serve_admitted.get()),
+        ("serve_served", r.serve_served.get()),
+        ("serve_shed_deadline", r.serve_shed_deadline.get()),
+        ("serve_failed", r.serve_failed.get()),
+        ("serve_rejected_full", r.serve_rejected_full.get()),
+        ("serve_rejected_invalid", r.serve_rejected_invalid.get()),
+        ("serve_rejected_shutdown", r.serve_rejected_shutdown.get()),
+        ("serve_rejected_unavailable", r.serve_rejected_unavailable.get()),
+        ("serve_batches", r.serve_batches.get()),
+        ("serve_padded_tokens", r.serve_padded_tokens.get()),
+        ("serve_total_tokens", r.serve_total_tokens.get()),
+        ("serve_queue_depth", r.serve_queue_depth.get()),
+    ];
+    for (name, v) in scalars {
+        let _ = writeln!(out, "  \"{name}\": {v},");
+    }
+    out.push_str("  \"net_rejects\": {");
+    for (code, name) in REJECT_NAMES.iter().enumerate().skip(1) {
+        if code > 1 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{name}\": {}", r.net_rejects[code].get());
+    }
+    out.push_str("},\n  ");
+    json_hist(&mut out, "serve_batch_fill_pct", &r.serve_batch_fill_pct);
+    out.push_str(",\n  ");
+    json_hist(&mut out, "serve_batch_exec_us", &r.serve_batch_exec_us);
+    out.push_str(",\n  ");
+    json_hist(&mut out, "stage_queue_us", &r.stage_queue_us);
+    out.push_str(",\n  ");
+    json_hist(&mut out, "stage_exec_us", &r.stage_exec_us);
+    out.push_str(",\n  ");
+    json_hist(&mut out, "stage_total_us", &r.stage_total_us);
+    out.push_str(",\n  \"models\": [");
+    let labels = r.model_labels_snapshot();
+    for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"model\": \"{}\", \"version\": {}, \"health\": {}, \"resident_bytes\": {}, \"transitions\": {}, \"reloads\": {}, \"evicts\": {}, \"forward_failures\": {}}}",
+            model_label_for(&labels, i),
+            r.model_version[i].get(),
+            r.model_health[i].get(),
+            r.model_resident_bytes[i].get(),
+            r.model_health_transitions[i].get(),
+            r.model_reloads[i].get(),
+            r.model_evicts[i].get(),
+            r.model_forward_failures[i].get()
+        );
+    }
+    out.push_str("],\n  \"kernels\": [");
+    for (i, name) in crate::kernels::dispatch::KERNEL_SLOT_NAMES.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"kind\": \"{name}\", \"calls\": {}, \"macs\": {}}}",
+            r.kernel_calls[i].get(),
+            r.kernel_macs[i].get()
+        );
+    }
+    out.push_str("],\n  \"slow_traces\": ");
+    r.slow_traces.render_json(&mut out);
+    out.push_str("\n}\n");
+    out
+}
+
+/// Extract `"name": <u64>` from a flat JSON object (the loadgen-side
+/// scrape helper; avoids needing a JSON parser in the client).
+pub fn json_u64_field(payload: &str, name: &str) -> Option<u64> {
+    let needle = format!("\"{name}\":");
+    let at = payload.find(&needle)?;
+    let rest = payload[at + needle.len()..].trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// One-line operator summary for `--stats-every-secs`.
+pub fn render_statusline() -> String {
+    let r = registry();
+    format!(
+        "[obs] conns={} admitted={} served={} shed={} failed={} q={} batch_p50={:.0}us queue_p50={:.0}us total_p99={:.0}us",
+        r.net_accepted_conns.get(),
+        r.serve_admitted.get(),
+        r.serve_served.get(),
+        r.serve_shed_deadline.get(),
+        r.serve_failed.get(),
+        r.serve_queue_depth.get(),
+        r.serve_batch_exec_us.quantile(0.5),
+        r.stage_queue_us.quantile(0.5),
+        r.stage_total_us.quantile(0.99),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn json_field_extraction() {
+        let payload = "{\n  \"serve_served\": 128,\n  \"serve_failed\": 0,\n}";
+        assert_eq!(json_u64_field(payload, "serve_served"), Some(128));
+        assert_eq!(json_u64_field(payload, "serve_failed"), Some(0));
+        assert_eq!(json_u64_field(payload, "missing"), None);
+    }
+
+    #[test]
+    fn renderers_emit_core_series() {
+        let text = render_prometheus();
+        for series in [
+            "mkq_net_frames_in",
+            "mkq_serve_served",
+            "mkq_stage_queue_us",
+            "mkq_kernel_calls_total",
+        ] {
+            assert!(text.contains(series), "missing {series}");
+        }
+        let json = render_json();
+        assert!(json.contains("\"serve_served\""));
+        assert!(json.contains("\"slow_traces\""));
+    }
+}

@@ -1,0 +1,32 @@
+//! First-class observability, dependency-free (no tracing/prometheus
+//! crates — hermetic build).
+//!
+//! * [`hist`]    — lock-free log-linear histograms (p50/p90/p99/p999,
+//!                 mergeable, saturating).
+//! * [`metrics`] — the process-wide [`MetricsRegistry`]: one const-init
+//!                 static of atomic counters/gauges/histograms, gated by
+//!                 `MKQ_METRICS=0`, rendered as Prometheus text or JSON.
+//! * [`trace`]   — fixed-size ring of the slowest request traces with
+//!                 per-stage breakdown.
+//!
+//! Hot-path contract: recording into an already-registered series is
+//! zero-heap-allocation and lock-free (the slow-trace ring takes a Mutex
+//! only when a trace beats the current slowest set — still no
+//! allocation). `tests/workspace_alloc.rs` enforces this with a counting
+//! global allocator.
+//!
+//! Scrape surfaces: the METRICS wire frame on the serving port,
+//! `mkq-bert admin metrics --addr`, and `--stats-every-secs N` (one-line
+//! stderr summary). See README "Observability" for the series table.
+
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use metrics::{
+    json_u64_field, metrics, metrics_enabled, register_model_label, registry, render_json,
+    render_prometheus, render_statusline, set_metrics_enabled, Counter, Gauge, MetricsRegistry,
+    MAX_MODEL_SLOTS, N_KERNEL_SLOTS, N_REJECT_CODES,
+};
+pub use trace::{SlowTraces, TraceEntry};

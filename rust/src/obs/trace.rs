@@ -1,0 +1,141 @@
+//! Slowest-trace ring: a fixed-size buffer of the slowest recent request
+//! traces (stage breakdown per request), kept without heap allocation.
+//!
+//! Admission is gated by a cached floor (`bar`): a finished request only
+//! takes the lock when its total latency beats the slowest set's current
+//! minimum, so the steady-state cost is one relaxed load and a compare.
+//! Inside, the new trace replaces the current minimum slot (a bounded
+//! 32-entry scan) — the buffer always holds the `RING` slowest traces
+//! seen since start, newest-wins on ties.
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+pub const RING: usize = 32;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceEntry {
+    /// Server-assigned request id (0 = empty slot).
+    pub id: u64,
+    pub model: u16,
+    pub seq_bucket: u16,
+    pub batch_size: u16,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    pub total_us: u64,
+}
+
+impl TraceEntry {
+    const EMPTY: TraceEntry =
+        TraceEntry { id: 0, model: 0, seq_bucket: 0, batch_size: 0, queue_us: 0, exec_us: 0, total_us: 0 };
+}
+
+pub struct SlowTraces {
+    entries: Mutex<[TraceEntry; RING]>,
+    /// Cached minimum total_us across the ring (0 while not yet full):
+    /// the lock-free admission bar.
+    bar: AtomicU64,
+}
+
+impl Default for SlowTraces {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SlowTraces {
+    pub const fn new() -> Self {
+        SlowTraces { entries: Mutex::new([TraceEntry::EMPTY; RING]), bar: AtomicU64::new(0) }
+    }
+
+    /// Offer a finished trace; kept only if it beats the current floor.
+    #[inline]
+    pub fn offer(&self, e: TraceEntry) {
+        if e.total_us < self.bar.load(Relaxed) {
+            return;
+        }
+        let mut ring = self.entries.lock().unwrap();
+        let mut min_i = 0usize;
+        for i in 1..RING {
+            if ring[i].total_us < ring[min_i].total_us {
+                min_i = i;
+            }
+        }
+        if e.total_us >= ring[min_i].total_us {
+            ring[min_i] = e;
+            let new_min = ring.iter().map(|t| t.total_us).min().unwrap_or(0);
+            self.bar.store(new_min, Relaxed);
+        }
+    }
+
+    /// Occupied entries, slowest first.
+    pub fn snapshot(&self) -> Vec<TraceEntry> {
+        let ring = self.entries.lock().unwrap();
+        let mut v: Vec<TraceEntry> = ring.iter().copied().filter(|t| t.id != 0).collect();
+        v.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        v
+    }
+
+    pub fn render_json(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        out.push('[');
+        for (i, t) in self.snapshot().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(
+                out,
+                "{{\"id\": {}, \"model\": {}, \"seq_bucket\": {}, \"batch_size\": {}, \"queue_us\": {}, \"exec_us\": {}, \"total_us\": {}}}",
+                t.id, t.model, t.seq_bucket, t.batch_size, t.queue_us, t.exec_us, t.total_us
+            );
+        }
+        out.push(']');
+    }
+
+    pub fn reset(&self) {
+        let mut ring = self.entries.lock().unwrap();
+        *ring = [TraceEntry::EMPTY; RING];
+        self.bar.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, total_us: u64) -> TraceEntry {
+        TraceEntry { id, total_us, ..TraceEntry::default() }
+    }
+
+    #[test]
+    fn keeps_the_slowest() {
+        let s = SlowTraces::new();
+        for id in 1..=100u64 {
+            s.offer(entry(id, id)); // total_us == id
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), RING);
+        // The 32 slowest of 1..=100 are 69..=100.
+        assert!(snap.iter().all(|t| t.total_us >= 69), "floor leaked: {snap:?}");
+        assert_eq!(snap[0].total_us, 100);
+    }
+
+    #[test]
+    fn fast_traces_skip_the_lock_path() {
+        let s = SlowTraces::new();
+        for id in 1..=RING as u64 {
+            s.offer(entry(id, 1000 + id));
+        }
+        // A fast trace below the bar must not displace anything.
+        s.offer(entry(999, 1));
+        assert!(s.snapshot().iter().all(|t| t.total_us > 1000));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let s = SlowTraces::new();
+        s.offer(entry(1, 10));
+        s.reset();
+        assert!(s.snapshot().is_empty());
+    }
+}

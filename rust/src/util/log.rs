@@ -1,0 +1,122 @@
+//! Tiny leveled stderr logger (no `log`/`tracing` crates — hermetic
+//! build). `MKQ_LOG=error|warn|info|debug` selects the threshold, read
+//! once on first use; the default is `info`, so debug lines are
+//! off-by-default. A disabled level costs one relaxed atomic load.
+//!
+//! Use the crate-root macros: `log_error!`, `log_warn!`, `log_info!`,
+//! `log_debug!` — same format syntax as `eprintln!`, prefixed with
+//! `[mkq <level>]`.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Relaxed);
+    if t != UNSET {
+        return t;
+    }
+    let parsed = match std::env::var("MKQ_LOG") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "error" => Level::Error as u8,
+            "warn" => Level::Warn as u8,
+            "info" => Level::Info as u8,
+            "debug" => Level::Debug as u8,
+            "" => Level::Info as u8,
+            other => {
+                eprintln!("[mkq warn] MKQ_LOG={other:?} not one of error|warn|info|debug; using info");
+                Level::Info as u8
+            }
+        },
+        Err(_) => Level::Info as u8,
+    };
+    THRESHOLD.store(parsed, Relaxed);
+    parsed
+}
+
+/// Runtime override (tests).
+pub fn set_level(l: Level) {
+    THRESHOLD.store(l as u8, Relaxed);
+}
+
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= threshold()
+}
+
+pub fn write(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[mkq {}] {}", l.tag(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_sane() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info); // restore the default for other tests
+    }
+}

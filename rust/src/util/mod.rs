@@ -1,12 +1,13 @@
 //! Substrate utilities the vendored crate set lacks (DESIGN.md lists these
 //! as deliberate build-everything substitutions): PRNG, CLI parsing,
 //! config files, a thread pool, a property-testing harness, summary
-//! statistics, and a micro-benchmark harness.
+//! statistics, a micro-benchmark harness, and a leveled stderr logger.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod crc32;
+pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

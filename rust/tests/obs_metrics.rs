@@ -1,0 +1,204 @@
+//! Correctness of the observability core: histogram quantiles against an
+//! exact sorted oracle across value distributions, bucket-wise merge,
+//! sum saturation, and multi-threaded recording consistency.
+//!
+//! The binning design bounds relative quantile error by 1/16 (one
+//! sub-bucket width per octave) — the oracle tests assert that bound
+//! with a little interpolation slack rather than exact equality.
+
+use mkq::obs::Histogram;
+use mkq::util::rng::Rng;
+
+/// Exact nearest-rank quantile over a sorted copy (the oracle).
+fn oracle_quantile(xs: &[u64], q: f64) -> u64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
+}
+
+fn assert_close_to_oracle(h: &Histogram, xs: &[u64], dist: &str) {
+    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+        let est = h.quantile(q);
+        let exact = oracle_quantile(xs, q) as f64;
+        // 1/16 relative binning error + interpolation wiggle, and one
+        // unit of absolute slack for the tiny-value linear region.
+        let tol = exact * (1.0 / 16.0 + 0.01) + 1.0;
+        assert!(
+            (est - exact).abs() <= tol,
+            "{dist} q={q}: est {est} vs exact {exact} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn quantiles_match_oracle_uniform() {
+    let mut rng = Rng::new(11);
+    let h = Histogram::new();
+    let xs: Vec<u64> = (0..20_000).map(|_| 1 + rng.below(250_000) as u64).collect();
+    for &x in &xs {
+        h.record(x);
+    }
+    assert_close_to_oracle(&h, &xs, "uniform");
+    assert_eq!(h.count(), xs.len() as u64);
+    assert_eq!(h.sum(), xs.iter().sum::<u64>());
+    assert_eq!(h.min(), *xs.iter().min().unwrap());
+    assert_eq!(h.max(), *xs.iter().max().unwrap());
+}
+
+#[test]
+fn quantiles_match_oracle_exponential() {
+    // Latency-shaped: most mass near zero, long tail out to ~10^7.
+    let mut rng = Rng::new(12);
+    let h = Histogram::new();
+    let xs: Vec<u64> = (0..20_000).map(|_| rng.exp(1.0 / 5_000.0) as u64).collect();
+    for &x in &xs {
+        h.record(x);
+    }
+    assert_close_to_oracle(&h, &xs, "exponential");
+}
+
+#[test]
+fn quantiles_match_oracle_bimodal_heavy_tail() {
+    // Two modes 5 octaves apart — a fast path plus a slow path — so the
+    // quantile walk has to cross a long run of empty buckets.
+    let mut rng = Rng::new(13);
+    let h = Histogram::new();
+    let xs: Vec<u64> = (0..20_000)
+        .map(|_| {
+            if rng.bool(0.9) { 40 + rng.below(20) as u64 } else { 100_000 + rng.below(50_000) as u64 }
+        })
+        .collect();
+    for &x in &xs {
+        h.record(x);
+    }
+    assert_close_to_oracle(&h, &xs, "bimodal");
+}
+
+#[test]
+fn tiny_values_are_exact() {
+    // The linear region (< 32) has unit-width buckets: quantiles there
+    // must equal the exact nearest-rank value, no binning error.
+    let h = Histogram::new();
+    let xs: Vec<u64> = (0..31).flat_map(|v| std::iter::repeat(v).take(3)).collect();
+    for &x in &xs {
+        h.record(x);
+    }
+    for q in [0.1, 0.5, 0.9, 1.0] {
+        assert_eq!(h.quantile(q), oracle_quantile(&xs, q) as f64, "q={q}");
+    }
+}
+
+#[test]
+fn merge_is_bucketwise_and_keeps_extremes() {
+    let mut rng = Rng::new(14);
+    let a = Histogram::new();
+    let b = Histogram::new();
+    let merged_oracle = Histogram::new();
+    let mut xs = Vec::new();
+    for i in 0..5_000 {
+        let lo = 1 + rng.below(1_000) as u64;
+        let hi = 50_000 + rng.below(1_000_000) as u64;
+        let (into_a, into_b) = if i % 2 == 0 { (lo, hi) } else { (hi, lo) };
+        a.record(into_a);
+        b.record(into_b);
+        merged_oracle.record(into_a);
+        merged_oracle.record(into_b);
+        xs.push(into_a);
+        xs.push(into_b);
+    }
+    a.merge_from(&b);
+    assert_eq!(a.count(), merged_oracle.count());
+    assert_eq!(a.sum(), merged_oracle.sum());
+    assert_eq!(a.min(), merged_oracle.min());
+    assert_eq!(a.max(), merged_oracle.max());
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        assert_eq!(a.quantile(q), merged_oracle.quantile(q), "merged quantile q={q}");
+    }
+    assert_close_to_oracle(&a, &xs, "merged");
+    // The source keeps recording independently after a merge.
+    assert_eq!(b.count(), 5_000);
+}
+
+#[test]
+fn sum_saturates_instead_of_wrapping() {
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    h.record(u64::MAX);
+    h.record(7);
+    assert_eq!(h.sum(), u64::MAX, "sum must saturate, not wrap");
+    assert_eq!(h.count(), 3);
+    assert_eq!(h.max(), u64::MAX);
+    assert_eq!(h.min(), 7);
+    // u64::MAX lands in the last octave's top bucket; q=1.0 clamps to max.
+    assert_eq!(h.quantile(1.0), u64::MAX as f64);
+
+    // Merging two saturated histograms stays saturated.
+    let other = Histogram::new();
+    other.record(u64::MAX);
+    h.merge_from(&other);
+    assert_eq!(h.sum(), u64::MAX);
+    assert_eq!(h.count(), 4);
+}
+
+#[test]
+fn reset_empties_everything() {
+    let h = Histogram::new();
+    h.record(123);
+    h.record(456_789);
+    h.reset();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.sum(), 0);
+    assert_eq!(h.min(), 0);
+    assert_eq!(h.max(), 0);
+    assert_eq!(h.quantile(0.5), 0.0);
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    // 8 threads × 10k records into one shared histogram; counts, sum,
+    // and extremes must reconcile exactly (every cell is a relaxed
+    // atomic RMW — no read-modify-write races to lose updates).
+    const THREADS: u64 = 8;
+    const PER: u64 = 10_000;
+    static H: Histogram = Histogram::new();
+    H.reset();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..PER {
+                    H.record(1 + rng.below(1_000_000) as u64);
+                }
+            });
+        }
+    });
+    assert_eq!(H.count(), THREADS * PER);
+    assert!(H.min() >= 1 && H.max() <= 1_000_000);
+    assert!(H.sum() >= H.count() * H.min() && H.sum() <= H.count() * H.max());
+    let (p50, p99) = (H.quantile(0.5), H.quantile(0.99));
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+}
+
+#[test]
+fn registry_counters_reconcile_under_concurrency() {
+    // The process-wide registry is shared across this test binary, so
+    // assert on deltas rather than absolutes.
+    let o = mkq::obs::registry();
+    let before_served = o.serve_served.get();
+    let before_bytes = o.net_bytes_in.get();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                let o = mkq::obs::registry();
+                for _ in 0..25_000 {
+                    o.serve_served.inc();
+                    o.net_bytes_in.add(3);
+                }
+            });
+        }
+    });
+    assert_eq!(o.serve_served.get() - before_served, 100_000);
+    assert_eq!(o.net_bytes_in.get() - before_bytes, 300_000);
+}

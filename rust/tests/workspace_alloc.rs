@@ -8,31 +8,33 @@
 //!
 //! Single-threaded dispatcher on purpose: the row-block parallel driver
 //! boxes its O(threads) scoped jobs (an explicit, tiny exception to the
-//! contract — tensor-sized allocations are what this test polices), and
-//! keeping the binary to this one test keeps the counter race-free.
+//! contract — tensor-sized allocations are what this test polices).
+//!
+//! The same contract extends to the observability layer: counter incs,
+//! gauge stores, histogram records, and slow-trace offers all happen on
+//! the serve hot path, so they get their own armed-allocator test below.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use mkq::kernels::Dispatcher;
 use mkq::runtime::{NativeDims, NativeModel, Workspace};
 
 struct CountingAlloc;
 
-// Thread-local arming flag: only allocations made by the *test thread*
-// between arm/disarm count, so harness threads can't pollute the count.
-// Const-initialized Cell — no lazy init, no TLS destructor, safe to read
-// from inside the allocator.
+// Thread-local arming flag and counter: only allocations made by the
+// *test thread* between arm/disarm count, so harness threads (and the
+// other test in this binary) can't pollute the count. Const-initialized
+// Cells — no lazy init, no TLS destructor, safe inside the allocator.
 thread_local! {
     static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
 fn record_if_counting() {
     let armed = COUNTING.try_with(|c| c.get()).unwrap_or(false);
     if armed {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
     }
 }
 
@@ -84,7 +86,7 @@ fn steady_state_forward_ws_allocates_nothing() {
     }
 
     COUNTING.with(|c| c.set(true));
-    let before = ALLOCS.load(Ordering::SeqCst);
+    let before = ALLOCS.with(|c| c.get());
     let mut checksum = 0f32;
     for _ in 0..4 {
         for (bsz, t, ids, mask) in &batches {
@@ -92,7 +94,7 @@ fn steady_state_forward_ws_allocates_nothing() {
             checksum += logits[0];
         }
     }
-    let after = ALLOCS.load(Ordering::SeqCst);
+    let after = ALLOCS.with(|c| c.get());
     COUNTING.with(|c| c.set(false));
 
     assert!(checksum.is_finite());
@@ -100,6 +102,61 @@ fn steady_state_forward_ws_allocates_nothing() {
         after - before,
         0,
         "steady-state forward_ws must not touch the heap ({} allocations observed)",
+        after - before
+    );
+}
+
+#[test]
+fn hot_path_metric_recording_allocates_nothing() {
+    use mkq::obs::TraceEntry;
+
+    // Warm cold paths first: env-var init (allocates inside std::env) and
+    // the first Mutex acquisition of the slow-trace ring.
+    mkq::obs::set_metrics_enabled(true);
+    let o = mkq::obs::metrics().expect("metrics just enabled");
+    o.slow_traces.offer(TraceEntry {
+        id: 1,
+        model: 0,
+        seq_bucket: 12,
+        batch_size: 4,
+        queue_us: 5,
+        exec_us: 90,
+        total_us: 100,
+    });
+
+    COUNTING.with(|c| c.set(true));
+    let before = ALLOCS.with(|c| c.get());
+
+    for i in 0..512u64 {
+        let o = mkq::obs::metrics().expect("metrics enabled");
+        // Counters, gauges, histograms — one relaxed RMW each.
+        o.serve_served.inc();
+        o.net_bytes_in.add(64 + i);
+        o.serve_queue_depth.set(i % 7);
+        o.stage_queue_us.record(i * 3);
+        o.stage_exec_us.record_us(std::time::Duration::from_micros(200 + i));
+        o.serve_batch_fill_pct.record(50 + i % 50);
+        // Slow-trace offers: ever-slower traces force the lock+replace
+        // path every iteration; the fast below-bar path rides along too.
+        o.slow_traces.offer(TraceEntry {
+            id: 2 + i,
+            model: 0,
+            seq_bucket: 12,
+            batch_size: 4,
+            queue_us: 5,
+            exec_us: 90,
+            total_us: 1_000 + i,
+        });
+        o.slow_traces.offer(TraceEntry { id: 0, total_us: 1, ..TraceEntry::default() });
+    }
+
+    let after = ALLOCS.with(|c| c.get());
+    COUNTING.with(|c| c.set(false));
+
+    assert_eq!(
+        after - before,
+        0,
+        "metric recording on the serve hot path must not touch the heap ({} allocations observed)",
         after - before
     );
 }
