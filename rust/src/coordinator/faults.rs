@@ -118,7 +118,7 @@ fn parse_fail_spec(v: &str) -> Option<FailForward> {
 /// The typed error an armed fail-forward plan injects — implements
 /// `std::error::Error`, so it converts into `anyhow::Error` via `?` and
 /// stays recognizable in chaos-test assertions by message.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InjectedFault {
     /// 1-based index of the forward that failed.
     pub forward: u64,
@@ -177,21 +177,61 @@ impl Faults {
     /// plan. A no-op (and no counter increment) when inert, so the
     /// serving hot path pays one relaxed load.
     pub fn before_forward(&self) -> Result<(), InjectedFault> {
+        match self.sample_forward() {
+            None => Ok(()),
+            Some(f) => f.apply(),
+        }
+    }
+
+    /// Sample the fault decision for the *next* forward without applying
+    /// it — the multi-worker dispatch path: the front door consumes the
+    /// shared counter here (so fault ordering stays deterministic in
+    /// dispatch order regardless of worker count), and the worker thread
+    /// later calls [`SampledFault::apply`], landing the delay/panic/error
+    /// on the thread that actually executes the batch. `None` when inert
+    /// (no counter increment — the hot path pays one relaxed load).
+    pub fn sample_forward(&self) -> Option<SampledFault> {
         if !self.is_active() {
-            return Ok(());
+            return None;
         }
         let n = self.forwards.fetch_add(1, Ordering::SeqCst) + 1;
-        if !self.plan.delay.is_zero() {
-            std::thread::sleep(self.plan.delay);
+        let fail = match self.plan.fail_forward {
+            Some(FailForward::Nth(k)) if n == k => Some(InjectedFault { forward: n }),
+            Some(FailForward::Every(k)) if n % k == 0 => Some(InjectedFault { forward: n }),
+            Some(FailForward::FirstN(k)) if n <= k => Some(InjectedFault { forward: n }),
+            _ => None,
+        };
+        Some(SampledFault {
+            delay: self.plan.delay,
+            panic_forward: if self.plan.panic_forward == Some(n) { Some(n) } else { None },
+            fail,
+        })
+    }
+}
+
+/// One forward's worth of injected misbehavior, sampled off the shared
+/// counter at dispatch time and applied on whichever thread runs the
+/// batch. `Copy` so dispatch handles stay trivially movable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampledFault {
+    delay: Duration,
+    panic_forward: Option<u64>,
+    fail: Option<InjectedFault>,
+}
+
+impl SampledFault {
+    /// Sleep, panic, or fail exactly as `before_forward` would have for
+    /// the forward this sample was drawn for.
+    pub fn apply(self) -> Result<(), InjectedFault> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
         }
-        if self.plan.panic_forward == Some(n) {
+        if let Some(n) = self.panic_forward {
             panic!("injected fault: panicking serve_forward #{n}");
         }
-        match self.plan.fail_forward {
-            Some(FailForward::Nth(k)) if n == k => Err(InjectedFault { forward: n }),
-            Some(FailForward::Every(k)) if n % k == 0 => Err(InjectedFault { forward: n }),
-            Some(FailForward::FirstN(k)) if n <= k => Err(InjectedFault { forward: n }),
-            _ => Ok(()),
+        match self.fail {
+            Some(f) => Err(f),
+            None => Ok(()),
         }
     }
 }
@@ -250,6 +290,28 @@ mod tests {
         assert_eq!(parse_fail_spec("every:0"), None);
         assert_eq!(parse_fail_spec("first:0"), None);
         assert_eq!(parse_fail_spec("bogus"), None);
+    }
+
+    #[test]
+    fn sampled_faults_replay_the_before_forward_sequence() {
+        // sample-then-apply must consume the same counter with the same
+        // outcomes as the inline hook would have
+        let f = Faults::with_plan(FaultPlan::fail_every(2));
+        let results: Vec<bool> = (0..6)
+            .map(|_| f.sample_forward().expect("armed plan samples").apply().is_ok())
+            .collect();
+        assert_eq!(results, vec![true, false, true, false, true, false]);
+        assert_eq!(f.forwards(), 6);
+        assert!(Faults::inert().sample_forward().is_none());
+    }
+
+    #[test]
+    fn sampled_panic_lands_on_apply_not_on_sample() {
+        let f = Faults::with_plan(FaultPlan::panic_nth(1));
+        let s = f.sample_forward().expect("armed"); // must not panic here
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| s.apply()));
+        assert!(p.is_err(), "the sampled panic fires at apply time");
+        assert!(f.sample_forward().expect("armed").apply().is_ok());
     }
 
     #[test]

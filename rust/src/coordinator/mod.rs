@@ -8,8 +8,13 @@
 //!                  admission control, deadlines, and per-batch fault
 //!                  isolation.
 //! * [`net`]      — the socket front door: length-prefixed wire protocol
-//!                  over nonblocking `std::net` TCP, plus client-side
-//!                  framing helpers for the load generator.
+//!                  over nonblocking `std::net` TCP with `poll(2)`-driven
+//!                  readiness, plus client-side framing helpers for the
+//!                  load generator.
+//! * [`workers`]  — the execution worker pool behind `--workers N`:
+//!                  per-worker workspaces and dispatcher replicas, batch
+//!                  dispatch over a bounded MPMC channel, per-batch panic
+//!                  containment.
 //! * [`faults`]   — env/config-driven fault injection (fail-Nth-forward,
 //!                  added latency, panic-once), inert by default; what
 //!                  the chaos suite drives.
@@ -24,18 +29,21 @@ pub mod server;
 pub mod trace;
 #[cfg(feature = "xla")]
 pub mod trainer;
+pub mod workers;
 
 pub use crate::quant::{bits_last_n_int4, parse_bits};
 pub use faults::{FaultPlan, Faults, InjectedFault};
 pub use net::{
-    AdminOp, AdminReply, ClientReply, FrontDoor, NetStats, RejectCode, RunOpts, WireModelInfo,
+    AdminOp, AdminReply, ClientReply, FrontDoor, NetStats, RejectCode, RunOpts, WakeHandle,
+    WireModelInfo,
 };
 pub use scheduler::LrSchedule;
 pub use server::{
     ModelInfo, PerModelSummary, Rejected, Request, Response, ResponseBody, Server, ServerConfig,
-    ServerSummary,
+    ServerSummary, WorkDone, WorkItem,
 };
 pub use trace::{TraceGen, TraceKind};
+pub use workers::WorkerPool;
 
 #[cfg(feature = "xla")]
 pub use crate::runtime::ServeModel;

@@ -13,7 +13,7 @@
 //! | INFO   | 0x02 | (empty)                                                |
 //! | ADMIN  | 0x03 | op `u8` ([`AdminOp`]), model `u16`                     |
 //! | METRICS| 0x04 | format `u8` (0 = Prometheus text, 1 = JSON)            |
-//! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits      |
+//! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits, req_id `u64` |
 //! | REJECT | 0x82 | tag `u64`, code `u8` ([`RejectCode`]), UTF-8 message   |
 //! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, version `u64`, health `u8`, consec_failures `u32`, label_len `u8`, label bytes |
 //! | ADMIN_RESP | 0x84 | op `u8`, ok `u8`, model `u16`, then op-specific payload (see [`AdminReply`]) |
@@ -43,11 +43,22 @@
 //!   responses dropped (`dropped_responses`); the server never blocks on
 //!   a dead peer — writes are nonblocking with per-connection buffers.
 //!
-//! The event loop stays single-threaded (batcher + sockets in one
-//! thread): [`FrontDoor::poll`] is one turn — accept, read, admit, pump,
-//! dispatch, flush, reap — and [`FrontDoor::run`] wraps it with
-//! wall-clock/idle exits plus a graceful wind-down that drains the
-//! batcher and flushes every reply before closing.
+//! # Threading
+//!
+//! The socket plane is single-threaded: [`FrontDoor::poll`] is one turn
+//! — accept, read, admit, pump, dispatch, flush, reap — and
+//! [`FrontDoor::run`] wraps it with wall-clock/idle exits plus a
+//! graceful wind-down that drains the batcher and flushes every reply
+//! before closing. With `RunOpts::workers > 1` (and a backend that
+//! supports off-thread execution) the *execution* plane moves to a
+//! [`crate::coordinator::WorkerPool`]: the front door keeps
+//! accept/read/admit/reply but hands ready batches to workers via
+//! [`Server::dequeue_work`] and settles them via
+//! [`Server::complete_work`], so it keeps admitting and dispatching
+//! independent buckets while batches execute. Idle parking uses real
+//! `poll(2)` readiness over the listener, every live connection, and a
+//! self-pipe ([`WakeHandle`]) that workers ring on batch completion —
+//! no fixed sleep on the hot path.
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -58,7 +69,176 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::server::{ModelInfo, Rejected, Response, ResponseBody, Server};
+use crate::coordinator::workers::WorkerPool;
 use crate::runtime::Backend;
+
+// ---------------------------------------------------------------------
+// poll(2) + pipe(2) readiness (raw FFI, no new crates — same idiom as
+// the mmap shim in `modelstore::mapped`)
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_short, c_void};
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+
+    // nfds_t is `unsigned long` on Linux and `unsigned int` on macOS;
+    // matching it exactly keeps the ABI honest on both
+    #[cfg(target_os = "macos")]
+    pub type NfdsT = u32;
+    #[cfg(not(target_os = "macos"))]
+    pub type NfdsT = std::os::raw::c_ulong;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "macos")]
+    pub const O_NONBLOCK: c_int = 0x0004;
+    #[cfg(not(target_os = "macos"))]
+    pub const O_NONBLOCK: c_int = 0o4000;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+
+    /// Best-effort `O_NONBLOCK` on an fd (a blocking wake pipe could
+    /// stall a worker if the pipe ever filled).
+    pub fn set_nonblocking(fd: c_int) {
+        // SAFETY: fcntl on an owned, open fd; F_GETFL/F_SETFL take no
+        // pointers
+        unsafe {
+            let flags = fcntl(fd, F_GETFL, 0);
+            if flags >= 0 {
+                let _ = fcntl(fd, F_SETFL, flags | O_NONBLOCK);
+            }
+        }
+    }
+}
+
+/// A self-pipe: execution workers ring it when a batch completes so a
+/// `poll(2)`-parked front door wakes immediately instead of waiting out
+/// its timeout. Owns both pipe ends; dropping closes them.
+struct WakePipe {
+    #[cfg(unix)]
+    read_fd: i32,
+    #[cfg(unix)]
+    write_fd: i32,
+}
+
+impl WakePipe {
+    /// `None` if the pipe can't be created (or on non-unix, where the
+    /// run loop falls back to a bounded sleep).
+    fn new() -> Option<WakePipe> {
+        #[cfg(unix)]
+        {
+            let mut fds = [-1i32; 2];
+            // SAFETY: pipe(2) writes exactly two fds into the array
+            let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+            if rc != 0 {
+                return None;
+            }
+            sys::set_nonblocking(fds[0]);
+            sys::set_nonblocking(fds[1]);
+            Some(WakePipe { read_fd: fds[0], write_fd: fds[1] })
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
+    }
+
+    fn handle(&self) -> WakeHandle {
+        #[cfg(unix)]
+        {
+            WakeHandle { fd: self.write_fd }
+        }
+        #[cfg(not(unix))]
+        {
+            WakeHandle::none()
+        }
+    }
+
+    /// Swallow every queued wake byte (level-triggered poll would
+    /// otherwise spin on a non-empty pipe).
+    fn drain(&self) {
+        #[cfg(unix)]
+        {
+            let mut buf = [0u8; 64];
+            loop {
+                // SAFETY: reading into a stack buffer of the stated size
+                // from an fd this struct owns
+                let n = unsafe {
+                    sys::read(self.read_fd, buf.as_mut_ptr() as *mut std::os::raw::c_void, buf.len())
+                };
+                if n <= 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: closing fds owned by this struct, exactly once
+        unsafe {
+            let _ = sys::close(self.read_fd);
+            let _ = sys::close(self.write_fd);
+        }
+    }
+}
+
+/// The worker-side end of a [`WakePipe`]: `Copy`, cheap, and safe to
+/// ring from any thread. [`WakeHandle::none`] is an inert handle for
+/// pools running without a poll-parked front door (tests, non-unix).
+#[derive(Debug, Clone, Copy)]
+pub struct WakeHandle {
+    #[cfg(unix)]
+    fd: i32,
+}
+
+impl WakeHandle {
+    pub fn none() -> WakeHandle {
+        #[cfg(unix)]
+        {
+            WakeHandle { fd: -1 }
+        }
+        #[cfg(not(unix))]
+        {
+            WakeHandle {}
+        }
+    }
+
+    /// Best-effort single-byte write; an error (pipe full, handle gone)
+    /// just means the front door wakes on its timeout instead.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            if self.fd >= 0 {
+                let b = [1u8];
+                // SAFETY: writing one byte from a stack buffer to a
+                // nonblocking fd; failure is ignored by design
+                let _ = unsafe {
+                    sys::write(self.fd, b.as_ptr() as *const std::os::raw::c_void, 1)
+                };
+            }
+        }
+    }
+}
 
 pub const PROTO_VERSION: u8 = 1;
 /// Largest accepted frame body; anything longer is protocol-fatal.
@@ -258,8 +438,8 @@ fn encode_admin_err(op: u8, model: u16, msg: &str) -> Vec<u8> {
     b
 }
 
-fn encode_ok(tag: u64, model: u16, logits: &[f32]) -> Vec<u8> {
-    let mut b = Vec::with_capacity(14 + 4 * logits.len());
+fn encode_ok(tag: u64, model: u16, logits: &[f32], req_id: u64) -> Vec<u8> {
+    let mut b = Vec::with_capacity(22 + 4 * logits.len());
     b.push(PROTO_VERSION);
     b.push(MSG_OK);
     b.extend_from_slice(&tag.to_le_bytes());
@@ -268,6 +448,10 @@ fn encode_ok(tag: u64, model: u16, logits: &[f32]) -> Vec<u8> {
     for &l in logits {
         b.extend_from_slice(&l.to_le_bytes());
     }
+    // trailing server-assigned request id (same old-client-tolerant
+    // pattern as the REQUEST version pin): lets a client join its own
+    // latency log against the server's slow-trace ring
+    b.extend_from_slice(&req_id.to_le_bytes());
     b
 }
 
@@ -377,7 +561,7 @@ pub enum AdminReply {
 /// A decoded server→client message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientReply {
-    Ok { tag: u64, model: u16, logits: Vec<f32> },
+    Ok { tag: u64, model: u16, logits: Vec<f32>, req_id: u64 },
     Reject { tag: u64, code: RejectCode, msg: String },
     Info { models: Vec<WireModelInfo> },
     Admin { model: u16, reply: AdminReply },
@@ -400,16 +584,29 @@ fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
             let tag = u64::from_le_bytes(body[2..10].try_into().unwrap());
             let model = u16::from_le_bytes(body[10..12].try_into().unwrap());
             let nc = u16::from_le_bytes(body[12..14].try_into().unwrap()) as usize;
-            if body.len() != 14 + 4 * nc {
-                return Err(format!("OK frame length {} != {}", body.len(), 14 + 4 * nc));
-            }
+            // two accepted layouts: the v1 body, or v1 plus a trailing
+            // 8-byte server request id (0 = unknown) — old servers and
+            // captured frames keep decoding unchanged
+            let req_id = match body.len() {
+                l if l == 14 + 4 * nc => 0,
+                l if l == 14 + 4 * nc + 8 => {
+                    let off = 14 + 4 * nc;
+                    u64::from_le_bytes(body[off..off + 8].try_into().unwrap())
+                }
+                l => {
+                    return Err(format!(
+                        "OK frame length {l} != {} (or +8 with a request id) for nc={nc}",
+                        14 + 4 * nc
+                    ))
+                }
+            };
             let logits = (0..nc)
                 .map(|i| {
                     let o = 14 + 4 * i;
                     f32::from_le_bytes(body[o..o + 4].try_into().unwrap())
                 })
                 .collect();
-            Ok(ClientReply::Ok { tag, model, logits })
+            Ok(ClientReply::Ok { tag, model, logits, req_id })
         }
         MSG_REJECT => {
             if body.len() < 11 {
@@ -605,6 +802,12 @@ pub struct RunOpts {
     /// Print one [`crate::obs::render_statusline`] line to stderr every
     /// this many seconds (`None` = quiet).
     pub stats_every_secs: Option<f64>,
+    /// Execution worker threads. `0` or `1` keeps the classic inline
+    /// single-threaded loop; `N > 1` moves batch execution to a
+    /// [`crate::coordinator::WorkerPool`] of `N` threads (each with its
+    /// own workspace and dispatcher replica) while the front door keeps
+    /// admitting and dispatching concurrently.
+    pub workers: usize,
 }
 
 /// The nonblocking TCP front door over one [`Server`].
@@ -621,6 +824,10 @@ pub struct FrontDoor {
     /// being read (late requests get typed ShuttingDown rejects) but no
     /// new connections are accepted.
     accepting: bool,
+    /// Execution workers (`RunOpts::workers > 1`); `None` = inline pump.
+    pool: Option<WorkerPool>,
+    /// Worker→front-door completion wakeup for `poll(2)` parking.
+    wake: Option<WakePipe>,
 }
 
 impl FrontDoor {
@@ -635,6 +842,8 @@ impl FrontDoor {
             stats: NetStats::default(),
             max_conns: 256,
             accepting: true,
+            pool: None,
+            wake: None,
         })
     }
 
@@ -658,6 +867,16 @@ impl FrontDoor {
     /// reap. Returns whether anything happened (callers sleep briefly on
     /// `false` instead of spinning).
     pub fn poll<B: Backend>(&mut self, server: &mut Server<'_, B>) -> bool {
+        let mut progress = self.poll_io(server);
+        progress |= self.pump_inline(server);
+        progress |= self.flush_and_reap();
+        progress
+    }
+
+    /// The socket half of one turn — accept, read, admit — with **no**
+    /// batch execution. The worker-mode run loop uses this directly and
+    /// routes execution through the pool instead of the inline pump.
+    fn poll_io<B: Backend>(&mut self, server: &mut Server<'_, B>) -> bool {
         let mut progress = false;
 
         // accept
@@ -736,7 +955,13 @@ impl FrontDoor {
             self.handle_frame(server, slot, gen, &body);
         }
 
-        // pump the batcher until nothing fires, dispatching as we go
+        progress
+    }
+
+    /// Pump the batcher until nothing fires, dispatching as we go
+    /// (inline execution on the front-door thread).
+    fn pump_inline<B: Backend>(&mut self, server: &mut Server<'_, B>) -> bool {
+        let mut progress = false;
         loop {
             match server.pump() {
                 Ok(rs) => {
@@ -757,8 +982,42 @@ impl FrontDoor {
                 }
             }
         }
+        progress
+    }
 
-        // flush + reap
+    /// Collect finished worker batches and hand newly-ready ones to the
+    /// pool (worker mode's counterpart to [`Self::pump_inline`]).
+    fn pump_offthread<B: Backend>(&mut self, server: &mut Server<'_, B>) -> bool {
+        let Some(pool) = self.pool.as_ref() else { return false };
+        let mut progress = false;
+        // settle completions first — that frees response routes and may
+        // unblock dependent client traffic
+        let mut settled = Vec::new();
+        while let Some(done) = pool.try_recv() {
+            progress = true;
+            settled.extend(server.complete_work(done));
+        }
+        // then dispatch every bucket whose window has closed; sheds
+        // (expired deadlines, dispatch-time health gates) come back as
+        // immediate responses
+        let mut shed = Vec::new();
+        while let Some(item) = server.dequeue_work(false, &mut shed) {
+            progress = true;
+            pool.dispatch(item);
+        }
+        progress |= !shed.is_empty();
+        if let Some(o) = crate::obs::metrics() {
+            o.worker_queue_depth.set(pool.queue_depth() as u64);
+        }
+        for r in settled.into_iter().chain(shed) {
+            self.dispatch(r);
+        }
+        progress
+    }
+
+    /// Flush write buffers and reap finished connections.
+    fn flush_and_reap(&mut self) -> bool {
+        let mut progress = false;
         for slot in 0..self.conns.len() {
             let Some(c) = self.conns[slot].as_mut() else { continue };
             progress |= Self::flush_conn(c);
@@ -792,6 +1051,24 @@ impl FrontDoor {
         // hard cap on the whole stopping phase (a peer that never reads
         // its replies must not hold shutdown hostage)
         const STOP_DEADLINE: Duration = Duration::from_secs(5);
+
+        // spin up the execution pool when asked for and supported; a
+        // backend without off-thread execution (the artifact path) just
+        // keeps the classic inline loop
+        if opts.workers > 1 && self.pool.is_none() && server.backend().supports_offthread() {
+            let dispatchers: Vec<_> =
+                (0..opts.workers).filter_map(|_| server.backend().worker_dispatcher()).collect();
+            if dispatchers.len() == opts.workers {
+                self.wake = WakePipe::new();
+                let wake = self.wake.as_ref().map_or_else(WakeHandle::none, |w| w.handle());
+                crate::log_info!("serving with {} execution workers", dispatchers.len());
+                self.pool = Some(WorkerPool::new(dispatchers, wake));
+            }
+        }
+        if let Some(o) = crate::obs::metrics() {
+            o.workers_configured.set(self.pool.as_ref().map_or(1, |p| p.len()) as u64);
+        }
+
         let start = Instant::now();
         let mut last_activity = Instant::now();
         let mut had_activity = false;
@@ -814,7 +1091,13 @@ impl FrontDoor {
                 // past this point rejects with ShuttingDown
                 self.drain_through(server);
             }
-            let progress = self.poll(server);
+            let mut progress = self.poll_io(server);
+            progress |= if self.pool.is_some() {
+                self.pump_offthread(server)
+            } else {
+                self.pump_inline(server)
+            };
+            progress |= self.flush_and_reap();
             if progress {
                 had_activity = true;
                 last_activity = Instant::now();
@@ -826,7 +1109,8 @@ impl FrontDoor {
                         .iter()
                         .flatten()
                         .all(|c| c.broken || c.wpos >= c.wbuf.len());
-                    if (t0.elapsed() >= STOP_GRACE && server.pending() == 0 && flushed)
+                    let settled = server.pending() == 0 && server.in_flight() == 0;
+                    if (t0.elapsed() >= STOP_GRACE && settled && flushed)
                         || t0.elapsed() >= STOP_DEADLINE
                     {
                         break;
@@ -837,6 +1121,7 @@ impl FrontDoor {
                         if had_activity
                             && last_activity.elapsed().as_secs_f64() >= idle
                             && server.pending() == 0
+                            && server.in_flight() == 0
                             && self.live_conns() == 0
                         {
                             break;
@@ -845,17 +1130,85 @@ impl FrontDoor {
                 }
             }
             if !progress {
-                std::thread::sleep(Duration::from_micros(100));
+                self.park(server.next_fire_in(), server.in_flight() > 0);
             }
         }
-        // wind-down: answer everything still queued, then flush (a no-op
-        // after the stopping phase already drained)
-        let drained = server.drain()?;
-        for r in drained {
-            self.dispatch(r);
-        }
+        // wind-down: answer everything still queued or in flight, then
+        // flush (a no-op when the stopping phase already drained)
+        self.drain_through(server);
         self.flush_all();
+        // join the workers so run() returns with no execution threads
+        // live (the next run() call re-creates the pool)
+        self.pool = None;
+        self.wake = None;
         Ok(())
+    }
+
+    /// Sleep until socket readiness, a worker-completion wake, or the
+    /// next batching deadline — real `poll(2)` on unix, a bounded sleep
+    /// elsewhere. `next_fire` is the time until the oldest queued batch
+    /// window closes (None = no queued work).
+    fn park(&mut self, next_fire: Option<Duration>, in_flight: bool) {
+        // sub-millisecond batching deadlines want finer resolution than
+        // poll's millisecond timeout: short sleep, re-check
+        if let Some(d) = next_fire {
+            if d <= Duration::from_millis(1) {
+                std::thread::sleep(Duration::from_micros(100));
+                return;
+            }
+        }
+        // bounded even with no visible work: the stop flag and
+        // wall-clock exits must stay responsive
+        let cap: i32 = if next_fire.is_some() || in_flight { 5 } else { 50 };
+        let timeout_ms = next_fire.map_or(cap, |d| (d.as_millis() as i32).clamp(1, cap));
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let mut fds: Vec<sys::PollFd> = Vec::with_capacity(self.conns.len() + 2);
+            if self.accepting {
+                fds.push(sys::PollFd {
+                    fd: self.listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+            }
+            if let Some(w) = self.wake.as_ref() {
+                fds.push(sys::PollFd { fd: w.read_fd, events: sys::POLLIN, revents: 0 });
+            }
+            for c in self.conns.iter().flatten() {
+                if c.broken {
+                    continue;
+                }
+                let mut ev: std::os::raw::c_short = 0;
+                if !c.read_closed {
+                    ev |= sys::POLLIN;
+                }
+                if c.wpos < c.wbuf.len() {
+                    ev |= sys::POLLOUT;
+                }
+                if ev != 0 {
+                    fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+                }
+            }
+            if fds.is_empty() {
+                std::thread::sleep(Duration::from_millis(timeout_ms as u64));
+            } else {
+                // SAFETY: fds is a live, correctly-typed PollFd array;
+                // poll(2) only writes `revents` within its bounds
+                let _ =
+                    unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as sys::NfdsT, timeout_ms) };
+            }
+            // swallow queued wake bytes so a level-triggered poll can't
+            // spin on a non-empty pipe
+            if let Some(w) = self.wake.as_ref() {
+                w.drain();
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = timeout_ms;
+            std::thread::sleep(Duration::from_micros(100));
+        }
     }
 
     fn read_conn(c: &mut Conn, stats: &mut NetStats) -> (bool, Vec<Vec<u8>>) {
@@ -1072,17 +1425,61 @@ impl FrontDoor {
     }
 
     /// Drain the batcher and dispatch every response to its connection —
-    /// the in-flight-work barrier lifecycle operations run behind.
+    /// the in-flight-work barrier lifecycle operations run behind. In
+    /// worker mode this force-closes every batch window, routes the
+    /// batches through the pool, and waits (bounded) for in-flight work
+    /// to settle; inline mode executes on this thread as before.
     fn drain_through<B: Backend>(&mut self, server: &mut Server<'_, B>) {
-        match server.drain() {
-            Ok(rs) => {
-                for r in rs {
-                    self.dispatch(r);
+        if self.pool.is_some() {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let mut out = Vec::new();
+            loop {
+                let mut moved = false;
+                while let Some(item) = server.dequeue_work(true, &mut out) {
+                    moved = true;
+                    self.pool.as_ref().expect("pool checked above").dispatch(item);
+                }
+                if server.in_flight() > 0 {
+                    let p = self.pool.as_ref().expect("pool checked above");
+                    if let Some(done) = p.recv_timeout(Duration::from_millis(50)) {
+                        moved = true;
+                        out.extend(server.complete_work(done));
+                    }
+                }
+                if server.pending() == 0 && server.in_flight() == 0 {
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    crate::log_error!(
+                        "drain barrier timed out with {} batches in flight",
+                        server.in_flight()
+                    );
+                    break;
+                }
+                if !moved && server.in_flight() == 0 {
+                    // nothing dequeues and nothing is in flight — a
+                    // server-level bug; don't spin until the deadline
+                    crate::log_error!(
+                        "drain barrier stuck with {} requests pending",
+                        server.pending()
+                    );
+                    break;
                 }
             }
-            // drain() only errors on server-level bugs; admitted work was
-            // still answered per-batch, so report and continue
-            Err(e) => crate::log_error!("admin drain error: {e:#}"),
+            for r in out {
+                self.dispatch(r);
+            }
+        } else {
+            match server.drain() {
+                Ok(rs) => {
+                    for r in rs {
+                        self.dispatch(r);
+                    }
+                }
+                // drain() only errors on server-level bugs; admitted work
+                // was still answered per-batch, so report and continue
+                Err(e) => crate::log_error!("admin drain error: {e:#}"),
+            }
         }
     }
 
@@ -1099,7 +1496,7 @@ impl FrontDoor {
         let is_ok = r.is_ok();
         let mut reject_code = None;
         let reply = match &r.body {
-            ResponseBody::Logits(l) => encode_ok(tag, r.model as u16, l),
+            ResponseBody::Logits(l) => encode_ok(tag, r.model as u16, l, r.id),
             ResponseBody::Shed(rej) => {
                 let code = code_of(rej);
                 reject_code = Some(code);
@@ -1255,14 +1652,61 @@ mod tests {
 
     #[test]
     fn ok_reply_round_trips() {
-        let body = encode_ok(77, 1, &[0.25, -1.5]);
+        let body = encode_ok(77, 1, &[0.25, -1.5], 42);
         match decode_reply(&body).unwrap() {
-            ClientReply::Ok { tag, model, logits } => {
-                assert_eq!((tag, model), (77, 1));
+            ClientReply::Ok { tag, model, logits, req_id } => {
+                assert_eq!((tag, model, req_id), (77, 1, 42));
                 assert_eq!(logits, vec![0.25, -1.5]);
             }
             other => panic!("expected Ok, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn ok_reply_without_request_id_still_decodes() {
+        // a pre-request-id OK frame (no trailing u64) decodes with
+        // req_id 0 — captured traffic and old servers keep working
+        let body = encode_ok(5, 0, &[1.0, 2.0, 3.0], 9);
+        let legacy = &body[..body.len() - 8];
+        match decode_reply(legacy).unwrap() {
+            ClientReply::Ok { tag, logits, req_id, .. } => {
+                assert_eq!((tag, req_id), (5, 0));
+                assert_eq!(logits.len(), 3);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        // a half-written request id is a framing error
+        let mut bad = body.clone();
+        bad.pop();
+        assert!(decode_reply(&bad).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn wake_pipe_rings_and_drains() {
+        let pipe = WakePipe::new().expect("pipe(2) works on unix");
+        let h = pipe.handle();
+        h.wake();
+        h.wake();
+        let mut fds =
+            [sys::PollFd { fd: pipe.read_fd, events: sys::POLLIN, revents: 0 }];
+        // SAFETY: one live PollFd, zero timeout
+        let n = unsafe { sys::poll(fds.as_mut_ptr(), 1, 0) };
+        assert_eq!(n, 1, "wake byte makes the read end readable");
+        pipe.drain();
+        let mut fds =
+            [sys::PollFd { fd: pipe.read_fd, events: sys::POLLIN, revents: 0 }];
+        // SAFETY: as above
+        let n = unsafe { sys::poll(fds.as_mut_ptr(), 1, 0) };
+        assert_eq!(n, 0, "drained pipe is no longer readable");
+        // an inert handle is a no-op, not a crash
+        WakeHandle::none().wake();
+    }
+
+    #[test]
+    fn run_opts_default_is_inline() {
+        let opts = RunOpts::default();
+        assert!(opts.workers <= 1, "default RunOpts must keep the inline loop");
     }
 
     #[test]

@@ -51,10 +51,32 @@
 //!     request receives exactly one [`Response`], so
 //!     `admitted == ok + shed + failed` always reconciles.
 //!
-//! Single-threaded event loop by design: both backends already
-//! parallelize one execution across cores (the native path via the kernel
-//! dispatcher's row-block fan-out), so concurrent executes only thrash;
-//! the loop instead overlaps batching with execution completion.
+//! **Execution model** — two modes over one batcher:
+//!
+//!   * *Inline* ([`Server::pump`]): batch + execute on the calling
+//!     thread. The default for trace replay, the artifact backend, and
+//!     `--workers 1`.
+//!   * *Off-thread* ([`Server::dequeue_work`] /
+//!     [`Server::complete_work`]): the front door stages a ready batch
+//!     and pins its execution state at dispatch time — the model's
+//!     `Arc<ModelVersion>` handle and the sampled injected fault, via
+//!     [`Backend::dispatch_handle`] — then hands the fully-owned
+//!     [`WorkItem`] to an execution worker
+//!     ([`crate::coordinator::workers`]). While workers execute, the
+//!     front door keeps admitting and may dispatch other buckets
+//!     concurrently (iteration-level scheduling); `complete_work`
+//!     settles accounting and health bookkeeping when results come
+//!     back, in completion order. Version pinning at dispatch keeps the
+//!     reload/evict/quarantine lifecycle exact: a batch executes the
+//!     version it was dispatched against, and lifecycle transitions
+//!     apply from the next dispatch on.
+//!
+//! Per-bucket batch windows are *adaptive*: each (model × seq) slot
+//! tracks an EWMA of request inter-arrival gaps, and a bucket closes
+//! early when the measured arrival rate says waiting out the rest of
+//! the window cannot fill the next batch bucket anyway — sustained slow
+//! arrivals stop paying the full window in latency, while burst traffic
+//! (unknown or tiny gaps) keeps the exact windowed behavior.
 //!
 //! §Perf: the batch staging buffers (`ids_stage` / `mask_stage`) persist
 //! across pumps — one allocation at server construction, zero on the hot
@@ -71,7 +93,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{Backend, ModelHealth};
+use crate::runtime::{Backend, DispatchHandle, ModelHealth};
 use crate::util::stats::{LatencyRecorder, LatencySummary};
 
 /// Typed admission/shed verdicts. `InvalidRequest` and `QueueFull` are
@@ -197,12 +219,61 @@ pub struct ModelInfo {
     pub consec_failures: u32,
 }
 
+/// One staged batch, fully owned and `'static`: everything an execution
+/// worker needs to run the forward without touching the server — the
+/// requests, the padded staging buffers, and the dispatch-pinned model
+/// version + sampled fault ([`Backend::dispatch_handle`]).
+pub struct WorkItem {
+    pub model: usize,
+    /// Batch bucket (rows staged, including padding slots).
+    pub bucket: usize,
+    /// Seq-length ceiling the batch is padded to.
+    pub tcap: usize,
+    pub reqs: Vec<Request>,
+    /// Staged token ids, `bucket * tcap` long (recycled via the
+    /// server's spare-buffer free list on completion).
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub handle: DispatchHandle,
+    /// When the batch left the queue — dispatch-wait accounting.
+    pub staged_at: Instant,
+}
+
+/// The result of one off-thread batch execution, fed back through
+/// [`Server::complete_work`]. Mirrors the three inline `pump()` arms:
+/// `Ok(logits)`, `Err(rendered error)`, and `Err(..)` with `panicked`
+/// set for a caught worker panic.
+pub struct WorkDone {
+    pub model: usize,
+    pub bucket: usize,
+    pub tcap: usize,
+    pub reqs: Vec<Request>,
+    /// Staging buffers riding back for recycling.
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub result: Result<Vec<f32>, String>,
+    /// The failure was a caught panic (feeds
+    /// [`Backend::record_forward_panic`] instead of the error path).
+    pub panicked: bool,
+    pub exec_us: f64,
+    /// Queue-exit to execution-start latency on the worker.
+    pub dispatch_wait_us: f64,
+    /// Executing worker index (per-worker obs attribution).
+    pub worker: usize,
+}
+
 /// One (model × seq-bucket) FIFO.
 struct Slot {
     model: usize,
     /// Seq-length ceiling batches from this slot pad to.
     tcap: usize,
     q: VecDeque<Request>,
+    /// Previous admission into this slot — feeds the inter-arrival EWMA.
+    last_arrival: Option<Instant>,
+    /// EWMA of inter-arrival gaps in µs; `0.0` means unknown (fewer than
+    /// two arrivals, or a same-instant burst) and disables the adaptive
+    /// early close for this slot.
+    ewma_gap_us: f64,
 }
 
 pub struct ServerConfig {
@@ -262,6 +333,15 @@ pub struct Server<'b, B: Backend> {
     next_id: u64,
     ids_stage: Vec<i32>,
     mask_stage: Vec<f32>,
+    /// Recycled off-thread staging buffers: [`Server::complete_work`]
+    /// returns each [`WorkItem`]'s `ids`/`mask` here and
+    /// [`Server::dequeue_work`] pops them, so steady-state off-thread
+    /// staging allocates nothing once the fleet of in-flight batches has
+    /// warmed up.
+    spare: Vec<(Vec<i32>, Vec<f32>)>,
+    /// Batches dequeued via [`Server::dequeue_work`] and not yet settled
+    /// via [`Server::complete_work`].
+    in_flight: usize,
     pub queue_lat: LatencyRecorder,
     pub exec_lat: LatencyRecorder,
     /// Per-*batch* execution latency (one sample per pump, unlike
@@ -351,7 +431,13 @@ impl<'b, B: Backend> Server<'b, B> {
                 backend.check_seq_bucket_for(m, t)?;
             }
             for t in buckets {
-                slots.push(Slot { model: m, tcap: t, q: VecDeque::new() });
+                slots.push(Slot {
+                    model: m,
+                    tcap: t,
+                    q: VecDeque::new(),
+                    last_arrival: None,
+                    ewma_gap_us: 0.0,
+                });
             }
             seqs.push(dims.seq);
             vocabs.push(dims.vocab);
@@ -382,6 +468,8 @@ impl<'b, B: Backend> Server<'b, B> {
             // reallocate
             ids_stage: vec![0; largest * max_seq],
             mask_stage: vec![0.0; largest * max_seq],
+            spare: Vec::new(),
+            in_flight: 0,
             queue_lat: LatencyRecorder::new(),
             exec_lat: LatencyRecorder::new(),
             batch_exec_lat: LatencyRecorder::new(),
@@ -570,7 +658,21 @@ impl<'b, B: Backend> Server<'b, B> {
         let deadline = deadline.or(self.cfg.default_deadline).map(|d| now + d);
         let id = self.next_id;
         self.next_id += 1;
-        self.slots[si].q.push_back(Request { id, ids, mask, enqueued: now, deadline });
+        let slot = &mut self.slots[si];
+        // inter-arrival EWMA feeding the adaptive window close; burst
+        // arrivals contribute ~0 gaps that drag the EWMA toward 0, i.e.
+        // toward the pure windowed behavior (fast traffic fills buckets,
+        // so keep waiting)
+        if let Some(prev) = slot.last_arrival {
+            let gap_us = now.saturating_duration_since(prev).as_secs_f64() * 1e6;
+            slot.ewma_gap_us = if slot.ewma_gap_us > 0.0 {
+                0.8 * slot.ewma_gap_us + 0.2 * gap_us
+            } else {
+                gap_us
+            };
+        }
+        slot.last_arrival = Some(now);
+        slot.q.push_back(Request { id, ids, mask, enqueued: now, deadline });
         Ok(id)
     }
 
@@ -621,6 +723,28 @@ impl<'b, B: Backend> Server<'b, B> {
         self.slots.iter().map(|s| s.q.len()).sum()
     }
 
+    /// Time until the oldest queued request's batch window closes (or
+    /// its shed deadline passes, whichever is sooner); `None` when every
+    /// queue is empty. This is the front door's `poll(2)` park timeout —
+    /// a wakeup heuristic, not a correctness surface: adaptive early
+    /// closes may fire sooner, and the event loop re-evaluates the full
+    /// policy on every turn.
+    pub fn next_fire_in(&self) -> Option<Duration> {
+        let now = Instant::now();
+        let mut best: Option<Duration> = None;
+        for s in &self.slots {
+            if let Some(front) = s.q.front() {
+                let mut t =
+                    (front.enqueued + self.cfg.batch_window).saturating_duration_since(now);
+                if let Some(d) = front.deadline {
+                    t = t.min(d.saturating_duration_since(now));
+                }
+                best = Some(best.map_or(t, |b: Duration| b.min(t)));
+            }
+        }
+        best
+    }
+
     /// Shed every queued request whose deadline has passed — *before*
     /// batching, so an expired request never occupies a batch slot. Each
     /// shed request still gets its one `Response`
@@ -665,17 +789,26 @@ impl<'b, B: Backend> Server<'b, B> {
     ///      fullness so a continuously-full bucket under sustained
     ///      short traffic can never starve a long request — or one
     ///      model's traffic another, lightly-loaded model's — every
-    ///      admitted request waits at most ~window + one execution;
+    ///      admitted request waits at most ~window + one execution. A
+    ///      slot's window also closes *early* when its arrival-rate EWMA
+    ///      says the remaining window cannot fill the next batch bucket
+    ///      (see [`Server::adaptive_expired`]);
     ///   2. otherwise, any slot whose queue fills the largest batch
     ///      bucket (oldest front wins among several), at the largest
     ///      batch — the no-waiting fast path.
     fn pick(&self) -> Option<(usize, usize)> {
+        self.pick_with(self.cfg.batch_window)
+    }
+
+    /// [`Server::pick`] with an explicit window — `Duration::ZERO`
+    /// treats every non-empty slot as expired (the drain/force path).
+    fn pick_with(&self, window: Duration) -> Option<(usize, usize)> {
         let mut expired: Option<(usize, Instant)> = None;
         for (si, s) in self.slots.iter().enumerate() {
             if let Some(front) = s.q.front() {
-                if front.enqueued.elapsed() >= self.cfg.batch_window
-                    && expired.map(|(_, e)| front.enqueued < e).unwrap_or(true)
-                {
+                let fires = front.enqueued.elapsed() >= window
+                    || self.adaptive_expired(s, front.enqueued, window);
+                if fires && expired.map(|(_, e)| front.enqueued < e).unwrap_or(true) {
                     expired = Some((si, front.enqueued));
                 }
             }
@@ -703,6 +836,26 @@ impl<'b, B: Backend> Server<'b, B> {
             }
         }
         full.map(|(si, _)| (si, largest))
+    }
+
+    /// Adaptive early close: with `q.len()` requests queued and a
+    /// measured inter-arrival EWMA, firing now beats waiting when
+    /// `waited + ewma * (next_bucket - q.len()) > window` — the arrivals
+    /// needed to reach the next batch bucket won't land before the
+    /// window expires anyway, so the extra wait buys only latency. A
+    /// slot with an unknown EWMA (or one already at the largest bucket,
+    /// which the full fast path handles) never closes early, so burst
+    /// and offline-replay traffic keep the exact windowed semantics.
+    fn adaptive_expired(&self, s: &Slot, front_enqueued: Instant, window: Duration) -> bool {
+        if s.ewma_gap_us <= 0.0 {
+            return false;
+        }
+        let Some(&next) = self.cfg.batch_buckets.iter().find(|&&b| b > s.q.len()) else {
+            return false;
+        };
+        let missing = (next - s.q.len()) as f64;
+        let waited_us = front_enqueued.elapsed().as_secs_f64() * 1e6;
+        waited_us + s.ewma_gap_us * missing > window.as_secs_f64() * 1e6
     }
 
     /// One event-loop turn: shed expired requests, then batch + execute
@@ -853,6 +1006,182 @@ impl<'b, B: Backend> Server<'b, B> {
         }
     }
 
+    /// Stage the next ready batch for off-thread execution, without
+    /// executing it. Sheds expired requests into `out` first (exactly
+    /// like `pump`), then runs the batching policy (`force` treats every
+    /// window as expired — the graceful-stop drain path) and pins the
+    /// batch's execution state via [`Backend::dispatch_handle`]. A model
+    /// that cannot serve at dispatch time (quarantined/evicted between
+    /// admission and staging) fails its batch typed into `out` and the
+    /// policy moves on to the next ready bucket. Returns `None` when
+    /// nothing is ready — or when the backend does not support
+    /// off-thread execution (callers gate on
+    /// [`Backend::supports_offthread`]; nothing is dequeued either way).
+    pub fn dequeue_work(&mut self, force: bool, out: &mut Vec<Response>) -> Option<WorkItem> {
+        self.shed_expired(Instant::now(), out);
+        loop {
+            let window = if force { Duration::ZERO } else { self.cfg.batch_window };
+            let Some((si, bucket)) = self.pick_with(window) else {
+                if let Some(o) = crate::obs::metrics() {
+                    o.serve_queue_depth.set(self.pending() as u64);
+                }
+                return None;
+            };
+            let (model, tcap) = (self.slots[si].model, self.slots[si].tcap);
+            let handle = match self.backend.dispatch_handle(model) {
+                None => return None,
+                Some(h) => h,
+            };
+            let take = bucket.min(self.slots[si].q.len());
+            let reqs: Vec<Request> =
+                (0..take).map(|_| self.slots[si].q.pop_front().unwrap()).collect();
+            let handle = match handle {
+                Ok(h) => h,
+                Err(e) => {
+                    // shed-at-dispatch: same per-request Failed fan-out as
+                    // an inline health-gate error, then try the next bucket
+                    self.fail_batch(out, reqs, model, bucket, tcap, 0.0, format!("{e:#}"));
+                    continue;
+                }
+            };
+            let stage = bucket * tcap;
+            let (mut ids, mut mask) = self.spare.pop().unwrap_or_default();
+            ids.clear();
+            ids.resize(stage, 0);
+            mask.clear();
+            mask.resize(stage, 0.0);
+            for (i, r) in reqs.iter().enumerate() {
+                let len = r.ids.len();
+                ids[i * tcap..i * tcap + len].copy_from_slice(&r.ids);
+                mask[i * tcap..i * tcap + len].copy_from_slice(&r.mask);
+            }
+            self.in_flight += 1;
+            if let Some(o) = crate::obs::metrics() {
+                o.serve_queue_depth.set(self.pending() as u64);
+            }
+            return Some(WorkItem {
+                model,
+                bucket,
+                tcap,
+                reqs,
+                ids,
+                mask,
+                handle,
+                staged_at: Instant::now(),
+            });
+        }
+    }
+
+    /// Settle one off-thread batch: the accounting mirror of the three
+    /// inline `pump()` outcome arms, plus per-worker observability and
+    /// the backend's off-thread health bookkeeping
+    /// ([`Backend::record_offthread_outcome`] /
+    /// [`Backend::record_forward_panic`]). Staging buffers return to the
+    /// spare free list, so steady-state dispatch allocates nothing.
+    pub fn complete_work(&mut self, done: WorkDone) -> Vec<Response> {
+        let WorkDone {
+            model,
+            bucket,
+            tcap,
+            reqs,
+            ids,
+            mask,
+            result,
+            panicked,
+            exec_us,
+            dispatch_wait_us,
+            worker,
+        } = done;
+        self.in_flight -= 1;
+        self.spare.push((ids, mask));
+        if panicked {
+            self.backend.record_forward_panic(model);
+        } else {
+            self.backend.record_offthread_outcome(model, result.is_ok());
+        }
+        let mut responses = Vec::new();
+        match result {
+            Ok(logits) => {
+                let take = reqs.len();
+                let stage = bucket * tcap;
+                let valid_tokens: u64 = reqs
+                    .iter()
+                    .map(|r| r.mask.iter().filter(|&&m| m == 1.0).count() as u64)
+                    .sum();
+                self.exec_us_total += exec_us;
+                self.batch_exec_lat.record(exec_us);
+                self.batches += 1;
+                self.padded_slots += (bucket - take) as u64;
+                self.total_tokens += stage as u64;
+                self.padded_tokens += stage as u64 - valid_tokens;
+                let obs = crate::obs::metrics();
+                if let Some(o) = obs {
+                    o.serve_batches.inc();
+                    o.serve_total_tokens.add(stage as u64);
+                    o.serve_padded_tokens.add(stage as u64 - valid_tokens);
+                    o.serve_batch_fill_pct.record((take * 100 / bucket) as u64);
+                    o.serve_batch_exec_us.record(exec_us as u64);
+                    o.serve_queue_depth.set(self.pending() as u64);
+                    o.worker_dispatch_wait_us.record(dispatch_wait_us as u64);
+                    if worker < crate::obs::MAX_WORKER_SLOTS {
+                        o.worker_batches[worker].inc();
+                        o.worker_exec_us[worker].record(exec_us as u64);
+                    }
+                }
+                let nc = self.n_classes[model];
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
+                    let queue_us = (total_us - exec_us).max(0.0);
+                    self.queue_lat.record(queue_us);
+                    self.exec_lat.record(exec_us);
+                    self.total_lat.record(total_us);
+                    self.served += 1;
+                    self.served_by_model[model] += 1;
+                    if let Some(o) = obs {
+                        o.serve_served.inc();
+                        o.stage_queue_us.record(queue_us as u64);
+                        o.stage_exec_us.record(exec_us as u64);
+                        o.slow_traces.offer(crate::obs::TraceEntry {
+                            id: r.id.max(1), // 0 marks an empty ring slot
+                            model: model as u16,
+                            seq_bucket: tcap as u16,
+                            batch_size: bucket as u16,
+                            queue_us: queue_us as u64,
+                            exec_us: exec_us as u64,
+                            total_us: total_us as u64,
+                        });
+                    }
+                    responses.push(Response {
+                        id: r.id,
+                        model,
+                        body: ResponseBody::Logits(logits[i * nc..(i + 1) * nc].to_vec()),
+                        queue_us,
+                        exec_us,
+                        batch_size: bucket,
+                        seq_bucket: tcap,
+                    });
+                }
+            }
+            Err(msg) => {
+                if let Some(o) = crate::obs::metrics() {
+                    o.worker_dispatch_wait_us.record(dispatch_wait_us as u64);
+                    if worker < crate::obs::MAX_WORKER_SLOTS {
+                        o.worker_batches[worker].inc();
+                        o.worker_exec_us[worker].record(exec_us as u64);
+                    }
+                }
+                self.fail_batch(&mut responses, reqs, model, bucket, tcap, exec_us, msg);
+            }
+        }
+        responses
+    }
+
+    /// Batches dispatched off-thread and not yet settled — the
+    /// graceful-stop drain loop waits for this to reach zero.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
     /// Drain the queues fully (end of trace). **Total**: every pending
     /// request gets exactly one response — ok, shed, or failed — because
     /// backend faults are isolated per batch inside `pump()`. The
@@ -912,7 +1241,7 @@ impl<'b, B: Backend> Server<'b, B> {
 }
 
 /// Render a `catch_unwind` payload (panics carry `&str` or `String`).
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -1486,6 +1815,164 @@ mod tests {
             let want = solo.drain().unwrap().remove(0);
             assert_eq!(out[i].logits(), want.logits(), "request {i}: multi-model logits diverge");
         }
+    }
+
+    #[test]
+    fn offthread_dequeue_complete_matches_inline_pump() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s, 8);
+        let mut out = Vec::new();
+        let item = s.dequeue_work(false, &mut out).expect("full bucket is ready");
+        assert!(out.is_empty());
+        assert_eq!(s.in_flight(), 1);
+        assert_eq!((item.bucket, item.tcap, item.reqs.len()), (8, 8, 8));
+        assert!(item.handle.fault.is_none());
+        assert!(s.dequeue_work(false, &mut out).is_none(), "queue is empty while in flight");
+        // execute exactly as a worker would: replicated dispatcher, own
+        // workspace, the dispatch-pinned version handle
+        let disp = be.worker_dispatcher().unwrap();
+        let mut ws = crate::runtime::Workspace::new();
+        let logits = crate::runtime::backend::native_serve_forward(
+            "test-worker",
+            &item.handle.version.model,
+            &disp,
+            &mut ws,
+            item.bucket,
+            item.tcap,
+            &item.ids,
+            &item.mask,
+        )
+        .unwrap();
+        let mut got = s.complete_work(WorkDone {
+            model: item.model,
+            bucket: item.bucket,
+            tcap: item.tcap,
+            reqs: item.reqs,
+            ids: item.ids,
+            mask: item.mask,
+            result: Ok(logits),
+            panicked: false,
+            exec_us: 5.0,
+            dispatch_wait_us: 1.0,
+            worker: 0,
+        });
+        assert_eq!(s.in_flight(), 0);
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 8);
+        assert_eq!((s.served, s.batches), (8, 1));
+        assert_eq!(s.admitted, s.served);
+        // reference: the same 8 requests through the inline pump
+        let be2 = tiny_backend();
+        let mut s2 = mk_server(&be2, vec![1, 4, 8], Duration::from_secs(60));
+        submit_n(&mut s2, 8);
+        let mut want = s2.pump().unwrap();
+        want.sort_by_key(|r| r.id);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.logits(), w.logits(), "off-thread logits must match inline bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn offthread_panic_and_error_settle_like_inline() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![1], Duration::ZERO);
+        submit_n(&mut s, 2);
+        let mut out = Vec::new();
+        let item = s.dequeue_work(false, &mut out).unwrap();
+        let done = s.complete_work(WorkDone {
+            model: item.model,
+            bucket: item.bucket,
+            tcap: item.tcap,
+            reqs: item.reqs,
+            ids: item.ids,
+            mask: item.mask,
+            result: Err("backend panicked: injected".into()),
+            panicked: true,
+            exec_us: 3.0,
+            dispatch_wait_us: 1.0,
+            worker: 1,
+        });
+        assert_eq!(done.len(), 1);
+        assert!(matches!(&done[0].body, ResponseBody::Failed(m) if m.contains("panicked")));
+        assert_eq!((s.failed, s.failed_batches), (1, 1));
+        // the second request still serves through the off-thread path
+        let item = s.dequeue_work(false, &mut out).unwrap();
+        let disp = be.worker_dispatcher().unwrap();
+        let mut ws = crate::runtime::Workspace::new();
+        let logits = crate::runtime::backend::native_serve_forward(
+            "test-worker",
+            &item.handle.version.model,
+            &disp,
+            &mut ws,
+            item.bucket,
+            item.tcap,
+            &item.ids,
+            &item.mask,
+        )
+        .unwrap();
+        let done = s.complete_work(WorkDone {
+            model: item.model,
+            bucket: item.bucket,
+            tcap: item.tcap,
+            reqs: item.reqs,
+            ids: item.ids,
+            mask: item.mask,
+            result: Ok(logits),
+            panicked: false,
+            exec_us: 3.0,
+            dispatch_wait_us: 1.0,
+            worker: 0,
+        });
+        assert_eq!(done.len(), 1);
+        assert!(done[0].is_ok());
+        assert_eq!(s.admitted, s.served + s.failed);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn dispatch_time_unavailability_fails_the_batch_typed() {
+        // a model evicted between admission and staging sheds its batch
+        // at dispatch with the registry's typed message — no lost
+        // requests, no worker round trip
+        use crate::modelstore::Registry;
+        let dims = NativeDims {
+            vocab: 64, seq: 8, n_layers: 1, d_model: 16, n_heads: 2, d_ff: 32, n_classes: 2,
+        };
+        let mut reg = Registry::new();
+        reg.register("m", NativeModel::random(dims, &[4], 3)).unwrap();
+        let mut s = Server::new(
+            &reg,
+            ServerConfig {
+                batch_buckets: vec![1],
+                seq_buckets: vec![],
+                batch_window: Duration::ZERO,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        s.submit(vec![1; 8], vec![1.0; 8]).unwrap();
+        reg.evict_model_idx(0).unwrap();
+        let mut out = Vec::new();
+        assert!(s.dequeue_work(false, &mut out).is_none(), "nothing dispatchable remains");
+        assert_eq!(out.len(), 1);
+        assert!(matches!(&out[0].body, ResponseBody::Failed(m) if m.contains("evicted")));
+        assert_eq!((s.failed, s.in_flight()), (1, 0));
+        assert_eq!(s.admitted, s.failed);
+    }
+
+    #[test]
+    fn adaptive_window_closes_early_when_arrivals_lag() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be, vec![2, 8], Duration::from_millis(10));
+        s.submit((0..8).collect(), vec![1.0; 8]).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        s.submit((0..8).collect(), vec![1.0; 8]).unwrap();
+        // EWMA says ~5ms/arrival: the 6 more requests the next bucket (8)
+        // needs are ~30ms away, far past the 10ms window — close at 2 now
+        let out = s.pump().unwrap();
+        assert_eq!(out.len(), 2, "the bucket must close early on measured arrival rate");
+        assert!(out.iter().all(|r| r.batch_size == 2));
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Execution worker pool: N threads that run staged batches off the
+//! front-door thread (the `--workers N` serving mode).
+//!
+//! The front door stays single-threaded for everything stateful —
+//! accept/read/admit, the batching policy, reply routing, lifecycle
+//! admin — and hands each ready [`WorkItem`] to this pool over a
+//! bounded MPMC channel (the [`crate::util::threadpool`] idiom:
+//! `sync_channel` + `Arc<Mutex<Receiver>>`). Each worker owns:
+//!
+//!   * its own [`Workspace`] arena, so the zero-alloc steady state
+//!     holds per worker instead of being serialized through one shared
+//!     scratch buffer;
+//!   * its own kernel [`Dispatcher`] replica
+//!     ([`Dispatcher::replicate`]) — same thread count, same forced
+//!     kernel, same autotuned thresholds, so every worker makes
+//!     identical kernel selections (bit-for-bit determinism with the
+//!     inline path) without contending for one shared kernel pool.
+//!
+//! A batch carries everything it needs ([`WorkItem`] is fully owned:
+//! requests, staging buffers, and the dispatch-pinned
+//! `Arc<ModelVersion>` + sampled fault), so workers never touch the
+//! server, the registry, or each other. Worker panics are caught per
+//! batch — the batch fails typed, the worker thread survives, and
+//! siblings never notice. Completions flow back over an unbounded
+//! channel and ring the front door's wake handle so a `poll(2)`-parked
+//! loop learns about them immediately.
+//!
+//! Shutdown is drop-driven: dropping the pool closes the dispatch
+//! channel, each worker drains what it already holds and exits, and
+//! `Drop` joins every thread.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::net::WakeHandle;
+use crate::coordinator::server::{panic_message, WorkDone, WorkItem};
+use crate::kernels::Dispatcher;
+use crate::runtime::Workspace;
+
+/// Dispatch-channel bound per worker: deep enough to keep every worker
+/// busy with one batch queued behind it, shallow enough that admission
+/// backpressure (queue bounds, deadlines) stays at the front door
+/// instead of hiding work in the channel.
+const CHANNEL_DEPTH_PER_WORKER: usize = 2;
+
+pub struct WorkerPool {
+    /// `None` after shutdown begins; dropping it disconnects the
+    /// receiver and lets workers drain out.
+    tx: Option<SyncSender<WorkItem>>,
+    /// Kept so a failed dispatch (all workers gone) can still settle its
+    /// batch through the completion path instead of losing it.
+    done_tx: Sender<WorkDone>,
+    done_rx: Receiver<WorkDone>,
+    handles: Vec<JoinHandle<()>>,
+    /// Batches sitting in the dispatch channel (dispatched, not yet
+    /// picked up) — the `worker_queue_depth` gauge.
+    queue_depth: Arc<AtomicUsize>,
+    n: usize,
+}
+
+impl WorkerPool {
+    /// Spawn one worker per dispatcher (the caller replicates via
+    /// [`crate::runtime::Backend::worker_dispatcher`]). `wake` is rung
+    /// on every completion; pass [`WakeHandle::none`] when the caller
+    /// polls completions itself (tests, non-unix fallback).
+    pub fn new(dispatchers: Vec<Dispatcher>, wake: WakeHandle) -> Self {
+        let n = dispatchers.len();
+        assert!(n > 0, "worker pool needs at least one worker");
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(n * CHANNEL_DEPTH_PER_WORKER);
+        let rx = Arc::new(Mutex::new(rx));
+        let (done_tx, done_rx) = mpsc::channel::<WorkDone>();
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(n);
+        for (w, disp) in dispatchers.into_iter().enumerate() {
+            let rx = Arc::clone(&rx);
+            let done = done_tx.clone();
+            let depth = Arc::clone(&queue_depth);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mkq-worker-{w}"))
+                    .spawn(move || worker_loop(w, disp, rx, done, depth, wake))
+                    .expect("failed to spawn execution worker"),
+            );
+        }
+        WorkerPool { tx: Some(tx), done_tx, done_rx, handles, queue_depth, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Batches dispatched and not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    /// Hand one staged batch to the pool. Blocks only when the bounded
+    /// channel is full — real backpressure, bounded by
+    /// `workers * CHANNEL_DEPTH_PER_WORKER` batches. If every worker is
+    /// gone (cannot happen while per-batch panic containment holds),
+    /// the batch settles as a failed [`WorkDone`] instead of being lost.
+    pub fn dispatch(&self, item: WorkItem) {
+        let tx = self.tx.as_ref().expect("dispatch after shutdown");
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+        if let Err(mpsc::SendError(item)) = tx.send(item) {
+            self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            let _ = self.done_tx.send(undispatched(item));
+        }
+    }
+
+    /// Non-blocking completion poll.
+    pub fn try_recv(&self) -> Option<WorkDone> {
+        self.done_rx.try_recv().ok()
+    }
+
+    /// Bounded-wait completion poll (the non-`poll(2)` idle path).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<WorkDone> {
+        self.done_rx.recv_timeout(timeout).ok()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx = None; // disconnect: workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Settle a batch the pool could not hand to any worker.
+fn undispatched(item: WorkItem) -> WorkDone {
+    let WorkItem { model, bucket, tcap, reqs, ids, mask, handle: _, staged_at } = item;
+    WorkDone {
+        model,
+        bucket,
+        tcap,
+        reqs,
+        ids,
+        mask,
+        result: Err("worker pool is gone — batch was never executed".to_string()),
+        panicked: false,
+        exec_us: 0.0,
+        dispatch_wait_us: staged_at.elapsed().as_secs_f64() * 1e6,
+        worker: 0,
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    disp: Dispatcher,
+    rx: Arc<Mutex<Receiver<WorkItem>>>,
+    done_tx: Sender<WorkDone>,
+    depth: Arc<AtomicUsize>,
+    wake: WakeHandle,
+) {
+    let mut ws = Workspace::new();
+    loop {
+        // the guard is a statement temporary: held across recv only,
+        // never across execution, so idle workers contend fairly
+        let msg = rx.lock().unwrap().recv();
+        let item = match msg {
+            Ok(i) => i,
+            Err(_) => return, // pool dropped its sender: shutdown
+        };
+        depth.fetch_sub(1, Ordering::SeqCst);
+        if w < crate::obs::MAX_WORKER_SLOTS {
+            if let Some(o) = crate::obs::metrics() {
+                o.worker_busy[w].set(1);
+            }
+        }
+        let done = execute(w, &disp, &mut ws, item);
+        if w < crate::obs::MAX_WORKER_SLOTS {
+            if let Some(o) = crate::obs::metrics() {
+                o.worker_busy[w].set(0);
+            }
+        }
+        if done_tx.send(done).is_err() {
+            return; // front door gone mid-flight (hard teardown)
+        }
+        wake.wake();
+    }
+}
+
+/// Run one batch: apply the dispatch-sampled fault, then the native
+/// forward against the dispatch-pinned model version, with the same
+/// per-batch panic containment as the inline `pump()` path.
+fn execute(w: usize, disp: &Dispatcher, ws: &mut Workspace, item: WorkItem) -> WorkDone {
+    let WorkItem { model, bucket, tcap, reqs, ids, mask, handle, staged_at } = item;
+    let dispatch_wait_us = staged_at.elapsed().as_secs_f64() * 1e6;
+    let fault = handle.fault;
+    let version = &handle.version;
+    let exec_start = Instant::now();
+    // AssertUnwindSafe: the only state across the catch boundary is this
+    // worker's own workspace arena, fully overwritten per shape by every
+    // forward — same argument as the inline pump's catch_unwind.
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(f) = fault {
+            f.apply()?;
+        }
+        crate::runtime::backend::native_serve_forward(
+            "worker backend",
+            &version.model,
+            disp,
+            ws,
+            bucket,
+            tcap,
+            &ids,
+            &mask,
+        )
+    }));
+    let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    let (result, panicked) = match caught {
+        Ok(Ok(logits)) => (Ok(logits), false),
+        Ok(Err(e)) => (Err(format!("{e:#}")), false),
+        Err(payload) => (Err(format!("backend panicked: {}", panic_message(payload))), true),
+    };
+    WorkDone {
+        model,
+        bucket,
+        tcap,
+        reqs,
+        ids,
+        mask,
+        result,
+        panicked,
+        exec_us,
+        dispatch_wait_us,
+        worker: w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::faults::FaultPlan;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::runtime::{Backend, NativeBackend, NativeDims, NativeModel};
+
+    fn tiny_backend() -> NativeBackend {
+        let dims = NativeDims {
+            vocab: 64,
+            seq: 8,
+            n_layers: 1,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_classes: 2,
+        };
+        NativeBackend::with_model(NativeModel::random(dims, &[4], 7))
+    }
+
+    fn mk_server(be: &NativeBackend) -> Server<'_, NativeBackend> {
+        Server::new(
+            be,
+            ServerConfig {
+                batch_buckets: vec![1, 4],
+                seq_buckets: vec![],
+                batch_window: std::time::Duration::from_secs(60),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    /// Drive a server's queues through the pool to empty — the
+    /// in-process harness the determinism and chaos tests reuse.
+    fn drain_through_pool(
+        s: &mut Server<'_, NativeBackend>,
+        pool: &WorkerPool,
+    ) -> Vec<crate::coordinator::server::Response> {
+        let mut out = Vec::new();
+        while s.pending() > 0 || s.in_flight() > 0 {
+            while let Some(item) = s.dequeue_work(true, &mut out) {
+                pool.dispatch(item);
+            }
+            if s.in_flight() > 0 {
+                let done = pool
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("a dispatched batch must complete");
+                out.extend(s.complete_work(done));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pool_serves_a_server_drain_completely() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be);
+        for i in 0..13usize {
+            let ids: Vec<i32> = (0..8).map(|j| ((i + j) % 64) as i32).collect();
+            s.submit(ids, vec![1.0; 8]).unwrap();
+        }
+        let pool = WorkerPool::new(
+            (0..4).map(|_| be.worker_dispatcher().unwrap()).collect(),
+            WakeHandle::none(),
+        );
+        assert_eq!(pool.len(), 4);
+        let out = drain_through_pool(&mut s, &pool);
+        assert_eq!(out.len(), 13);
+        assert!(out.iter().all(|r| r.is_ok()));
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 13, "exactly one response per admitted request");
+        assert_eq!(s.served, 13);
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn worker_panic_fails_one_batch_and_the_pool_survives() {
+        let mut be = tiny_backend();
+        be.set_faults(FaultPlan::panic_nth(1));
+        let mut s = mk_server(&be);
+        for i in 0..6usize {
+            let ids: Vec<i32> = (0..8).map(|j| ((i + j) % 64) as i32).collect();
+            s.submit(ids, vec![1.0; 8]).unwrap();
+        }
+        let pool = WorkerPool::new(
+            (0..2).map(|_| be.worker_dispatcher().unwrap()).collect(),
+            WakeHandle::none(),
+        );
+        let out = drain_through_pool(&mut s, &pool);
+        assert_eq!(out.len(), 6, "every request settles despite the panic");
+        let failed: Vec<_> = out.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(failed.len(), 4, "the first dispatched batch (of 4) fails");
+        assert!(out.iter().filter(|r| r.is_ok()).count() == 2);
+        assert_eq!(s.admitted, s.served + s.failed);
+        // the panicked worker thread is still alive and serving: push
+        // another full round through the same pool
+        for i in 0..4usize {
+            let ids: Vec<i32> = (0..8).map(|j| ((i + j) % 64) as i32).collect();
+            s.submit(ids, vec![1.0; 8]).unwrap();
+        }
+        let out = drain_through_pool(&mut s, &pool);
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|r| r.is_ok()), "the pool keeps serving after a contained panic");
+    }
+
+    #[test]
+    fn pool_results_match_inline_bit_for_bit() {
+        let be = tiny_backend();
+        let mut s = mk_server(&be);
+        let reqs: Vec<Vec<i32>> =
+            (0..9).map(|i| (0..8).map(|j| ((i * 5 + j) % 64) as i32).collect()).collect();
+        for ids in &reqs {
+            s.submit(ids.clone(), vec![1.0; 8]).unwrap();
+        }
+        let pool = WorkerPool::new(
+            (0..3).map(|_| be.worker_dispatcher().unwrap()).collect(),
+            WakeHandle::none(),
+        );
+        let mut got = drain_through_pool(&mut s, &pool);
+        got.sort_by_key(|r| r.id);
+
+        let be2 = tiny_backend();
+        let mut s2 = mk_server(&be2);
+        for ids in &reqs {
+            s2.submit(ids.clone(), vec![1.0; 8]).unwrap();
+        }
+        let mut want = s2.drain().unwrap();
+        want.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.logits(), w.logits(), "pool logits must match inline bit-for-bit");
+        }
+    }
+}

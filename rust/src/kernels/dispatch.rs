@@ -271,6 +271,17 @@ impl Dispatcher {
         self.threads
     }
 
+    /// A new dispatcher making exactly the same kernel selections as this
+    /// one — same thread count, forced kind, and recorded [`Tuning`] — but
+    /// with its **own** thread pool. Execution workers each replicate the
+    /// backend's dispatcher so concurrent batches never contend on (or
+    /// cross-attribute panics through) one shared pool, while selection
+    /// parity keeps multi-worker logits bit-for-bit equal to single-worker.
+    pub fn replicate(&self) -> Dispatcher {
+        let pool = if self.threads > 1 { Some(ThreadPool::new(self.threads - 1)) } else { None };
+        Dispatcher { threads: self.threads, pool, force: self.force, tuning: self.tuning }
+    }
+
     pub fn tuning(&self) -> Tuning {
         self.tuning
     }
@@ -576,6 +587,20 @@ mod tests {
                 assert_eq!(d.qmatmul(&x, m, k, &pw, &sx), want, "bits={bits}");
             }
         }
+    }
+
+    #[test]
+    fn replicate_preserves_selection() {
+        let mut d = Dispatcher::with_threads(3);
+        d.tuning.simd_macs_threshold = 123;
+        let r = d.replicate();
+        assert_eq!(r.threads(), d.threads());
+        assert_eq!(r.tuning().simd_macs_threshold, 123);
+        for (m, k, n) in [(1, 16, 16), (8, 192, 192), (512, 768, 768)] {
+            assert_eq!(r.select(m, k, n), d.select(m, k, n), "{m}x{k}x{n}");
+        }
+        let f = Dispatcher::forced(2, KernelKind::Blocked).replicate();
+        assert_eq!(f.select(512, 768, 768), KernelKind::Blocked);
     }
 
     #[test]

@@ -80,6 +80,10 @@ fn usage() -> ! {
                 when fleet resident bytes exceed the budget)
                 --stats-every-secs N  (--listen only: print a one-line
                 [obs] summary to stderr every N seconds)
+                --workers N  (--listen only: execution worker threads;
+                default min(4, cores); 1 = classic inline loop; each
+                worker owns its workspace + kernel dispatcher replica,
+                so batches execute while the front door keeps admitting)
   admin:        mkq-bert admin <reload|evict|status|metrics> --addr
                 HOST:PORT [--model-index N]  — reload swaps in a freshly
                 loaded version after draining in-flight work (old-version
@@ -948,14 +952,18 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         let serve_secs = args.f64("serve-secs", conf.f64("serve.serve_secs", 0.0));
         let idle_exit = args.f64("idle-exit-secs", conf.f64("serve.idle_exit_secs", 0.0));
         let stats_every = args.f64("stats-every-secs", conf.f64("serve.stats_every_secs", 0.0));
+        let default_workers = std::thread::available_parallelism().map_or(1, |p| p.get()).min(4);
+        let workers =
+            args.usize("workers", conf.usize("serve.workers", default_workers)).max(1);
         println!(
             "listening on {local} (proto v{PROTO_VERSION}, max_pending {max_pending}, \
-             default deadline {deadline_us}us)"
+             default deadline {deadline_us}us, workers {workers})"
         );
         let opts = RunOpts {
             for_secs: if serve_secs > 0.0 { Some(serve_secs) } else { None },
             idle_exit_secs: if idle_exit > 0.0 { Some(idle_exit) } else { None },
             stats_every_secs: if stats_every > 0.0 { Some(stats_every) } else { None },
+            workers,
         };
         // SIGTERM/SIGINT trip the same graceful-stop path as --serve-secs
         // expiry: stop accepting, drain in-flight work, answer late
@@ -1204,6 +1212,13 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
             lat.max()
         );
     }
+    if tally.slowest_us > 0 {
+        println!(
+            "  slowest served: {}us, server req_id {} (join key against the server's \
+             slow-trace ring in `admin metrics --json`)",
+            tally.slowest_us, tally.slowest_req_id
+        );
+    }
 
     // post-run server-side scrape: the same run seen from the other end
     // of the socket, so client and server accounting can reconcile
@@ -1261,6 +1276,7 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
              \"served\": {}, \"shed_deadline\": {}, \"queue_full\": {}, \"backend_failed\": {}, \
              \"unavailable\": {}, \"lost\": {}, \"conn_retries\": {conn_retries}, \
              \"p90_us\": {:.3}, \"p99_us\": {:.3}, \"p999_us\": {:.3}, \"mean_us\": {:.3}, \
+             \"slowest_us\": {}, \"slowest_req_id\": {}, \
              \"wall_s\": {:.3}{srv_meta}}}\n}}\n",
             tally.sent,
             tally.ok,
@@ -1273,6 +1289,8 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
             lat.quantile(0.99),
             lat.quantile(0.999),
             lat.mean(),
+            tally.slowest_us,
+            tally.slowest_req_id,
             wall_s
         ));
         std::fs::write(path, s).map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))?;
@@ -1368,6 +1386,11 @@ struct LoadTally {
     /// server uses, so p50/p90/p99/p999 come from bucket walks instead
     /// of a sorted Vec (mergeable across workers, O(1) per record).
     lat_ok_us: mkq::obs::Histogram,
+    /// Slowest served request this client saw, with the
+    /// **server-assigned** request id echoed in its OK frame — the join
+    /// key against the server's slow-trace ring (`admin metrics`).
+    slowest_us: u64,
+    slowest_req_id: u64,
 }
 
 impl Default for LoadTally {
@@ -1383,11 +1406,23 @@ impl Default for LoadTally {
             other: 0,
             lost: 0,
             lat_ok_us: mkq::obs::Histogram::new(),
+            slowest_us: 0,
+            slowest_req_id: 0,
         }
     }
 }
 
 impl LoadTally {
+    fn record_ok(&mut self, lat: std::time::Duration, req_id: u64) {
+        self.ok += 1;
+        self.lat_ok_us.record_us(lat);
+        let us = lat.as_micros() as u64;
+        if us > self.slowest_us {
+            self.slowest_us = us;
+            self.slowest_req_id = req_id;
+        }
+    }
+
     fn absorb_reject(&mut self, code: mkq::coordinator::net::RejectCode) {
         use mkq::coordinator::net::RejectCode as C;
         match code {
@@ -1413,6 +1448,10 @@ impl LoadTally {
         self.other += o.other;
         self.lost += o.lost;
         self.lat_ok_us.merge_from(&o.lat_ok_us);
+        if o.slowest_us > self.slowest_us {
+            self.slowest_us = o.slowest_us;
+            self.slowest_req_id = o.slowest_req_id;
+        }
     }
 }
 
@@ -1456,9 +1495,8 @@ fn loadgen_closed_worker(
         }
         t.sent += 1;
         match net::read_reply(&mut stream) {
-            Ok(ClientReply::Ok { .. }) => {
-                t.ok += 1;
-                t.lat_ok_us.record_us(sent_at.elapsed());
+            Ok(ClientReply::Ok { req_id, .. }) => {
+                t.record_ok(sent_at.elapsed(), req_id);
             }
             Ok(ClientReply::Reject { code, .. }) => t.absorb_reject(code),
             Ok(ClientReply::Info { .. }) | Ok(ClientReply::Admin { .. }) => t.other += 1,
@@ -1502,9 +1540,15 @@ fn loadgen_open_worker(
     let mut rstream = stream;
     let _ = rstream.set_read_timeout(Some(std::time::Duration::from_secs(5)));
 
-    // send times by per-connection request index (tag low bits), so the
-    // reader can compute latency for out-of-order completions
-    let starts: Arc<Mutex<Vec<Option<std::time::Instant>>>> = Arc::new(Mutex::new(vec![None; n]));
+    // send times in a fixed-size ring keyed by per-connection request
+    // index (tag low bits), so the reader can compute latency for
+    // out-of-order completions. The ring keeps memory flat at
+    // million-request trace sizes: a slot overwritten before its reply
+    // lands (more than RING in flight) just goes untimed — the stored
+    // index disambiguates, and the outcome counts stay exact.
+    const RING: usize = 4096;
+    let starts: Arc<Mutex<Vec<Option<(u64, std::time::Instant)>>>> =
+        Arc::new(Mutex::new(vec![None; RING]));
     let w_starts = Arc::clone(&starts);
     let writer = std::thread::spawn(move || -> u64 {
         let mut rng = mkq::util::rng::Rng::new(2000 + ci);
@@ -1519,7 +1563,7 @@ fn loadgen_open_worker(
             let ids: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
             let mask = vec![1.0f32; len];
             let tag = (ci << 32) | i as u64;
-            w_starts.lock().unwrap()[i] = Some(std::time::Instant::now());
+            w_starts.lock().unwrap()[i & (RING - 1)] = Some((i as u64, std::time::Instant::now()));
             let frame = net::encode_request(tag, model, deadline_us, &ids, &mask);
             if net::send_frame(&mut wstream, &frame).is_err() {
                 break;
@@ -1533,12 +1577,12 @@ fn loadgen_open_worker(
     let mut got = 0usize;
     while got < n {
         match net::read_reply(&mut rstream) {
-            Ok(ClientReply::Ok { tag, .. }) => {
+            Ok(ClientReply::Ok { tag, req_id, .. }) => {
                 got += 1;
-                t.ok += 1;
                 let i = (tag & 0xffff_ffff) as usize;
-                if let Some(Some(s)) = starts.lock().unwrap().get(i).copied() {
-                    t.lat_ok_us.record_us(s.elapsed());
+                match starts.lock().unwrap()[i & (RING - 1)] {
+                    Some((idx, s)) if idx == i as u64 => t.record_ok(s.elapsed(), req_id),
+                    _ => t.ok += 1, // slot recycled: counted, untimed
                 }
             }
             Ok(ClientReply::Reject { code, .. }) => {

@@ -42,7 +42,8 @@ use crate::coordinator::faults::{FaultPlan, Faults};
 use crate::kernels::Dispatcher;
 use crate::runtime::native::NativeDims;
 use crate::runtime::{
-    Backend, ModelHealth, ModelStatus, NativeModel, Precision, ServeDims, Workspace,
+    Backend, DispatchHandle, ModelHealth, ModelStatus, NativeModel, Precision, ServeDims,
+    Workspace,
 };
 
 /// Consecutive forward failures before a model is flagged `Degraded`.
@@ -360,6 +361,23 @@ impl Registry {
         self.slots.borrow().get(model).and_then(|s| s.cur.clone())
     }
 
+    /// Record one forward success: the consecutive-failure counter
+    /// resets and a `Degraded`/`Loading` slot heals to `Serving`. Shared
+    /// by the inline serve path and off-thread completion bookkeeping so
+    /// the two cannot drift.
+    fn note_success(&self, idx: usize, s: &ModelSlot) {
+        s.consec_failures.set(0);
+        if matches!(s.health.get(), ModelHealth::Degraded | ModelHealth::Loading) {
+            s.health.set(ModelHealth::Serving);
+            if idx < crate::obs::MAX_MODEL_SLOTS {
+                if let Some(o) = crate::obs::metrics() {
+                    o.model_health_transitions[idx].inc();
+                    o.model_health[idx].set(ModelHealth::Serving.as_u8() as u64);
+                }
+            }
+        }
+    }
+
     /// Record one forward failure; crossing the thresholds drives
     /// `Serving → Degraded → Quarantined`.
     fn note_failure(&self, idx: usize, s: &ModelSlot) {
@@ -531,21 +549,74 @@ impl Backend for Registry {
             )
         })();
         match &r {
-            Ok(_) => {
-                s.consec_failures.set(0);
-                if matches!(s.health.get(), ModelHealth::Degraded | ModelHealth::Loading) {
-                    s.health.set(ModelHealth::Serving);
-                    if model < crate::obs::MAX_MODEL_SLOTS {
-                        if let Some(o) = crate::obs::metrics() {
-                            o.model_health_transitions[model].inc();
-                            o.model_health[model].set(ModelHealth::Serving.as_u8() as u64);
-                        }
-                    }
-                }
-            }
+            Ok(_) => self.note_success(model, s),
             Err(_) => self.note_failure(model, s),
         }
         r
+    }
+
+    fn supports_offthread(&self) -> bool {
+        true
+    }
+
+    fn worker_dispatcher(&self) -> Option<Dispatcher> {
+        Some(self.disp.replicate())
+    }
+
+    fn dispatch_handle(&self, model: usize) -> Option<Result<DispatchHandle>> {
+        let slots = self.slots.borrow();
+        let s = match slots.get(model) {
+            Some(s) => s,
+            None => {
+                return Some(Err(anyhow::anyhow!(
+                    "model index {model} out of range ({} registered)",
+                    slots.len()
+                )))
+            }
+        };
+        // same gate as the inline path: quarantine/eviction sheds are
+        // policy, not new evidence against the slot
+        match s.health.get() {
+            ModelHealth::Quarantined => {
+                return Some(Err(anyhow::anyhow!(
+                    "model {:?} is quarantined ({} consecutive forward failures) — reload to \
+                     recover",
+                    s.name,
+                    s.consec_failures.get()
+                )))
+            }
+            ModelHealth::Evicted => {
+                return Some(Err(anyhow::anyhow!(
+                    "model {:?} is evicted — reload to restore it",
+                    s.name
+                )))
+            }
+            _ => {}
+        }
+        let cur = match &s.cur {
+            Some(c) => c,
+            None => {
+                return Some(Err(anyhow::anyhow!("model {:?} has no loaded weights", s.name)))
+            }
+        };
+        let now = self.use_clock.get() + 1;
+        self.use_clock.set(now);
+        s.last_used.set(now);
+        // the fault counter is consumed here, at dispatch, so injected
+        // faults land in dispatch order regardless of which worker (or
+        // when) the batch executes
+        Some(Ok(DispatchHandle { version: Arc::clone(cur), fault: self.faults.sample_forward() }))
+    }
+
+    fn record_offthread_outcome(&self, model: usize, ok: bool) {
+        let slots = self.slots.borrow();
+        if let Some(s) = slots.get(model) {
+            if ok {
+                self.note_success(model, s);
+            } else {
+                self.note_failure(model, s);
+            }
+        }
     }
 
     fn layer_forward(
@@ -712,6 +783,56 @@ mod tests {
         let err = reg.reload_model_idx(0).unwrap_err();
         assert!(err.to_string().contains("in-memory"), "{err}");
         assert!(reg.reload_model_idx(7).is_err(), "bad index");
+    }
+
+    #[test]
+    fn dispatch_handle_gates_health_and_outcomes_drive_the_state_machine() {
+        let mut reg = Registry::new();
+        reg.register("m", tiny(11, 2)).unwrap();
+        assert!(reg.supports_offthread());
+
+        // healthy slot: a handle comes back pointing at the live version
+        let h = reg.dispatch_handle(0).unwrap().unwrap();
+        assert_eq!(h.version.version, 1);
+        assert!(h.fault.is_none(), "inert faults sample to None");
+        assert!(reg.dispatch_handle(7).unwrap().is_err(), "bad index is typed");
+
+        // off-thread failures walk Serving -> Degraded -> Quarantined,
+        // exactly like inline failures
+        for _ in 0..QUARANTINE_AFTER_FAILURES {
+            reg.record_offthread_outcome(0, false);
+        }
+        assert_eq!(reg.model_status(0).unwrap().health, ModelHealth::Quarantined);
+        let err = reg.dispatch_handle(0).unwrap().unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
+
+        // eviction sheds typed at dispatch too
+        let mut reg2 = Registry::new();
+        reg2.register("m", tiny(12, 2)).unwrap();
+        reg2.evict_model_idx(0).unwrap();
+        let err = reg2.dispatch_handle(0).unwrap().unwrap_err();
+        assert!(err.to_string().contains("evicted"), "{err}");
+
+        // a Degraded slot heals on an off-thread success
+        let mut reg3 = Registry::new();
+        reg3.register("m", tiny(13, 2)).unwrap();
+        for _ in 0..DEGRADE_AFTER_FAILURES {
+            reg3.record_offthread_outcome(0, false);
+        }
+        assert_eq!(reg3.model_status(0).unwrap().health, ModelHealth::Degraded);
+        reg3.record_offthread_outcome(0, true);
+        let st = reg3.model_status(0).unwrap();
+        assert_eq!(st.health, ModelHealth::Serving);
+        assert_eq!(st.consec_failures, 0);
+
+        // sampled faults come out in dispatch order
+        let mut reg4 = Registry::new();
+        reg4.register("m", tiny(14, 2)).unwrap();
+        reg4.set_faults(FaultPlan::fail_every(2));
+        let f1 = reg4.dispatch_handle(0).unwrap().unwrap().fault.unwrap();
+        let f2 = reg4.dispatch_handle(0).unwrap().unwrap().fault.unwrap();
+        assert!(f1.apply().is_ok(), "forward #1 passes");
+        assert!(f2.apply().is_err(), "forward #2 carries the injected failure");
     }
 
     #[test]

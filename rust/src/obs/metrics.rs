@@ -89,6 +89,10 @@ pub const MAX_MODEL_SLOTS: usize = 32;
 /// packed-f32 GEMM (`kernels::dispatch` owns the index mapping).
 pub const N_KERNEL_SLOTS: usize = 8;
 
+/// Fixed per-execution-worker metric slots (`--workers N` is clamped
+/// well below this; workers past the cap still serve, just unlabeled).
+pub const MAX_WORKER_SLOTS: usize = 16;
+
 pub struct MetricsRegistry {
     // -- front door (coordinator/net.rs) --------------------------------
     pub net_accepted_conns: Counter,
@@ -134,6 +138,18 @@ pub struct MetricsRegistry {
     pub model_reloads: [Counter; MAX_MODEL_SLOTS],
     pub model_evicts: [Counter; MAX_MODEL_SLOTS],
     pub model_forward_failures: [Counter; MAX_MODEL_SLOTS],
+
+    // -- execution workers (coordinator/workers.rs) ---------------------
+    /// Worker threads the front door is running (1 = inline loop).
+    pub workers_configured: Gauge,
+    /// Batches sitting in the dispatch channel, not yet claimed.
+    pub worker_queue_depth: Gauge,
+    /// Batch staged by the front door → claimed by a worker.
+    pub worker_dispatch_wait_us: Histogram,
+    pub worker_batches: [Counter; MAX_WORKER_SLOTS],
+    /// 1 while the worker is executing a batch, 0 while parked.
+    pub worker_busy: [Gauge; MAX_WORKER_SLOTS],
+    pub worker_exec_us: [Histogram; MAX_WORKER_SLOTS],
 
     // -- kernels (kernels/dispatch.rs) ----------------------------------
     pub kernel_calls: [Counter; N_KERNEL_SLOTS],
@@ -182,6 +198,12 @@ impl MetricsRegistry {
             model_reloads: [const { Counter::new() }; MAX_MODEL_SLOTS],
             model_evicts: [const { Counter::new() }; MAX_MODEL_SLOTS],
             model_forward_failures: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            workers_configured: Gauge::new(),
+            worker_queue_depth: Gauge::new(),
+            worker_dispatch_wait_us: Histogram::new(),
+            worker_batches: [const { Counter::new() }; MAX_WORKER_SLOTS],
+            worker_busy: [const { Gauge::new() }; MAX_WORKER_SLOTS],
+            worker_exec_us: [const { Histogram::new() }; MAX_WORKER_SLOTS],
             kernel_calls: [const { Counter::new() }; N_KERNEL_SLOTS],
             kernel_macs: [const { Counter::new() }; N_KERNEL_SLOTS],
             slow_traces: SlowTraces::new(),
@@ -376,6 +398,33 @@ pub fn render_prometheus() -> String {
         }
     }
 
+    prom_gauge(&mut out, "workers_configured", "execution worker threads (1 = inline loop)", r.workers_configured.get());
+    prom_gauge(&mut out, "worker_queue_depth", "batches queued for workers, unclaimed", r.worker_queue_depth.get());
+    prom_hist(&mut out, "worker_dispatch_wait_us", "batch staged to claimed by a worker", &r.worker_dispatch_wait_us);
+    let n_workers = (r.workers_configured.get() as usize).min(MAX_WORKER_SLOTS);
+    if n_workers > 1 {
+        let _ = writeln!(out, "# HELP mkq_worker_batches_total batches executed per worker");
+        let _ = writeln!(out, "# TYPE mkq_worker_batches_total counter");
+        for w in 0..n_workers {
+            let _ = writeln!(out, "mkq_worker_batches_total{{worker=\"{w}\"}} {}", r.worker_batches[w].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_worker_busy 1 while the worker is executing a batch");
+        let _ = writeln!(out, "# TYPE mkq_worker_busy gauge");
+        for w in 0..n_workers {
+            let _ = writeln!(out, "mkq_worker_busy{{worker=\"{w}\"}} {}", r.worker_busy[w].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_worker_exec_us batch forward microseconds per worker");
+        let _ = writeln!(out, "# TYPE mkq_worker_exec_us summary");
+        for w in 0..n_workers {
+            let h = &r.worker_exec_us[w];
+            for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(out, "mkq_worker_exec_us{{worker=\"{w}\",quantile=\"{label}\"}} {:.1}", h.quantile(q));
+            }
+            let _ = writeln!(out, "mkq_worker_exec_us_sum{{worker=\"{w}\"}} {}", h.sum());
+            let _ = writeln!(out, "mkq_worker_exec_us_count{{worker=\"{w}\"}} {}", h.count());
+        }
+    }
+
     let _ = writeln!(out, "# HELP mkq_kernel_calls_total GEMM calls by kernel kind");
     let _ = writeln!(out, "# TYPE mkq_kernel_calls_total counter");
     for (i, name) in crate::kernels::dispatch::KERNEL_SLOT_NAMES.iter().enumerate() {
@@ -431,6 +480,8 @@ pub fn render_json() -> String {
         ("serve_padded_tokens", r.serve_padded_tokens.get()),
         ("serve_total_tokens", r.serve_total_tokens.get()),
         ("serve_queue_depth", r.serve_queue_depth.get()),
+        ("workers_configured", r.workers_configured.get()),
+        ("worker_queue_depth", r.worker_queue_depth.get()),
     ];
     for (name, v) in scalars {
         let _ = writeln!(out, "  \"{name}\": {v},");
@@ -452,7 +503,24 @@ pub fn render_json() -> String {
     json_hist(&mut out, "stage_exec_us", &r.stage_exec_us);
     out.push_str(",\n  ");
     json_hist(&mut out, "stage_total_us", &r.stage_total_us);
-    out.push_str(",\n  \"models\": [");
+    out.push_str(",\n  ");
+    json_hist(&mut out, "worker_dispatch_wait_us", &r.worker_dispatch_wait_us);
+    out.push_str(",\n  \"workers\": [");
+    let n_workers = (r.workers_configured.get() as usize).min(MAX_WORKER_SLOTS);
+    for w in 0..n_workers {
+        if w > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"worker\": {w}, \"batches\": {}, \"busy\": {}, \"exec_p50_us\": {:.1}, \"exec_p99_us\": {:.1}}}",
+            r.worker_batches[w].get(),
+            r.worker_busy[w].get(),
+            r.worker_exec_us[w].quantile(0.5),
+            r.worker_exec_us[w].quantile(0.99)
+        );
+    }
+    out.push_str("],\n  \"models\": [");
     let labels = r.model_labels_snapshot();
     for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
         if i > 0 {
@@ -547,11 +615,29 @@ mod tests {
             "mkq_serve_served",
             "mkq_stage_queue_us",
             "mkq_kernel_calls_total",
+            "mkq_workers_configured",
+            "mkq_worker_queue_depth",
+            "mkq_worker_dispatch_wait_us",
         ] {
             assert!(text.contains(series), "missing {series}");
         }
         let json = render_json();
         assert!(json.contains("\"serve_served\""));
         assert!(json.contains("\"slow_traces\""));
+        assert!(json.contains("\"workers\""));
+    }
+
+    #[test]
+    fn per_worker_series_render_when_workers_configured() {
+        // per-worker rows are gated on the configured count so a
+        // single-threaded server's scrape stays compact
+        registry().workers_configured.set(3);
+        registry().worker_batches[2].inc();
+        let text = render_prometheus();
+        assert!(text.contains("mkq_worker_batches_total{worker=\"2\"}"));
+        assert!(text.contains("mkq_worker_exec_us{worker=\"0\",quantile=\"0.5\"}"));
+        let json = render_json();
+        assert!(json.contains("\"worker\": 2"));
+        registry().workers_configured.set(0);
     }
 }

@@ -27,6 +27,6 @@ pub use hist::Histogram;
 pub use metrics::{
     json_u64_field, metrics, metrics_enabled, register_model_label, registry, render_json,
     render_prometheus, render_statusline, set_metrics_enabled, Counter, Gauge, MetricsRegistry,
-    MAX_MODEL_SLOTS, N_KERNEL_SLOTS, N_REJECT_CODES,
+    MAX_MODEL_SLOTS, MAX_WORKER_SLOTS, N_KERNEL_SLOTS, N_REJECT_CODES,
 };
 pub use trace::{SlowTraces, TraceEntry};

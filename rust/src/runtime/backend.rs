@@ -14,14 +14,27 @@
 //! numbers in `BENCH_kernels.json` are produced.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::faults::{FaultPlan, Faults};
+use crate::coordinator::faults::{FaultPlan, Faults, SampledFault};
 use crate::kernels::Dispatcher;
+use crate::modelstore::{LoadStats, ModelVersion};
 
 use super::native::{NativeLayer, NativeModel};
 use super::workspace::Workspace;
+
+/// Everything an execution worker needs to run one batch off the
+/// front-door thread: the `Arc`-pinned model version (in-flight batches
+/// hold the handle across reload/evict, exactly like the inline path)
+/// plus any fault sampled off the backend's shared counter at dispatch
+/// time, so fault ordering stays deterministic in dispatch order
+/// regardless of worker count.
+pub struct DispatchHandle {
+    pub version: Arc<ModelVersion>,
+    pub fault: Option<SampledFault>,
+}
 
 /// Serving-facing model dimensions.
 #[derive(Debug, Clone, Copy)]
@@ -235,6 +248,39 @@ pub trait Backend {
         let _ = model;
     }
 
+    /// Can batches be handed to execution workers via
+    /// [`Backend::dispatch_handle`]? The default is inline-only — the
+    /// fixed-shape artifact backend and model-less benches stay on the
+    /// single-threaded path unchanged.
+    fn supports_offthread(&self) -> bool {
+        false
+    }
+
+    /// Pin one batch's execution state at dispatch time: `None` when
+    /// off-thread execution is unsupported (caller falls back inline),
+    /// `Some(Err(_))` when the model cannot serve right now (the batch
+    /// fails typed without executing), `Some(Ok(_))` with the `Arc`'d
+    /// version handle + sampled fault otherwise.
+    fn dispatch_handle(&self, model: usize) -> Option<Result<DispatchHandle>> {
+        let _ = model;
+        None
+    }
+
+    /// A fresh dispatcher making identical kernel selections to the
+    /// backend's own, for one execution worker to own (see
+    /// [`Dispatcher::replicate`]).
+    fn worker_dispatcher(&self) -> Option<Dispatcher> {
+        None
+    }
+
+    /// Health bookkeeping for a batch that executed off-thread — the
+    /// mirror of the success/failure accounting the inline
+    /// `serve_forward_for` does internally. Panics are reported through
+    /// [`Backend::record_forward_panic`] instead, never here.
+    fn record_offthread_outcome(&self, model: usize, ok: bool) {
+        let _ = (model, ok);
+    }
+
     /// Guard for the defaulted `*_for` delegations.
     #[doc(hidden)]
     fn only_model(&self, model: usize) -> Result<()> {
@@ -290,7 +336,11 @@ pub(crate) fn native_serve_forward(
 pub struct NativeBackend {
     pub disp: Dispatcher,
     bench_layers: Option<Box<[NativeLayer; 3]>>,
-    model: Option<NativeModel>,
+    /// `Arc`-held so execution workers can pin the model at dispatch
+    /// time ([`Backend::dispatch_handle`]) exactly like the registry's
+    /// versioned slots; a single-model backend is simply version 1
+    /// forever.
+    model: Option<Arc<ModelVersion>>,
     /// Reusable forward scratch: grown to the largest shape seen, then
     /// zero steady-state allocation across `serve_forward`/`layer_forward`
     /// calls. `RefCell` because the `Backend` trait takes `&self` and the
@@ -336,11 +386,12 @@ impl NativeBackend {
     }
 
     pub fn set_model(&mut self, model: NativeModel) {
-        self.model = Some(model);
+        self.model =
+            Some(Arc::new(ModelVersion { version: 1, model, stats: LoadStats::default() }));
     }
 
     pub fn model(&self) -> Option<&NativeModel> {
-        self.model.as_ref()
+        self.model.as_ref().map(|v| &v.model)
     }
 
     /// Arm (or disarm, with an inert plan) fault injection on this
@@ -367,10 +418,10 @@ impl Backend for NativeBackend {
 
     fn serve_dims(&self) -> Result<ServeDims> {
         match &self.model {
-            Some(m) => Ok(ServeDims {
-                vocab: m.dims.vocab,
-                seq: m.dims.seq,
-                n_classes: m.dims.n_classes,
+            Some(v) => Ok(ServeDims {
+                vocab: v.model.dims.vocab,
+                seq: v.model.dims.seq,
+                n_classes: v.model.dims.n_classes,
             }),
             None => bail!("native backend has no serving model configured"),
         }
@@ -397,13 +448,39 @@ impl Backend for NativeBackend {
 
     fn serve_forward(&self, bucket: usize, t: usize, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
         match &self.model {
-            Some(m) => {
+            Some(v) => {
                 self.faults.before_forward()?;
                 let mut ws = self.ws.borrow_mut();
-                native_serve_forward("the native backend", m, &self.disp, &mut ws, bucket, t, ids, mask)
+                native_serve_forward(
+                    "the native backend",
+                    &v.model,
+                    &self.disp,
+                    &mut ws,
+                    bucket,
+                    t,
+                    ids,
+                    mask,
+                )
             }
             None => bail!("native backend has no serving model configured"),
         }
+    }
+
+    fn supports_offthread(&self) -> bool {
+        self.model.is_some()
+    }
+
+    fn dispatch_handle(&self, model: usize) -> Option<Result<DispatchHandle>> {
+        if let Err(e) = self.only_model(model) {
+            return Some(Err(e));
+        }
+        self.model.as_ref().map(|v| {
+            Ok(DispatchHandle { version: Arc::clone(v), fault: self.faults.sample_forward() })
+        })
+    }
+
+    fn worker_dispatcher(&self) -> Option<Dispatcher> {
+        Some(self.disp.replicate())
     }
 
     fn layer_forward(

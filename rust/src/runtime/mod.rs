@@ -19,7 +19,9 @@ pub mod native;
 pub mod tensor;
 pub mod workspace;
 
-pub use backend::{Backend, ModelHealth, ModelStatus, NativeBackend, Precision, ServeDims};
+pub use backend::{
+    Backend, DispatchHandle, ModelHealth, ModelStatus, NativeBackend, Precision, ServeDims,
+};
 #[cfg(feature = "xla")]
 pub use backend::{ArtifactBackend, ServeModel};
 #[cfg(feature = "xla")]

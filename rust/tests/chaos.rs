@@ -309,6 +309,70 @@ fn socket_roundtrip_survives_kill_and_reconnect() {
 }
 
 #[test]
+fn worker_panic_fails_only_its_batch_and_workers_reconcile() {
+    // `--workers 4` leg of the panic chaos: the fault is sampled at
+    // dispatch and detonates on a worker thread. Exactly that batch must
+    // fail typed; the pool, the front door, and the connection all
+    // survive, and the books still balance to one reply per admitted
+    // request.
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || -> (u64, u64, u64) {
+        let mut be = tiny_backend(10);
+        // the very first dispatched batch panics on its worker
+        be.set_faults(FaultPlan::panic_nth(1));
+        let mut server = Server::new(&be, cfg(vec![1], 64)).unwrap();
+        let mut door = FrontDoor::bind("127.0.0.1:0").unwrap();
+        addr_tx.send(door.local_addr().unwrap()).unwrap();
+        let opts = RunOpts { workers: 4, ..Default::default() };
+        door.run(&mut server, opts, Some(&stop2)).unwrap();
+        (server.admitted, server.served, server.failed)
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).expect("server thread must bind");
+    let mut c = TcpStream::connect(addr).unwrap();
+    let _ = c.set_nodelay(true);
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let ids: Vec<i32> = (0..8).collect();
+    let mask = vec![1.0f32; 8];
+
+    // the panicking batch fails typed — never silence, never a crash
+    net::send_frame(&mut c, &net::encode_request(0, 0, 0, &ids, &mask)).unwrap();
+    match net::read_reply(&mut c).unwrap() {
+        ClientReply::Reject { code, .. } => assert_eq!(code, RejectCode::BackendFailed),
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
+
+    // a pipelined burst then fans out across the surviving workers:
+    // every request is answered exactly once (replies may complete out
+    // of send order — match by tag), each carrying a distinct
+    // server-assigned request id in the OK frame
+    let mut tags = HashSet::new();
+    let mut req_ids = HashSet::new();
+    for i in 1..=20u64 {
+        net::send_frame(&mut c, &net::encode_request(i, 0, 0, &ids, &mask)).unwrap();
+    }
+    for _ in 0..20 {
+        match net::read_reply(&mut c).unwrap() {
+            ClientReply::Ok { tag, logits, req_id, .. } => {
+                assert!((1..=20).contains(&tag), "unknown tag {tag}");
+                assert!(tags.insert(tag), "duplicate reply for tag {tag}");
+                assert_eq!(logits.len(), 2);
+                assert!(req_ids.insert(req_id), "server request id {req_id} reused");
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+    assert_eq!(tags.len(), 20, "every pipelined request was answered exactly once");
+
+    drop(c);
+    stop.store(true, Ordering::SeqCst);
+    let (admitted, served, failed) =
+        handle.join().expect("front door must survive a worker-thread panic");
+    assert_eq!((admitted, served, failed), (21, 20, 1));
+}
+
+#[test]
 fn admin_reload_under_load_swaps_versions_bit_for_bit() {
     let dims = tiny_dims();
     let path = chaos_tmp("reload.mkqc");

@@ -131,6 +131,108 @@ fn server_seq_buckets_match_full_seq_server_bit_for_bit() {
     }
 }
 
+/// Serve a fixed request stream through a [`WorkerPool`] of `workers`
+/// threads via the off-thread dequeue/complete seam, returning logits
+/// sorted by request id.
+fn serve_through_pool(
+    backend: &NativeBackend,
+    requests: &[(Vec<i32>, Vec<f32>)],
+    workers: usize,
+) -> Vec<Vec<f32>> {
+    use mkq::coordinator::{WakeHandle, WorkerPool};
+    use mkq::runtime::Backend;
+
+    let mut server = Server::new(
+        backend,
+        ServerConfig {
+            batch_buckets: vec![1, 4],
+            seq_buckets: vec![2, 4, 8],
+            batch_window: std::time::Duration::ZERO,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for (ids, mask) in requests {
+        server.submit(ids.clone(), mask.clone()).unwrap();
+    }
+    let dispatchers =
+        (0..workers).map(|_| backend.worker_dispatcher().expect("native backend")).collect();
+    let pool = WorkerPool::new(dispatchers, WakeHandle::none());
+    let mut out = Vec::new();
+    while server.pending() > 0 || server.in_flight() > 0 {
+        while let Some(item) = server.dequeue_work(true, &mut out) {
+            pool.dispatch(item);
+        }
+        if server.in_flight() > 0 {
+            let done = pool
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("worker completion within timeout");
+            out.extend(server.complete_work(done));
+        }
+    }
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.into_logits().expect("ok response")).collect()
+}
+
+#[test]
+fn multi_worker_logits_match_single_worker_bit_for_bit_all_kernels() {
+    // The tentpole determinism contract of `--workers N`: batches are
+    // partitioned identically (FIFO dispatch order, same batching
+    // policy), and every worker's dispatcher replica selects the same
+    // kernels — so a 4-worker pool must produce logits bit-for-bit
+    // identical to the inline single-threaded drain, for every
+    // dispatchable kernel variant.
+    let dims = small_dims();
+    let requests: Vec<(Vec<i32>, Vec<f32>)> = {
+        let mut rng = Rng::new(9);
+        (0..14)
+            .map(|_| {
+                let t = 1 + rng.range(0, dims.seq);
+                let ids: Vec<i32> =
+                    (0..t).map(|_| rng.range(0, dims.vocab) as i32).collect();
+                (ids, vec![1.0f32; t])
+            })
+            .collect()
+    };
+    for kind in KernelKind::ALL {
+        let mut inline_backend = NativeBackend::with_model(NativeModel::random(dims, &[8, 4], 33));
+        inline_backend.disp = Dispatcher::forced(2, kind);
+        let mut pool_backend = NativeBackend::with_model(NativeModel::random(dims, &[8, 4], 33));
+        pool_backend.disp = Dispatcher::forced(2, kind);
+
+        let inline = {
+            let mut server = Server::new(
+                &inline_backend,
+                ServerConfig {
+                    batch_buckets: vec![1, 4],
+                    seq_buckets: vec![2, 4, 8],
+                    batch_window: std::time::Duration::ZERO,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for (ids, mask) in &requests {
+                server.submit(ids.clone(), mask.clone()).unwrap();
+            }
+            let mut out = server.drain().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter()
+                .map(|r| r.into_logits().expect("ok response"))
+                .collect::<Vec<_>>()
+        };
+        let pooled = serve_through_pool(&pool_backend, &requests, 4);
+        assert_eq!(inline.len(), pooled.len());
+        for (i, (a, b)) in inline.iter().zip(pooled.iter()).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "request {i}: 4-worker logits != inline logits (kernel={})",
+                kind.name()
+            );
+        }
+    }
+}
+
 #[test]
 fn padded_token_accounting_shrinks_with_seq_buckets() {
     let dims = small_dims();
