@@ -12,10 +12,10 @@
 //! | REQUEST| 0x01 | tag `u64`, model `u16`, deadline_us `u32` (0 = none), n `u16`, n×`i32` ids, n×`f32` mask, optional version pin `u64` (absent or 0 = unpinned) |
 //! | INFO   | 0x02 | (empty)                                                |
 //! | ADMIN  | 0x03 | op `u8` ([`AdminOp`]), model `u16`                     |
-//! | METRICS| 0x04 | format `u8` (0 = Prometheus text, 1 = JSON)            |
+//! | METRICS| 0x04 | format `u8` (0 = Prometheus text, 1 = JSON), optional window `u32` seconds (absent or 0 = since-start totals, else windowed rates/quantiles from the snapshot ring) |
 //! | OK     | 0x81 | tag `u64`, model `u16`, nc `u16`, nc×`f32` logits, req_id `u64` |
 //! | REJECT | 0x82 | tag `u64`, code `u8` ([`RejectCode`]), UTF-8 message   |
-//! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, version `u64`, health `u8`, consec_failures `u32`, label_len `u8`, label bytes |
+//! | INFO_RESP | 0x83 | n_models `u16`, then per model: vocab `u32`, seq `u16`, nc `u16`, version `u64`, health `u8`, consec_failures `u32`, label_len `u8`, label bytes; then an optional trailer of n_models `u8` SLO states ([`crate::obs::SloState`]) |
 //! | ADMIN_RESP | 0x84 | op `u8`, ok `u8`, model `u16`, then op-specific payload (see [`AdminReply`]) |
 //! | METRICS_RESP | 0x85 | format `u8`, len `u32`, len UTF-8 payload bytes  |
 //!
@@ -28,7 +28,10 @@
 //! `RELOAD` and `EVICT` first **drain** the batcher (every admitted
 //! request is answered — no batch ever straddles a version swap), then
 //! call into the backend's lifecycle surface; `STATUS` is a cheap
-//! point-read of one model's version/health/failure counters.
+//! point-read of one model's version/health/failure counters (plus its
+//! SLO state when the server runs with `--slo`); `FLIGHT_DUMP` returns
+//! the flight recorder's retained event ring as rendered text — a pure
+//! read, no drain barrier.
 //!
 //! # Failure semantics
 //!
@@ -310,7 +313,9 @@ fn note_reject(code: RejectCode) {
     }
 }
 
-fn code_of(rej: &Rejected) -> RejectCode {
+/// Wire reject code for a typed admission verdict (also the `code` of a
+/// flight-recorder reject event).
+pub(crate) fn code_of(rej: &Rejected) -> RejectCode {
     match rej {
         Rejected::QueueFull { .. } => RejectCode::QueueFull,
         Rejected::DeadlineExceeded { .. } => RejectCode::DeadlineExceeded,
@@ -333,6 +338,9 @@ pub enum AdminOp {
     Evict = 2,
     /// Read one model's version/health/failure counters.
     Status = 3,
+    /// Dump the flight recorder's retained event ring (rendered text).
+    /// The `model` field is ignored; no drain barrier — a pure read.
+    FlightDump = 4,
 }
 
 impl AdminOp {
@@ -345,6 +353,7 @@ impl AdminOp {
             1 => Some(AdminOp::Reload),
             2 => Some(AdminOp::Evict),
             3 => Some(AdminOp::Status),
+            4 => Some(AdminOp::FlightDump),
             _ => None,
         }
     }
@@ -405,6 +414,17 @@ pub fn encode_admin(op: AdminOp, model: u16) -> Vec<u8> {
 /// [`METRICS_FMT_JSON`]).
 pub fn encode_metrics_request(format: u8) -> Vec<u8> {
     vec![PROTO_VERSION, MSG_METRICS, format]
+}
+
+/// [`encode_metrics_request`] with a trailing **window** in seconds: the
+/// server answers with rates and window-local quantiles over the last
+/// `window_secs` from its snapshot ring instead of since-start totals
+/// (same old-server-tolerant trailing-field pattern as the REQUEST
+/// version pin; `window_secs == 0` is identical to the plain request).
+pub fn encode_metrics_request_windowed(format: u8, window_secs: u32) -> Vec<u8> {
+    let mut b = encode_metrics_request(format);
+    b.extend_from_slice(&window_secs.to_le_bytes());
+    b
 }
 
 fn encode_metrics_resp(format: u8, payload: &str) -> Vec<u8> {
@@ -482,6 +502,13 @@ fn encode_info_resp(models: &[ModelInfo]) -> Vec<u8> {
         b.push(take as u8);
         b.extend_from_slice(&label[..take]);
     }
+    // trailing per-model SLO state trailer (one byte each, model order).
+    // Old clients parse exactly n records and ignore the tail; new
+    // clients read it when present. All zeros unless `--slo` is armed.
+    let r = crate::obs::registry();
+    for i in 0..models.len() {
+        b.push(r.slo_state[i.min(crate::obs::MAX_MODEL_SLOTS - 1)].get() as u8);
+    }
     b
 }
 
@@ -546,6 +573,9 @@ pub struct WireModelInfo {
     /// [`crate::runtime::ModelHealth`] as its wire byte.
     pub health: u8,
     pub consec_failures: u32,
+    /// [`crate::obs::SloState`] as its wire byte (0 = Ok; also 0 when
+    /// the server predates the trailer or runs without `--slo`).
+    pub slo_state: u8,
 }
 
 /// Decoded ADMIN_RESP payload.
@@ -553,7 +583,12 @@ pub struct WireModelInfo {
 pub enum AdminReply {
     Reloaded { old_version: u64, new_version: u64 },
     Evicted { version: u64, freed_bytes: u64 },
-    Status { version: u64, health: u8, consec_failures: u32, resident_bytes: u64 },
+    /// `slo_state` is a [`crate::obs::SloState`] wire byte — 0 from
+    /// servers that predate it or run without `--slo` (the payload grew
+    /// from 21 to 22 bytes; both decode).
+    Status { version: u64, health: u8, consec_failures: u32, resident_bytes: u64, slo_state: u8 },
+    /// The flight recorder's retained ring, rendered as text.
+    FlightDump { text: String },
     /// The operation failed; `msg` is the rendered error chain.
     Err { msg: String },
 }
@@ -651,7 +686,14 @@ fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
                     version,
                     health,
                     consec_failures,
+                    slo_state: 0,
                 });
+            }
+            // optional per-model SLO-state trailer (newer servers)
+            if body.len() >= off + n {
+                for (i, m) in models.iter_mut().enumerate() {
+                    m.slo_state = body[off + i];
+                }
             }
             Ok(ClientReply::Info { models })
         }
@@ -682,12 +724,22 @@ fn decode_reply(body: &[u8]) -> std::result::Result<ClientReply, String> {
                         version: u64::from_le_bytes(p[..8].try_into().unwrap()),
                         freed_bytes: u64::from_le_bytes(p[8..16].try_into().unwrap()),
                     },
-                    Some(AdminOp::Status) if p.len() == 21 => AdminReply::Status {
+                    Some(AdminOp::Status) if p.len() == 21 || p.len() == 22 => AdminReply::Status {
                         version: u64::from_le_bytes(p[..8].try_into().unwrap()),
                         health: p[8],
                         consec_failures: u32::from_le_bytes(p[9..13].try_into().unwrap()),
                         resident_bytes: u64::from_le_bytes(p[13..21].try_into().unwrap()),
+                        slo_state: if p.len() == 22 { p[21] } else { 0 },
                     },
+                    Some(AdminOp::FlightDump) if p.len() >= 4 => {
+                        let len = u32::from_le_bytes(p[..4].try_into().unwrap()) as usize;
+                        if p.len() != 4 + len {
+                            return Err("ADMIN_RESP flight dump truncated".into());
+                        }
+                        AdminReply::FlightDump {
+                            text: String::from_utf8_lossy(&p[4..]).into_owned(),
+                        }
+                    }
                     _ => {
                         return Err(format!(
                             "ADMIN_RESP op {op} with bad payload length {}",
@@ -799,9 +851,14 @@ pub struct RunOpts {
     /// socket activity — but only once at least one frame was seen
     /// (smoke tests: "serve one burst, then exit").
     pub idle_exit_secs: Option<f64>,
-    /// Print one [`crate::obs::render_statusline`] line to stderr every
-    /// this many seconds (`None` = quiet).
+    /// Print one interval-delta statusline
+    /// ([`crate::obs::render_statusline_delta`]) to stderr every this
+    /// many seconds (`None` = quiet). Rates and quantiles cover the
+    /// interval since the previous line, not since process start.
     pub stats_every_secs: Option<f64>,
+    /// Declared SLOs (`--slo p99_us=N,error_pct=X`); evaluated as burn
+    /// rates on the ~1 s capture tick when armed. Observe-only.
+    pub slo: crate::obs::SloConfig,
     /// Execution worker threads. `0` or `1` keeps the classic inline
     /// single-threaded loop; `N > 1` moves batch execution to a
     /// [`crate::coordinator::WorkerPool`] of `N` threads (each with its
@@ -1069,15 +1126,39 @@ impl FrontDoor {
             o.workers_configured.set(self.pool.as_ref().map_or(1, |p| p.len()) as u64);
         }
 
+        // arm declared SLOs so scrapes and wire surfaces can see the
+        // objectives even before the first evaluation tick
+        if opts.slo.armed() {
+            opts.slo.arm();
+        }
+
         let start = Instant::now();
         let mut last_activity = Instant::now();
         let mut had_activity = false;
         let mut stopping_since: Option<Instant> = None;
         let mut last_statusline = Instant::now();
+        // unconditional ~1 s snapshot-ring capture tick: windowed scrapes
+        // and SLO burns need history whether or not a statusline is on.
+        // Seed one capture now so the first windowed scrape has a base.
+        const CAPTURE_EVERY: Duration = Duration::from_secs(1);
+        crate::obs::snapshots().capture();
+        let mut last_capture = Instant::now();
+        // statusline deltas are computed against the previous line's
+        // snapshot (boxed: SnapData carries three full histogram images)
+        let mut statusline_prev: Box<crate::obs::SnapData> = Box::new(crate::obs::live_snapshot());
         loop {
+            if last_capture.elapsed() >= CAPTURE_EVERY {
+                crate::obs::snapshots().capture();
+                if opts.slo.armed() {
+                    crate::obs::slo::evaluate(&opts.slo);
+                }
+                last_capture = Instant::now();
+            }
             if let Some(every) = opts.stats_every_secs {
                 if last_statusline.elapsed().as_secs_f64() >= every.max(0.01) {
-                    eprintln!("{}", crate::obs::render_statusline());
+                    let cur = Box::new(crate::obs::live_snapshot());
+                    eprintln!("{}", crate::obs::render_statusline_delta(&statusline_prev, &cur));
+                    statusline_prev = cur;
                     last_statusline = Instant::now();
                 }
             }
@@ -1332,12 +1413,18 @@ impl FrontDoor {
             MSG_ADMIN => self.handle_admin(server, slot, gen, body),
             MSG_METRICS => {
                 // scrape: render from the process-wide registry (gating
-                // only silences *recording* — a scrape always answers)
+                // only silences *recording* — a scrape always answers).
+                // An optional trailing u32 selects a window in seconds:
+                // rates and window-local quantiles from the snapshot
+                // ring instead of since-start totals.
                 let format = if body.len() >= 3 { body[2] } else { METRICS_FMT_TEXT };
-                let payload = if format == METRICS_FMT_JSON {
-                    crate::obs::render_json()
-                } else {
-                    crate::obs::render_prometheus()
+                let window =
+                    if body.len() >= 7 { u32::from_le_bytes(body[3..7].try_into().unwrap()) } else { 0 };
+                let payload = match (format == METRICS_FMT_JSON, window) {
+                    (true, 0) => crate::obs::render_json(),
+                    (false, 0) => crate::obs::render_prometheus(),
+                    (true, w) => crate::obs::render_window_json(w),
+                    (false, w) => crate::obs::render_window(w),
                 };
                 let reply = encode_metrics_resp(format, &payload);
                 self.push_to(slot, gen, &reply);
@@ -1389,15 +1476,30 @@ impl FrontDoor {
             None => encode_admin_err(op, model, &format!("unknown admin op {op}")),
             Some(AdminOp::Status) => match server.backend().model_status(m) {
                 Ok(st) => {
-                    let mut p = Vec::with_capacity(21);
+                    let mut p = Vec::with_capacity(22);
                     p.extend_from_slice(&st.version.to_le_bytes());
                     p.push(st.health.as_u8());
                     p.extend_from_slice(&st.consec_failures.to_le_bytes());
                     p.extend_from_slice(&(st.resident_bytes as u64).to_le_bytes());
+                    // trailing SLO state (0 unless --slo is armed); old
+                    // clients decoded exactly 21 bytes and still do
+                    let r = crate::obs::registry();
+                    p.push(r.slo_state[m.min(crate::obs::MAX_MODEL_SLOTS - 1)].get() as u8);
                     encode_admin_ok(AdminOp::Status, model, &p)
                 }
                 Err(e) => encode_admin_err(op, model, &format!("{e:#}")),
             },
+            Some(AdminOp::FlightDump) => {
+                // pure read of the recorder ring — no drain barrier, so a
+                // dump mid-incident never perturbs the batcher
+                let text = crate::obs::flight::render_text(&crate::obs::flight().snapshot());
+                let bytes = text.as_bytes();
+                let take = bytes.len().min(MAX_FRAME - 64);
+                let mut p = Vec::with_capacity(4 + take);
+                p.extend_from_slice(&(take as u32).to_le_bytes());
+                p.extend_from_slice(&bytes[..take]);
+                encode_admin_ok(AdminOp::FlightDump, model, &p)
+            }
             Some(aop) => {
                 // Reload/Evict: in-flight barrier first
                 self.drain_through(server);
@@ -1408,7 +1510,7 @@ impl FrontDoor {
                     AdminOp::Evict => {
                         server.backend().evict_model(m).map(|(v, freed)| [v, freed as u64])
                     }
-                    AdminOp::Status => unreachable!("handled above"),
+                    AdminOp::Status | AdminOp::FlightDump => unreachable!("handled above"),
                 };
                 match res {
                     Ok([a, b]) => {
@@ -1797,6 +1899,8 @@ mod tests {
             }
         );
 
+        // legacy 21-byte status payload (no SLO trailer) decodes with
+        // slo_state 0
         let ok = encode_admin_ok(AdminOp::Status, 1, &{
             let mut p = Vec::new();
             p.extend_from_slice(&2u64.to_le_bytes());
@@ -1814,9 +1918,27 @@ mod tests {
                     health: ModelHealth::Degraded.as_u8(),
                     consec_failures: 3,
                     resident_bytes: 9_000,
+                    slo_state: 0,
                 }
             }
         );
+
+        // current 22-byte status payload carries the SLO state
+        let ok = encode_admin_ok(AdminOp::Status, 1, &{
+            let mut p = Vec::new();
+            p.extend_from_slice(&2u64.to_le_bytes());
+            p.push(ModelHealth::Serving.as_u8());
+            p.extend_from_slice(&0u32.to_le_bytes());
+            p.extend_from_slice(&9_000u64.to_le_bytes());
+            p.push(crate::obs::SloState::Burning.as_u8());
+            p
+        });
+        match decode_reply(&ok).unwrap() {
+            ClientReply::Admin { reply: AdminReply::Status { slo_state, .. }, .. } => {
+                assert_eq!(slo_state, crate::obs::SloState::Burning.as_u8());
+            }
+            other => panic!("expected Status, got {other:?}"),
+        }
 
         let err = encode_admin_err(AdminOp::Reload.as_u8(), 3, "no checkpoint source");
         match decode_reply(&err).unwrap() {
@@ -1830,6 +1952,61 @@ mod tests {
         let mut bad = encode_admin_ok(AdminOp::Reload, 2, &[0u8; 16]);
         bad.pop();
         assert!(decode_reply(&bad).is_err());
+    }
+
+    #[test]
+    fn flight_dump_frames_round_trip() {
+        let req = encode_admin(AdminOp::FlightDump, 0);
+        assert_eq!(req.len(), 5, "flight-dump request is a plain 5-byte ADMIN frame");
+        assert_eq!(req[2], 4);
+        assert_eq!(AdminOp::from_u8(4), Some(AdminOp::FlightDump));
+
+        let text = "[flight] 2 events retained (ring capacity 1024)\n";
+        let ok = encode_admin_ok(AdminOp::FlightDump, 0, &{
+            let mut p = Vec::new();
+            p.extend_from_slice(&(text.len() as u32).to_le_bytes());
+            p.extend_from_slice(text.as_bytes());
+            p
+        });
+        assert_eq!(
+            decode_reply(&ok).unwrap(),
+            ClientReply::Admin { model: 0, reply: AdminReply::FlightDump { text: text.into() } }
+        );
+
+        // a truncated dump payload is a decode error
+        let mut bad = ok.clone();
+        bad.pop();
+        assert!(decode_reply(&bad).is_err());
+    }
+
+    #[test]
+    fn info_resp_slo_trailer_is_old_client_tolerant() {
+        let models = vec![ModelInfo {
+            label: "sst2".into(),
+            vocab: 30522,
+            seq: 128,
+            n_classes: 2,
+            version: 1,
+            health: ModelHealth::Serving,
+            consec_failures: 0,
+        }];
+        let body = encode_info_resp(&models);
+        // the trailer is exactly n_models bytes past the records; strip
+        // it to simulate an old server's frame
+        let legacy = &body[..body.len() - models.len()];
+        match decode_reply(legacy).unwrap() {
+            ClientReply::Info { models: got } => {
+                assert_eq!(got[0].label, "sst2");
+                assert_eq!(got[0].slo_state, 0, "missing trailer decodes as Ok");
+            }
+            other => panic!("expected Info, got {other:?}"),
+        }
+        // the full frame decodes the trailer byte (whatever the shared
+        // registry gauge currently holds — a valid wire state)
+        match decode_reply(&body).unwrap() {
+            ClientReply::Info { models: got } => assert!(got[0].slo_state <= 2),
+            other => panic!("expected Info, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1864,6 +2041,16 @@ mod tests {
     fn metrics_frames_round_trip() {
         let req = encode_metrics_request(METRICS_FMT_JSON);
         assert_eq!(req, vec![PROTO_VERSION, MSG_METRICS, METRICS_FMT_JSON]);
+
+        // the windowed variant appends a little-endian u32 of seconds —
+        // old servers that only look at body[2] keep answering totals
+        let req = encode_metrics_request_windowed(METRICS_FMT_TEXT, 30);
+        assert_eq!(req.len(), 7);
+        assert_eq!(&req[..3], &[PROTO_VERSION, MSG_METRICS, METRICS_FMT_TEXT]);
+        assert_eq!(u32::from_le_bytes(req[3..7].try_into().unwrap()), 30);
+        // window 0 is semantically the plain request
+        let req = encode_metrics_request_windowed(METRICS_FMT_JSON, 0);
+        assert_eq!(u32::from_le_bytes(req[3..7].try_into().unwrap()), 0);
 
         let body = encode_metrics_resp(METRICS_FMT_TEXT, "mkq_serve_served 0\n");
         match decode_reply(&body).unwrap() {

@@ -546,6 +546,21 @@ impl<'b, B: Backend> Server<'b, B> {
                     o.serve_admitted.inc();
                 }
             }
+            // the flight recorder keeps every reject edge (typed, with
+            // the wire code) even when the counters below collapse them
+            Err(rej) => {
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::Reject,
+                    crate::coordinator::net::code_of(rej).as_u8(),
+                    model.min(u16::MAX as usize) as u16,
+                    0,
+                    0,
+                    0,
+                );
+            }
+        }
+        match &res {
+            Ok(_) => {}
             Err(Rejected::QueueFull { .. }) => {
                 self.rejected_full += 1;
                 if let Some(o) = obs {
@@ -673,6 +688,14 @@ impl<'b, B: Backend> Server<'b, B> {
         }
         slot.last_arrival = Some(now);
         slot.q.push_back(Request { id, ids, mask, enqueued: now, deadline });
+        crate::obs::flight().record(
+            crate::obs::FlightKind::Admit,
+            0,
+            model as u16,
+            slot.tcap.min(u16::MAX as usize) as u16,
+            *self.cfg.batch_buckets.last().unwrap() as u16,
+            id,
+        );
         Ok(id)
     }
 
@@ -764,6 +787,14 @@ impl<'b, B: Backend> Server<'b, B> {
                         if let Some(o) = crate::obs::metrics() {
                             o.serve_shed_deadline.inc();
                         }
+                        crate::obs::flight().record(
+                            crate::obs::FlightKind::Reject,
+                            crate::coordinator::net::RejectCode::DeadlineExceeded.as_u8(),
+                            s.model as u16,
+                            s.tcap.min(u16::MAX as usize) as u16,
+                            0,
+                            r.id,
+                        );
                         out.push(Response {
                             id: r.id,
                             model: s.model,
@@ -914,10 +945,18 @@ impl<'b, B: Backend> Server<'b, B> {
                     o.serve_batches.inc();
                     o.serve_total_tokens.add(stage as u64);
                     o.serve_padded_tokens.add(stage as u64 - valid_tokens);
-                    o.serve_batch_fill_pct.record((take * 100 / bucket) as u64);
-                    o.serve_batch_exec_us.record(exec_us as u64);
+                    o.serve_batch.record(model, tcap, (take * 100 / bucket) as u64, exec_us as u64);
+                    o.model_served[model.min(crate::obs::MAX_MODEL_SLOTS - 1)].add(take as u64);
                     o.serve_queue_depth.set(self.pending() as u64);
                 }
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::BatchClose,
+                    crate::obs::flight::CLOSE_OK,
+                    model as u16,
+                    tcap.min(u16::MAX as usize) as u16,
+                    take as u16,
+                    0,
+                );
                 let nc = self.n_classes[model];
                 for (i, r) in reqs.into_iter().enumerate() {
                     let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -953,6 +992,14 @@ impl<'b, B: Backend> Server<'b, B> {
                 }
             }
             Ok(Err(e)) => {
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::BatchClose,
+                    crate::obs::flight::CLOSE_FAILED,
+                    model as u16,
+                    tcap.min(u16::MAX as usize) as u16,
+                    take as u16,
+                    0,
+                );
                 self.fail_batch(&mut responses, reqs, model, bucket, tcap, exec_us, format!("{e:#}"));
             }
             Err(payload) => {
@@ -960,6 +1007,14 @@ impl<'b, B: Backend> Server<'b, B> {
                 // backend; a caught panic bypasses it, so feed the health
                 // machine here
                 self.backend.record_forward_panic(model);
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::BatchClose,
+                    crate::obs::flight::CLOSE_PANICKED,
+                    model as u16,
+                    tcap.min(u16::MAX as usize) as u16,
+                    take as u16,
+                    0,
+                );
                 self.fail_batch(
                     &mut responses,
                     reqs,
@@ -1040,6 +1095,14 @@ impl<'b, B: Backend> Server<'b, B> {
                 Err(e) => {
                     // shed-at-dispatch: same per-request Failed fan-out as
                     // an inline health-gate error, then try the next bucket
+                    crate::obs::flight().record(
+                        crate::obs::FlightKind::BatchClose,
+                        crate::obs::flight::CLOSE_FAILED,
+                        model as u16,
+                        tcap.min(u16::MAX as usize) as u16,
+                        take as u16,
+                        0,
+                    );
                     self.fail_batch(out, reqs, model, bucket, tcap, 0.0, format!("{e:#}"));
                     continue;
                 }
@@ -1059,6 +1122,14 @@ impl<'b, B: Backend> Server<'b, B> {
             if let Some(o) = crate::obs::metrics() {
                 o.serve_queue_depth.set(self.pending() as u64);
             }
+            crate::obs::flight().record(
+                crate::obs::FlightKind::Dispatch,
+                0,
+                model as u16,
+                tcap.min(u16::MAX as usize) as u16,
+                take as u16,
+                0,
+            );
             return Some(WorkItem {
                 model,
                 bucket,
@@ -1119,8 +1190,8 @@ impl<'b, B: Backend> Server<'b, B> {
                     o.serve_batches.inc();
                     o.serve_total_tokens.add(stage as u64);
                     o.serve_padded_tokens.add(stage as u64 - valid_tokens);
-                    o.serve_batch_fill_pct.record((take * 100 / bucket) as u64);
-                    o.serve_batch_exec_us.record(exec_us as u64);
+                    o.serve_batch.record(model, tcap, (take * 100 / bucket) as u64, exec_us as u64);
+                    o.model_served[model.min(crate::obs::MAX_MODEL_SLOTS - 1)].add(take as u64);
                     o.serve_queue_depth.set(self.pending() as u64);
                     o.worker_dispatch_wait_us.record(dispatch_wait_us as u64);
                     if worker < crate::obs::MAX_WORKER_SLOTS {
@@ -1128,6 +1199,14 @@ impl<'b, B: Backend> Server<'b, B> {
                         o.worker_exec_us[worker].record(exec_us as u64);
                     }
                 }
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::BatchClose,
+                    crate::obs::flight::CLOSE_OK,
+                    model as u16,
+                    tcap.min(u16::MAX as usize) as u16,
+                    take as u16,
+                    0,
+                );
                 let nc = self.n_classes[model];
                 for (i, r) in reqs.into_iter().enumerate() {
                     let total_us = r.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -1170,6 +1249,18 @@ impl<'b, B: Backend> Server<'b, B> {
                         o.worker_exec_us[worker].record(exec_us as u64);
                     }
                 }
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::BatchClose,
+                    if panicked {
+                        crate::obs::flight::CLOSE_PANICKED
+                    } else {
+                        crate::obs::flight::CLOSE_FAILED
+                    },
+                    model as u16,
+                    tcap.min(u16::MAX as usize) as u16,
+                    reqs.len() as u16,
+                    0,
+                );
                 self.fail_batch(&mut responses, reqs, model, bucket, tcap, exec_us, msg);
             }
         }

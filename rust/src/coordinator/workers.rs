@@ -223,6 +223,18 @@ fn execute(w: usize, disp: &Dispatcher, ws: &mut Workspace, item: WorkItem) -> W
         Ok(Err(e)) => (Err(format!("{e:#}")), false),
         Err(payload) => (Err(format!("backend panicked: {}", panic_message(payload))), true),
     };
+    if panicked {
+        // the settle path (complete_work) records the batch-close; this
+        // pins *which worker thread* caught the unwind
+        crate::obs::flight().record(
+            crate::obs::FlightKind::WorkerPanic,
+            0,
+            model as u16,
+            w.min(u16::MAX as usize) as u16,
+            tcap.min(u16::MAX as usize) as u16,
+            0,
+        );
+    }
     WorkDone {
         model,
         bucket,

@@ -79,19 +79,30 @@ fn usage() -> ! {
                 --mem-budget-mb N  (multi-model only: LRU-evict models
                 when fleet resident bytes exceed the budget)
                 --stats-every-secs N  (--listen only: print a one-line
-                [obs] summary to stderr every N seconds)
+                [obs] interval-delta summary to stderr every N seconds —
+                rates and quantiles cover the interval, not process life)
+                --slo p99_us=N,error_pct=X  (--listen only: declare
+                latency/error objectives; the server evaluates fast/slow
+                burn rates over its snapshot ring each second and exports
+                slo_* gauges + per-model slo_state Ok/Warning/Burning —
+                observe-only, never sheds load)
                 --workers N  (--listen only: execution worker threads;
                 default min(4, cores); 1 = classic inline loop; each
                 worker owns its workspace + kernel dispatcher replica,
                 so batches execute while the front door keeps admitting)
-  admin:        mkq-bert admin <reload|evict|status|metrics> --addr
-                HOST:PORT [--model-index N]  — reload swaps in a freshly
-                loaded version after draining in-flight work (old-version
-                pins then get a typed version-gone reject), evict drains
-                and frees the model, status reports version/health/failure
-                counters/resident bytes; metrics scrapes the server's
-                metrics registry over a METRICS frame (Prometheus text;
-                --json for the flat JSON rendering)
+  admin:        mkq-bert admin <reload|evict|status|metrics|flight-dump>
+                --addr HOST:PORT [--model-index N]  — reload swaps in a
+                freshly loaded version after draining in-flight work
+                (old-version pins then get a typed version-gone reject),
+                evict drains and frees the model, status reports
+                version/health/failure counters/resident bytes/SLO state;
+                metrics scrapes the server's metrics registry over a
+                METRICS frame (Prometheus text; --json for the flat JSON
+                rendering; --window SECS for reset-free windowed rates
+                and window-local quantiles from the snapshot ring);
+                flight-dump prints the server's flight recorder — the
+                last 1024 lifecycle events (admit/reject/dispatch/
+                batch-close/reload/evict/health/worker-panic), no drain
   loadgen:      --addr HOST:PORT  --mode closed|open (default closed)
                 --conns N (4)  --requests N total (200)  --rate RPS
                 aggregate for open mode (2000)  --deadline-us N (0)
@@ -105,6 +116,10 @@ fn usage() -> ! {
                 run and fail unless server-side served/shed/failed counts
                 match this client's tally exactly — requires loadgen to be
                 the only traffic source since server start)
+                --expect-window-rate PCT  (open mode: after the run,
+                scrape `admin metrics --window` covering the active span
+                and fail unless the server's windowed admit rate matches
+                this client's offered rate within PCT percent)
                 connects and reconnects with bounded exponential backoff;
                 retry counts land in the bench JSON as conn_retries;
                 client latency reports p50/p90/p99/p999 from a log-linear
@@ -251,6 +266,21 @@ fn scrape_server_metrics(addr: &str) -> Option<String> {
     }
 }
 
+/// Windowed flavor of [`scrape_server_metrics`]: flat JSON of the
+/// server's last-`window_secs` snapshot delta (`win_*` fields).
+fn scrape_server_metrics_windowed(addr: &str, window_secs: u32) -> Option<String> {
+    use mkq::coordinator::net::{self, ClientReply, METRICS_FMT_JSON};
+    let mut s = connect_with_backoff(addr).ok()?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+    net::send_frame(&mut s, &net::encode_metrics_request_windowed(METRICS_FMT_JSON, window_secs))
+        .ok()?;
+    match net::read_reply(&mut s) {
+        Ok(ClientReply::Metrics { payload, .. }) => Some(payload),
+        _ => None,
+    }
+}
+
 /// `mkq-bert admin`: drive the model-fleet lifecycle over a serving
 /// socket's ADMIN frames (reload / evict / status).
 fn admin_cmd(args: &Args) -> Result<()> {
@@ -265,8 +295,9 @@ fn admin_cmd(args: &Args) -> Result<()> {
         "reload" => AdminOp::Reload,
         "evict" => AdminOp::Evict,
         "status" => AdminOp::Status,
+        "flight-dump" => AdminOp::FlightDump,
         other => anyhow::bail!(
-            "usage: mkq-bert admin <reload|evict|status|metrics> --addr HOST:PORT \
+            "usage: mkq-bert admin <reload|evict|status|metrics|flight-dump> --addr HOST:PORT \
              [--model-index N] (got {other:?})"
         ),
     };
@@ -295,12 +326,20 @@ fn admin_cmd(args: &Args) -> Result<()> {
                 println!("model {model}: evicted v{version}, freed {freed_bytes} resident bytes");
                 Ok(())
             }
-            AdminReply::Status { version, health, consec_failures, resident_bytes } => {
+            AdminReply::Status { version, health, consec_failures, resident_bytes, slo_state } => {
                 let health_s = ModelHealth::from_u8(health).map_or("unknown", |h| h.name());
+                let slo_s = mkq::obs::SloState::from_u8(slo_state).name();
                 println!(
                     "model {model}: v{version} {health_s}, consec_failures={consec_failures}, \
-                     resident_bytes={resident_bytes}"
+                     resident_bytes={resident_bytes}, slo={slo_s}"
                 );
+                Ok(())
+            }
+            AdminReply::FlightDump { text } => {
+                print!("{text}");
+                if !text.ends_with('\n') {
+                    println!();
+                }
                 Ok(())
             }
             AdminReply::Err { msg } => anyhow::bail!("admin {op_s} on model {model}: {msg}"),
@@ -310,7 +349,9 @@ fn admin_cmd(args: &Args) -> Result<()> {
 }
 
 /// `mkq-bert admin metrics`: scrape the server's metrics registry over a
-/// METRICS frame and print the payload (Prometheus text, or `--json`).
+/// METRICS frame and print the payload (Prometheus text, or `--json`;
+/// `--window SECS` asks for reset-free windowed rates and window-local
+/// quantiles computed from the server's snapshot ring).
 fn admin_metrics(args: &Args) -> Result<()> {
     use mkq::coordinator::net::{self, ClientReply, METRICS_FMT_JSON, METRICS_FMT_TEXT};
 
@@ -319,10 +360,17 @@ fn admin_metrics(args: &Args) -> Result<()> {
         None => anyhow::bail!("admin metrics needs --addr HOST:PORT"),
     };
     let format = if args.bool("json") { METRICS_FMT_JSON } else { METRICS_FMT_TEXT };
+    let window = args.usize("window", 0);
+    anyhow::ensure!(window <= u32::MAX as usize, "--window out of range");
     let mut s = connect_with_backoff(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
     let _ = s.set_nodelay(true);
     let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(10)));
-    net::send_frame(&mut s, &net::encode_metrics_request(format))?;
+    let req = if window > 0 {
+        net::encode_metrics_request_windowed(format, window as u32)
+    } else {
+        net::encode_metrics_request(format)
+    };
+    net::send_frame(&mut s, &req)?;
     match net::read_reply(&mut s)? {
         ClientReply::Metrics { payload, .. } => {
             print!("{payload}");
@@ -370,12 +418,19 @@ fn obs_overhead(args: &Args) -> Result<()> {
         )
         .expect("obs-overhead server");
         let mut rng = mkq::util::rng::Rng::new(7);
-        for _ in 0..requests {
+        for i in 0..requests {
             let len = 1 + rng.below(seq);
             let ids: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
             let mask = vec![1.0f32; len];
             server.submit(ids, mask).expect("unbounded queue admits");
             let _ = server.pump().expect("obs-overhead pump");
+            // same cadence the front door runs at (~1 capture/s at real
+            // rates): the snapshot ring and flight recorder stay armed
+            // during the overhead measurement, so the <5% budget covers
+            // the full ISSUE-10 observability stack, not just counters
+            if i % 64 == 63 {
+                mkq::obs::snapshots().capture();
+            }
         }
         let _ = server.drain().expect("obs-overhead drain");
     };
@@ -898,6 +953,12 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
     let n_models = backend.n_models();
     let dims_per: Vec<mkq::runtime::ServeDims> =
         (0..n_models).map(|m| backend.serve_dims_for(m)).collect::<Result<_>>()?;
+    // per-model scrape series (slo_state, the batch grid) need a label
+    // per served model; registry-backed fleets registered real names at
+    // load — this only fills slots that have none (the demo path)
+    for m in 0..n_models {
+        mkq::obs::ensure_model_label(m, &format!("m{m}"));
+    }
     let max_seq = dims_per.iter().map(|d| d.seq).max().expect("at least one model");
 
     let parse_usize_list = |key: &str| -> Result<Option<Vec<usize>>> {
@@ -955,15 +1016,29 @@ fn run_serve_trace<B: mkq::runtime::Backend>(backend: &B, args: &Args, conf: &Co
         let default_workers = std::thread::available_parallelism().map_or(1, |p| p.get()).min(4);
         let workers =
             args.usize("workers", conf.usize("serve.workers", default_workers)).max(1);
+        let slo_spec = args.str("slo", &conf.str("serve.slo", ""));
+        let slo = if slo_spec.is_empty() {
+            mkq::obs::SloConfig::default()
+        } else {
+            mkq::obs::SloConfig::parse(&slo_spec).map_err(anyhow::Error::msg)?
+        };
         println!(
             "listening on {local} (proto v{PROTO_VERSION}, max_pending {max_pending}, \
              default deadline {deadline_us}us, workers {workers})"
         );
+        if slo.armed() {
+            println!(
+                "SLO armed (observe-only): {} — fast/slow burn over 10s/60s snapshot windows, \
+                 states exported as slo_state per model",
+                slo.describe()
+            );
+        }
         let opts = RunOpts {
             for_secs: if serve_secs > 0.0 { Some(serve_secs) } else { None },
             idle_exit_secs: if idle_exit > 0.0 { Some(idle_exit) } else { None },
             stats_every_secs: if stats_every > 0.0 { Some(stats_every) } else { None },
             workers,
+            slo,
         };
         // SIGTERM/SIGINT trip the same graceful-stop path as --serve-secs
         // expiry: stop accepting, drain in-flight work, answer late
@@ -1336,6 +1411,44 @@ fn loadgen(args: &Args, conf: &Config) -> Result<()> {
         println!(
             "reconcile ok: server and client agree — admitted {admitted} == served {served} \
              + shed {shed} + failed {failed}"
+        );
+    }
+
+    if let Some(pct_s) = args.get("expect-window-rate") {
+        let pct: f64 = pct_s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--expect-window-rate expects a percent, got {pct_s:?}"))?;
+        anyhow::ensure!(pct > 0.0, "--expect-window-rate must be positive");
+        // ask for a window generously covering the active span: the
+        // server captures ~1/s, so pad for tick alignment. Pre-run idle
+        // inside the window contributes zero admits, so the *count* over
+        // the window is exact; rates are computed against the client's
+        // own wall clock so both sides use the same denominator.
+        let window = (wall_s.ceil() as u32).saturating_add(3);
+        let p = scrape_server_metrics_windowed(&addr, window).ok_or_else(|| {
+            anyhow::anyhow!("--expect-window-rate: windowed metrics scrape failed")
+        })?;
+        let g = |n: &str| -> Result<u64> {
+            mkq::obs::json_u64_field(&p, n).ok_or_else(|| {
+                anyhow::anyhow!("--expect-window-rate: field {n:?} missing from windowed scrape")
+            })
+        };
+        // every sent request either got admitted or took a typed
+        // admission reject — sum the window's view of all three
+        let srv_seen = g("win_serve_admitted")?
+            + g("win_serve_rejected_full")?
+            + g("win_serve_rejected_invalid")?;
+        let offered = tally.sent as f64 / wall_s;
+        let srv_rate = srv_seen as f64 / wall_s;
+        let dev = (srv_rate - offered).abs() / offered.max(1e-9) * 100.0;
+        println!(
+            "window-rate reconcile: offered {offered:.1} rps vs server windowed {srv_rate:.1} rps \
+             over {window}s window ({dev:.1}% apart, budget {pct}%)"
+        );
+        anyhow::ensure!(
+            dev <= pct,
+            "--expect-window-rate: server windowed rate {srv_rate:.1} rps deviates {dev:.1}% \
+             from offered {offered:.1} rps (budget {pct}%) — windowed accounting is off"
         );
     }
 

@@ -265,6 +265,24 @@ impl Registry {
                     }
                 }
             }
+            crate::obs::flight().record(
+                crate::obs::FlightKind::Reload,
+                0,
+                idx as u16,
+                0,
+                0,
+                new,
+            );
+            if prev_health != ModelHealth::Serving {
+                crate::obs::flight().record(
+                    crate::obs::FlightKind::Health,
+                    0,
+                    idx as u16,
+                    prev_health.as_u8() as u16,
+                    ModelHealth::Serving.as_u8() as u16,
+                    0,
+                );
+            }
         }
         self.enforce_budget(Some(idx));
         let slots = self.slots.borrow();
@@ -285,6 +303,7 @@ impl Registry {
             Some(c) => c,
             None => bail!("model {:?} is already evicted", s.name),
         };
+        let prev_health = s.health.get();
         s.health.set(ModelHealth::Evicted);
         s.consec_failures.set(0);
         crate::log_info!(
@@ -301,6 +320,22 @@ impl Registry {
                 o.model_resident_bytes[idx].set(0);
             }
         }
+        crate::obs::flight().record(
+            crate::obs::FlightKind::Evict,
+            0,
+            idx as u16,
+            0,
+            0,
+            cur.version,
+        );
+        crate::obs::flight().record(
+            crate::obs::FlightKind::Health,
+            0,
+            idx as u16,
+            prev_health.as_u8() as u16,
+            ModelHealth::Evicted.as_u8() as u16,
+            0,
+        );
         Ok((cur.version, cur.stats.resident_bytes()))
     }
 
@@ -367,7 +402,8 @@ impl Registry {
     /// the two cannot drift.
     fn note_success(&self, idx: usize, s: &ModelSlot) {
         s.consec_failures.set(0);
-        if matches!(s.health.get(), ModelHealth::Degraded | ModelHealth::Loading) {
+        let prev = s.health.get();
+        if matches!(prev, ModelHealth::Degraded | ModelHealth::Loading) {
             s.health.set(ModelHealth::Serving);
             if idx < crate::obs::MAX_MODEL_SLOTS {
                 if let Some(o) = crate::obs::metrics() {
@@ -375,6 +411,14 @@ impl Registry {
                     o.model_health[idx].set(ModelHealth::Serving.as_u8() as u64);
                 }
             }
+            crate::obs::flight().record(
+                crate::obs::FlightKind::Health,
+                0,
+                idx as u16,
+                prev.as_u8() as u16,
+                ModelHealth::Serving.as_u8() as u16,
+                0,
+            );
         }
     }
 
@@ -410,6 +454,24 @@ impl Registry {
                     o.model_health_transitions[idx].inc();
                     o.model_health[idx].set(now.as_u8() as u64);
                 }
+            }
+        }
+        if now != prev {
+            crate::obs::flight().record(
+                crate::obs::FlightKind::Health,
+                0,
+                idx as u16,
+                prev.as_u8() as u16,
+                now.as_u8() as u16,
+                0,
+            );
+            // crossing into quarantine is the black-box moment: dump the
+            // whole retained ring while the events leading here are in it
+            if now == ModelHealth::Quarantined {
+                crate::obs::auto_dump(&format!(
+                    "model {:?} quarantined after {n} consecutive forward failures",
+                    s.name
+                ));
             }
         }
     }

@@ -1,0 +1,300 @@
+//! Always-on flight recorder: a fixed-size lock-free ring of typed
+//! binary events — the serving stack's black box.
+//!
+//! Every interesting lifecycle edge (admit, reject, batch close with its
+//! reason, dispatch, reload, health transition, worker panic) is
+//! recorded as three packed `u64` words with zero heap allocation and no
+//! locks, so recording rides the serve hot path under the same
+//! counting-allocator contract as the metrics registry. The ring holds
+//! the last [`FLIGHT_SLOTS`] events; readers get a consistent
+//! oldest-first snapshot on demand (`admin flight-dump`) and the ring is
+//! auto-dumped to stderr when a model crosses into quarantine — the
+//! postmortem for chaos runs.
+//!
+//! Packing (per event): `w0` = unix µs, `w2` = 64-bit id (request id,
+//! model version, or 0), and `w1` = `kind | code<<8 | model<<16 |
+//! a<<32 | b<<48` where `a`/`b` are kind-specific u16s:
+//!
+//! | kind             | code               | a            | b          | id          |
+//! |------------------|--------------------|--------------|------------|-------------|
+//! | admit            | 0                  | seq bucket   | batch cap  | request id  |
+//! | reject           | wire reject code   | seq bucket   | 0          | request id  |
+//! | batch-close      | 0 ok/1 failed/2 panicked | seq bucket | batch size | 0       |
+//! | dispatch         | 0                  | seq bucket   | batch size | 0           |
+//! | reload           | 0                  | 0            | 0          | new version |
+//! | health           | 0                  | from state   | to state   | 0           |
+//! | worker-panic     | 0                  | worker       | seq bucket | 0           |
+//! | evict            | 0                  | 0            | 0          | version     |
+//!
+//! Consistency: each slot carries a version word equal to `ticket + 1`
+//! (0 = never written). A writer zeroes the version, stores the words,
+//! then publishes the version with release ordering; readers validate it
+//! on both sides of the read. Two writers only share a slot when their
+//! tickets are a full ring apart — a torn event under that much
+//! wraparound pressure is dropped by the version check with high
+//! probability and tolerated as best-effort otherwise (every cell is an
+//! atomic, so there is no UB, only a possibly stale line in a dump).
+
+use std::sync::atomic::{fence, AtomicU64, Ordering::Acquire, Ordering::Relaxed, Ordering::Release};
+
+use super::snapshot::unix_us;
+
+/// Ring capacity (events). 1024 × 32 B = 32 KiB of const-init BSS.
+pub const FLIGHT_SLOTS: usize = 1024;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum FlightKind {
+    Admit = 1,
+    Reject = 2,
+    BatchClose = 3,
+    Dispatch = 4,
+    Reload = 5,
+    Health = 6,
+    WorkerPanic = 7,
+    Evict = 8,
+}
+
+impl FlightKind {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn name(kind: u8) -> &'static str {
+        match kind {
+            1 => "admit",
+            2 => "reject",
+            3 => "batch-close",
+            4 => "dispatch",
+            5 => "reload",
+            6 => "health",
+            7 => "worker-panic",
+            8 => "evict",
+            _ => "?",
+        }
+    }
+}
+
+/// Batch-close reasons (the `code` of a `batch-close` event).
+pub const CLOSE_OK: u8 = 0;
+pub const CLOSE_FAILED: u8 = 1;
+pub const CLOSE_PANICKED: u8 = 2;
+
+const CLOSE_NAMES: [&str; 3] = ["ok", "failed", "panicked"];
+
+const HEALTH_NAMES: [&str; 5] = ["loading", "serving", "degraded", "quarantined", "evicted"];
+
+/// One decoded flight event.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    pub ticket: u64,
+    pub at_us: u64,
+    pub kind: u8,
+    pub code: u8,
+    pub model: u16,
+    pub a: u16,
+    pub b: u16,
+    pub id: u64,
+}
+
+struct FSlot {
+    /// `ticket + 1` once the event is published; 0 while empty/being written.
+    ver: AtomicU64,
+    w0: AtomicU64,
+    w1: AtomicU64,
+    w2: AtomicU64,
+}
+
+impl FSlot {
+    const fn new() -> FSlot {
+        FSlot {
+            ver: AtomicU64::new(0),
+            w0: AtomicU64::new(0),
+            w1: AtomicU64::new(0),
+            w2: AtomicU64::new(0),
+        }
+    }
+}
+
+pub struct FlightRecorder {
+    head: AtomicU64,
+    slots: [FSlot; FLIGHT_SLOTS],
+}
+
+fn pack(kind: FlightKind, code: u8, model: u16, a: u16, b: u16) -> u64 {
+    kind.as_u8() as u64
+        | (code as u64) << 8
+        | (model as u64) << 16
+        | (a as u64) << 32
+        | (b as u64) << 48
+}
+
+impl FlightRecorder {
+    const fn new() -> FlightRecorder {
+        FlightRecorder { head: AtomicU64::new(0), slots: [const { FSlot::new() }; FLIGHT_SLOTS] }
+    }
+
+    /// Record one event. Lock-free, zero-alloc, multi-writer safe: the
+    /// ticket fetch-add gives every writer its own slot unless the ring
+    /// wraps a full lap between two racing writers.
+    #[inline]
+    pub fn record(&self, kind: FlightKind, code: u8, model: u16, a: u16, b: u16, id: u64) {
+        let t = self.head.fetch_add(1, Relaxed);
+        let s = &self.slots[(t as usize) % FLIGHT_SLOTS];
+        s.ver.store(0, Relaxed);
+        fence(Release);
+        s.w0.store(unix_us(), Relaxed);
+        s.w1.store(pack(kind, code, model, a, b), Relaxed);
+        s.w2.store(id, Relaxed);
+        s.ver.store(t + 1, Release);
+    }
+
+    /// Events recorded since process start (not capped by the ring).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Acquire)
+    }
+
+    /// Consistent oldest-first snapshot of the retained events. Events
+    /// overwritten or in flight during the scan are skipped. Allocates
+    /// (cold path: dumps and tests only).
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let head = self.head.load(Acquire);
+        let lo = head.saturating_sub(FLIGHT_SLOTS as u64);
+        let mut out = Vec::with_capacity((head - lo) as usize);
+        for t in lo..head {
+            let s = &self.slots[(t as usize) % FLIGHT_SLOTS];
+            let v1 = s.ver.load(Acquire);
+            if v1 != t + 1 {
+                continue;
+            }
+            let w0 = s.w0.load(Relaxed);
+            let w1 = s.w1.load(Relaxed);
+            let w2 = s.w2.load(Relaxed);
+            fence(Acquire);
+            if s.ver.load(Relaxed) != v1 {
+                continue;
+            }
+            out.push(FlightEvent {
+                ticket: t,
+                at_us: w0,
+                kind: (w1 & 0xff) as u8,
+                code: ((w1 >> 8) & 0xff) as u8,
+                model: ((w1 >> 16) & 0xffff) as u16,
+                a: ((w1 >> 32) & 0xffff) as u16,
+                b: ((w1 >> 48) & 0xffff) as u16,
+                id: w2,
+            });
+        }
+        out
+    }
+}
+
+static FLIGHT: FlightRecorder = FlightRecorder::new();
+
+/// The process-wide flight recorder.
+pub fn flight() -> &'static FlightRecorder {
+    &FLIGHT
+}
+
+use std::fmt::Write as _;
+
+fn health_name(v: u16) -> &'static str {
+    HEALTH_NAMES.get(v as usize).copied().unwrap_or("?")
+}
+
+/// Human-readable dump, one line per event, timestamps relative to the
+/// oldest retained event.
+pub fn render_text(events: &[FlightEvent]) -> String {
+    let t0 = events.first().map(|e| e.at_us).unwrap_or(0);
+    let mut out = String::with_capacity(events.len() * 72 + 64);
+    let _ = writeln!(
+        out,
+        "[flight] {} events retained (ring capacity {FLIGHT_SLOTS})",
+        events.len()
+    );
+    for e in events {
+        let dt = e.at_us.saturating_sub(t0);
+        let _ = write!(out, "[flight] +{dt}us {}", FlightKind::name(e.kind));
+        match e.kind {
+            1 => {
+                let _ = write!(out, " model={} seq={} cap={} id={}", e.model, e.a, e.b, e.id);
+            }
+            2 => {
+                let code = super::metrics::REJECT_NAMES
+                    .get(e.code as usize)
+                    .copied()
+                    .unwrap_or("?");
+                let _ = write!(out, " code={code} model={} seq={} id={}", e.model, e.a, e.id);
+            }
+            3 => {
+                let reason = CLOSE_NAMES.get(e.code as usize).copied().unwrap_or("?");
+                let _ = write!(out, " reason={reason} model={} seq={} n={}", e.model, e.a, e.b);
+            }
+            4 => {
+                let _ = write!(out, " model={} seq={} n={}", e.model, e.a, e.b);
+            }
+            5 => {
+                let _ = write!(out, " model={} v={}", e.model, e.id);
+            }
+            6 => {
+                let _ = write!(
+                    out,
+                    " model={} {}->{}",
+                    e.model,
+                    health_name(e.a),
+                    health_name(e.b)
+                );
+            }
+            7 => {
+                let _ = write!(out, " model={} worker={} seq={}", e.model, e.a, e.b);
+            }
+            8 => {
+                let _ = write!(out, " model={} v={}", e.model, e.id);
+            }
+            _ => {
+                let _ = write!(
+                    out,
+                    " kind={} code={} model={} a={} b={} id={}",
+                    e.kind, e.code, e.model, e.a, e.b, e.id
+                );
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Dump the whole retained ring to stderr, tagged with `reason`. Cold
+/// path (quarantine transitions, panics) — allocation is fine here.
+pub fn auto_dump(reason: &str) {
+    let events = flight().snapshot();
+    eprintln!("[flight] auto-dump ({reason}):");
+    eprint!("{}", render_text(&events));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_round_trips_all_fields() {
+        flight().record(FlightKind::Reject, 9, 31, 512, 77, u64::MAX);
+        let evs = flight().snapshot();
+        // other unit tests in this binary may record concurrently — find
+        // ours by its unmistakable id rather than assuming it is last
+        let e = evs
+            .iter()
+            .rev()
+            .find(|e| e.id == u64::MAX && e.a == 512)
+            .expect("just recorded");
+        assert_eq!(e.kind, FlightKind::Reject.as_u8());
+        assert_eq!(e.code, 9);
+        assert_eq!(e.model, 31);
+        assert_eq!(e.a, 512);
+        assert_eq!(e.b, 77);
+        assert_eq!(e.id, u64::MAX);
+        let text = render_text(&evs);
+        assert!(text.contains("reject"), "dump names the kind: {text}");
+        assert!(text.contains("code=quarantined"), "reject code is named: {text}");
+    }
+}

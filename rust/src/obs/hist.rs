@@ -169,6 +169,147 @@ impl Histogram {
         self.min.store(u64::MAX, Relaxed);
         self.max.store(0, Relaxed);
     }
+
+    /// Plain-value image of the current state (relaxed reads; a torn
+    /// image across concurrent recording is bucket-consistent enough for
+    /// windowed deltas — each cell is individually atomic).
+    pub fn snapshot_data(&self) -> HistData {
+        let mut out = HistData::new();
+        out.count = self.count.load(Relaxed);
+        out.sum = self.sum.load(Relaxed);
+        for (v, b) in out.buckets.iter_mut().zip(self.buckets.iter()) {
+            *v = b.load(Relaxed);
+        }
+        out
+    }
+}
+
+/// A plain (non-atomic) image of a [`Histogram`]: the snapshot-ring
+/// payload. Two images subtract bucket-wise — the merge operation run in
+/// reverse — yielding a window-local histogram that answers quantile
+/// queries over just the delta. No min/max: an atomically observed
+/// min/max cannot be subtracted, so window quantiles interpolate inside
+/// bucket bounds only.
+#[derive(Clone)]
+pub struct HistData {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl Default for HistData {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistData {
+    pub const fn new() -> Self {
+        HistData { count: 0, sum: 0, buckets: [0; N_BUCKETS] }
+    }
+
+    /// Bucket-wise saturating subtract: `self - earlier`. With `earlier`
+    /// captured before `self` from the same monotone histogram, this is
+    /// exactly the observations recorded in between.
+    pub fn sub(&self, earlier: &HistData) -> HistData {
+        let mut out = HistData::new();
+        out.count = self.count.saturating_sub(earlier.count);
+        out.sum = self.sum.saturating_sub(earlier.sum);
+        for i in 0..N_BUCKETS {
+            out.buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        out
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum as f64 / self.count as f64 }
+    }
+
+    /// Approximate quantile over the image; same nearest-rank bucket walk
+    /// as [`Histogram::quantile`], interpolated inside bucket bounds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let (lo, hi) = Histogram::bucket_bounds(i);
+                let into = (rank - seen) as f64 / c as f64;
+                return lo as f64 + (hi - lo) as f64 * into;
+            }
+            seen += c;
+        }
+        0.0
+    }
+
+    /// Fraction of observations strictly above `v` (bucket-granular; the
+    /// bucket containing `v` contributes its uniform-split share). Drives
+    /// the SLO latency burn rate: `frac_above(p99_target) / 0.01`.
+    pub fn frac_above(&self, v: u64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let iv = Histogram::bucket_of(v);
+        let mut above = 0.0f64;
+        for (i, &c) in self.buckets.iter().enumerate().skip(iv) {
+            if c == 0 {
+                continue;
+            }
+            if i == iv {
+                let (lo, hi) = Histogram::bucket_bounds(i);
+                let width = (hi - lo + 1) as f64;
+                above += c as f64 * ((hi - v) as f64 / width);
+            } else {
+                above += c as f64;
+            }
+        }
+        above / self.count as f64
+    }
+}
+
+/// Atomic image of a histogram: one snapshot-ring slot's copy of a live
+/// [`Histogram`]. All cells are relaxed atomics so a seqlock-guarded
+/// writer/reader pair never races undefined — a torn read is caught by
+/// the slot version, not by the cells.
+pub struct HistImage {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl HistImage {
+    pub const fn new() -> Self {
+        HistImage {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: [const { AtomicU64::new(0) }; N_BUCKETS],
+        }
+    }
+
+    /// Copy the live histogram's cells into this image (relaxed stores;
+    /// zero-alloc, no locks — safe on the capture tick).
+    pub fn store_from(&self, h: &Histogram) {
+        self.count.store(h.count.load(Relaxed), Relaxed);
+        self.sum.store(h.sum.load(Relaxed), Relaxed);
+        for (cell, b) in self.buckets.iter().zip(h.buckets.iter()) {
+            cell.store(b.load(Relaxed), Relaxed);
+        }
+    }
+
+    /// Copy this image out into plain values.
+    pub fn load_into(&self, out: &mut HistData) {
+        out.count = self.count.load(Relaxed);
+        out.sum = self.sum.load(Relaxed);
+        for (v, cell) in out.buckets.iter_mut().zip(self.buckets.iter()) {
+            *v = cell.load(Relaxed);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -219,5 +360,26 @@ mod tests {
             assert_eq!(Histogram::bucket_of(lo), i, "lo of bucket {i}");
             assert_eq!(Histogram::bucket_of(hi), i, "hi of bucket {i}");
         }
+    }
+
+    #[test]
+    fn image_subtract_isolates_the_window() {
+        let h = Histogram::new();
+        for v in [1u64, 5, 9, 100] {
+            h.record(v);
+        }
+        let base = h.snapshot_data();
+        for v in [20u64, 20, 20, 21] {
+            h.record(v);
+        }
+        let delta = h.snapshot_data().sub(&base);
+        assert_eq!(delta.count, 4);
+        assert_eq!(delta.sum, 81);
+        // linear region: exact buckets, exact quantiles
+        assert_eq!(delta.quantile(0.5), 20.0);
+        assert_eq!(delta.quantile(1.0), 21.0);
+        // nothing above 21, everything above 19
+        assert_eq!(delta.frac_above(21), 0.0);
+        assert_eq!(delta.frac_above(19), 1.0);
     }
 }

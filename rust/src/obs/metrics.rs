@@ -93,6 +93,78 @@ pub const N_KERNEL_SLOTS: usize = 8;
 /// well below this; workers past the cap still serve, just unlabeled).
 pub const MAX_WORKER_SLOTS: usize = 16;
 
+/// Models with their own (model × seq) batch histogram rows; models past
+/// this fold into the shared overflow column of the last row.
+pub const MAX_BATCH_MODELS: usize = 8;
+
+/// Seq-bucket columns per model in the batch histogram grid; columns are
+/// claimed by the first batch seen at that token capacity, extras fold
+/// into the last column.
+pub const MAX_SEQ_SLOTS: usize = 8;
+
+/// Per-(model × seq-bucket) batch fill/exec histograms, replacing the
+/// PR-8 global-only pair. Columns are claimed lock-free on first sight
+/// of a seq-bucket token capacity (CAS from 0); recording stays a
+/// relaxed scan over ≤ [`MAX_SEQ_SLOTS`] cells plus the histogram RMWs —
+/// zero-alloc, hot-path safe. Rendered with `{model,seq}` labels in
+/// Prometheus text; unclaimed cells render nothing.
+pub struct BatchHists {
+    /// Claimed seq-bucket token capacity per column; 0 = free.
+    cols: [[AtomicU64; MAX_SEQ_SLOTS]; MAX_BATCH_MODELS],
+    fill_pct: [[Histogram; MAX_SEQ_SLOTS]; MAX_BATCH_MODELS],
+    exec_us: [[Histogram; MAX_SEQ_SLOTS]; MAX_BATCH_MODELS],
+}
+
+impl BatchHists {
+    pub const fn new() -> Self {
+        BatchHists {
+            cols: [const { [const { AtomicU64::new(0) }; MAX_SEQ_SLOTS] }; MAX_BATCH_MODELS],
+            fill_pct: [const { [const { Histogram::new() }; MAX_SEQ_SLOTS] }; MAX_BATCH_MODELS],
+            exec_us: [const { [const { Histogram::new() }; MAX_SEQ_SLOTS] }; MAX_BATCH_MODELS],
+        }
+    }
+
+    fn col_for(&self, model: usize, seq_tcap: u64) -> (usize, usize) {
+        let m = model.min(MAX_BATCH_MODELS - 1);
+        let cols = &self.cols[m];
+        for c in 0..MAX_SEQ_SLOTS {
+            let cur = cols[c].load(Relaxed);
+            if cur == seq_tcap {
+                return (m, c);
+            }
+            if cur == 0 {
+                match cols[c].compare_exchange(0, seq_tcap, Relaxed, Relaxed) {
+                    Ok(_) => return (m, c),
+                    Err(seen) if seen == seq_tcap => return (m, c),
+                    Err(_) => {} // lost the claim to a different bucket; keep scanning
+                }
+            }
+        }
+        (m, MAX_SEQ_SLOTS - 1) // grid full for this model: fold into the last column
+    }
+
+    /// Record one executed batch for `(model, seq-bucket token capacity)`.
+    #[inline]
+    pub fn record(&self, model: usize, seq_tcap: usize, fill_pct: u64, exec_us: u64) {
+        let (m, c) = self.col_for(model, seq_tcap as u64);
+        self.fill_pct[m][c].record(fill_pct);
+        self.exec_us[m][c].record(exec_us);
+    }
+
+    /// Claimed token capacity of a grid cell (0 = never recorded).
+    pub fn col_tcap(&self, model: usize, col: usize) -> u64 {
+        self.cols[model][col].load(Relaxed)
+    }
+
+    pub fn fill(&self, model: usize, col: usize) -> &Histogram {
+        &self.fill_pct[model][col]
+    }
+
+    pub fn exec(&self, model: usize, col: usize) -> &Histogram {
+        &self.exec_us[model][col]
+    }
+}
+
 pub struct MetricsRegistry {
     // -- front door (coordinator/net.rs) --------------------------------
     pub net_accepted_conns: Counter,
@@ -118,9 +190,8 @@ pub struct MetricsRegistry {
     pub serve_padded_tokens: Counter,
     pub serve_total_tokens: Counter,
     pub serve_queue_depth: Gauge,
-    /// Batch occupancy, percent of the bucket's capacity actually filled.
-    pub serve_batch_fill_pct: Histogram,
-    pub serve_batch_exec_us: Histogram,
+    /// Per-(model × seq-bucket) batch occupancy / exec histograms.
+    pub serve_batch: BatchHists,
 
     // -- request lifecycle stages ---------------------------------------
     /// admitted → staged into a batch.
@@ -138,6 +209,25 @@ pub struct MetricsRegistry {
     pub model_reloads: [Counter; MAX_MODEL_SLOTS],
     pub model_evicts: [Counter; MAX_MODEL_SLOTS],
     pub model_forward_failures: [Counter; MAX_MODEL_SLOTS],
+    /// Requests answered with logits, per model (the SLO error budget's
+    /// denominator alongside `model_forward_failures`).
+    pub model_served: [Counter; MAX_MODEL_SLOTS],
+
+    // -- SLO engine (obs/slo.rs; observe-only) --------------------------
+    /// Armed objectives bitmask: bit 0 latency, bit 1 error budget.
+    pub slo_armed: Gauge,
+    pub slo_latency_target_us: Gauge,
+    /// Declared error budget, percent × 1000.
+    pub slo_error_pct_milli: Gauge,
+    /// Latency burn rates × 1000 (burn 1.0 = spending the budget exactly
+    /// as fast as allowed).
+    pub slo_latency_burn_fast_milli: Gauge,
+    pub slo_latency_burn_slow_milli: Gauge,
+    /// Worst per-model state: 0 ok, 1 warning, 2 burning.
+    pub slo_state_worst: Gauge,
+    pub slo_state: [Gauge; MAX_MODEL_SLOTS],
+    pub slo_error_burn_fast_milli: [Gauge; MAX_MODEL_SLOTS],
+    pub slo_error_burn_slow_milli: [Gauge; MAX_MODEL_SLOTS],
 
     // -- execution workers (coordinator/workers.rs) ---------------------
     /// Worker threads the front door is running (1 = inline loop).
@@ -186,8 +276,7 @@ impl MetricsRegistry {
             serve_padded_tokens: Counter::new(),
             serve_total_tokens: Counter::new(),
             serve_queue_depth: Gauge::new(),
-            serve_batch_fill_pct: Histogram::new(),
-            serve_batch_exec_us: Histogram::new(),
+            serve_batch: BatchHists::new(),
             stage_queue_us: Histogram::new(),
             stage_exec_us: Histogram::new(),
             stage_total_us: Histogram::new(),
@@ -198,6 +287,16 @@ impl MetricsRegistry {
             model_reloads: [const { Counter::new() }; MAX_MODEL_SLOTS],
             model_evicts: [const { Counter::new() }; MAX_MODEL_SLOTS],
             model_forward_failures: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            model_served: [const { Counter::new() }; MAX_MODEL_SLOTS],
+            slo_armed: Gauge::new(),
+            slo_latency_target_us: Gauge::new(),
+            slo_error_pct_milli: Gauge::new(),
+            slo_latency_burn_fast_milli: Gauge::new(),
+            slo_latency_burn_slow_milli: Gauge::new(),
+            slo_state_worst: Gauge::new(),
+            slo_state: [const { Gauge::new() }; MAX_MODEL_SLOTS],
+            slo_error_burn_fast_milli: [const { Gauge::new() }; MAX_MODEL_SLOTS],
+            slo_error_burn_slow_milli: [const { Gauge::new() }; MAX_MODEL_SLOTS],
             workers_configured: Gauge::new(),
             worker_queue_depth: Gauge::new(),
             worker_dispatch_wait_us: Histogram::new(),
@@ -223,7 +322,23 @@ impl MetricsRegistry {
         labels[idx] = label.to_string();
     }
 
-    fn model_labels_snapshot(&self) -> Vec<String> {
+    /// Register `fallback` for slot `idx` only when the slot has no
+    /// label yet — the single-model demo path labels itself without
+    /// clobbering names the model store registered at load time.
+    pub fn ensure_model_label(&self, idx: usize, fallback: &str) {
+        if idx >= MAX_MODEL_SLOTS {
+            return;
+        }
+        let mut labels = self.model_labels.lock().unwrap();
+        while labels.len() <= idx {
+            labels.push(String::new());
+        }
+        if labels[idx].is_empty() {
+            labels[idx] = fallback.to_string();
+        }
+    }
+
+    pub(crate) fn model_labels_snapshot(&self) -> Vec<String> {
         self.model_labels.lock().unwrap().clone()
     }
 }
@@ -274,6 +389,11 @@ pub fn register_model_label(idx: usize, label: &str) {
     registry().register_model_label(idx, label);
 }
 
+/// Label slot `idx` with `fallback` only if it is still unlabeled.
+pub fn ensure_model_label(idx: usize, fallback: &str) {
+    registry().ensure_model_label(idx, fallback);
+}
+
 // ---------------------------------------------------------------------
 // Rendering
 // ---------------------------------------------------------------------
@@ -293,13 +413,19 @@ fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
 }
 
 fn prom_hist(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    prom_hist_ex(out, name, help, h, None);
+}
+
+/// Like [`prom_hist`], with an optional OpenMetrics exemplar appended to
+/// the `_count` line (` # {labels} value`) — the slow-trace join surface.
+fn prom_hist_ex(out: &mut String, name: &str, help: &str, h: &Histogram, exemplar: Option<String>) {
     let _ = writeln!(out, "# HELP mkq_{name} {help}");
     let _ = writeln!(out, "# TYPE mkq_{name} summary");
     for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
         let _ = writeln!(out, "mkq_{name}{{quantile=\"{label}\"}} {:.1}", h.quantile(q));
     }
     let _ = writeln!(out, "mkq_{name}_sum {}", h.sum());
-    let _ = writeln!(out, "mkq_{name}_count {}", h.count());
+    let _ = writeln!(out, "mkq_{name}_count {}{}", h.count(), exemplar.unwrap_or_default());
 }
 
 fn model_label_for(labels: &[String], i: usize) -> String {
@@ -345,14 +471,77 @@ pub fn render_prometheus() -> String {
     prom_counter(&mut out, "serve_padded_tokens", "padding tokens staged into batches", r.serve_padded_tokens.get());
     prom_counter(&mut out, "serve_total_tokens", "total token slots staged into batches", r.serve_total_tokens.get());
     prom_gauge(&mut out, "serve_queue_depth", "requests waiting in slot queues", r.serve_queue_depth.get());
-    prom_hist(&mut out, "serve_batch_fill_pct", "batch occupancy percent of bucket capacity", &r.serve_batch_fill_pct);
-    prom_hist(&mut out, "serve_batch_exec_us", "backend forward microseconds per batch", &r.serve_batch_exec_us);
-
-    prom_hist(&mut out, "stage_queue_us", "request stage: admitted to staged", &r.stage_queue_us);
-    prom_hist(&mut out, "stage_exec_us", "request stage: staged to forward complete", &r.stage_exec_us);
-    prom_hist(&mut out, "stage_total_us", "wire path: frame read to reply queued", &r.stage_total_us);
 
     let labels = r.model_labels_snapshot();
+
+    // per-(model × seq-bucket) batch histograms: only claimed grid cells
+    // render, each as a {model,seq}-labeled summary
+    let claimed: Vec<(usize, usize, u64)> = (0..MAX_BATCH_MODELS)
+        .flat_map(|m| (0..MAX_SEQ_SLOTS).map(move |c| (m, c, r.serve_batch.col_tcap(m, c))))
+        .filter(|&(_, _, t)| t != 0)
+        .collect();
+    if !claimed.is_empty() {
+        let _ = writeln!(out, "# HELP mkq_serve_batch_fill_pct batch occupancy percent of bucket capacity, per model x seq bucket");
+        let _ = writeln!(out, "# TYPE mkq_serve_batch_fill_pct summary");
+        for &(m, c, t) in &claimed {
+            let l = model_label_for(&labels, m);
+            let h = r.serve_batch.fill(m, c);
+            for (q, ql) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(out, "mkq_serve_batch_fill_pct{{model=\"{l}\",seq=\"{t}\",quantile=\"{ql}\"}} {:.1}", h.quantile(q));
+            }
+            let _ = writeln!(out, "mkq_serve_batch_fill_pct_sum{{model=\"{l}\",seq=\"{t}\"}} {}", h.sum());
+            let _ = writeln!(out, "mkq_serve_batch_fill_pct_count{{model=\"{l}\",seq=\"{t}\"}} {}", h.count());
+        }
+        let _ = writeln!(out, "# HELP mkq_serve_batch_exec_us backend forward microseconds per batch, per model x seq bucket");
+        let _ = writeln!(out, "# TYPE mkq_serve_batch_exec_us summary");
+        for &(m, c, t) in &claimed {
+            let l = model_label_for(&labels, m);
+            let h = r.serve_batch.exec(m, c);
+            for (q, ql) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(out, "mkq_serve_batch_exec_us{{model=\"{l}\",seq=\"{t}\",quantile=\"{ql}\"}} {:.1}", h.quantile(q));
+            }
+            let _ = writeln!(out, "mkq_serve_batch_exec_us_sum{{model=\"{l}\",seq=\"{t}\"}} {}", h.sum());
+            let _ = writeln!(out, "mkq_serve_batch_exec_us_count{{model=\"{l}\",seq=\"{t}\"}} {}", h.count());
+        }
+    }
+
+    // exemplars: join each stage histogram to the worst slow-trace entry
+    // for that stage by the request id the OK frame carries
+    let traces = r.slow_traces.snapshot();
+    let exemplar_for = |value_of: &dyn Fn(&super::trace::TraceEntry) -> u64| -> Option<String> {
+        traces.iter().max_by_key(|t| value_of(t)).map(|t| {
+            format!(
+                " # {{req_id=\"{}\",model=\"{}\",seq=\"{}\",batch=\"{}\"}} {}.0",
+                t.id,
+                model_label_for(&labels, t.model as usize),
+                t.seq_bucket,
+                t.batch_size,
+                value_of(t)
+            )
+        })
+    };
+    prom_hist_ex(&mut out, "stage_queue_us", "request stage: admitted to staged", &r.stage_queue_us, exemplar_for(&|t| t.queue_us));
+    prom_hist_ex(&mut out, "stage_exec_us", "request stage: staged to forward complete", &r.stage_exec_us, exemplar_for(&|t| t.exec_us));
+    prom_hist_ex(&mut out, "stage_total_us", "wire path: frame read to reply queued", &r.stage_total_us, exemplar_for(&|t| t.total_us));
+
+    // the whole slow-trace ring over the wire, exemplar-joined by req_id
+    if !traces.is_empty() {
+        let _ = writeln!(out, "# HELP mkq_slow_trace_total_us slowest-trace ring, one row per retained trace (exemplar carries the request id)");
+        let _ = writeln!(out, "# TYPE mkq_slow_trace_total_us gauge");
+        for (rank, t) in traces.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "mkq_slow_trace_total_us{{rank=\"{rank}\",model=\"{}\",seq=\"{}\",batch=\"{}\"}} {} # {{req_id=\"{}\"}} {}.0",
+                model_label_for(&labels, t.model as usize),
+                t.seq_bucket,
+                t.batch_size,
+                t.total_us,
+                t.id,
+                t.total_us
+            );
+        }
+    }
+
     if !labels.is_empty() {
         let _ = writeln!(out, "# HELP mkq_model_version active lifecycle version per model");
         let _ = writeln!(out, "# TYPE mkq_model_version gauge");
@@ -395,6 +584,41 @@ pub fn render_prometheus() -> String {
         for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
             let l = model_label_for(&labels, i);
             let _ = writeln!(out, "mkq_model_forward_failures_total{{model=\"{l}\"}} {}", r.model_forward_failures[i].get());
+        }
+        let _ = writeln!(out, "# HELP mkq_model_served_total requests answered with logits per model");
+        let _ = writeln!(out, "# TYPE mkq_model_served_total counter");
+        for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+            let l = model_label_for(&labels, i);
+            let _ = writeln!(out, "mkq_model_served_total{{model=\"{l}\"}} {}", r.model_served[i].get());
+        }
+    }
+
+    prom_gauge(&mut out, "slo_armed", "SLO objectives armed (bit 0 latency, bit 1 error budget)", r.slo_armed.get());
+    if r.slo_armed.get() != 0 {
+        prom_gauge(&mut out, "slo_latency_target_us", "declared p99 latency target, microseconds", r.slo_latency_target_us.get());
+        prom_gauge(&mut out, "slo_error_pct_milli", "declared error budget, percent x1000", r.slo_error_pct_milli.get());
+        prom_gauge(&mut out, "slo_latency_burn_fast_milli", "fast-window latency burn rate x1000", r.slo_latency_burn_fast_milli.get());
+        prom_gauge(&mut out, "slo_latency_burn_slow_milli", "slow-window latency burn rate x1000", r.slo_latency_burn_slow_milli.get());
+        prom_gauge(&mut out, "slo_state_worst", "worst per-model SLO state (0 ok, 1 warning, 2 burning)", r.slo_state_worst.get());
+        if !labels.is_empty() {
+            let _ = writeln!(out, "# HELP mkq_slo_state per-model SLO state (0 ok, 1 warning, 2 burning)");
+            let _ = writeln!(out, "# TYPE mkq_slo_state gauge");
+            for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+                let l = model_label_for(&labels, i);
+                let _ = writeln!(out, "mkq_slo_state{{model=\"{l}\"}} {}", r.slo_state[i].get());
+            }
+            let _ = writeln!(out, "# HELP mkq_slo_error_burn_fast_milli fast-window error-budget burn rate x1000");
+            let _ = writeln!(out, "# TYPE mkq_slo_error_burn_fast_milli gauge");
+            for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+                let l = model_label_for(&labels, i);
+                let _ = writeln!(out, "mkq_slo_error_burn_fast_milli{{model=\"{l}\"}} {}", r.slo_error_burn_fast_milli[i].get());
+            }
+            let _ = writeln!(out, "# HELP mkq_slo_error_burn_slow_milli slow-window error-budget burn rate x1000");
+            let _ = writeln!(out, "# TYPE mkq_slo_error_burn_slow_milli gauge");
+            for i in 0..labels.len().min(MAX_MODEL_SLOTS) {
+                let l = model_label_for(&labels, i);
+                let _ = writeln!(out, "mkq_slo_error_burn_slow_milli{{model=\"{l}\"}} {}", r.slo_error_burn_slow_milli[i].get());
+            }
         }
     }
 
@@ -482,6 +706,10 @@ pub fn render_json() -> String {
         ("serve_queue_depth", r.serve_queue_depth.get()),
         ("workers_configured", r.workers_configured.get()),
         ("worker_queue_depth", r.worker_queue_depth.get()),
+        ("slo_armed", r.slo_armed.get()),
+        ("slo_state_worst", r.slo_state_worst.get()),
+        ("slo_latency_burn_fast_milli", r.slo_latency_burn_fast_milli.get()),
+        ("slo_latency_burn_slow_milli", r.slo_latency_burn_slow_milli.get()),
     ];
     for (name, v) in scalars {
         let _ = writeln!(out, "  \"{name}\": {v},");
@@ -493,11 +721,33 @@ pub fn render_json() -> String {
         }
         let _ = write!(out, "\"{name}\": {}", r.net_rejects[code].get());
     }
-    out.push_str("},\n  ");
-    json_hist(&mut out, "serve_batch_fill_pct", &r.serve_batch_fill_pct);
-    out.push_str(",\n  ");
-    json_hist(&mut out, "serve_batch_exec_us", &r.serve_batch_exec_us);
-    out.push_str(",\n  ");
+    out.push_str("},\n  \"batch_hists\": [");
+    let labels = r.model_labels_snapshot();
+    let mut first_cell = true;
+    for m in 0..MAX_BATCH_MODELS {
+        for c in 0..MAX_SEQ_SLOTS {
+            let t = r.serve_batch.col_tcap(m, c);
+            if t == 0 {
+                continue;
+            }
+            if !first_cell {
+                out.push_str(", ");
+            }
+            first_cell = false;
+            let fill = r.serve_batch.fill(m, c);
+            let exec = r.serve_batch.exec(m, c);
+            let _ = write!(
+                out,
+                "{{\"model\": \"{}\", \"seq\": {t}, \"batches\": {}, \"fill_p50\": {:.1}, \"exec_p50_us\": {:.1}, \"exec_p99_us\": {:.1}}}",
+                model_label_for(&labels, m),
+                exec.count(),
+                fill.quantile(0.5),
+                exec.quantile(0.5),
+                exec.quantile(0.99)
+            );
+        }
+    }
+    out.push_str("],\n  ");
     json_hist(&mut out, "stage_queue_us", &r.stage_queue_us);
     out.push_str(",\n  ");
     json_hist(&mut out, "stage_exec_us", &r.stage_exec_us);
@@ -528,7 +778,7 @@ pub fn render_json() -> String {
         }
         let _ = write!(
             out,
-            "{{\"model\": \"{}\", \"version\": {}, \"health\": {}, \"resident_bytes\": {}, \"transitions\": {}, \"reloads\": {}, \"evicts\": {}, \"forward_failures\": {}}}",
+            "{{\"model\": \"{}\", \"version\": {}, \"health\": {}, \"resident_bytes\": {}, \"transitions\": {}, \"reloads\": {}, \"evicts\": {}, \"forward_failures\": {}, \"served\": {}, \"slo_state\": {}}}",
             model_label_for(&labels, i),
             r.model_version[i].get(),
             r.model_health[i].get(),
@@ -536,7 +786,9 @@ pub fn render_json() -> String {
             r.model_health_transitions[i].get(),
             r.model_reloads[i].get(),
             r.model_evicts[i].get(),
-            r.model_forward_failures[i].get()
+            r.model_forward_failures[i].get(),
+            r.model_served[i].get(),
+            r.slo_state[i].get()
         );
     }
     out.push_str("],\n  \"kernels\": [");
@@ -567,18 +819,21 @@ pub fn json_u64_field(payload: &str, name: &str) -> Option<u64> {
     rest[..end].parse().ok()
 }
 
-/// One-line operator summary for `--stats-every-secs`.
+/// One-line *cumulative* operator summary (since-start totals). The
+/// `--stats-every-secs` loop prints interval deltas instead — see
+/// [`super::snapshot::render_statusline_delta`]; this stays for one-shot
+/// contexts (end-of-run summaries, tests).
 pub fn render_statusline() -> String {
     let r = registry();
     format!(
-        "[obs] conns={} admitted={} served={} shed={} failed={} q={} batch_p50={:.0}us queue_p50={:.0}us total_p99={:.0}us",
+        "[obs] conns={} admitted={} served={} shed={} failed={} q={} exec_p50={:.0}us queue_p50={:.0}us total_p99={:.0}us",
         r.net_accepted_conns.get(),
         r.serve_admitted.get(),
         r.serve_served.get(),
         r.serve_shed_deadline.get(),
         r.serve_failed.get(),
         r.serve_queue_depth.get(),
-        r.serve_batch_exec_us.quantile(0.5),
+        r.stage_exec_us.quantile(0.5),
         r.stage_queue_us.quantile(0.5),
         r.stage_total_us.quantile(0.99),
     )
@@ -625,6 +880,48 @@ mod tests {
         assert!(json.contains("\"serve_served\""));
         assert!(json.contains("\"slow_traces\""));
         assert!(json.contains("\"workers\""));
+    }
+
+    #[test]
+    fn batch_grid_claims_and_renders_labeled_cells() {
+        let r = registry();
+        register_model_label(7, "gridtest");
+        r.serve_batch.record(7, 24, 75, 900);
+        r.serve_batch.record(7, 24, 50, 700);
+        r.serve_batch.record(7, 48, 100, 1800);
+        let text = render_prometheus();
+        assert!(
+            text.contains("mkq_serve_batch_fill_pct{model=\"gridtest\",seq=\"24\""),
+            "claimed cell renders with model+seq labels"
+        );
+        assert!(text.contains("mkq_serve_batch_exec_us{model=\"gridtest\",seq=\"48\""));
+        assert!(text.contains("mkq_serve_batch_exec_us_count{model=\"gridtest\",seq=\"24\"} 2"));
+        let json = render_json();
+        assert!(json.contains("\"batch_hists\""));
+        assert!(json.contains("\"seq\": 48"));
+    }
+
+    #[test]
+    fn stage_exemplars_join_slow_traces_by_req_id() {
+        use crate::obs::trace::TraceEntry;
+        let r = registry();
+        // an unbeatably slow trace so it owns rank 0 and every exemplar
+        r.slow_traces.offer(TraceEntry {
+            id: 424_242,
+            model: 0,
+            seq_bucket: 12,
+            batch_size: 4,
+            queue_us: 1 << 41,
+            exec_us: 1 << 42,
+            total_us: 1 << 43,
+        });
+        let text = render_prometheus();
+        assert!(text.contains("mkq_slow_trace_total_us{rank=\"0\""), "ring rows render");
+        assert!(text.contains("req_id=\"424242\""), "exemplar carries the request id");
+        assert!(
+            text.contains("mkq_stage_total_us_count") && text.contains(" # {req_id="),
+            "stage histogram carries an exemplar"
+        );
     }
 
     #[test]

@@ -1,32 +1,59 @@
 //! First-class observability, dependency-free (no tracing/prometheus
 //! crates — hermetic build).
 //!
-//! * [`hist`]    — lock-free log-linear histograms (p50/p90/p99/p999,
-//!                 mergeable, saturating).
-//! * [`metrics`] — the process-wide [`MetricsRegistry`]: one const-init
-//!                 static of atomic counters/gauges/histograms, gated by
-//!                 `MKQ_METRICS=0`, rendered as Prometheus text or JSON.
-//! * [`trace`]   — fixed-size ring of the slowest request traces with
-//!                 per-stage breakdown.
+//! * [`hist`]     — lock-free log-linear histograms (p50/p90/p99/p999,
+//!                  mergeable, saturating) plus plain/atomic images
+//!                  ([`HistData`]/[`hist::HistImage`]) whose bucket-wise
+//!                  subtract powers windowed deltas.
+//! * [`metrics`]  — the process-wide [`MetricsRegistry`]: one const-init
+//!                  static of atomic counters/gauges/histograms, gated by
+//!                  `MKQ_METRICS=0`, rendered as Prometheus text or JSON
+//!                  (with slow-trace exemplars on the stage histograms).
+//! * [`trace`]    — fixed-size ring of the slowest request traces with
+//!                  per-stage breakdown.
+//! * [`snapshot`] — the [`SnapshotRing`]: ~1 s captures of the registry
+//!                  serving reset-free windowed rates and window-local
+//!                  quantiles (`admin metrics --window`, the METRICS
+//!                  frame's trailing `window` field, statusline deltas).
+//! * [`slo`]      — declared latency/error objectives evaluated as
+//!                  fast/slow burn rates over the snapshot ring
+//!                  (`serve-native --slo p99_us=N,error_pct=X`),
+//!                  observe-only.
+//! * [`flight`]   — the always-on [`FlightRecorder`]: a lock-free ring
+//!                  of typed binary lifecycle events, dumped via
+//!                  `admin flight-dump` and auto-dumped on quarantine.
 //!
-//! Hot-path contract: recording into an already-registered series is
+//! Hot-path contract: recording into an already-registered series — and
+//! into the flight recorder, and the snapshot capture tick — is
 //! zero-heap-allocation and lock-free (the slow-trace ring takes a Mutex
 //! only when a trace beats the current slowest set — still no
-//! allocation). `tests/workspace_alloc.rs` enforces this with a counting
-//! global allocator.
+//! allocation). `tests/workspace_alloc.rs` and `tests/obs_window.rs`
+//! enforce this with counting global allocators.
 //!
 //! Scrape surfaces: the METRICS wire frame on the serving port,
-//! `mkq-bert admin metrics --addr`, and `--stats-every-secs N` (one-line
-//! stderr summary). See README "Observability" for the series table.
+//! `mkq-bert admin metrics --addr [--window SECS]`, `admin flight-dump`,
+//! and `--stats-every-secs N` (interval-delta statusline). See README
+//! "Observability" for the series table.
 
+pub mod flight;
 pub mod hist;
 pub mod metrics;
+pub mod slo;
+pub mod snapshot;
 pub mod trace;
 
-pub use hist::Histogram;
+pub use flight::{auto_dump, flight, FlightEvent, FlightKind, FlightRecorder, FLIGHT_SLOTS};
+pub use hist::{HistData, Histogram};
 pub use metrics::{
-    json_u64_field, metrics, metrics_enabled, register_model_label, registry, render_json,
-    render_prometheus, render_statusline, set_metrics_enabled, Counter, Gauge, MetricsRegistry,
-    MAX_MODEL_SLOTS, MAX_WORKER_SLOTS, N_KERNEL_SLOTS, N_REJECT_CODES,
+    ensure_model_label, json_u64_field, metrics, metrics_enabled, register_model_label, registry,
+    render_json,
+    render_prometheus, render_statusline, set_metrics_enabled, BatchHists, Counter, Gauge,
+    MetricsRegistry, MAX_BATCH_MODELS, MAX_MODEL_SLOTS, MAX_WORKER_SLOTS, MAX_SEQ_SLOTS,
+    N_KERNEL_SLOTS, N_REJECT_CODES,
+};
+pub use slo::{SloConfig, SloReport, SloState};
+pub use snapshot::{
+    live_snapshot, render_statusline_delta, render_window, render_window_json, snapshots, unix_us,
+    window_delta, SnapData, SnapshotRing, SNAP_SLOTS,
 };
 pub use trace::{SlowTraces, TraceEntry};

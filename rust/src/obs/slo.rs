@@ -1,0 +1,281 @@
+//! SLO burn-rate engine: declared latency/error objectives evaluated
+//! over sliding windows from the snapshot ring.
+//!
+//! `serve-native --slo p99_us=N,error_pct=X` arms up to two objectives:
+//!
+//! * **latency** — at most 1% of wire requests may exceed `p99_us`
+//!   microseconds end-to-end (`stage_total_us`);
+//! * **error**  — at most `error_pct` percent of a model's forwards may
+//!   fail.
+//!
+//! A *burn rate* is the observed bad fraction divided by the budgeted
+//! bad fraction: 1.0 means the budget is being consumed exactly as
+//! fast as allowed, 10 means ten times too fast. The engine computes a
+//! **fast** (10 s) and **slow** (60 s) burn from windowed deltas — the
+//! standard multi-window alerting shape: the fast window catches a
+//! sudden cliff, the slow window confirms a sustained trend — and maps
+//! them to a per-model [`SloState`]:
+//!
+//! * `Burning` — fast burn ≥ 2.0 (the budget is vanishing *now*);
+//! * `Warning` — slow burn ≥ 1.0 (a sustained overspend);
+//! * `Ok` — otherwise.
+//!
+//! The engine is **observe-only**: it sets `slo_*` gauges on the
+//! metrics registry (scraped, rendered in INFO_RESP / `admin status` /
+//! the statusline) and never couples back into admission. The front
+//! door calls [`evaluate`] on its ~1 s capture tick; windows clamp to
+//! however much history the snapshot ring actually holds.
+
+use super::metrics::{registry, MAX_MODEL_SLOTS};
+use super::snapshot::{window_delta, SnapData};
+
+/// Fast (page-now) burn window, seconds.
+pub const FAST_WINDOW_SECS: u32 = 10;
+/// Slow (sustained-trend) burn window, seconds.
+pub const SLOW_WINDOW_SECS: u32 = 60;
+/// Fast burn at or above this is `Burning`.
+pub const FAST_BURN_THRESHOLD: f64 = 2.0;
+/// Slow burn at or above this is `Warning`.
+pub const SLOW_BURN_THRESHOLD: f64 = 1.0;
+
+/// Declared objectives (both optional; `--slo` grammar:
+/// `p99_us=N,error_pct=X` in either order, either alone).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloConfig {
+    /// End-to-end wire latency target: at most 1% of requests above this.
+    pub p99_us: Option<u64>,
+    /// Per-model forward failure budget, percent (0 < x ≤ 100).
+    pub error_pct: Option<f64>,
+}
+
+impl SloConfig {
+    pub const fn none() -> SloConfig {
+        SloConfig { p99_us: None, error_pct: None }
+    }
+
+    pub fn armed(&self) -> bool {
+        self.p99_us.is_some() || self.error_pct.is_some()
+    }
+
+    /// Parse the `--slo` flag value.
+    pub fn parse(s: &str) -> Result<SloConfig, String> {
+        let mut cfg = SloConfig::none();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad SLO clause {part:?} (want key=value)"))?;
+            match k.trim() {
+                "p99_us" => {
+                    let n: u64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad p99_us value {v:?} (want microseconds)"))?;
+                    if n == 0 {
+                        return Err("p99_us must be positive".into());
+                    }
+                    cfg.p99_us = Some(n);
+                }
+                "error_pct" => {
+                    let x: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad error_pct value {v:?} (want percent)"))?;
+                    if !(x > 0.0 && x <= 100.0) {
+                        return Err(format!("error_pct {x} out of range (0, 100]"));
+                    }
+                    cfg.error_pct = Some(x);
+                }
+                other => {
+                    return Err(format!("unknown SLO key {other:?} (known: p99_us, error_pct)"))
+                }
+            }
+        }
+        if !cfg.armed() {
+            return Err("empty --slo spec (want p99_us=N and/or error_pct=X)".into());
+        }
+        Ok(cfg)
+    }
+
+    /// Human-readable objective summary for startup banners.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(t) = self.p99_us {
+            parts.push(format!("p99 <= {t}us (1% budget)"));
+        }
+        if let Some(p) = self.error_pct {
+            parts.push(format!("forward errors <= {p}%"));
+        }
+        if parts.is_empty() {
+            "unarmed".into()
+        } else {
+            parts.join(", ")
+        }
+    }
+
+    /// Write the declared objectives into the registry gauges so scrapes
+    /// and wire surfaces can see what is armed. Call once at serve start.
+    pub fn arm(&self) {
+        let r = registry();
+        let mut bits = 0u64;
+        if let Some(t) = self.p99_us {
+            bits |= 1;
+            r.slo_latency_target_us.set(t);
+        }
+        if let Some(p) = self.error_pct {
+            bits |= 2;
+            r.slo_error_pct_milli.set((p * 1000.0) as u64);
+        }
+        r.slo_armed.set(bits);
+    }
+}
+
+/// Tri-state SLO verdict, ordered by severity.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum SloState {
+    Ok = 0,
+    Warning = 1,
+    Burning = 2,
+}
+
+impl SloState {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> SloState {
+        match v {
+            1 => SloState::Warning,
+            2 => SloState::Burning,
+            _ => SloState::Ok,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloState::Ok => "ok",
+            SloState::Warning => "warn",
+            SloState::Burning => "burn",
+        }
+    }
+}
+
+/// One evaluation's outcome (also mirrored into the registry gauges).
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub latency_burn_fast: f64,
+    pub latency_burn_slow: f64,
+    /// Global latency verdict (latency is measured at the wire, not per
+    /// model — it applies to every model's state).
+    pub latency_state: SloState,
+    /// Per registered model: max of the latency verdict and the model's
+    /// own error-budget verdict.
+    pub model_states: Vec<(usize, SloState)>,
+    pub worst: SloState,
+}
+
+fn state_of(fast_burn: f64, slow_burn: f64) -> SloState {
+    if fast_burn >= FAST_BURN_THRESHOLD {
+        SloState::Burning
+    } else if slow_burn >= SLOW_BURN_THRESHOLD {
+        SloState::Warning
+    } else {
+        SloState::Ok
+    }
+}
+
+fn error_burn(d: &SnapData, i: usize, pct: f64) -> f64 {
+    let served = d.model_served[i];
+    let failed = d.model_failures[i];
+    let total = served + failed;
+    if total == 0 {
+        return 0.0;
+    }
+    (failed as f64 / total as f64) / (pct / 100.0)
+}
+
+/// Evaluate with the standard fast/slow windows. Call on the capture
+/// tick (after [`SnapshotRing::capture`](super::snapshot::SnapshotRing::capture)).
+pub fn evaluate(cfg: &SloConfig) -> SloReport {
+    evaluate_windows(cfg, FAST_WINDOW_SECS, SLOW_WINDOW_SECS)
+}
+
+/// Evaluate against explicit windows (tests drive synthetic windows with
+/// `fast_secs`/`slow_secs` = 0, meaning "since the latest capture").
+pub fn evaluate_windows(cfg: &SloConfig, fast_secs: u32, slow_secs: u32) -> SloReport {
+    let r = registry();
+    let fast = window_delta(fast_secs);
+    let slow = window_delta(slow_secs);
+
+    let (mut lf, mut ls) = (0.0f64, 0.0f64);
+    if let Some(target) = cfg.p99_us {
+        // budget: 1% of requests may exceed the target
+        lf = fast.stage_total_us.frac_above(target) / 0.01;
+        ls = slow.stage_total_us.frac_above(target) / 0.01;
+    }
+    let latency_state = state_of(lf, ls);
+
+    let n = r.model_labels_snapshot().len().min(MAX_MODEL_SLOTS);
+    let mut worst = latency_state;
+    let mut model_states = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut st = latency_state;
+        if let Some(pct) = cfg.error_pct {
+            let ef = error_burn(&fast, i, pct);
+            let es = error_burn(&slow, i, pct);
+            st = st.max(state_of(ef, es));
+            r.slo_error_burn_fast_milli[i].set((ef * 1000.0) as u64);
+            r.slo_error_burn_slow_milli[i].set((es * 1000.0) as u64);
+        }
+        r.slo_state[i].set(st.as_u8() as u64);
+        worst = worst.max(st);
+        model_states.push((i, st));
+    }
+    r.slo_latency_burn_fast_milli.set((lf * 1000.0) as u64);
+    r.slo_latency_burn_slow_milli.set((ls * 1000.0) as u64);
+    r.slo_state_worst.set(worst.as_u8() as u64);
+    SloReport { latency_burn_fast: lf, latency_burn_slow: ls, latency_state, model_states, worst }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar() {
+        let c = SloConfig::parse("p99_us=5000,error_pct=1").expect("both clauses");
+        assert_eq!(c.p99_us, Some(5000));
+        assert_eq!(c.error_pct, Some(1.0));
+        let c = SloConfig::parse("error_pct=0.5").expect("error alone");
+        assert_eq!(c.p99_us, None);
+        assert_eq!(c.error_pct, Some(0.5));
+        let c = SloConfig::parse(" p99_us = 250 ").expect("whitespace tolerated");
+        assert_eq!(c.p99_us, Some(250));
+        assert!(SloConfig::parse("").is_err());
+        assert!(SloConfig::parse("p99_us=abc").is_err());
+        assert!(SloConfig::parse("error_pct=0").is_err());
+        assert!(SloConfig::parse("error_pct=150").is_err());
+        assert!(SloConfig::parse("p50_us=10").is_err());
+    }
+
+    #[test]
+    fn state_thresholds() {
+        assert_eq!(state_of(0.0, 0.0), SloState::Ok);
+        assert_eq!(state_of(0.5, 0.99), SloState::Ok);
+        assert_eq!(state_of(0.5, 1.0), SloState::Warning);
+        assert_eq!(state_of(2.0, 0.0), SloState::Burning);
+        assert_eq!(state_of(50.0, 50.0), SloState::Burning);
+    }
+
+    #[test]
+    fn state_wire_round_trip() {
+        for s in [SloState::Ok, SloState::Warning, SloState::Burning] {
+            assert_eq!(SloState::from_u8(s.as_u8()), s);
+        }
+        assert_eq!(SloState::from_u8(99), SloState::Ok);
+    }
+}

@@ -1,0 +1,459 @@
+//! Windowed telemetry: a lock-free ring of periodic [`MetricsRegistry`]
+//! snapshots serving reset-free deltas.
+//!
+//! PR 8's counters are monotone since process start — a dashboard cannot
+//! tell "1M requests ever" from "10k req/s right now". The front door
+//! calls [`SnapshotRing::capture`] about once a second; a windowed scrape
+//! (`admin metrics --window SECS`, or the trailing `window` field on the
+//! METRICS 0x04 frame) then subtracts the newest ring entry at least
+//! `window` old from a live read — counters as element-wise saturating
+//! subtraction, histograms via [`HistData::sub`] (the `hist.rs`
+//! bucket-wise merge run in reverse) — and renders *rates* (req/s,
+//! shed/s, bytes/s) plus window-local p50/p99 instead of since-start
+//! totals. No counter is ever reset, so concurrent scrapers at different
+//! windows never fight.
+//!
+//! Concurrency contract: **one writer** (the front-door thread owns the
+//! capture tick), any readers. Each slot is seqlock-guarded — the
+//! version goes odd while the writer copies cells in, readers retry on a
+//! torn read. Every cell is an individual relaxed atomic, so a race is a
+//! retry, never UB. Capturing is zero-heap-allocation (relaxed stores
+//! into const-init statics; enforced by the counting-allocator test in
+//! `tests/obs_window.rs`).
+
+use std::sync::atomic::{fence, AtomicU64, Ordering::Acquire, Ordering::Relaxed, Ordering::Release};
+
+use super::hist::{HistData, HistImage};
+use super::metrics::{registry, MetricsRegistry, MAX_MODEL_SLOTS};
+
+/// Ring capacity. At the ~1 s capture tick this holds just over a minute
+/// of history — enough for the SLO engine's 60 s slow window.
+pub const SNAP_SLOTS: usize = 64;
+
+/// Counters captured per snapshot (index-aligned with [`SNAP_NAMES`]).
+pub const SNAP_N: usize = 14;
+
+pub const SNAP_NAMES: [&str; SNAP_N] = [
+    "net_accepted_conns",
+    "net_frames_in",
+    "net_frames_out",
+    "net_bytes_in",
+    "net_bytes_out",
+    "serve_admitted",
+    "serve_served",
+    "serve_shed_deadline",
+    "serve_failed",
+    "serve_rejected_full",
+    "serve_rejected_invalid",
+    "serve_batches",
+    "serve_total_tokens",
+    "serve_padded_tokens",
+];
+
+pub const C_ACCEPTED: usize = 0;
+pub const C_FRAMES_IN: usize = 1;
+pub const C_FRAMES_OUT: usize = 2;
+pub const C_BYTES_IN: usize = 3;
+pub const C_BYTES_OUT: usize = 4;
+pub const C_ADMITTED: usize = 5;
+pub const C_SERVED: usize = 6;
+pub const C_SHED: usize = 7;
+pub const C_FAILED: usize = 8;
+pub const C_REJ_FULL: usize = 9;
+pub const C_REJ_INVALID: usize = 10;
+pub const C_BATCHES: usize = 11;
+pub const C_TOTAL_TOKENS: usize = 12;
+pub const C_PADDED_TOKENS: usize = 13;
+
+/// Microseconds since the Unix epoch (vDSO clock read — no allocation,
+/// safe on any path).
+pub fn unix_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+fn collect_counters(r: &MetricsRegistry, out: &mut [u64; SNAP_N]) {
+    out[C_ACCEPTED] = r.net_accepted_conns.get();
+    out[C_FRAMES_IN] = r.net_frames_in.get();
+    out[C_FRAMES_OUT] = r.net_frames_out.get();
+    out[C_BYTES_IN] = r.net_bytes_in.get();
+    out[C_BYTES_OUT] = r.net_bytes_out.get();
+    out[C_ADMITTED] = r.serve_admitted.get();
+    out[C_SERVED] = r.serve_served.get();
+    out[C_SHED] = r.serve_shed_deadline.get();
+    out[C_FAILED] = r.serve_failed.get();
+    out[C_REJ_FULL] = r.serve_rejected_full.get();
+    out[C_REJ_INVALID] = r.serve_rejected_invalid.get();
+    out[C_BATCHES] = r.serve_batches.get();
+    out[C_TOTAL_TOKENS] = r.serve_total_tokens.get();
+    out[C_PADDED_TOKENS] = r.serve_padded_tokens.get();
+}
+
+/// One plain-value snapshot (or delta of two snapshots) of the registry.
+#[derive(Clone)]
+pub struct SnapData {
+    /// Capture sequence number (0 for live reads).
+    pub ticket: u64,
+    /// Unix µs at capture time.
+    pub at_us: u64,
+    /// Delta span in µs — 0 for absolute captures and unknown bases.
+    pub span_us: u64,
+    pub counters: [u64; SNAP_N],
+    pub model_served: [u64; MAX_MODEL_SLOTS],
+    pub model_failures: [u64; MAX_MODEL_SLOTS],
+    pub stage_queue_us: HistData,
+    pub stage_exec_us: HistData,
+    pub stage_total_us: HistData,
+}
+
+impl SnapData {
+    pub fn new() -> SnapData {
+        SnapData {
+            ticket: 0,
+            at_us: 0,
+            span_us: 0,
+            counters: [0; SNAP_N],
+            model_served: [0; MAX_MODEL_SLOTS],
+            model_failures: [0; MAX_MODEL_SLOTS],
+            stage_queue_us: HistData::new(),
+            stage_exec_us: HistData::new(),
+            stage_total_us: HistData::new(),
+        }
+    }
+
+    /// `self - earlier`, element-wise saturating; `span_us` becomes the
+    /// wall-clock distance between the two captures.
+    pub fn delta_since(&self, earlier: &SnapData) -> SnapData {
+        let mut out = SnapData::new();
+        out.ticket = self.ticket;
+        out.at_us = self.at_us;
+        out.span_us = self.at_us.saturating_sub(earlier.at_us);
+        for i in 0..SNAP_N {
+            out.counters[i] = self.counters[i].saturating_sub(earlier.counters[i]);
+        }
+        for i in 0..MAX_MODEL_SLOTS {
+            out.model_served[i] = self.model_served[i].saturating_sub(earlier.model_served[i]);
+            out.model_failures[i] =
+                self.model_failures[i].saturating_sub(earlier.model_failures[i]);
+        }
+        out.stage_queue_us = self.stage_queue_us.sub(&earlier.stage_queue_us);
+        out.stage_exec_us = self.stage_exec_us.sub(&earlier.stage_exec_us);
+        out.stage_total_us = self.stage_total_us.sub(&earlier.stage_total_us);
+        out
+    }
+
+    /// Events per second for one captured counter (0 when the span is
+    /// unknown — a delta against nothing is a since-start total, and
+    /// rendering it as a rate would lie).
+    pub fn rate(&self, idx: usize) -> f64 {
+        if self.span_us == 0 {
+            0.0
+        } else {
+            self.counters[idx] as f64 * 1e6 / self.span_us as f64
+        }
+    }
+}
+
+impl Default for SnapData {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Read the registry directly into a plain snapshot (`ticket` 0,
+/// `at_us` now). The minuend of every windowed delta.
+pub fn live_snapshot() -> SnapData {
+    let r = registry();
+    let mut d = SnapData::new();
+    d.at_us = unix_us();
+    collect_counters(r, &mut d.counters);
+    for i in 0..MAX_MODEL_SLOTS {
+        d.model_served[i] = r.model_served[i].get();
+        d.model_failures[i] = r.model_forward_failures[i].get();
+    }
+    d.stage_queue_us = r.stage_queue_us.snapshot_data();
+    d.stage_exec_us = r.stage_exec_us.snapshot_data();
+    d.stage_total_us = r.stage_total_us.snapshot_data();
+    d
+}
+
+/// One seqlock-guarded ring slot: `ver` goes odd while the writer copies
+/// cells, readers retry until they observe the same even version on both
+/// sides of the copy.
+struct Slot {
+    ver: AtomicU64,
+    ticket: AtomicU64,
+    at_us: AtomicU64,
+    counters: [AtomicU64; SNAP_N],
+    model_served: [AtomicU64; MAX_MODEL_SLOTS],
+    model_failures: [AtomicU64; MAX_MODEL_SLOTS],
+    stage_queue_us: HistImage,
+    stage_exec_us: HistImage,
+    stage_total_us: HistImage,
+}
+
+impl Slot {
+    const fn new() -> Slot {
+        Slot {
+            ver: AtomicU64::new(0),
+            ticket: AtomicU64::new(0),
+            at_us: AtomicU64::new(0),
+            counters: [const { AtomicU64::new(0) }; SNAP_N],
+            model_served: [const { AtomicU64::new(0) }; MAX_MODEL_SLOTS],
+            model_failures: [const { AtomicU64::new(0) }; MAX_MODEL_SLOTS],
+            stage_queue_us: HistImage::new(),
+            stage_exec_us: HistImage::new(),
+            stage_total_us: HistImage::new(),
+        }
+    }
+}
+
+pub struct SnapshotRing {
+    /// Tickets issued; capture `t` (1-based) lives at slot `(t-1) % SNAP_SLOTS`.
+    head: AtomicU64,
+    slots: [Slot; SNAP_SLOTS],
+}
+
+impl SnapshotRing {
+    const fn new() -> SnapshotRing {
+        SnapshotRing { head: AtomicU64::new(0), slots: [const { Slot::new() }; SNAP_SLOTS] }
+    }
+
+    /// Capture the registry into the next ring slot. Single-writer (the
+    /// front-door capture tick; tests serialize). Zero-alloc.
+    pub fn capture(&self) {
+        let r = registry();
+        let t = self.head.load(Relaxed) + 1;
+        let slot = &self.slots[((t - 1) as usize) % SNAP_SLOTS];
+        let v0 = slot.ver.load(Relaxed);
+        slot.ver.store(v0.wrapping_add(1), Relaxed); // odd: write in progress
+        fence(Release);
+        slot.ticket.store(t, Relaxed);
+        slot.at_us.store(unix_us(), Relaxed);
+        let mut c = [0u64; SNAP_N];
+        collect_counters(r, &mut c);
+        for (cell, v) in slot.counters.iter().zip(c.iter()) {
+            cell.store(*v, Relaxed);
+        }
+        for i in 0..MAX_MODEL_SLOTS {
+            slot.model_served[i].store(r.model_served[i].get(), Relaxed);
+            slot.model_failures[i].store(r.model_forward_failures[i].get(), Relaxed);
+        }
+        slot.stage_queue_us.store_from(&r.stage_queue_us);
+        slot.stage_exec_us.store_from(&r.stage_exec_us);
+        slot.stage_total_us.store_from(&r.stage_total_us);
+        slot.ver.store(v0.wrapping_add(2), Release);
+        self.head.store(t, Release);
+    }
+
+    /// Number of captures taken so far.
+    pub fn captures(&self) -> u64 {
+        self.head.load(Acquire)
+    }
+
+    fn read_ticket(&self, t: u64) -> Option<SnapData> {
+        if t == 0 {
+            return None;
+        }
+        let slot = &self.slots[((t - 1) as usize) % SNAP_SLOTS];
+        for _ in 0..4 {
+            let v1 = slot.ver.load(Acquire);
+            if v1 & 1 != 0 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut d = SnapData::new();
+            d.ticket = slot.ticket.load(Relaxed);
+            d.at_us = slot.at_us.load(Relaxed);
+            for (v, cell) in d.counters.iter_mut().zip(slot.counters.iter()) {
+                *v = cell.load(Relaxed);
+            }
+            for i in 0..MAX_MODEL_SLOTS {
+                d.model_served[i] = slot.model_served[i].load(Relaxed);
+                d.model_failures[i] = slot.model_failures[i].load(Relaxed);
+            }
+            slot.stage_queue_us.load_into(&mut d.stage_queue_us);
+            slot.stage_exec_us.load_into(&mut d.stage_exec_us);
+            slot.stage_total_us.load_into(&mut d.stage_total_us);
+            fence(Acquire);
+            if slot.ver.load(Relaxed) == v1 && d.ticket == t {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    /// Most recent capture, if any.
+    pub fn latest(&self) -> Option<SnapData> {
+        self.read_ticket(self.head.load(Acquire))
+    }
+
+    /// The newest capture at least `window_us` old relative to `now_us`.
+    /// Falls back to the *oldest* retained capture when the ring's
+    /// history is shorter than the window (the delta then covers the
+    /// whole retained span — `span_us` reports what it actually covers).
+    pub fn window_base(&self, now_us: u64, window_us: u64) -> Option<SnapData> {
+        let head = self.head.load(Acquire);
+        if head == 0 {
+            return None;
+        }
+        let cutoff = now_us.saturating_sub(window_us);
+        let lo = if head > SNAP_SLOTS as u64 { head - SNAP_SLOTS as u64 + 1 } else { 1 };
+        let mut fallback = None;
+        let mut t = head;
+        loop {
+            let Some(s) = self.read_ticket(t) else { break };
+            if s.at_us <= cutoff {
+                return Some(s);
+            }
+            fallback = Some(s);
+            if t == lo {
+                break;
+            }
+            t -= 1;
+        }
+        fallback
+    }
+}
+
+static RING: SnapshotRing = SnapshotRing::new();
+
+/// The process-wide snapshot ring.
+pub fn snapshots() -> &'static SnapshotRing {
+    &RING
+}
+
+/// Live registry minus the best base for a trailing window of
+/// `window_secs` (0 = since the most recent capture). When no capture
+/// exists at all, the result is the since-start totals with `span_us` 0.
+pub fn window_delta(window_secs: u32) -> SnapData {
+    let cur = live_snapshot();
+    match snapshots().window_base(cur.at_us, (window_secs as u64) * 1_000_000) {
+        Some(base) => cur.delta_since(&base),
+        None => cur,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------
+
+use std::fmt::Write as _;
+
+const RATE_SERIES: [(usize, &str, &str); 10] = [
+    (C_ADMITTED, "admitted", "requests admitted per second over the window"),
+    (C_SERVED, "served", "requests served per second over the window"),
+    (C_SHED, "shed", "deadline sheds per second over the window"),
+    (C_FAILED, "failed", "backend failures per second over the window"),
+    (C_REJ_FULL, "rejected_full", "queue-full rejects per second over the window"),
+    (C_BATCHES, "batches", "batches executed per second over the window"),
+    (C_FRAMES_IN, "frames_in", "wire frames decoded per second over the window"),
+    (C_FRAMES_OUT, "frames_out", "wire frames written per second over the window"),
+    (C_BYTES_IN, "bytes_in", "payload bytes read per second over the window"),
+    (C_BYTES_OUT, "bytes_out", "payload bytes written per second over the window"),
+];
+
+fn prom_window_hist(out: &mut String, name: &str, help: &str, h: &HistData) {
+    let _ = writeln!(out, "# HELP mkq_window_{name} {help}");
+    let _ = writeln!(out, "# TYPE mkq_window_{name} summary");
+    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+        let _ = writeln!(out, "mkq_window_{name}{{quantile=\"{label}\"}} {:.1}", h.quantile(q));
+    }
+    let _ = writeln!(out, "mkq_window_{name}_sum {}", h.sum);
+    let _ = writeln!(out, "mkq_window_{name}_count {}", h.count);
+}
+
+/// Prometheus text exposition of one windowed delta: rate gauges plus
+/// window-local stage quantiles. Series are `mkq_window_*`, disjoint
+/// from the since-start names, so both views coexist on one dashboard.
+pub fn render_window(window_secs: u32) -> String {
+    let d = window_delta(window_secs);
+    let secs = d.span_us as f64 / 1e6;
+    let mut out = String::with_capacity(4096);
+    let _ = writeln!(
+        out,
+        "# windowed delta: requested {window_secs}s, actual span {secs:.3}s (ring history caps the window)"
+    );
+    let _ = writeln!(out, "# HELP mkq_window_seconds actual wall-clock span the delta covers");
+    let _ = writeln!(out, "# TYPE mkq_window_seconds gauge");
+    let _ = writeln!(out, "mkq_window_seconds {secs:.3}");
+    for (idx, name, help) in RATE_SERIES {
+        let _ = writeln!(out, "# HELP mkq_window_{name}_per_sec {help}");
+        let _ = writeln!(out, "# TYPE mkq_window_{name}_per_sec gauge");
+        let _ = writeln!(out, "mkq_window_{name}_per_sec {:.1}", d.rate(idx));
+    }
+    prom_window_hist(&mut out, "stage_queue_us", "window-local: admitted to staged", &d.stage_queue_us);
+    prom_window_hist(&mut out, "stage_exec_us", "window-local: staged to forward complete", &d.stage_exec_us);
+    prom_window_hist(&mut out, "stage_total_us", "window-local: frame read to reply queued", &d.stage_total_us);
+    out
+}
+
+fn json_window_hist(out: &mut String, name: &str, h: &HistData) {
+    let _ = write!(
+        out,
+        "\"{name}\": {{\"count\": {}, \"sum\": {}, \"p50\": {:.1}, \"p90\": {:.1}, \"p99\": {:.1}, \"p999\": {:.1}}}",
+        h.count,
+        h.sum,
+        h.quantile(0.5),
+        h.quantile(0.9),
+        h.quantile(0.99),
+        h.quantile(0.999)
+    );
+}
+
+/// JSON rendering of the same windowed delta: raw deltas (`win_*`),
+/// rates (`win_*_per_sec`), and window-local stage histograms. Flat keys
+/// so `json_u64_field` keeps working client-side.
+pub fn render_window_json(window_secs: u32) -> String {
+    let d = window_delta(window_secs);
+    let mut out = String::with_capacity(2048);
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"window_requested_secs\": {window_secs},");
+    let _ = writeln!(out, "  \"window_span_us\": {},", d.span_us);
+    for (idx, name) in SNAP_NAMES.iter().enumerate() {
+        let _ = writeln!(out, "  \"win_{name}\": {},", d.counters[idx]);
+    }
+    for (idx, name, _) in RATE_SERIES {
+        let _ = writeln!(out, "  \"win_{name}_per_sec\": {:.2},", d.rate(idx));
+    }
+    out.push_str("  ");
+    json_window_hist(&mut out, "win_stage_queue_us", &d.stage_queue_us);
+    out.push_str(",\n  ");
+    json_window_hist(&mut out, "win_stage_exec_us", &d.stage_exec_us);
+    out.push_str(",\n  ");
+    json_window_hist(&mut out, "win_stage_total_us", &d.stage_total_us);
+    out.push_str("\n}\n");
+    out
+}
+
+/// Interval-delta statusline for `--stats-every-secs`: rates since the
+/// previous line (not since process start) plus window-local stage
+/// quantiles, with the SLO verdict appended when objectives are armed.
+pub fn render_statusline_delta(prev: &SnapData, cur: &SnapData) -> String {
+    let d = cur.delta_since(prev);
+    let r = registry();
+    let slo = if r.slo_armed.get() != 0 {
+        let state = super::slo::SloState::from_u8(r.slo_state_worst.get() as u8);
+        format!(
+            " slo={} burn_fast={:.2}",
+            state.name(),
+            r.slo_latency_burn_fast_milli.get() as f64 / 1000.0
+        )
+    } else {
+        String::new()
+    };
+    format!(
+        "[obs] win={:.1}s admit/s={:.0} served/s={:.0} shed/s={:.0} failed/s={:.0} q={} queue_p50={:.0}us exec_p50={:.0}us total_p99={:.0}us{slo}",
+        d.span_us as f64 / 1e6,
+        d.rate(C_ADMITTED),
+        d.rate(C_SERVED),
+        d.rate(C_SHED),
+        d.rate(C_FAILED),
+        r.serve_queue_depth.get(),
+        d.stage_queue_us.quantile(0.5),
+        d.stage_exec_us.quantile(0.5),
+        d.stage_total_us.quantile(0.99),
+    )
+}

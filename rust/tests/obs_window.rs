@@ -1,0 +1,321 @@
+//! ISSUE-10 observability contracts: windowed snapshot deltas, SLO state
+//! transitions, and the flight recorder under concurrency and wrap.
+//!
+//! Every test here drives the *process-global* obs statics (registry,
+//! snapshot ring, flight recorder), so the tests serialize on one
+//! file-local mutex — the same discipline the front door's single-writer
+//! capture tick provides in production. Counter state is cumulative
+//! across tests; everything asserts on *deltas*, never on absolutes.
+//!
+//! The last test re-arms the counting-allocator contract from
+//! `tests/workspace_alloc.rs` over the full ISSUE-10 stack: histogram +
+//! grid records, flight-recorder writes, snapshot captures, and windowed
+//! reads must all stay off the heap.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+
+use mkq::obs::snapshot::{C_ADMITTED, C_SERVED};
+use mkq::obs::{FlightKind, SloConfig, SloState, FLIGHT_SLOTS};
+
+/// Serializes every test in this binary: the obs globals have exactly
+/// one writer at a time, matching the production capture-tick contract.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    // a poisoned lock just means another test failed — don't cascade
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// counting allocator (same thread-local arming pattern as
+// tests/workspace_alloc.rs — only the test thread's allocations count)
+// ---------------------------------------------------------------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn record_if_counting() {
+    let armed = COUNTING.try_with(|c| c.get()).unwrap_or(false);
+    if armed {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record_if_counting();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record_if_counting();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record_if_counting();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Exact nearest-rank quantile over a plain sample set — the oracle the
+/// bucketed window quantile is checked against.
+fn exact_quantile(sorted: &[u64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1] as f64
+}
+
+/// Log-linear binning bounds the relative quantile error by 1/16 plus
+/// in-bucket interpolation; allow that plus a unit of slack.
+fn assert_close(got: f64, exact: f64, what: &str) {
+    let tol = exact * (1.0 / 16.0 + 0.01) + 1.0;
+    assert!(
+        (got - exact).abs() <= tol,
+        "{what}: windowed quantile {got} vs exact {exact} (tolerance {tol})"
+    );
+}
+
+#[test]
+fn windowed_delta_matches_plain_subtraction_oracle() {
+    let _g = serial();
+    let r = mkq::obs::registry();
+
+    // pre-window noise the delta must fully exclude
+    for i in 0..300u64 {
+        r.stage_total_us.record(1_000_000 + i * 997);
+        r.serve_admitted.inc();
+    }
+    mkq::obs::snapshots().capture();
+
+    // window body: a known skewed sample set, tracked in parallel
+    let mut samples: Vec<u64> = Vec::new();
+    for i in 0..257u64 {
+        // mostly fast with a heavy tail — exercises several octaves
+        let v = if i % 16 == 0 { 20_000 + i * 31 } else { 120 + (i * 7) % 400 };
+        r.stage_total_us.record(v);
+        samples.push(v);
+    }
+    for _ in 0..257 {
+        r.serve_admitted.inc();
+    }
+    for _ in 0..101 {
+        r.serve_served.inc();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(5));
+
+    let d = mkq::obs::window_delta(0); // since the capture above
+    assert_eq!(d.counters[C_ADMITTED], 257, "window excludes pre-capture admits");
+    assert_eq!(d.counters[C_SERVED], 101);
+    assert_eq!(d.stage_total_us.count, 257, "window-local histogram count");
+    let exact_sum: u64 = samples.iter().sum();
+    assert_eq!(d.stage_total_us.sum, exact_sum, "bucket subtract preserves the sum");
+    assert!(d.span_us > 0, "delta span covers the sleep");
+
+    samples.sort_unstable();
+    for q in [0.5, 0.9, 0.99] {
+        assert_close(
+            d.stage_total_us.quantile(q),
+            exact_quantile(&samples, q),
+            &format!("p{}", (q * 100.0) as u32),
+        );
+    }
+
+    // the rendered surfaces agree with the struct
+    let json = mkq::obs::render_window_json(0);
+    assert_eq!(mkq::obs::json_u64_field(&json, "win_serve_admitted"), Some(257));
+    assert_eq!(mkq::obs::json_u64_field(&json, "win_serve_served"), Some(101));
+    let prom = mkq::obs::render_window(0);
+    assert!(prom.contains("mkq_window_admitted_per_sec"), "prometheus window series: {prom}");
+    assert!(prom.contains("mkq_window_stage_total_us_count 257"), "window hist count: {prom}");
+}
+
+#[test]
+fn slo_states_transition_ok_warning_burning() {
+    let _g = serial();
+    let r = mkq::obs::registry();
+    mkq::obs::register_model_label(0, "slo-test-model");
+    let cfg = SloConfig::parse("p99_us=1000,error_pct=1").expect("valid spec");
+    cfg.arm();
+    assert_eq!(r.slo_armed.get(), 3, "both objectives armed");
+    assert_eq!(r.slo_latency_target_us.get(), 1000);
+
+    // quiet window: nothing recorded since capture -> Ok
+    mkq::obs::snapshots().capture();
+    let rep = mkq::obs::slo::evaluate_windows(&cfg, 0, 0);
+    assert_eq!(rep.worst, SloState::Ok, "no traffic, no burn");
+
+    // 1.5% of requests over target: burn 1.5 — over the slow threshold
+    // (1.0), under the fast threshold (2.0) -> Warning
+    mkq::obs::snapshots().capture();
+    for i in 0..200u64 {
+        r.stage_total_us.record(if i < 3 { 5_000 } else { 100 });
+    }
+    let rep = mkq::obs::slo::evaluate_windows(&cfg, 0, 0);
+    assert_eq!(rep.latency_state, SloState::Warning, "burn {:.2}", rep.latency_burn_slow);
+    assert_eq!(rep.worst, SloState::Warning);
+    assert!(
+        rep.latency_burn_fast > 1.0 && rep.latency_burn_fast < 2.0,
+        "burn rate ~1.5, got {}",
+        rep.latency_burn_fast
+    );
+    assert_eq!(r.slo_state_worst.get(), SloState::Warning.as_u8() as u64, "gauge mirrors");
+
+    // 10% over target: burn 10 -> Burning
+    mkq::obs::snapshots().capture();
+    for i in 0..200u64 {
+        r.stage_total_us.record(if i < 20 { 5_000 } else { 100 });
+    }
+    let rep = mkq::obs::slo::evaluate_windows(&cfg, 0, 0);
+    assert_eq!(rep.worst, SloState::Burning);
+    assert_eq!(r.slo_state_worst.get(), SloState::Burning.as_u8() as u64);
+
+    // error budget: 5% forward failures against a 1% budget -> Burning
+    // for model 0 even with clean latency
+    mkq::obs::snapshots().capture();
+    for i in 0..200u64 {
+        if i < 10 {
+            r.model_forward_failures[0].inc();
+        } else {
+            r.model_served[0].inc();
+        }
+    }
+    let rep = mkq::obs::slo::evaluate_windows(&cfg, 0, 0);
+    let (idx, st) = rep.model_states.first().copied().expect("model 0 registered");
+    assert_eq!(idx, 0);
+    assert_eq!(st, SloState::Burning, "error burn 5x fast threshold");
+    assert_eq!(r.slo_state[0].get(), SloState::Burning.as_u8() as u64);
+
+    // recovery: a clean window drops back to Ok (states are windowed,
+    // not latched)
+    mkq::obs::snapshots().capture();
+    for _ in 0..200u64 {
+        r.stage_total_us.record(100);
+        r.model_served[0].inc();
+    }
+    let rep = mkq::obs::slo::evaluate_windows(&cfg, 0, 0);
+    assert_eq!(rep.worst, SloState::Ok, "clean window clears the state");
+    assert_eq!(r.slo_state_worst.get(), 0);
+}
+
+#[test]
+fn flight_recorder_concurrent_writers_and_wraparound() {
+    let _g = serial();
+    let f = mkq::obs::flight();
+
+    // 4 writers x 200 events, distinguished by model id; every event
+    // must land (the ticket fetch-add gives each writer its own slot)
+    let base = f.recorded();
+    std::thread::scope(|s| {
+        for thr in 0..4u16 {
+            s.spawn(move || {
+                for i in 0..200u64 {
+                    f.record(FlightKind::Admit, 0, 9_000 + thr, 12, 16, (thr as u64) << 32 | i);
+                }
+            });
+        }
+    });
+    assert_eq!(f.recorded() - base, 800, "every concurrent record takes a ticket");
+    let evs = f.snapshot();
+    for thr in 0..4u16 {
+        let ids: Vec<u64> = evs
+            .iter()
+            .filter(|e| e.kind == FlightKind::Admit.as_u8() && e.model == 9_000 + thr)
+            .map(|e| e.id & 0xffff_ffff)
+            .collect();
+        assert_eq!(ids.len(), 200, "writer {thr}: all events retained (800 < ring cap)");
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "writer {thr}: per-writer order preserved oldest-first"
+        );
+    }
+    let mut tickets: Vec<u64> = evs.iter().map(|e| e.ticket).collect();
+    let sorted = {
+        let mut t = tickets.clone();
+        t.sort_unstable();
+        t
+    };
+    assert_eq!(tickets, sorted, "snapshot is globally ticket-ordered");
+    tickets.dedup();
+    assert_eq!(tickets.len(), evs.len(), "no duplicate slots in a snapshot");
+
+    // wraparound: 1.5 rings of events; the snapshot keeps only the
+    // newest FLIGHT_SLOTS and drops the oldest third
+    let n = FLIGHT_SLOTS as u64 + FLIGHT_SLOTS as u64 / 2;
+    for i in 0..n {
+        f.record(FlightKind::Dispatch, 0, 9_100, 24, 8, i);
+    }
+    let evs = f.snapshot();
+    assert!(evs.len() <= FLIGHT_SLOTS, "ring caps retention at {FLIGHT_SLOTS}");
+    let dispatch_ids: Vec<u64> =
+        evs.iter().filter(|e| e.model == 9_100).map(|e| e.id).collect();
+    assert_eq!(
+        dispatch_ids.len(),
+        FLIGHT_SLOTS,
+        "after 1.5 laps the ring holds exactly one lap of our events"
+    );
+    assert_eq!(*dispatch_ids.last().unwrap(), n - 1, "newest event survives");
+    assert_eq!(*dispatch_ids.first().unwrap(), n - FLIGHT_SLOTS as u64, "oldest third evicted");
+
+    let text = mkq::obs::flight::render_text(&evs);
+    assert!(text.contains("dispatch"), "dump names kinds: {text}");
+    assert!(text.contains("model=9100"), "dump carries fields");
+}
+
+#[test]
+fn armed_obs_stack_records_without_heap_allocation() {
+    let _g = serial();
+    mkq::obs::set_metrics_enabled(true);
+    let r = mkq::obs::registry();
+
+    // warm every cold path: grid column claim (a one-time CAS), first
+    // capture, first flight write, env init
+    r.serve_batch.record(0, 12, 50, 200);
+    mkq::obs::flight().record(FlightKind::Admit, 0, 0, 12, 16, 1);
+    mkq::obs::snapshots().capture();
+    let _ = mkq::obs::window_delta(0);
+
+    COUNTING.with(|c| c.set(true));
+    let before = ALLOCS.with(|c| c.get());
+
+    let mut sink = 0u64;
+    for i in 0..512u64 {
+        r.serve_admitted.inc();
+        r.stage_total_us.record(100 + i);
+        r.serve_batch.record(0, 12, 50 + i % 50, 200 + i);
+        mkq::obs::flight().record(FlightKind::Admit, 0, 0, 12, 16, i);
+        if i % 64 == 0 {
+            // the front door's ~1 s tick, compressed: capture + windowed
+            // read must both stay off the heap (SnapData is plain stack
+            // arrays, the ring slots are static atomics)
+            mkq::obs::snapshots().capture();
+            let d = mkq::obs::window_delta(0);
+            sink = sink.wrapping_add(d.counters[C_ADMITTED]);
+        }
+    }
+
+    let after = ALLOCS.with(|c| c.get());
+    COUNTING.with(|c| c.set(false));
+
+    assert!(sink < u64::MAX);
+    assert_eq!(
+        after - before,
+        0,
+        "snapshot ring + flight recorder + grid records must not touch the heap \
+         ({} allocations observed)",
+        after - before
+    );
+}

@@ -191,7 +191,16 @@ fn hot_path_metric_recording_allocates_nothing() {
         o.serve_queue_depth.set(i % 7);
         o.stage_queue_us.record(i * 3);
         o.stage_exec_us.record_us(std::time::Duration::from_micros(200 + i));
-        o.serve_batch_fill_pct.record(50 + i % 50);
+        // the labeled per-(model x seq-bucket) grid: column claim CASes
+        // on first touch, then plain histogram records
+        o.serve_batch.record(0, 12, 50 + i % 50, 200 + i);
+        // flight recorder and snapshot capture ride the same hot-path
+        // contract (tests/obs_window.rs covers them in depth; this keeps
+        // the combined stack under one armed allocator too)
+        mkq::obs::flight().record(mkq::obs::FlightKind::Admit, 0, 0, 12, 16, i);
+        if i % 64 == 0 {
+            mkq::obs::snapshots().capture();
+        }
         // Slow-trace offers: ever-slower traces force the lock+replace
         // path every iteration; the fast below-bar path rides along too.
         o.slow_traces.offer(TraceEntry {
